@@ -1,0 +1,147 @@
+//! Bench A1–A4: ablations for the design choices §6 discusses.
+//!
+//! A1 cancel-window sweep — §6: unbounded sending "could overload the
+//!    network; we guard against this misfortune by cancelling
+//!    send()/recv() threads not having completed within a time window."
+//! A2 adaptive per-peer rates — §6 future work.
+//! A3 clique vs star vs tree — §6: "we would like to avoid all-to-all".
+//! A4 ranking robustness vs threshold — §5.2 closing remark.
+//! A5 partitioning: consecutive ⌈n/p⌉ (paper) vs balanced-nnz.
+
+use std::sync::Arc;
+
+use asyncpr::asynciter::{BlockOperator, Mode, NativeBlockOp, RunSpec, SimEngine};
+use asyncpr::config::RunConfig;
+use asyncpr::coordinator::experiments::{self, ExperimentCtx};
+use asyncpr::coordinator::Partitioner;
+use asyncpr::simnet::Topology;
+use asyncpr::util::Table;
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick")
+        || std::env::var("BENCH_FAST").ok().as_deref() == Some("1");
+    let graph = if quick { "scaled:8000" } else { "scaled:28190" };
+    let bw_scale = if quick {
+        asyncpr::simnet::ClusterProfile::demand_matched_scale(8_000, 4)
+    } else {
+        asyncpr::simnet::ClusterProfile::demand_matched_scale(28_190, 4)
+    };
+    println!("== bench ablations (graph = {graph}) ==\n");
+    let ctx = ExperimentCtx::new(RunConfig { graph: graph.into(), bandwidth_scale: bw_scale, ..Default::default() })?;
+
+    // ---- A1: cancellation window ----
+    println!("A1: cancellation-window sweep (async, p=4)");
+    let mut t = Table::new(&["window (s)", "t_max (s)", "cancelled", "queue wait (s)", "resid"]);
+    let mut unbounded_wait = 0.0;
+    let mut bounded_wait = f64::MAX;
+    for (w, m) in
+        experiments::ablation_cancel_window(&ctx, 4, &[None, Some(1.0), Some(3.0), Some(10.0)])?
+    {
+        let (_, tmax) = m.time_range();
+        if w.is_none() {
+            unbounded_wait = m.wire_queue_wait;
+        } else {
+            bounded_wait = bounded_wait.min(m.wire_queue_wait);
+        }
+        t.row(&[
+            w.map(|x| format!("{x}")).unwrap_or_else(|| "inf".into()),
+            format!("{tmax:.1}"),
+            m.wire_cancelled.to_string(),
+            format!("{:.1}", m.wire_queue_wait),
+            format!("{:.1e}", m.final_global_residual),
+        ]);
+    }
+    println!("{}", t.to_markdown());
+    assert!(
+        bounded_wait < unbounded_wait,
+        "windows must relieve queue pressure ({bounded_wait} vs {unbounded_wait})"
+    );
+    println!("A1 PASSED: cancellation windows bound the sender-side buffer bloat\n");
+
+    // ---- A2: adaptive rates with a straggler ----
+    println!("A2: adaptive per-peer rates (async p=4, node 3 is 3x slower)");
+    let (fixed, adap) = experiments::ablation_adaptive(&ctx, 4, 3.0)?;
+    println!(
+        "  fixed:    t={:.1}s attempted={} cancelled={} resid={:.1e}",
+        fixed.total_time,
+        fixed.sends_attempted.iter().sum::<u64>(),
+        fixed.wire_cancelled,
+        fixed.final_global_residual
+    );
+    println!(
+        "  adaptive: t={:.1}s attempted={} cancelled={} resid={:.1e}",
+        adap.total_time,
+        adap.sends_attempted.iter().sum::<u64>(),
+        adap.wire_cancelled,
+        adap.final_global_residual
+    );
+    assert!(
+        adap.wire_cancelled <= fixed.wire_cancelled,
+        "adaptive must not cancel more than fixed"
+    );
+    println!("A2 PASSED: adaptive sheds doomed sends\n");
+
+    // ---- A3: topology ----
+    println!("A3: topology sweep (async, p=6)");
+    let mut t3 = Table::new(&["topology", "msgs/round", "t_max (s)", "cancelled", "resid"]);
+    for (topo, m) in experiments::ablation_topology(
+        &ctx,
+        6,
+        &[Topology::Clique, Topology::Star, Topology::BinaryTree],
+    )? {
+        let (_, tmax) = m.time_range();
+        t3.row(&[
+            format!("{topo:?}"),
+            topo.messages_per_round(6).to_string(),
+            format!("{tmax:.1}"),
+            m.wire_cancelled.to_string(),
+            format!("{:.1e}", m.final_global_residual),
+        ]);
+    }
+    println!("{}", t3.to_markdown());
+    println!("A3 done: tree/star trade per-step freshness for far less wire traffic\n");
+
+    // ---- A4: ranking robustness vs threshold ----
+    println!("A4: ranking robustness under relaxed thresholds (async p=4)");
+    let mut t4 = Table::new(&["local tol", "global resid", "kendall-tau", "top-100"]);
+    let rows = experiments::ablation_ranking(&ctx, 4, &[1e-4, 1e-5, 1e-6])?;
+    for (tol, resid, tau, top) in &rows {
+        t4.row(&[
+            format!("{tol:.0e}"),
+            format!("{resid:.1e}"),
+            format!("{tau:.6}"),
+            format!("{top:.2}"),
+        ]);
+    }
+    println!("{}", t4.to_markdown());
+    let tight_tau = rows.last().unwrap().2;
+    let loose_tau = rows.first().unwrap().2;
+    assert!(tight_tau >= loose_tau - 1e-6, "tighter threshold can't rank worse");
+    assert!(loose_tau > 0.98, "even loose thresholds preserve ranking");
+    println!("A4 PASSED: relative ranking survives relaxed thresholds (the §5.2 point)\n");
+
+    // ---- A5: partitioning ----
+    println!("A5: consecutive ceil(n/p) (paper) vs balanced-nnz partitioning (async p=4)");
+    let problem = ctx.problem.clone();
+    let run_with = |partitioner: &Partitioner| {
+        let mut ops: Vec<Box<dyn BlockOperator>> = partitioner
+            .blocks()
+            .into_iter()
+            .map(|(lo, hi)| {
+                Box::new(NativeBlockOp::new(Arc::clone(&problem), lo, hi))
+                    as Box<dyn BlockOperator>
+            })
+            .collect();
+        let profile = asyncpr::simnet::ClusterProfile::paper_beowulf(4);
+        SimEngine::new(&profile, &problem)
+            .run(&mut ops, &RunSpec::paper_table1(Mode::Asynchronous))
+    };
+    let cons = run_with(&Partitioner::consecutive(problem.n(), 4));
+    let bal = run_with(&Partitioner::balanced_nnz(&problem.csr, 4));
+    let (_, t_cons) = cons.time_range();
+    let (_, t_bal) = bal.time_range();
+    println!("  consecutive:  t_max={t_cons:.1}s iters={:?}", cons.iters);
+    println!("  balanced-nnz: t_max={t_bal:.1}s iters={:?}", bal.iters);
+    println!("A5 done: nnz balancing equalizes per-iteration compute across UEs\n");
+    Ok(())
+}

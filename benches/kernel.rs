@@ -1,0 +1,71 @@
+//! Bench K1: kernel-level hot path — the PJRT artifact (L1 Pallas SpMV
+//! via L2 jax, AOT-lowered) vs the native rust CSR/ELL SpMV, plus the
+//! roofline context used by EXPERIMENTS.md §Perf.
+//!
+//! Reported per variant: time per PageRank block step, effective
+//! nonzeros/s, and bytes/s against the memory-bandwidth roofline
+//! (each nnz touches 4 B value + 4 B index + a 4 B gather from x).
+
+use std::sync::Arc;
+
+use asyncpr::asynciter::{ArtifactBlockOp, BlockOperator, NativeBlockOp};
+use asyncpr::graph::{generators, Csr, Ell};
+use asyncpr::pagerank::PagerankProblem;
+use asyncpr::runtime::Engine;
+use asyncpr::util::Bench;
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick")
+        || std::env::var("BENCH_FAST").ok().as_deref() == Some("1");
+    let n = if quick { 28_190 } else { 281_903 };
+    println!("== bench kernel (n = {n}) ==\n");
+    let el = generators::power_law_web(&generators::WebParams::scaled(n), 17);
+    let problem = Arc::new(PagerankProblem::new(Csr::from_edgelist(&el)?, 0.85));
+    // bench one UE's block (p = 4), the actual hot-path unit
+    let blk_hi = problem.n() / 4;
+    let nnz: usize = (0..blk_hi).map(|i| problem.csr.row_len(i)).sum();
+    let x = problem.uniform_start();
+    let mut out = vec![0.0f32; blk_hi];
+    let bench = Bench::default();
+
+    // ---- native CSR (the coordinator's scalable path) ----
+    let mut native = NativeBlockOp::new(problem.clone(), 0, blk_hi);
+    let s_native = bench.run("native CSR block step (p=4 block)", || {
+        native.update(&x, &mut out);
+    });
+
+    // ---- native ELL (the kernel's layout, on host) ----
+    let ell = Ell::from_csr_range(&problem.csr, 0, blk_hi, 16);
+    let mut vy = vec![0.0f32; ell.virtual_rows()];
+    let s_ell = bench.run("native ELL spmv (virtual rows)", || {
+        ell.spmv_virtual(&x, &mut vy);
+    });
+
+    // ---- PJRT artifact (L1 pallas kernel through the runtime) ----
+    let engine = Engine::new(asyncpr::runtime::default_artifacts_dir())?;
+    let mut art = ArtifactBlockOp::new(&engine, problem.clone(), 0, blk_hi, 16)?;
+    let s_art = bench.run("PJRT artifact block step (pallas L1)", || {
+        art.update(&x, &mut out);
+    });
+
+    println!("\n{}", s_native.report());
+    println!("{}", s_ell.report());
+    println!("{}", s_art.report());
+
+    let gnnz = |d: std::time::Duration| nnz as f64 / d.as_secs_f64() / 1e9;
+    let roofline_bytes = (nnz * 12) as f64; // val + idx + gather per nnz
+    println!("\nthroughput: native CSR {:.3} Gnnz/s | native ELL {:.3} | artifact {:.3}",
+        gnnz(s_native.mean), gnnz(s_ell.mean), gnnz(s_art.mean));
+    println!(
+        "memory traffic (roofline basis): {:.1} MB per step; native CSR streams {:.2} GB/s",
+        roofline_bytes / 1e6,
+        roofline_bytes / s_native.mean.as_secs_f64() / 1e9
+    );
+    println!(
+        "\nartifact/native ratio: {:.1}x (PJRT buffer upload dominates; the ELL\n\
+         padding also does {:.2}x the logical nonzero work — see EXPERIMENTS.md §Perf)",
+        s_art.mean.as_secs_f64() / s_native.mean.as_secs_f64(),
+        ell.vals().len() as f64 / nnz as f64,
+    );
+    Ok(())
+}

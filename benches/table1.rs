@@ -1,0 +1,58 @@
+//! Bench T1: regenerate Table 1 of the paper.
+//!
+//! Paper (Stanford-Web, α=0.85, local tol 1e-6, pcMax=1):
+//!
+//! | procs | iters | t (s) | [iters_min, iters_max] | [t_min, t_max] | <speedUp> |
+//! |-------|-------|-------|------------------------|----------------|-----------|
+//! | 2     | 44    | 179.2 | [68, 69]               | [86.3, 94.5]   | 1.98      |
+//! | 4     | 44    | 331.4 | [82, 111]              | [139.2, 153.1] | 2.27      |
+//! | 6     | 44    | 402.8 | [129, 148]             | [141.7, 160.6] | 2.66      |
+//!
+//! Virtual times regenerate deterministically; the wall-clock of the
+//! *simulation itself* is also measured (criterion is unavailable
+//! offline — util::harness provides warmup+stats).
+//!
+//! BENCH_FAST=1 or --quick runs the 1/10-scale graph.
+
+use asyncpr::config::RunConfig;
+use asyncpr::coordinator::experiments::{self, ExperimentCtx};
+use asyncpr::metrics::table1_markdown;
+use asyncpr::util::Bench;
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick")
+        || std::env::var("BENCH_FAST").ok().as_deref() == Some("1");
+    let graph = if quick { "scaled:28190" } else { "stanford" };
+    let bw_scale = if quick {
+        asyncpr::simnet::ClusterProfile::demand_matched_scale(28_190, 4)
+    } else {
+        1.0
+    };
+    println!("== bench table1 (graph = {graph}) ==\n");
+    let ctx = ExperimentCtx::new(RunConfig { graph: graph.into(), bandwidth_scale: bw_scale, ..Default::default() })?;
+
+    let rows = experiments::table1(&ctx, &[2, 4, 6])?;
+    let t1: Vec<_> = rows.iter().map(|(r, _, _)| r.clone()).collect();
+    println!("{}", table1_markdown(&t1));
+    println!("paper:   p=2: 44it/179.2s vs [68,69]it/[86.3,94.5]s speedup 1.98");
+    println!("         p=4: 44it/331.4s vs [82,111]/[139.2,153.1] speedup 2.27");
+    println!("         p=6: 44it/402.8s vs [129,148]/[141.7,160.6] speedup 2.66\n");
+
+    // shape assertions (who wins, direction of growth)
+    let mut last_sync = 0.0;
+    for r in &t1 {
+        assert!(r.speedup > 1.0, "async must win at p={}", r.procs);
+        assert!(r.sync_time > last_sync, "sync time must grow with p");
+        assert!(r.async_iters_max >= r.sync_iters, "async iterates at least as much");
+        last_sync = r.sync_time;
+    }
+    println!("shape check PASSED: async wins at every p; sync time grows with p");
+
+    // wall-clock of the simulation itself
+    let bench = Bench::default();
+    let stats = bench.run("simulate table1 row p=4 (sync+async)", || {
+        let _ = experiments::table1(&ctx, &[4]).unwrap();
+    });
+    println!("\n{}", stats.report());
+    Ok(())
+}

@@ -1,0 +1,67 @@
+//! Bench T2: regenerate Table 2 — the completed-imports matrix of the
+//! asynchronous p=4 run.
+//!
+//! Paper:
+//!
+//! | Receiver | id=0 | id=1 | id=2 | id=3 | Completed Imports (%) |
+//! |----------|------|------|------|------|-----------------------|
+//! | id = 0   | 109  | 46   | 23   | 26   | 29                    |
+//! | id = 1   | 40   | 107  | 22   | 27   | 28                    |
+//! | id = 2   | 35   | 37   | 111  | 66   | 41                    |
+//! | id = 3   | 27   | 30   | 54   | 82   | 45                    |
+//!
+//! Shape to match: diagonals ≈ local iteration counts (tens to ~100+),
+//! off-diagonals strictly smaller, import percentages well below 100 %
+//! (the wire cannot carry every-step all-to-all fragments).
+
+use asyncpr::config::RunConfig;
+use asyncpr::coordinator::experiments::{self, ExperimentCtx};
+use asyncpr::metrics::table2_markdown;
+use asyncpr::util::Bench;
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick")
+        || std::env::var("BENCH_FAST").ok().as_deref() == Some("1");
+    let graph = if quick { "scaled:28190" } else { "stanford" };
+    let bw_scale = if quick {
+        asyncpr::simnet::ClusterProfile::demand_matched_scale(28_190, 4)
+    } else {
+        1.0
+    };
+    println!("== bench table2 (graph = {graph}, async p=4) ==\n");
+    let ctx = ExperimentCtx::new(RunConfig { graph: graph.into(), bandwidth_scale: bw_scale, ..Default::default() })?;
+
+    let m = experiments::table2(&ctx, 4)?;
+    println!("{}", table2_markdown(&m));
+    println!("paper: diagonals 82-111, off-diagonals 22-66, import pct 28-45%\n");
+
+    // shape assertions
+    for i in 0..4 {
+        for j in 0..4 {
+            if i != j {
+                assert!(
+                    m.imports[i][j] < m.imports[i][i],
+                    "off-diagonal [{i}][{j}] must be below the diagonal"
+                );
+            }
+        }
+        assert!(
+            m.import_pct[i] < 100.0,
+            "async imports must be incomplete (receiver {i}: {}%)",
+            m.import_pct[i]
+        );
+    }
+    let cancelled: u64 = m.wire_cancelled;
+    assert!(cancelled > 0, "the saturated wire must cancel sends");
+    println!(
+        "shape check PASSED: diagonals dominate, imports incomplete ({} sends cancelled)",
+        cancelled
+    );
+
+    let bench = Bench::default();
+    let stats = bench.run("simulate table2 run (async p=4)", || {
+        let _ = experiments::table2(&ctx, 4).unwrap();
+    });
+    println!("\n{}", stats.report());
+    Ok(())
+}

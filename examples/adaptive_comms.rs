@@ -1,0 +1,79 @@
+//! Adaptive communication (§6 future work, implemented here): "if
+//! message sending/receiving tasks fail to complete within a number of
+//! local iterations, reduce the rate of message exchanges with this
+//! not well 'responding' node."
+//!
+//! The controller keeps a per-peer send period; every cancelled send
+//! doubles it (up to 16 iterations), every delivered send decays it by
+//! one. On a saturated wire this sheds exactly the traffic that would
+//! have been cancelled anyway, freeing capacity for the messages that
+//! do fit.
+//!
+//!     cargo run --release --example adaptive_comms
+
+use std::sync::Arc;
+
+use asyncpr::asynciter::{BlockOperator, Mode, NativeBlockOp, RunSpec, SimEngine, StopRule};
+use asyncpr::coordinator::Partitioner;
+use asyncpr::graph::{generators, Csr};
+use asyncpr::pagerank::PagerankProblem;
+use asyncpr::simnet::ClusterProfile;
+use asyncpr::util::Table;
+
+fn main() -> anyhow::Result<()> {
+    let el = generators::power_law_web(&generators::WebParams::scaled(28_190), 13);
+    let problem = Arc::new(PagerankProblem::new(Csr::from_edgelist(&el)?, 0.85));
+    let p = 6; // the most wire-saturated configuration of the paper
+    // 1/10-scale graph: shrink the wire so the paper's saturation
+    // (demand/capacity) ratio is preserved at p=6
+    let bw_scale = ClusterProfile::demand_matched_scale(28_190, 6);
+
+    let mut table = Table::new(&[
+        "scheme",
+        "t to global 1e-4 (s)",
+        "iters_max",
+        "sends attempted",
+        "cancelled",
+        "wire queue wait (s)",
+        "global resid",
+    ]);
+    for (name, adaptive) in [("every-step (paper)", false), ("adaptive (§6)", true)] {
+        let mut profile = ClusterProfile::paper_beowulf(p);
+        profile.bandwidth *= bw_scale;
+        let mut ops: Vec<Box<dyn BlockOperator>> = Partitioner::consecutive(problem.n(), p)
+            .blocks()
+            .into_iter()
+            .map(|(lo, hi)| {
+                Box::new(NativeBlockOp::new(problem.clone(), lo, hi)) as Box<dyn BlockOperator>
+            })
+            .collect();
+        // race both schemes to the SAME true global residual so the
+        // comparison is accuracy-fair (under extreme saturation the
+        // local protocol would stop early on frozen data)
+        let spec = RunSpec {
+            mode: Mode::Asynchronous,
+            stop: StopRule::GlobalThreshold { tol: 1e-4 },
+            adaptive,
+            seed: 42,
+            max_total_iters: 2_000_000,
+        };
+        let m = SimEngine::new(&profile, &problem).run(&mut ops, &spec);
+        let (_, imax) = m.iters_range();
+        table.row(&[
+            name.to_string(),
+            format!("{:.1}", m.total_time),
+            imax.to_string(),
+            m.sends_attempted.iter().sum::<u64>().to_string(),
+            m.wire_cancelled.to_string(),
+            format!("{:.1}", m.wire_queue_wait),
+            format!("{:.1e}", m.final_global_residual),
+        ]);
+    }
+    println!("{}", table.to_markdown());
+    println!(
+        "adaptive rate control sheds the sends the wire would cancel anyway;\n\
+         the surviving fragments flow sooner, so the same global accuracy is\n\
+         reached faster with a fraction of the traffic — the §6 prescription."
+    );
+    Ok(())
+}

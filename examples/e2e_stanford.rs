@@ -1,0 +1,85 @@
+//! End-to-end driver: the paper's full experiment on the Stanford-Web-
+//! scale synthetic graph (n = 281,903, nnz ≈ 2.31 M, 172 dangling).
+//!
+//! Reproduces, in one run:
+//!   * Table 1 — sync vs async iterations/time/speedup at p ∈ {2, 4, 6};
+//!   * Table 2 — the completed-imports matrix for the async p = 4 run;
+//!   * §5.2  — the achieved global residual at local tol 1e-6, and the
+//!     ranking agreement (Kendall-τ, top-100) against a tight reference.
+//!
+//! Results are printed in the paper's layout and written to
+//! `reports/e2e_stanford.{md,json}`. Run with --quick for a 10×
+//! scaled-down graph (CI-friendly).
+//!
+//!     cargo run --release --example e2e_stanford [-- --quick]
+
+use asyncpr::config::RunConfig;
+use asyncpr::coordinator::experiments::{self, ExperimentCtx};
+use asyncpr::coordinator::Report;
+use asyncpr::graph::GraphStats;
+use asyncpr::metrics::{run_summary, table1_markdown, table2_markdown};
+use asyncpr::termination::GlobalOracle;
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let graph = if quick { "scaled:28190".to_string() } else { "stanford".to_string() };
+    eprintln!("== asyncpr e2e driver (graph = {graph}) ==");
+
+    let base = RunConfig { graph, ..Default::default() };
+    let t0 = std::time::Instant::now();
+    let ctx = ExperimentCtx::new(base)?;
+    let stats = GraphStats::compute(&ctx.problem.csr);
+    println!("graph: {}", stats.report());
+
+    // ---- Table 1 ----
+    let procs: &[usize] = &[2, 4, 6];
+    let rows = experiments::table1(&ctx, procs)?;
+    let t1_rows: Vec<_> = rows.iter().map(|(r, _, _)| r.clone()).collect();
+    let t1 = table1_markdown(&t1_rows);
+    println!("\nTable 1 — synchronous vs asynchronous (local tol 1e-6, pcMax 1):\n{t1}");
+    println!("paper's shape: sync time GROWS with p; async wins ~2x at p=2, more at p=6\n");
+
+    // ---- Table 2 ----
+    let async4 = experiments::table2(&ctx, 4)?;
+    let t2 = table2_markdown(&async4);
+    println!("Table 2 — completed imports, async p=4:\n{t2}");
+    println!("paper's shape: diagonals ~100+ local iterations, off-diagonal\nimports complete only ~28-45% of the time\n");
+
+    // ---- §5.2 global residual + ranking ----
+    let async_run = &rows[0].2;
+    println!("§5.2 checks (p=2 async run): {}", run_summary(async_run));
+    let oracle = GlobalOracle::new(&ctx.problem, 1e-9);
+    let tau = oracle.ranking_tau(&async_run.x);
+    let top100 = oracle.top_k(&async_run.x, 100);
+    println!(
+        "achieved global residual {:.2e} (paper: local 1e-6 => global ~5e-5)",
+        async_run.final_global_residual
+    );
+    println!("ranking vs tight reference: kendall-tau {tau:.6}, top-100 overlap {top100:.2}");
+
+    // ---- report ----
+    std::fs::create_dir_all("reports")?;
+    let mut rep = Report::new();
+    rep.add_section("Graph", &stats.report());
+    rep.add_section("Table 1", &t1);
+    rep.add_section("Table 2", &t2);
+    rep.add_section(
+        "Global residual & ranking",
+        &format!(
+            "achieved global residual {:.3e}; kendall-tau {tau:.6}; top-100 {top100:.2}",
+            async_run.final_global_residual
+        ),
+    );
+    for (row, sync, asyn) in &rows {
+        rep.add_run(&format!("sync_p{}", row.procs), sync);
+        rep.add_run(&format!("async_p{}", row.procs), asyn);
+        rep.add_json(&format!("table1_p{}", row.procs), row.to_json());
+    }
+    rep.add_run("async_p4_table2", &async4);
+    rep.write("reports/e2e_stanford")?;
+    eprintln!(
+        "\nwrote reports/e2e_stanford.{{md,json}} ({}s wall)",
+        t0.elapsed().as_secs()
+    );
+    Ok(())
+}

@@ -1,0 +1,72 @@
+//! Figure-1 protocol trace: drive the termination state machines
+//! through the exact scenario the paper's pseudocode describes and
+//! print every transition — a runnable version of Figure 1, plus the
+//! tree-based decentralized detector of §4.2/§6 side by side.
+//!
+//!     cargo run --release --example termination_trace
+
+use asyncpr::termination::tree::TreeNode;
+use asyncpr::termination::{MonitorTermination, TermMsg, WorkerTermination};
+
+fn main() {
+    println!("=== centralized protocol (Figure 1), p = 3, pcMax worker=2 monitor=1 ===\n");
+    let p = 3;
+    let mut workers: Vec<WorkerTermination> =
+        (0..p).map(|_| WorkerTermination::new(2)).collect();
+    let mut monitor = MonitorTermination::new(p, 1);
+
+    // residual script per UE per iteration (true = locally converged)
+    let script: [&[bool]; 3] = [
+        &[false, true, true, true, true, true],
+        &[false, false, true, true, false, true, true, true],
+        &[false, true, true, false, true, true, true, true],
+    ];
+    let mut stopped = false;
+    for step in 0..8 {
+        for ue in 0..p {
+            let Some(&conv) = script[ue].get(step) else { continue };
+            if let Some(msg) = workers[ue].on_iteration(conv) {
+                println!("t={step}: UE{ue} -> monitor: {msg:?} (pc hit pcMax)");
+                if monitor.on_message(ue, msg) {
+                    println!(
+                        "t={step}: monitor: all {p} UEs logged CONVERGE, pc reached pcMax -> STOP to all"
+                    );
+                    stopped = true;
+                }
+            } else {
+                println!(
+                    "t={step}: UE{ue} iter: locally_converged={conv} pc={} (silent)",
+                    workers[ue].pc()
+                );
+            }
+            if stopped {
+                break;
+            }
+        }
+        if stopped {
+            break;
+        }
+    }
+    assert!(stopped, "script should reach STOP");
+
+    println!("\n=== decentralized tree detector (p = 7 binary tree, pcMax(root)=1 ===\n");
+    let p = 7;
+    let mut nodes: Vec<TreeNode> = (0..p).map(|i| TreeNode::new(i, p, 1)).collect();
+    let mut queue: Vec<(usize, usize, asyncpr::termination::tree::TreeMsg)> = Vec::new();
+    for ue in (0..p).rev() {
+        let fx = nodes[ue].on_local(true);
+        for (dst, msg) in fx.send {
+            println!("UE{ue} -> UE{dst}: {msg:?}");
+            queue.push((ue, dst, msg));
+        }
+    }
+    while let Some((src, dst, msg)) = queue.pop() {
+        let fx = nodes[dst].on_message(src, msg);
+        for (d2, m2) in fx.send {
+            println!("UE{dst} -> UE{d2}: {m2:?}");
+            queue.push((dst, d2, m2));
+        }
+    }
+    assert!(nodes.iter().all(|n| n.stopped()));
+    println!("\nall {p} nodes stopped via tree flood — no central monitor required");
+}

@@ -1,0 +1,120 @@
+"""AOT compiler: lower the L2 model to HLO-text artifacts for rust.
+
+Emits, for every shape bucket in compile.shapes.BUCKETS:
+
+    artifacts/pagerank_step_n{N}_b{B}_k{K}.hlo.txt
+
+plus artifacts/manifest.json recording the ABI (argument order, shapes,
+dtypes, output arity) the rust runtime validates at startup.
+
+Interchange format is HLO **text**, not a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which the crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .shapes import ARG_ORDER, BUCKETS, Bucket
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def arg_specs(bucket: Bucket) -> dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStructs for one bucket, keyed by ABI argument name."""
+    n, b, k = bucket.n, bucket.b, bucket.k
+    return {
+        "vals": jax.ShapeDtypeStruct((b, k), jnp.float32),
+        "cols": jax.ShapeDtypeStruct((b, k), jnp.int32),
+        "x": jax.ShapeDtypeStruct((n,), jnp.float32),
+        "xold": jax.ShapeDtypeStruct((b,), jnp.float32),
+        "bias": jax.ShapeDtypeStruct((b,), jnp.float32),
+        "dang": jax.ShapeDtypeStruct((1,), jnp.float32),
+        "alpha": jax.ShapeDtypeStruct((1,), jnp.float32),
+    }
+
+
+def lower_bucket(bucket: Bucket, fn=None) -> str:
+    specs = arg_specs(bucket)
+    args = [specs[name] for name in ARG_ORDER]
+    if fn is None:
+        # CPU schedule: one Pallas tile over the whole block (the
+        # interpret-mode grid loop costs ~100x at streaming tile sizes)
+        fn = lambda *a: model.block_step(*a, tile_r=bucket.b)
+    lowered = jax.jit(fn).lower(*args)
+    return to_hlo_text(lowered)
+
+
+def manifest_entry(bucket: Bucket, kernel: str, path: str) -> dict:
+    specs = arg_specs(bucket)
+    return {
+        "kernel": kernel,
+        "bucket": bucket.to_dict(),
+        "path": path,
+        "args": [
+            {
+                "name": name,
+                "shape": list(specs[name].shape),
+                "dtype": str(specs[name].dtype),
+            }
+            for name in ARG_ORDER
+        ],
+        "outputs": [
+            {"name": "y", "shape": [bucket.b], "dtype": "float32"},
+            {"name": "resid", "shape": [1], "dtype": "float32"},
+        ],
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts",
+                    help="artifact output directory")
+    ap.add_argument("--buckets", default="",
+                    help="comma-separated bucket names (default: all)")
+    args = ap.parse_args()
+
+    out_dir = pathlib.Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    wanted = set(filter(None, args.buckets.split(","))) or {
+        b.name for b in BUCKETS
+    }
+
+    entries = []
+    for bucket in BUCKETS:
+        if bucket.name not in wanted:
+            continue
+        name = bucket.artifact_name("pagerank_step")
+        text = lower_bucket(bucket)
+        path = out_dir / f"{name}.hlo.txt"
+        path.write_text(text)
+        entries.append(manifest_entry(bucket, "pagerank_step", path.name))
+        print(f"wrote {path} ({len(text)} chars, bucket={bucket.name})")
+
+    manifest = {
+        "version": 1,
+        "arg_order": list(ARG_ORDER),
+        "artifacts": entries,
+    }
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    print(f"wrote {out_dir / 'manifest.json'} ({len(entries)} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

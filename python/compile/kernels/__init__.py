@@ -1,0 +1,6 @@
+# L1: Pallas kernels for the paper's compute hot-spot.
+from .spmv_ell import spmv_ell, DEFAULT_TILE_R
+from .pagerank_step import pagerank_step
+from . import ref
+
+__all__ = ["spmv_ell", "pagerank_step", "ref", "DEFAULT_TILE_R"]

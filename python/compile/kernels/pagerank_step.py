@@ -1,0 +1,91 @@
+"""L1 Pallas kernel: fused PageRank block update (eq. 6 of the paper).
+
+One kernel invocation computes, for a UE's row block,
+
+    y = alpha * (M x)_block + dang + bias          (fused with the SpMV)
+
+and a per-tile partial L1 residual |y - xold| that the surrounding L2
+model reduces to the scalar local-convergence signal of the paper's
+termination protocol (Figure 1).
+
+Fusion rationale (DESIGN.md §Hardware-Adaptation): the paper's per-step
+work is ONE pass over the block's nonzeros; splitting SpMV / scale /
+teleport / residual into separate ops would re-read y three times from
+HBM. The fused kernel writes y once and keeps the residual reduction in
+registers/VMEM.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .spmv_ell import DEFAULT_TILE_R
+
+
+def _pagerank_step_kernel(
+    vals_ref, cols_ref, x_ref, xold_ref, bias_ref, dang_ref, alpha_ref,
+    y_ref, partial_ref,
+):
+    """One (TILE_R, K) tile of the fused update + residual partial."""
+    vals = vals_ref[...]             # (TILE_R, K) f32
+    cols = cols_ref[...]             # (TILE_R, K) i32
+    x = x_ref[...]                   # (N,)        f32, resident
+    xold = xold_ref[...]             # (TILE_R,)
+    bias = bias_ref[...]             # (TILE_R,)
+    dang = dang_ref[0]               # scalar: alpha * (d.x) / n
+    alpha = alpha_ref[0]             # scalar
+
+    spmv = jnp.sum(vals * x[cols], axis=1)          # (TILE_R,)
+    y = alpha * spmv + dang + bias
+    y_ref[...] = y
+    partial_ref[0] = jnp.sum(jnp.abs(y - xold))     # per-tile L1 partial
+
+
+@functools.partial(jax.jit, static_argnames=("tile_r",))
+def pagerank_step(vals, cols, x, xold, bias, dang, alpha,
+                  *, tile_r: int = DEFAULT_TILE_R):
+    """Fused PageRank block step. See compile.shapes.ARG_ORDER for ABI.
+
+    Args:
+      vals:  f32[B, K]  ELL values (row-stochastic P^T entries, alpha NOT folded).
+      cols:  i32[B, K]  ELL column indices.
+      x:     f32[N]     global iterate snapshot.
+      xold:  f32[B]     previous local block iterate (residual baseline).
+      bias:  f32[B]     (1 - alpha) * v over the block rows.
+      dang:  f32[1]     alpha * (d . x) / n.
+      alpha: f32[1]     relaxation parameter.
+
+    Returns: (y f32[B], resid f32[1]) with resid = sum_i |y_i - xold_i|.
+    """
+    b, k = vals.shape
+    tile_r = min(tile_r, b)  # small blocks: single tile
+    if b % tile_r != 0:
+        raise ValueError(f"block rows {b} not divisible by tile_r {tile_r}")
+    n = x.shape[0]
+    tiles = b // tile_r
+    y, partials = pl.pallas_call(
+        _pagerank_step_kernel,
+        grid=(tiles,),
+        in_specs=[
+            pl.BlockSpec((tile_r, k), lambda i: (i, 0)),   # vals: stream
+            pl.BlockSpec((tile_r, k), lambda i: (i, 0)),   # cols: stream
+            pl.BlockSpec((n,), lambda i: (0,)),            # x: resident
+            pl.BlockSpec((tile_r,), lambda i: (i,)),       # xold: stream
+            pl.BlockSpec((tile_r,), lambda i: (i,)),       # bias: stream
+            pl.BlockSpec((1,), lambda i: (0,)),            # dang: scalar
+            pl.BlockSpec((1,), lambda i: (0,)),            # alpha: scalar
+        ],
+        out_specs=[
+            pl.BlockSpec((tile_r,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),            # one partial/tile
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b,), vals.dtype),
+            jax.ShapeDtypeStruct((tiles,), vals.dtype),
+        ],
+        interpret=True,
+    )(vals, cols, x, xold, bias, dang, alpha)
+    resid = jnp.sum(partials, keepdims=True)       # final reduce in XLA
+    return y, resid

@@ -1,0 +1,58 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness signal for the whole stack: L1 kernels must
+match these (allclose), and the rust native SpMV is cross-checked
+against artifact outputs that were themselves checked against these.
+
+All functions take the same ELL-block arguments as the kernels
+(see compile.shapes.ARG_ORDER) and are written with plain jnp ops only,
+in the most obvious way possible -- no tiling, no tricks.
+"""
+
+import jax.numpy as jnp
+
+
+def spmv_ell_ref(vals: jnp.ndarray, cols: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """y[i] = sum_k vals[i, k] * x[cols[i, k]].
+
+    Padded slots must carry vals == 0 (their col index is then
+    irrelevant; the convention is col = 0).
+    """
+    return jnp.sum(vals * x[cols], axis=1)
+
+
+def pagerank_step_ref(
+    vals: jnp.ndarray,
+    cols: jnp.ndarray,
+    x: jnp.ndarray,
+    xold: jnp.ndarray,
+    bias: jnp.ndarray,
+    dang: jnp.ndarray,
+    alpha: jnp.ndarray,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """One PageRank update for a row block, eq. (6) of the paper.
+
+    y = alpha * (P^T x)_block + alpha * (d.x)/n + (1-alpha) * v_block
+      =: alpha * spmv + dang + bias
+
+    where `dang` and `bias` are precomputed by the caller (rust L3 or
+    the L2 model), plus the L1 residual against the previous block
+    iterate `xold`.
+    """
+    y = alpha[0] * spmv_ell_ref(vals, cols, x) + dang[0] + bias
+    resid = jnp.sum(jnp.abs(y - xold), keepdims=True)
+    return y, resid
+
+
+def power_iterate_ref(vals, cols, x, bias, dang_mask, alpha, steps: int):
+    """Reference synchronous power iteration over a FULL matrix in ELL
+    form (block == whole matrix). Used by model tests only.
+
+    dang_mask: f32[N] with 1.0 at dangling rows (outdegree 0).
+    bias: (1-alpha) * v (full length).
+    """
+    n = x.shape[0]
+    for _ in range(steps):
+        dang = alpha * jnp.dot(dang_mask, x) / n
+        x = alpha * spmv_ell_ref(vals, cols, x) + dang + bias
+    return x

@@ -1,0 +1,72 @@
+"""L1 Pallas kernel: tiled ELLPACK SpMV.
+
+The compute hot spot of the paper's PageRank iteration -- the sparse
+matrix-vector product y = M x for one UE's row block -- expressed as a
+Pallas kernel over the padded ELLPACK layout (see DESIGN.md
+§Hardware-Adaptation for why ELL and not CSR on a TPU-shaped target).
+
+Tiling:
+  grid = (B // TILE_R,)
+  vals/cols stream through VMEM one (TILE_R, K) row tile at a time;
+  the dense iterate x stays VMEM-resident across the whole grid
+  (n * 4 bytes <= ~2 MB for every bucket in shapes.py, far below the
+  16 MB VMEM budget), so the gather x[cols] never touches HBM twice.
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret-mode lowers the kernel to plain HLO
+(gather/multiply/reduce inside a loop), which both pytest and the rust
+runtime can run. Structural VMEM/MXU estimates for a real TPU are in
+DESIGN.md / EXPERIMENTS.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: Row-tile height. 512 rows x K=16 slots x (4B val + 4B idx) = 64 KiB of
+#: streaming VMEM per step -- small against the resident x, large enough
+#: to amortize the grid-loop overhead. Revisited in the perf pass.
+DEFAULT_TILE_R = 512
+
+
+def _spmv_ell_kernel(vals_ref, cols_ref, x_ref, y_ref):
+    """One (TILE_R, K) tile: y = sum_k vals * x[cols]."""
+    vals = vals_ref[...]            # (TILE_R, K)  f32
+    cols = cols_ref[...]            # (TILE_R, K)  i32
+    x = x_ref[...]                  # (N,)         f32, VMEM-resident
+    gathered = x[cols]              # (TILE_R, K) gather from the iterate
+    y_ref[...] = jnp.sum(vals * gathered, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_r",))
+def spmv_ell(vals, cols, x, *, tile_r: int = DEFAULT_TILE_R):
+    """y = M x with M in padded ELLPACK form.
+
+    Args:
+      vals: f32[B, K] -- B divisible by tile_r; padded slots are 0.0.
+      cols: i32[B, K] -- padded slots point at column 0.
+      x:    f32[N]    -- dense iterate.
+      tile_r: row-tile height (static).
+
+    Returns: f32[B].
+    """
+    b, k = vals.shape
+    tile_r = min(tile_r, b)  # small blocks: single tile
+    if b % tile_r != 0:
+        raise ValueError(f"block rows {b} not divisible by tile_r {tile_r}")
+    n = x.shape[0]
+    grid = (b // tile_r,)
+    return pl.pallas_call(
+        _spmv_ell_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_r, k), lambda i: (i, 0)),   # stream row tiles
+            pl.BlockSpec((tile_r, k), lambda i: (i, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),            # x resident
+        ],
+        out_specs=pl.BlockSpec((tile_r,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), vals.dtype),
+        interpret=True,
+    )(vals, cols, x)

@@ -1,0 +1,80 @@
+"""L2: the JAX compute graph the rust coordinator executes via PJRT.
+
+The model is the paper's per-UE update, eq. (6):
+
+    x_{i}(t+1) = G_i [x_{1}(tau) ... x_{p}(tau)]^T
+
+realised as `block_step`: a fused Pallas SpMV + dangling + teleport +
+L1-residual over the UE's ELLPACK row block. `aot.py` lowers
+`block_step` once per shape bucket (compile.shapes.BUCKETS) to HLO text;
+after that Python never runs again.
+
+Everything here is shape-generic; static shapes are pinned only at
+lowering time by aot.py.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import pagerank_step
+from .kernels.ref import spmv_ell_ref
+
+
+def block_step(vals, cols, x, xold, bias, dang, alpha, *, tile_r=None):
+    """One asynchronous PageRank update for a row block (eq. 6) plus the
+    local L1 residual used by the Figure-1 termination protocol.
+
+    ABI documented in compile.shapes.ARG_ORDER; returns (y, resid).
+
+    tile_r picks the Pallas row-tile schedule. None keeps the kernel
+    default (the TPU-oriented streaming tile); the CPU AOT path lowers
+    with tile_r = block rows (a single tile) because interpret-mode
+    grids execute as an XLA while-loop whose per-tile overhead dwarfs
+    the arithmetic — see EXPERIMENTS.md §Perf (123x).
+    """
+    if tile_r is None:
+        return pagerank_step(vals, cols, x, xold, bias, dang, alpha)
+    return pagerank_step(vals, cols, x, xold, bias, dang, alpha, tile_r=tile_r)
+
+
+def block_step_ref(vals, cols, x, xold, bias, dang, alpha):
+    """Pure-jnp twin of `block_step` (no pallas). Lowered alongside the
+    kernel version so rust benches can A/B the artifact paths."""
+    y = alpha[0] * spmv_ell_ref(vals, cols, x) + dang[0] + bias
+    resid = jnp.sum(jnp.abs(y - xold), keepdims=True)
+    return y, resid
+
+
+def power_steps(vals, cols, x, bias, dang_mask, alpha, *, steps: int):
+    """`steps` synchronous power iterations over the FULL matrix
+    (single-UE case, eq. 4), scan-fused so XLA sees one loop.
+
+    Used by the quickstart artifact and by L2 tests; `dang_mask` is the
+    f32 indicator of dangling rows.
+    """
+    n = x.shape[0]
+    inv_n = jnp.float32(1.0) / jnp.float32(n)
+
+    def body(carry, _):
+        xi = carry
+        dang = alpha[0] * jnp.dot(dang_mask, xi) * inv_n
+        y, _ = pagerank_step(
+            vals, cols, xi, xi, bias, dang[None], alpha
+        )
+        return y, None
+
+    out, _ = jax.lax.scan(body, x, None, length=steps)
+    return out
+
+
+def block_step_v2(vals, cols, x, xold, bias, dang_mask, alpha):
+    """Variant ABI: the dangling correction is computed INSIDE the
+    artifact from the dangling indicator vector, so the rust hot loop
+    never touches the snapshot before executing.
+
+    Args match block_step except `dang` (scalar) is replaced by
+    `dang_mask`: f32[N] with 1.0 at dangling pages. Returns (y, resid).
+    """
+    n = x.shape[0]
+    dang = alpha[0] * jnp.dot(dang_mask, x) / jnp.float32(n)
+    return pagerank_step(vals, cols, x, xold, bias, dang[None], alpha)

@@ -1,0 +1,86 @@
+"""Shape buckets shared between the AOT compiler and the rust runtime.
+
+The rust coordinator executes one PJRT artifact per (N, B, K) bucket:
+
+  N  -- padded length of the global PageRank iterate x (power of two,
+        >= number of physical rows + virtual rows after ELL splitting)
+  B  -- padded number of rows in one UE's block (ELL rows, incl. virtual)
+  K  -- ELL width: padded slots per row; rows with outdegree > K are
+        split into virtual rows by the rust side (graph::ell), so the
+        kernel never needs a CSR fallback.
+
+Buckets are chosen so that every experiment in DESIGN.md §5 has an exact
+artifact: quickstart graphs, mid-size synthetic webs, and the
+Stanford-Web-like graph (n = 281,903 -> N = 2^19 after virtual rows).
+
+The manifest (artifacts/manifest.json) records, for every emitted
+artifact, the argument order and shapes so the rust loader can validate
+at startup instead of failing inside PJRT.
+"""
+
+from dataclasses import dataclass, asdict
+
+
+@dataclass(frozen=True)
+class Bucket:
+    """One AOT shape bucket. All dims static (HLO requires it)."""
+
+    name: str
+    n: int  # padded global vector length
+    b: int  # padded block rows (ELL rows incl. virtual rows)
+    k: int  # ELL width (padded slots per row)
+
+    def artifact_name(self, kernel: str) -> str:
+        return f"{kernel}_n{self.n}_b{self.b}_k{self.k}"
+
+    def to_dict(self) -> dict:
+        return asdict(self)
+
+
+#: The buckets `make artifacts` compiles. Keep this list small -- every
+#: bucket costs one jax lowering at build time -- but complete enough
+#: that DESIGN.md's experiment table never falls back to native SpMV
+#: when it intends to exercise the artifact path.
+BUCKETS: tuple[Bucket, ...] = (
+    # quickstart / unit-test scale
+    Bucket("tiny", n=1 << 10, b=1 << 9, k=8),
+    # examples / integration-test scale
+    Bucket("small", n=1 << 12, b=1 << 11, k=16),
+    # mid-size synthetic web (ablations)
+    Bucket("mid", n=1 << 15, b=1 << 13, k=16),
+    # Stanford-Web-like: 281,903 rows + virtual rows < 2^19
+    Bucket("stanford", n=1 << 19, b=1 << 17, k=16),
+)
+
+#: Kernels emitted per bucket; order of args is part of the ABI with rust.
+KERNELS = ("pagerank_step",)
+
+#: Argument order for the pagerank_step artifact (ABI with rust/runtime):
+#:   vals      f32[B, K]   ELL values of this UE's row block (alpha NOT folded)
+#:   cols      i32[B, K]   ELL column indices (padded slots point at 0 with val 0)
+#:   x         f32[N]      current global iterate snapshot
+#:   bias      f32[B]      (1 - alpha) * v restricted to the block rows
+#:   dang      f32[1]      alpha * (d . x) / n  (dangling mass, precomputed)
+#:   alpha     f32[1]      relaxation parameter
+#: returns (y f32[B], resid f32[1]) where resid = sum |y - x_block_old|;
+#: x_block_old is x[row_offset : row_offset + B] -- passed separately:
+#:   xold      f32[B]
+ARG_ORDER = ("vals", "cols", "x", "xold", "bias", "dang", "alpha")
+
+
+def bucket_by_name(name: str) -> Bucket:
+    for bkt in BUCKETS:
+        if bkt.name == name:
+            return bkt
+    raise KeyError(f"unknown shape bucket: {name!r}")
+
+
+def smallest_bucket(n_rows: int, block_rows: int, width: int) -> Bucket:
+    """Smallest bucket that fits a (n_rows, block_rows, width) problem."""
+    for bkt in sorted(BUCKETS, key=lambda b: (b.n, b.b, b.k)):
+        if bkt.n >= n_rows and bkt.b >= block_rows and bkt.k >= width:
+            return bkt
+    raise ValueError(
+        f"no shape bucket fits n={n_rows} b={block_rows} k={width}; "
+        f"largest is {BUCKETS[-1]}"
+    )

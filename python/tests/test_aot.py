@@ -1,0 +1,112 @@
+"""AOT pipeline: lowering, manifest ABI, and compiled-executable numerics.
+
+The text-level round trip (HLO text -> xla crate -> PJRT) is exercised
+by `cargo test` on the rust side; here we pin down everything we can
+check from python: the lowered computation compiles and matches the
+oracle on concrete inputs, the manifest records the exact ABI rust
+expects, and the emitted text is well-formed HLO.
+"""
+
+import json
+import pathlib
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile import aot, model
+from compile.shapes import ARG_ORDER, BUCKETS, Bucket, bucket_by_name, smallest_bucket
+from compile.kernels.ref import pagerank_step_ref
+
+TINY = bucket_by_name("tiny")
+
+
+def concrete_inputs(bucket: Bucket, seed=0):
+    rng = np.random.default_rng(seed)
+    n, b, k = bucket.n, bucket.b, bucket.k
+    mask = rng.random((b, k)) < 0.4
+    vals = np.where(mask, rng.random((b, k)), 0.0).astype(np.float32)
+    cols = np.where(mask, rng.integers(0, n, (b, k)), 0).astype(np.int32)
+    x = rng.random(n, dtype=np.float32)
+    xold = x[:b].copy()
+    bias = np.full(b, 0.15 / n, np.float32)
+    dang = np.array([0.001], np.float32)
+    alpha = np.array([0.85], np.float32)
+    return dict(vals=vals, cols=cols, x=x, xold=xold, bias=bias,
+                dang=dang, alpha=alpha)
+
+
+class TestLowering:
+    def test_hlo_text_wellformed(self):
+        text = aot.lower_bucket(TINY)
+        assert "ENTRY" in text and "HloModule" in text
+        # gather (the SpMV x[cols]) must be present -- the hot spot
+        assert "gather" in text
+
+    def test_compiled_matches_ref(self):
+        """jit-compiled block_step at bucket shapes == oracle."""
+        ins = concrete_inputs(TINY)
+        args = [ins[name] for name in ARG_ORDER]
+        y, r = jax.jit(model.block_step)(*args)
+        y_ref, r_ref = pagerank_step_ref(*args)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(r), np.asarray(r_ref), rtol=1e-4)
+
+    def test_kernel_and_ref_model_agree(self):
+        """The pallas path and the pure-jnp L2 twin lower to the same
+        numbers (what the rust A/B bench relies on)."""
+        ins = concrete_inputs(TINY, seed=9)
+        args = [ins[name] for name in ARG_ORDER]
+        y1, r1 = jax.jit(model.block_step)(*args)
+        y2, r2 = jax.jit(model.block_step_ref)(*args)
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(r1), np.asarray(r2), rtol=1e-4)
+
+
+class TestShapes:
+    def test_buckets_sorted_and_unique(self):
+        names = [b.name for b in BUCKETS]
+        assert len(set(names)) == len(names)
+        for b in BUCKETS:
+            assert b.n >= b.b, "block cannot exceed vector length"
+            assert b.n & (b.n - 1) == 0, "n must be a power of two"
+
+    def test_smallest_bucket_selection(self):
+        assert smallest_bucket(1000, 500, 8).name == "tiny"
+        assert smallest_bucket(1025, 500, 8).name == "small"
+        assert smallest_bucket(300_000, 100_000, 16).name == "stanford"
+
+    def test_smallest_bucket_overflow_raises(self):
+        with pytest.raises(ValueError):
+            smallest_bucket(10**9, 1, 1)
+
+    def test_artifact_name_stable(self):
+        assert TINY.artifact_name("pagerank_step") == "pagerank_step_n1024_b512_k8"
+
+
+class TestManifest:
+    def test_manifest_entry_abi(self):
+        entry = aot.manifest_entry(TINY, "pagerank_step", "x.hlo.txt")
+        assert [a["name"] for a in entry["args"]] == list(ARG_ORDER)
+        shapes = {a["name"]: a["shape"] for a in entry["args"]}
+        assert shapes["vals"] == [TINY.b, TINY.k]
+        assert shapes["cols"] == [TINY.b, TINY.k]
+        assert shapes["x"] == [TINY.n]
+        assert shapes["dang"] == [1]
+        dtypes = {a["name"]: a["dtype"] for a in entry["args"]}
+        assert dtypes["cols"] == "int32"
+        assert dtypes["vals"] == "float32"
+        assert entry["outputs"][0]["shape"] == [TINY.b]
+
+    def test_emitted_manifest_if_present(self):
+        """If `make artifacts` has run, the manifest on disk must match
+        the current ABI (guards against stale artifacts)."""
+        p = pathlib.Path(__file__).resolve().parents[2] / "artifacts" / "manifest.json"
+        if not p.exists():
+            pytest.skip("artifacts not built")
+        m = json.loads(p.read_text())
+        assert m["arg_order"] == list(ARG_ORDER)
+        for e in m["artifacts"]:
+            assert (p.parent / e["path"]).exists()

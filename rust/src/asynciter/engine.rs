@@ -1,0 +1,666 @@
+//! The discrete-event simulation engine: UEs, fragment exchange over
+//! the shared medium, the Figure-1 termination protocol, and metrics.
+//!
+//! One [`SimEngine::run`] executes one experiment: p computing UEs plus
+//! one monitor UE on the simulated cluster ([`crate::simnet`]),
+//! iterating a partitioned [`BlockOperator`] either synchronously
+//! (barrier per round) or asynchronously (free-running, Figure-1
+//! termination). Everything the paper measures falls out of the run:
+//! Table 1 (iteration counts, completion-time ranges), Table 2 (the
+//! completed-imports matrix), §5.2's achieved global residual, and
+//! §6's cancellation/buffer statistics.
+
+use crate::pagerank::PagerankProblem;
+use crate::simnet::{ClusterProfile, EventQueue, SendOutcome, SharedMedium, Topology, VirtualTime};
+use crate::termination::{MonitorTermination, TermMsg, WorkerTermination};
+use crate::util::Rng;
+
+use super::operator::BlockOperator;
+
+/// Execution discipline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    /// Barrier per iteration: UE starts round t+1 only after importing
+    /// every peer's round-t fragment (message-passing BSP, §3).
+    Synchronous,
+    /// Free-running UEs with stale views (§4).
+    Asynchronous,
+}
+
+/// When to stop the run.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum StopRule {
+    /// The paper's protocol: local threshold + Figure-1 monitor with
+    /// the given pcMax at both worker and monitor sides (Table 1 used
+    /// pcMax = 1 on both).
+    LocalProtocol { tol: f32, pc_max_worker: u32, pc_max_monitor: u32 },
+    /// Omniscient global threshold on the TRUE assembled residual
+    /// ‖Gx−x‖₁ (the §5.2 / G2 race). Checked after every UE update.
+    GlobalThreshold { tol: f32 },
+}
+
+/// One experiment specification.
+#[derive(Debug, Clone)]
+pub struct RunSpec {
+    pub mode: Mode,
+    pub stop: StopRule,
+    /// Adaptive per-peer rate control (§6 future work): double a
+    /// peer's send period on cancellation, decay it back on success.
+    pub adaptive: bool,
+    /// Simulation seed (jitter streams).
+    pub seed: u64,
+    /// Safety cap on total UE iterations.
+    pub max_total_iters: u64,
+}
+
+impl RunSpec {
+    /// Table-1 configuration (tol 1e-6, pcMax 1/1).
+    pub fn paper_table1(mode: Mode) -> RunSpec {
+        RunSpec {
+            mode,
+            stop: StopRule::LocalProtocol { tol: 1e-6, pc_max_worker: 1, pc_max_monitor: 1 },
+            adaptive: false,
+            seed: 42,
+            max_total_iters: 2_000_000,
+        }
+    }
+}
+
+/// Everything measured during a run.
+#[derive(Debug, Clone)]
+pub struct RunMetrics {
+    pub mode: Mode,
+    pub p: usize,
+    /// Local iteration count per UE at stop.
+    pub iters: Vec<u64>,
+    /// Per-UE time of final local convergence — the paper's
+    /// [t_min, t_max] (for sync: the stopping barrier time).
+    pub finish_times: Vec<f64>,
+    /// Virtual time at which the whole run ended.
+    pub total_time: f64,
+    /// imports[receiver][sender]: fragments actually imported;
+    /// diagonal = locally computed fragments (Table 2).
+    pub imports: Vec<Vec<u64>>,
+    /// Fragment sends attempted / cancelled (per sender).
+    pub sends_attempted: Vec<u64>,
+    pub sends_cancelled: Vec<u64>,
+    /// True global residual ‖Gx−x‖₁ of the assembled final vector.
+    pub final_global_residual: f32,
+    /// The assembled final iterate.
+    pub x: Vec<f32>,
+    /// Wire statistics (backlog pressure of §6).
+    pub wire_sent: u64,
+    pub wire_cancelled: u64,
+    pub wire_queue_wait: f64,
+    /// Completed-imports percentage per receiver (Table 2 last column).
+    pub import_pct: Vec<f64>,
+}
+
+impl RunMetrics {
+    pub fn iters_range(&self) -> (u64, u64) {
+        (
+            self.iters.iter().copied().min().unwrap_or(0),
+            self.iters.iter().copied().max().unwrap_or(0),
+        )
+    }
+
+    pub fn time_range(&self) -> (f64, f64) {
+        let mut lo = f64::INFINITY;
+        let mut hi = 0.0f64;
+        for &t in &self.finish_times {
+            lo = lo.min(t);
+            hi = hi.max(t);
+        }
+        (lo, hi)
+    }
+
+    /// The paper's ⟨speedUp⟩: sync time over the mean of async extreme
+    /// completion times.
+    pub fn speedup_vs(&self, sync_time: f64) -> f64 {
+        let (lo, hi) = self.time_range();
+        sync_time / ((lo + hi) / 2.0)
+    }
+}
+
+#[derive(Debug)]
+enum Event {
+    /// UE finished one local iteration.
+    ComputeDone { ue: usize },
+    /// A fragment bundle arrives: the sender's own block plus (on
+    /// non-clique topologies) relayed copies of other UEs' blocks —
+    /// the gossip scheme that makes tree/star topologies complete.
+    /// Each entry is (origin UE, origin iteration, block values);
+    /// payloads are Arc-shared — a p=6 async Stanford run would
+    /// otherwise memcpy ~1.4 GB of fragment clones (§Perf).
+    Fragment { src: usize, dst: usize, bundle: Vec<(usize, u64, std::sync::Arc<Vec<f32>>)> },
+    /// Control message to the monitor (CONVERGE/DIVERGE) or back (STOP).
+    Control { src: usize, dst: usize, msg: TermMsg },
+}
+
+struct UeState {
+    lo: usize,
+    hi: usize,
+    /// Full-length local (stale) view of the iterate.
+    x: Vec<f32>,
+    /// Delivered, not-yet-imported fragments per ORIGIN: round -> data.
+    frags: Vec<std::collections::BTreeMap<u64, std::sync::Arc<Vec<f32>>>>,
+    /// Freshest known copy per origin (iteration tag + data), for
+    /// relaying on non-clique topologies. Own slot updated on compute.
+    known: Vec<Option<(u64, std::sync::Arc<Vec<f32>>)>>,
+    local_iter: u64,
+    term: WorkerTermination,
+    stopped: bool,
+    computing: bool,
+    /// Highest round imported from each peer (sync barrier tracking).
+    recv_round: Vec<u64>,
+    /// Imports matrix row (Table 2).
+    imports: Vec<u64>,
+    sends_attempted: u64,
+    sends_cancelled: u64,
+    /// Virtual time when this UE last entered local convergence.
+    converged_at: f64,
+    rng: Rng,
+    /// Scratch block output.
+    out: Vec<f32>,
+    /// Iterations since last send, per peer.
+    since_send: Vec<u32>,
+    /// Current per-peer send periods (adaptive).
+    period: Vec<u32>,
+    /// Residual of the most recent local iteration.
+    last_resid: f32,
+}
+
+/// The simulation engine.
+pub struct SimEngine<'a> {
+    profile: &'a ClusterProfile,
+    problem: &'a PagerankProblem,
+}
+
+impl<'a> SimEngine<'a> {
+    pub fn new(profile: &'a ClusterProfile, problem: &'a PagerankProblem) -> Self {
+        SimEngine { profile, problem }
+    }
+
+    /// Run one experiment over per-UE block operators (contiguously
+    /// tiling [0, n) in order).
+    pub fn run(&self, ops: &mut [Box<dyn BlockOperator>], spec: &RunSpec) -> RunMetrics {
+        let p = ops.len();
+        assert_eq!(p, self.profile.p(), "ops vs profile UE count");
+        assert!(p >= 1);
+        if spec.mode == Mode::Synchronous {
+            assert_eq!(
+                self.profile.topology,
+                Topology::Clique,
+                "synchronous mode requires the paper's all-to-all scheme"
+            );
+        }
+        let n = self.problem.n();
+        let monitor_id = p;
+        let blocks: Vec<(usize, usize)> = ops.iter().map(|o| o.rows()).collect();
+        assert_eq!(blocks[0].0, 0);
+        assert_eq!(blocks[p - 1].1, n);
+        for w in 0..p - 1 {
+            assert_eq!(blocks[w].1, blocks[w + 1].0, "blocks must tile [0,n)");
+        }
+
+        let mut master_rng = Rng::new(spec.seed);
+        let mut q: EventQueue<Event> = EventQueue::new();
+        let mut medium = SharedMedium::new(
+            self.profile.bandwidth,
+            self.profile.latency,
+            match spec.mode {
+                Mode::Synchronous => None, // sync blocks, never cancels
+                Mode::Asynchronous => self.profile.cancel_window,
+            },
+        );
+
+        let x0 = self.problem.uniform_start();
+        let mut ues: Vec<UeState> = (0..p)
+            .map(|i| UeState {
+                lo: blocks[i].0,
+                hi: blocks[i].1,
+                x: x0.clone(),
+                frags: vec![std::collections::BTreeMap::new(); p],
+                known: vec![None; p],
+                local_iter: 0,
+                term: WorkerTermination::new(match spec.stop {
+                    StopRule::LocalProtocol { pc_max_worker, .. } => pc_max_worker,
+                    _ => 1,
+                }),
+                stopped: false,
+                computing: true, // first iteration scheduled below
+                recv_round: vec![0; p],
+                imports: vec![0; p],
+                sends_attempted: 0,
+                sends_cancelled: 0,
+                converged_at: 0.0,
+                rng: master_rng.fork(i as u64 + 1),
+                out: vec![0.0; blocks[i].1 - blocks[i].0],
+                since_send: vec![0; p],
+                period: vec![1; p],
+                last_resid: f32::INFINITY,
+            })
+            .collect();
+
+        let mut monitor = MonitorTermination::new(
+            p,
+            match spec.stop {
+                StopRule::LocalProtocol { pc_max_monitor, .. } => pc_max_monitor,
+                _ => 1,
+            },
+        );
+
+        // omniscient views
+        let mut x_true = x0.clone();
+        let mut scratch = vec![0.0f32; n];
+        let mut global_stop_at: Option<f64> = None;
+
+        // sync-mode round residual bookkeeping: resid sum + count per round
+        let mut round_resid: Vec<(f32, usize)> = Vec::new();
+        let mut sync_stop_round: Option<u64> = None;
+
+        for (i, op) in ops.iter().enumerate() {
+            let dt = self.compute_duration(i, op.block_nnz(), &mut ues[i].rng);
+            q.push(VirtualTime(dt), Event::ComputeDone { ue: i });
+        }
+
+        let mut total_iters: u64 = 0;
+
+        while let Some((now, ev)) = q.pop() {
+            match ev {
+                Event::ComputeDone { ue } => {
+                    if ues[ue].stopped {
+                        continue;
+                    }
+                    total_iters += 1;
+                    assert!(
+                        total_iters <= spec.max_total_iters,
+                        "run did not terminate within {} iterations (mode {:?})",
+                        spec.max_total_iters,
+                        spec.mode
+                    );
+
+                    let mut imported_now = 0usize;
+                    if spec.mode == Mode::Asynchronous {
+                        imported_now = Self::import_newest(&mut ues[ue], &blocks);
+                    }
+
+                    // ---- one local update ----
+                    let resid;
+                    let out_snapshot: std::sync::Arc<Vec<f32>>;
+                    {
+                        let st = &mut ues[ue];
+                        resid = ops[ue].update(&st.x, &mut st.out);
+                        let (lo, hi) = (st.lo, st.hi);
+                        st.x[lo..hi].copy_from_slice(&st.out);
+                        st.local_iter += 1;
+                        st.imports[ue] += 1; // Table-2 diagonal
+                        st.computing = false;
+                        st.last_resid = resid;
+                        out_snapshot = std::sync::Arc::new(st.out.clone());
+                        st.known[ue] = Some((st.local_iter, out_snapshot.clone()));
+                        x_true[lo..hi].copy_from_slice(&st.out);
+                    }
+
+                    let tol = match spec.stop {
+                        StopRule::LocalProtocol { tol, .. } => tol,
+                        StopRule::GlobalThreshold { tol } => tol,
+                    };
+                    if resid < tol {
+                        ues[ue].converged_at = now.secs();
+                    }
+
+                    // ---- Figure-1 worker side ----
+                    if let StopRule::LocalProtocol { .. } = spec.stop {
+                        if spec.mode == Mode::Asynchronous {
+                            if let Some(msg) = ues[ue].term.on_iteration(resid < tol) {
+                                self.send_control(
+                                    &mut q, &mut medium, now, ue, monitor_id, msg,
+                                );
+                            }
+                        }
+                    }
+
+                    // ---- global-threshold oracle ----
+                    if let StopRule::GlobalThreshold { tol } = spec.stop {
+                        self.problem.apply_google(&x_true, &mut scratch);
+                        let g = crate::pagerank::l1_diff(&scratch, &x_true);
+                        if g < tol {
+                            global_stop_at = Some(now.secs());
+                            for u in ues.iter_mut() {
+                                u.stopped = true;
+                                if u.converged_at == 0.0 {
+                                    u.converged_at = now.secs();
+                                }
+                            }
+                            break;
+                        }
+                    }
+
+                    // ---- sync round residual bookkeeping ----
+                    if spec.mode == Mode::Synchronous {
+                        let round = ues[ue].local_iter as usize - 1;
+                        if round_resid.len() <= round {
+                            round_resid.resize(round + 1, (0.0, 0));
+                        }
+                        round_resid[round].0 += resid;
+                        round_resid[round].1 += 1;
+                        {
+                            let (StopRule::LocalProtocol { tol, .. }
+                            | StopRule::GlobalThreshold { tol }) = spec.stop;
+                            if round_resid[round].1 == p
+                                && round_resid[round].0 < tol
+                                && sync_stop_round.is_none()
+                            {
+                                // the sync algorithm detects global
+                                // convergence at this barrier
+                                sync_stop_round = Some(round as u64 + 1);
+                            }
+                        }
+                    }
+
+                    // ---- fragment sends ----
+                    // rotate send order each iteration: a fixed order
+                    // would systematically starve high-id receivers on
+                    // the shared wire (the paper's thread pool had no
+                    // deterministic order either)
+                    let mut nbrs = self.profile.topology.neighbors(ue, p);
+                    if !nbrs.is_empty() {
+                        let rot = (ues[ue].local_iter as usize + ue) % nbrs.len();
+                        nbrs.rotate_left(rot);
+                    }
+                    match spec.mode {
+                        Mode::Synchronous => {
+                            for dst in nbrs {
+                                ues[ue].sends_attempted += 1;
+                                match medium.send(now, self.frag_bytes(ue, &blocks)) {
+                                    SendOutcome::Delivered { deliver_at } => q.push(
+                                        deliver_at,
+                                        Event::Fragment {
+                                            src: ue,
+                                            dst,
+                                            bundle: vec![(
+                                                ue,
+                                                ues[ue].local_iter,
+                                                out_snapshot.clone(),
+                                            )],
+                                        },
+                                    ),
+                                    SendOutcome::Cancelled => unreachable!(),
+                                }
+                            }
+                        }
+                        Mode::Asynchronous => {
+                            let mut delivered_sends = 0usize;
+                            for dst in nbrs {
+                                let st = &mut ues[ue];
+                                st.since_send[dst] += 1;
+                                if st.since_send[dst] < st.period[dst] {
+                                    continue;
+                                }
+                                st.since_send[dst] = 0;
+                                st.sends_attempted += 1;
+                                // own block always; on non-clique
+                                // topologies also relay the freshest
+                                // known copy of every other block so
+                                // information crosses the tree/star
+                                let mut bundle =
+                                    vec![(ue, st.local_iter, out_snapshot.clone())];
+                                if self.profile.topology != Topology::Clique {
+                                    for (o, slot) in st.known.iter().enumerate() {
+                                        if o == ue || o == dst {
+                                            continue;
+                                        }
+                                        if let Some((it, data)) = slot {
+                                            bundle.push((o, *it, data.clone()));
+                                        }
+                                    }
+                                }
+                                let bytes: f64 = bundle
+                                    .iter()
+                                    .map(|(_, _, d)| {
+                                        self.profile.fragment_bytes(d.len())
+                                    })
+                                    .sum();
+                                match medium.send(now, bytes) {
+                                    SendOutcome::Delivered { deliver_at } => {
+                                        delivered_sends += 1;
+                                        if spec.adaptive && st.period[dst] > 1 {
+                                            st.period[dst] -= 1;
+                                        }
+                                        q.push(
+                                            deliver_at,
+                                            Event::Fragment { src: ue, dst, bundle },
+                                        );
+                                    }
+                                    SendOutcome::Cancelled => {
+                                        st.sends_cancelled += 1;
+                                        if spec.adaptive {
+                                            st.period[dst] = (st.period[dst] * 2).min(16);
+                                        }
+                                    }
+                                }
+                            }
+                            // next iteration pays for the fragments just
+                            // merged (deserialization) and the sends just
+                            // submitted (serialization thread work)
+                            let dt = self
+                                .compute_duration(ue, ops[ue].block_nnz(), &mut ues[ue].rng)
+                                + imported_now as f64
+                                    * self.profile.nodes[ue].secs_per_import
+                                + delivered_sends as f64
+                                    * self.profile.nodes[ue].secs_per_send;
+                            ues[ue].computing = true;
+                            q.push(now.after(dt), Event::ComputeDone { ue });
+                        }
+                    }
+
+                    if spec.mode == Mode::Synchronous {
+                        self.advance_sync(&mut q, now, &mut ues, ops, p, sync_stop_round);
+                    }
+                }
+
+                Event::Fragment { src, dst, bundle } => {
+                    if ues[dst].stopped {
+                        continue;
+                    }
+                    let _ = src;
+                    for (origin, iter, data) in bundle {
+                        if origin == dst {
+                            continue;
+                        }
+                        let st = &mut ues[dst];
+                        // Table 2 counts fragments of `origin`'s data
+                        // actually received (relays included)
+                        st.imports[origin] += 1;
+                        st.recv_round[origin] = st.recv_round[origin].max(iter);
+                        // refresh the relay store (Arc clone, no copy)
+                        if st.known[origin]
+                            .as_ref()
+                            .map(|(it, _)| *it < iter)
+                            .unwrap_or(true)
+                        {
+                            st.known[origin] = Some((iter, data.clone()));
+                        }
+                        st.frags[origin].insert(iter, data);
+                    }
+                    if spec.mode == Mode::Synchronous {
+                        self.advance_sync(&mut q, now, &mut ues, ops, p, sync_stop_round);
+                    }
+                }
+
+                Event::Control { src, dst, msg } => {
+                    if dst == monitor_id {
+                        if monitor.on_message(src, msg) {
+                            for w in 0..p {
+                                self.send_control(
+                                    &mut q,
+                                    &mut medium,
+                                    now,
+                                    monitor_id,
+                                    w,
+                                    TermMsg::Stop,
+                                );
+                            }
+                        }
+                    } else {
+                        debug_assert_eq!(msg, TermMsg::Stop);
+                        ues[dst].stopped = true;
+                    }
+                }
+            }
+
+            if ues.iter().all(|u| u.stopped) {
+                break;
+            }
+        }
+
+        let end_time = global_stop_at.unwrap_or_else(|| q.now().secs());
+
+        self.problem.apply_google(&x_true, &mut scratch);
+        let final_res = crate::pagerank::l1_diff(&scratch, &x_true);
+
+        let import_pct: Vec<f64> = (0..p)
+            .map(|i| {
+                let own = ues[i].imports[i].max(1) as f64;
+                let peers: Vec<f64> = (0..p)
+                    .filter(|&j| j != i)
+                    .map(|j| ues[i].imports[j] as f64 / own * 100.0)
+                    .collect();
+                if peers.is_empty() {
+                    100.0
+                } else {
+                    peers.iter().sum::<f64>() / peers.len() as f64
+                }
+            })
+            .collect();
+
+        RunMetrics {
+            mode: spec.mode,
+            p,
+            iters: ues.iter().map(|u| u.local_iter).collect(),
+            finish_times: ues
+                .iter()
+                .map(|u| if u.converged_at > 0.0 { u.converged_at } else { end_time })
+                .collect(),
+            total_time: end_time,
+            imports: ues.iter().map(|u| u.imports.clone()).collect(),
+            sends_attempted: ues.iter().map(|u| u.sends_attempted).collect(),
+            sends_cancelled: ues.iter().map(|u| u.sends_cancelled).collect(),
+            final_global_residual: final_res,
+            x: x_true,
+            wire_sent: medium.sent,
+            wire_cancelled: medium.cancelled,
+            wire_queue_wait: medium.queue_wait,
+            import_pct,
+        }
+    }
+
+    fn frag_bytes(&self, ue: usize, blocks: &[(usize, usize)]) -> f64 {
+        self.profile.fragment_bytes(blocks[ue].1 - blocks[ue].0)
+    }
+
+    fn send_control(
+        &self,
+        q: &mut EventQueue<Event>,
+        medium: &mut SharedMedium,
+        now: VirtualTime,
+        src: usize,
+        dst: usize,
+        msg: TermMsg,
+    ) {
+        match medium.send(now, self.profile.control_bytes) {
+            SendOutcome::Delivered { deliver_at } => {
+                q.push(deliver_at, Event::Control { src, dst, msg })
+            }
+            SendOutcome::Cancelled => {
+                // control messages tolerate delay, not loss: retry after
+                // one cancellation window
+                let w = self.profile.cancel_window.unwrap_or(0.0);
+                q.push(now.after(w + self.profile.latency), Event::Control { src, dst, msg });
+            }
+        }
+    }
+
+    /// Sync barrier: start round t+1 on every UE that has finished
+    /// round t and imported every peer's round-t fragment; stop UEs at
+    /// the barrier where global convergence was detected.
+    #[allow(clippy::too_many_arguments)]
+    fn advance_sync(
+        &self,
+        q: &mut EventQueue<Event>,
+        now: VirtualTime,
+        ues: &mut [UeState],
+        ops: &mut [Box<dyn BlockOperator>],
+        p: usize,
+        sync_stop_round: Option<u64>,
+    ) {
+        let blocks = ues_blocks(ues, p);
+        for ue in 0..p {
+            if ues[ue].stopped || ues[ue].computing {
+                continue;
+            }
+            let t = ues[ue].local_iter;
+            // convergence barrier reached?
+            if let Some(stop_t) = sync_stop_round {
+                if t >= stop_t {
+                    ues[ue].stopped = true;
+                    ues[ue].converged_at = now.secs();
+                    continue;
+                }
+            }
+            // BSP: round t+1 may start only with EVERY peer's round-t
+            // fragment, and must use exactly those values (a faster
+            // peer's round-t+1 fragment must NOT leak in).
+            let ready = (0..p).all(|j| j == ue || ues[ue].frags[j].contains_key(&t));
+            if ready {
+                for j in 0..p {
+                    if j == ue {
+                        continue;
+                    }
+                    let data = ues[ue].frags[j].get(&t).cloned().unwrap();
+                    let (lo, hi) = blocks[j];
+                    ues[ue].x[lo..hi].copy_from_slice(&data);
+                    // drop fragments at or below the consumed round
+                    ues[ue].frags[j].retain(|&r, _| r > t);
+                }
+                let dt = self.compute_duration(ue, ops[ue].block_nnz(), &mut ues[ue].rng)
+                    + (p - 1) as f64
+                        * (self.profile.nodes[ue].secs_per_import
+                            + self.profile.nodes[ue].secs_per_send);
+                ues[ue].computing = true;
+                q.push(now.after(dt), Event::ComputeDone { ue });
+            }
+        }
+    }
+
+    fn compute_duration(&self, ue: usize, nnz: usize, rng: &mut Rng) -> f64 {
+        let base = self.profile.compute_time(ue, nnz);
+        let j = self.profile.nodes[ue].jitter;
+        base * (1.0 + (rng.f64() * 2.0 - 1.0) * j)
+    }
+
+    /// Asynchronous import: paste the newest delivered fragment from
+    /// each sender into the local view (older ones are superseded) and
+    /// clear the backlog. Import counting happened at delivery time —
+    /// Table 2 counts fragments that actually arrived.
+    fn import_newest(st: &mut UeState, blocks: &[(usize, usize)]) -> usize {
+        let mut imported = 0;
+        for src in 0..blocks.len() {
+            if let Some((_, data)) = st.frags[src].iter().next_back() {
+                let (lo, hi) = blocks[src];
+                debug_assert_eq!(data.len(), hi - lo);
+                st.x[lo..hi].copy_from_slice(data);
+                imported += 1;
+            }
+            st.frags[src].clear();
+        }
+        imported
+    }
+}
+
+/// Helper: rebuild the partition table from UE states (blocks are fixed
+/// at construction; this avoids borrowing `blocks` through `self`).
+fn ues_blocks(ues: &[UeState], p: usize) -> Vec<(usize, usize)> {
+    (0..p).map(|i| (ues[i].lo, ues[i].hi)).collect()
+}

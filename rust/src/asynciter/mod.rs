@@ -1,0 +1,25 @@
+//! Generic asynchronous fixed-point engine — eq. (5) of the paper.
+//!
+//! `x_{i}(t+1) = f_i(x_{1}(τ¹ᵢ(t)), …, x_{p}(τᵖᵢ(t)))` for `t ∈ Tⁱ`:
+//! each unit of execution (UE) owns a block of the iterate, repeatedly
+//! applies its block operator to its *local, possibly stale view* of
+//! the global vector, and exchanges fragments over the simulated
+//! cluster network. The same engine runs both computational kernels of
+//! §4 — the normalization-free power kernel (6) and the linear-system
+//! kernel (7) are both [`BlockOperator`]s — and both execution
+//! disciplines of §3–§4:
+//!
+//! * [`Mode::Synchronous`]: barrier per iteration (eq. 4 semantics);
+//! * [`Mode::Asynchronous`]: free-running UEs, non-blocking sends with
+//!   cancellation windows, Figure-1 termination.
+//!
+//! The discrete-event simulation is deterministic given a seed, so
+//! every Table-1/Table-2 number regenerates exactly.
+
+mod engine;
+mod operator;
+pub mod threads;
+
+pub use engine::{Mode, RunMetrics, RunSpec, SimEngine, StopRule};
+pub use operator::{ArtifactBlockOp, BlockOperator, NativeBlockOp};
+pub use threads::{run_threaded, ThreadRunMetrics, ThreadRunOptions};

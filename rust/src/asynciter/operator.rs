@@ -1,0 +1,243 @@
+//! Block operators: the `f_i` of eq. (5).
+//!
+//! Two interchangeable implementations of the PageRank block update
+//! (eq. 6):
+//!
+//! * [`NativeBlockOp`] — rust CSR SpMV (the scalable host path);
+//! * [`ArtifactBlockOp`] — the AOT-compiled Pallas kernel via PJRT
+//!   (`runtime::PagerankStepExe`), exercising the full three-layer
+//!   stack from the hot loop.
+//!
+//! Integration tests assert both produce the same iterates.
+
+use std::sync::Arc;
+
+use crate::graph::EllBlock;
+use crate::pagerank::PagerankProblem;
+use crate::runtime::{PagerankStepExe, StepBuffers};
+use crate::Result;
+
+/// The distributed operator component executing at one UE.
+///
+/// Not `Send`: the DES engine is single-threaded (determinism is a
+/// design goal — DESIGN.md §3) and the PJRT executable handle is not
+/// thread-safe to share anyway.
+pub trait BlockOperator {
+    /// Row range [lo, hi) this operator owns.
+    fn rows(&self) -> (usize, usize);
+
+    /// Apply one block update given the full (stale) snapshot `x`;
+    /// write the new block into `out` (len hi-lo) and return the local
+    /// L1 residual ‖out − x[lo..hi]‖₁.
+    fn update(&mut self, x: &[f32], out: &mut [f32]) -> f32;
+
+    /// Nonzeros in this block (drives simulated compute time).
+    fn block_nnz(&self) -> usize;
+}
+
+/// Native CSR implementation.
+pub struct NativeBlockOp {
+    problem: Arc<PagerankProblem>,
+    lo: usize,
+    hi: usize,
+    nnz: usize,
+}
+
+impl NativeBlockOp {
+    pub fn new(problem: Arc<PagerankProblem>, lo: usize, hi: usize) -> Self {
+        let nnz = (lo..hi).map(|i| problem.csr.row_len(i)).sum();
+        NativeBlockOp { problem, lo, hi, nnz }
+    }
+}
+
+impl BlockOperator for NativeBlockOp {
+    fn rows(&self) -> (usize, usize) {
+        (self.lo, self.hi)
+    }
+
+    fn update(&mut self, x: &[f32], out: &mut [f32]) -> f32 {
+        self.problem.apply_google_range(x, self.lo, self.hi, out);
+        crate::pagerank::l1_diff(out, &x[self.lo..self.hi])
+    }
+
+    fn block_nnz(&self) -> usize {
+        self.nnz
+    }
+}
+
+/// PJRT-artifact implementation (L1 Pallas kernel via the L2 model).
+///
+/// The kernel computes `α·spmv + dang + bias` per *virtual* row (long
+/// rows are split, DESIGN.md §Hardware-Adaptation); the host folds
+/// virtual rows and subtracts the per-extra-virtual-row dang/bias
+/// over-count, then computes the logical residual. When no row is
+/// split the kernel output is used as-is.
+pub struct ArtifactBlockOp {
+    problem: Arc<PagerankProblem>,
+    block: EllBlock,
+    exe: PagerankStepExe,
+    buf: StepBuffers,
+    /// extra virtual rows per logical row (vrows_i - 1).
+    extra_vrows: Vec<u32>,
+    any_split: bool,
+    /// scratch for virtual-row outputs folding
+    folded: Vec<f32>,
+    nnz: usize,
+}
+
+impl ArtifactBlockOp {
+    /// Build over rows [lo, hi) with ELL width `width`, executing on
+    /// `engine`'s artifacts.
+    pub fn new(
+        engine: &crate::runtime::Engine,
+        problem: Arc<PagerankProblem>,
+        lo: usize,
+        hi: usize,
+        width: usize,
+    ) -> Result<Self> {
+        let block = EllBlock::new(&problem.csr, lo, hi, width);
+        let vrows = block.ell.virtual_rows();
+        let mut exe = engine.pagerank_step(problem.n(), vrows, width)?;
+        let mut buf = exe.buffers();
+        // fixed matrix slots
+        let cols: Vec<u32> = block.ell.cols().to_vec();
+        exe.load_matrix(&mut buf, block.ell.vals(), &cols);
+        buf.alpha = [problem.alpha];
+        // per-virtual-row bias: only the first virtual row of each
+        // logical row carries the teleport bias
+        let mut extra_vrows = vec![0u32; hi - lo];
+        let mut seen = vec![false; hi - lo];
+        let bias_logical = problem.bias_range(lo, hi);
+        for (v, &owner) in block.ell.owner().iter().enumerate() {
+            if seen[owner as usize] {
+                extra_vrows[owner as usize] += 1;
+            } else {
+                seen[owner as usize] = true;
+                buf.bias[v] = bias_logical[owner as usize];
+            }
+        }
+        let any_split = extra_vrows.iter().any(|&e| e > 0);
+        let nnz = (lo..hi).map(|i| problem.csr.row_len(i)).sum();
+        Ok(ArtifactBlockOp {
+            problem,
+            block,
+            exe,
+            buf,
+            extra_vrows,
+            any_split,
+            folded: vec![0.0; hi - lo],
+            nnz,
+        })
+    }
+
+    pub fn bucket_name(&self) -> String {
+        self.exe.bucket().name.clone()
+    }
+}
+
+impl BlockOperator for ArtifactBlockOp {
+    fn rows(&self) -> (usize, usize) {
+        (self.block.row_lo, self.block.row_hi)
+    }
+
+    fn update(&mut self, x: &[f32], out: &mut [f32]) -> f32 {
+        let (lo, hi) = (self.block.row_lo, self.block.row_hi);
+        debug_assert_eq!(out.len(), hi - lo);
+        // refresh dynamic inputs
+        self.buf.x[..x.len()].copy_from_slice(x);
+        self.buf.dang = [self.problem.dangling_term(x)];
+        // xold is only used by the kernel's residual, which we discard
+        // in split mode; keep it coherent anyway for the no-split path.
+        let vrows = self.block.ell.virtual_rows();
+        let (y, _kernel_resid) = self
+            .exe
+            .step(&mut self.buf)
+            .expect("artifact execution failed mid-run");
+        debug_assert_eq!(y.len(), vrows);
+        if self.any_split {
+            self.folded.iter_mut().for_each(|v| *v = 0.0);
+            self.block.ell.fold_virtual(&y, &mut self.folded);
+            let dang = self.buf.dang[0];
+            for (o, &extra) in self.folded.iter_mut().zip(&self.extra_vrows) {
+                *o -= dang * extra as f32;
+            }
+            out.copy_from_slice(&self.folded);
+        } else {
+            out.copy_from_slice(&y);
+        }
+        crate::pagerank::l1_diff(out, &x[lo..hi])
+    }
+
+    fn block_nnz(&self) -> usize {
+        self.nnz
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{generators, Csr};
+    use crate::runtime::Engine;
+
+    fn problem(n: usize, seed: u64) -> Arc<PagerankProblem> {
+        let el = generators::power_law_web(&generators::WebParams::scaled(n), seed);
+        Arc::new(PagerankProblem::new(Csr::from_edgelist(&el).unwrap(), 0.85))
+    }
+
+    #[test]
+    fn native_update_matches_apply_google() {
+        let p = problem(500, 1);
+        let mut op = NativeBlockOp::new(p.clone(), 100, 300);
+        assert_eq!(op.rows(), (100, 300));
+        assert!(op.block_nnz() > 0);
+        let x = p.uniform_start();
+        let mut out = vec![0.0; 200];
+        let r = op.update(&x, &mut out);
+        let mut want = vec![0.0; p.n()];
+        p.apply_google(&x, &mut want);
+        assert_eq!(&out[..], &want[100..300]);
+        assert!(r > 0.0);
+    }
+
+    #[test]
+    fn artifact_matches_native() {
+        let eng = Engine::new(crate::runtime::default_artifacts_dir())
+            .expect("run `make artifacts`");
+        let p = problem(800, 2);
+        let (lo, hi) = (200, 600);
+        let mut native = NativeBlockOp::new(p.clone(), lo, hi);
+        // width 4 forces virtual-row splitting on heavy rows
+        let mut art = ArtifactBlockOp::new(&eng, p.clone(), lo, hi, 4).unwrap();
+        let x = p.uniform_start();
+        let mut a = vec![0.0; hi - lo];
+        let mut b = vec![0.0; hi - lo];
+        let ra = native.update(&x, &mut a);
+        let rb = art.update(&x, &mut b);
+        for (i, (u, v)) in a.iter().zip(&b).enumerate() {
+            assert!((u - v).abs() < 1e-5, "row {i}: native {u} vs artifact {v}");
+        }
+        assert!((ra - rb).abs() < 1e-4, "resid {ra} vs {rb}");
+    }
+
+    #[test]
+    fn artifact_matches_native_over_iterations() {
+        let eng = Engine::new(crate::runtime::default_artifacts_dir())
+            .expect("run `make artifacts`");
+        let p = problem(600, 3);
+        let n = p.n();
+        let mut native = NativeBlockOp::new(p.clone(), 0, n);
+        let mut art = ArtifactBlockOp::new(&eng, p.clone(), 0, n, 8).unwrap();
+        let mut xa = p.uniform_start();
+        let mut xb = p.uniform_start();
+        let mut outa = vec![0.0; n];
+        let mut outb = vec![0.0; n];
+        for it in 0..10 {
+            native.update(&xa, &mut outa);
+            art.update(&xb, &mut outb);
+            xa.copy_from_slice(&outa);
+            xb.copy_from_slice(&outb);
+            let d = crate::pagerank::l1_diff(&xa, &xb);
+            assert!(d < 1e-4, "iter {it}: drift {d}");
+        }
+    }
+}

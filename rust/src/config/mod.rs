@@ -1,0 +1,243 @@
+//! Experiment configuration: a TOML-subset parser (offline build — no
+//! toml crate) and typed run configs with the paper's presets.
+//!
+//! Supported syntax: `[section]` headers, `key = value` with string
+//! ("x"), integer, float, boolean values, `#` comments. That covers
+//! every config this repo ships; anything fancier fails loudly.
+
+mod toml_lite;
+
+pub use toml_lite::TomlLite;
+
+use crate::asynciter::{Mode, StopRule};
+use crate::simnet::Topology;
+use crate::Result;
+
+/// Fully resolved run configuration (one experiment invocation).
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    /// Graph: "stanford" | "scaled:<n>" | "erdos:<n>:<m>" | path to an
+    /// edge list (.txt/.bin).
+    pub graph: String,
+    pub seed: u64,
+    pub alpha: f32,
+    /// Computing UEs.
+    pub procs: usize,
+    pub mode: Mode,
+    pub tol: f32,
+    pub pc_max_worker: u32,
+    pub pc_max_monitor: u32,
+    /// Stop on the omniscient global threshold instead of Figure-1.
+    pub global_threshold: bool,
+    pub topology: Topology,
+    pub cancel_window: Option<f64>,
+    pub adaptive: bool,
+    /// Use the PJRT artifact operator instead of native CSR.
+    pub use_artifact: bool,
+    /// ELL width for the artifact path.
+    pub ell_width: usize,
+    /// Multiplier on the testbed bandwidth (1.0 = the paper's wire).
+    /// Scaled-down graphs shrink fragments but not the paper's
+    /// compute/communication ratio; setting this to n_scaled/n_full
+    /// restores the ratio so saturation phenomena reproduce at small
+    /// scale.
+    pub bandwidth_scale: f64,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            graph: "scaled:20000".into(),
+            seed: 42,
+            alpha: 0.85,
+            procs: 4,
+            mode: Mode::Asynchronous,
+            tol: 1e-6,
+            pc_max_worker: 1,
+            pc_max_monitor: 1,
+            global_threshold: false,
+            topology: Topology::Clique,
+            cancel_window: Some(3.0),
+            adaptive: false,
+            use_artifact: false,
+            ell_width: 16,
+            bandwidth_scale: 1.0,
+        }
+    }
+}
+
+impl RunConfig {
+    /// The paper's Table-1/2 configuration at a given machine count.
+    pub fn paper(procs: usize, mode: Mode) -> RunConfig {
+        RunConfig { graph: "stanford".into(), procs, mode, ..Default::default() }
+    }
+
+    pub fn stop_rule(&self) -> StopRule {
+        if self.global_threshold {
+            StopRule::GlobalThreshold { tol: self.tol }
+        } else {
+            StopRule::LocalProtocol {
+                tol: self.tol,
+                pc_max_worker: self.pc_max_worker,
+                pc_max_monitor: self.pc_max_monitor,
+            }
+        }
+    }
+
+    /// Parse from TOML-subset text.
+    pub fn from_toml(text: &str) -> Result<RunConfig> {
+        let t = TomlLite::parse(text)?;
+        let mut c = RunConfig::default();
+        if let Some(v) = t.get_str("run", "graph") {
+            c.graph = v.to_string();
+        }
+        if let Some(v) = t.get_int("run", "seed") {
+            c.seed = v as u64;
+        }
+        if let Some(v) = t.get_float("run", "alpha") {
+            c.alpha = v as f32;
+        }
+        if let Some(v) = t.get_int("run", "procs") {
+            c.procs = v as usize;
+        }
+        if let Some(v) = t.get_str("run", "mode") {
+            c.mode = match v {
+                "sync" | "synchronous" => Mode::Synchronous,
+                "async" | "asynchronous" => Mode::Asynchronous,
+                other => anyhow::bail!("unknown mode {other:?}"),
+            };
+        }
+        if let Some(v) = t.get_float("run", "tol") {
+            c.tol = v as f32;
+        }
+        if let Some(v) = t.get_int("termination", "pc_max_worker") {
+            c.pc_max_worker = v as u32;
+        }
+        if let Some(v) = t.get_int("termination", "pc_max_monitor") {
+            c.pc_max_monitor = v as u32;
+        }
+        if let Some(v) = t.get_bool("termination", "global_threshold") {
+            c.global_threshold = v;
+        }
+        if let Some(v) = t.get_str("network", "topology") {
+            c.topology = Topology::parse(v)
+                .ok_or_else(|| anyhow::anyhow!("unknown topology {v:?}"))?;
+        }
+        if let Some(v) = t.get_float("network", "cancel_window") {
+            c.cancel_window = if v <= 0.0 { None } else { Some(v) };
+        }
+        if let Some(v) = t.get_bool("network", "adaptive") {
+            c.adaptive = v;
+        }
+        if let Some(v) = t.get_bool("runtime", "use_artifact") {
+            c.use_artifact = v;
+        }
+        if let Some(v) = t.get_int("runtime", "ell_width") {
+            c.ell_width = v as usize;
+        }
+        if let Some(v) = t.get_float("network", "bandwidth_scale") {
+            c.bandwidth_scale = v;
+        }
+        c.validate()?;
+        Ok(c)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if !(0.0..1.0).contains(&self.alpha) {
+            anyhow::bail!("alpha {} out of [0,1)", self.alpha);
+        }
+        if self.procs == 0 {
+            anyhow::bail!("procs must be >= 1");
+        }
+        if self.tol <= 0.0 {
+            anyhow::bail!("tol must be positive");
+        }
+        if self.pc_max_worker == 0 || self.pc_max_monitor == 0 {
+            anyhow::bail!("pcMax must be >= 1");
+        }
+        if self.ell_width == 0 {
+            anyhow::bail!("ell_width must be >= 1");
+        }
+        if self.bandwidth_scale <= 0.0 {
+            anyhow::bail!("bandwidth_scale must be positive");
+        }
+        if self.mode == Mode::Synchronous && self.topology != Topology::Clique {
+            anyhow::bail!("synchronous mode requires clique topology (the paper's scheme)");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        RunConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn parses_full_config() {
+        let c = RunConfig::from_toml(
+            r#"
+# paper table 1 run
+[run]
+graph = "stanford"
+seed = 7
+alpha = 0.85
+procs = 6
+mode = "async"
+tol = 1e-6
+
+[termination]
+pc_max_worker = 2
+pc_max_monitor = 1
+global_threshold = false
+
+[network]
+topology = "tree"
+cancel_window = 2.5
+adaptive = true
+
+[runtime]
+use_artifact = true
+ell_width = 16
+"#,
+        )
+        .unwrap();
+        assert_eq!(c.graph, "stanford");
+        assert_eq!(c.procs, 6);
+        assert_eq!(c.mode, Mode::Asynchronous);
+        assert_eq!(c.pc_max_worker, 2);
+        assert_eq!(c.topology, Topology::BinaryTree);
+        assert_eq!(c.cancel_window, Some(2.5));
+        assert!(c.adaptive);
+        assert!(c.use_artifact);
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        assert!(RunConfig::from_toml("[run]\nmode = \"warp\"\n").is_err());
+        assert!(RunConfig::from_toml("[run]\nalpha = 1.5\n").is_err());
+        assert!(RunConfig::from_toml("[run]\nprocs = 0\n").is_err());
+        assert!(
+            RunConfig::from_toml("[run]\nmode = \"sync\"\n[network]\ntopology = \"tree\"\n")
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn cancel_window_zero_means_none() {
+        let c = RunConfig::from_toml("[network]\ncancel_window = 0.0\n").unwrap();
+        assert_eq!(c.cancel_window, None);
+    }
+
+    #[test]
+    fn stop_rule_selection() {
+        let mut c = RunConfig::default();
+        assert!(matches!(c.stop_rule(), StopRule::LocalProtocol { .. }));
+        c.global_threshold = true;
+        assert!(matches!(c.stop_rule(), StopRule::GlobalThreshold { .. }));
+    }
+}

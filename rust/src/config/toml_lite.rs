@@ -1,0 +1,184 @@
+//! TOML-subset parser: sections, scalar key = value, comments.
+
+use std::collections::BTreeMap;
+
+use crate::Result;
+
+/// A parsed value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+/// Parsed document: (section, key) -> value. Keys before any `[section]`
+/// land in section "".
+#[derive(Debug, Default)]
+pub struct TomlLite {
+    map: BTreeMap<(String, String), Value>,
+}
+
+impl TomlLite {
+    pub fn parse(text: &str) -> Result<TomlLite> {
+        let mut map = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = match raw.find('#') {
+                // '#' inside a quoted string must survive
+                Some(idx) if !in_string(raw, idx) => &raw[..idx],
+                _ => raw,
+            }
+            .trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                section = name.trim().to_string();
+                if section.is_empty() {
+                    anyhow::bail!("line {}: empty section name", lineno + 1);
+                }
+                continue;
+            }
+            let (key, val) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("line {}: expected key = value", lineno + 1))?;
+            let key = key.trim().to_string();
+            if key.is_empty() {
+                anyhow::bail!("line {}: empty key", lineno + 1);
+            }
+            let val = Self::parse_value(val.trim())
+                .ok_or_else(|| anyhow::anyhow!("line {}: bad value {:?}", lineno + 1, val.trim()))?;
+            map.insert((section.clone(), key), val);
+        }
+        Ok(TomlLite { map })
+    }
+
+    fn parse_value(s: &str) -> Option<Value> {
+        if let Some(q) = s.strip_prefix('"').and_then(|t| t.strip_suffix('"')) {
+            return Some(Value::Str(q.to_string()));
+        }
+        match s {
+            "true" => return Some(Value::Bool(true)),
+            "false" => return Some(Value::Bool(false)),
+            _ => {}
+        }
+        if let Ok(i) = s.parse::<i64>() {
+            return Some(Value::Int(i));
+        }
+        if let Ok(f) = s.parse::<f64>() {
+            return Some(Value::Float(f));
+        }
+        None
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.map.get(&(section.to_string(), key.to_string()))
+    }
+
+    pub fn get_str(&self, section: &str, key: &str) -> Option<&str> {
+        match self.get(section, key) {
+            Some(Value::Str(s)) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn get_int(&self, section: &str, key: &str) -> Option<i64> {
+        match self.get(section, key) {
+            Some(Value::Int(i)) => Some(*i),
+            _ => None,
+        }
+    }
+
+    /// Floats accept integer literals too (tol = 1 is fine).
+    pub fn get_float(&self, section: &str, key: &str) -> Option<f64> {
+        match self.get(section, key) {
+            Some(Value::Float(f)) => Some(*f),
+            Some(Value::Int(i)) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn get_bool(&self, section: &str, key: &str) -> Option<bool> {
+        match self.get(section, key) {
+            Some(Value::Bool(b)) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
+/// Is byte index `idx` inside a double-quoted string in `line`?
+fn in_string(line: &str, idx: usize) -> bool {
+    let mut inside = false;
+    for (i, c) in line.char_indices() {
+        if i >= idx {
+            break;
+        }
+        if c == '"' {
+            inside = !inside;
+        }
+    }
+    inside
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let t = TomlLite::parse(
+            "top = 1\n[a]\nx = \"s\"\ny = 2\nz = 3.5\nw = true\n[b]\nx = false\n",
+        )
+        .unwrap();
+        assert_eq!(t.get_int("", "top"), Some(1));
+        assert_eq!(t.get_str("a", "x"), Some("s"));
+        assert_eq!(t.get_int("a", "y"), Some(2));
+        assert_eq!(t.get_float("a", "z"), Some(3.5));
+        assert_eq!(t.get_bool("a", "w"), Some(true));
+        assert_eq!(t.get_bool("b", "x"), Some(false));
+        assert_eq!(t.len(), 6);
+    }
+
+    #[test]
+    fn comments_and_blank_lines() {
+        let t = TomlLite::parse("# header\n\n[s] # trailing\nk = 1 # comment\n").unwrap();
+        assert_eq!(t.get_int("s", "k"), Some(1));
+    }
+
+    #[test]
+    fn hash_inside_string_survives() {
+        let t = TomlLite::parse("[s]\nk = \"a#b\"\n").unwrap();
+        assert_eq!(t.get_str("s", "k"), Some("a#b"));
+    }
+
+    #[test]
+    fn scientific_notation_floats() {
+        let t = TomlLite::parse("[s]\ntol = 1e-6\n").unwrap();
+        assert_eq!(t.get_float("s", "tol"), Some(1e-6));
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(TomlLite::parse("[]\n").is_err());
+        assert!(TomlLite::parse("novalue\n").is_err());
+        assert!(TomlLite::parse("k = @@\n").is_err());
+        assert!(TomlLite::parse(" = 3\n").is_err());
+    }
+
+    #[test]
+    fn int_acceptable_as_float_not_vice_versa() {
+        let t = TomlLite::parse("[s]\ni = 2\nf = 2.5\n").unwrap();
+        assert_eq!(t.get_float("s", "i"), Some(2.0));
+        assert_eq!(t.get_int("s", "f"), None);
+    }
+}

@@ -1,0 +1,193 @@
+//! Multi-run experiment drivers: one function per DESIGN.md §5 entry.
+//!
+//! Benches and the CLI call these; each returns structured results the
+//! caller renders (markdown for the terminal, JSON for reports).
+
+use std::sync::Arc;
+
+use crate::asynciter::{Mode, RunMetrics, RunSpec, SimEngine};
+use crate::config::RunConfig;
+use crate::metrics::Table1Row;
+use crate::pagerank::PagerankProblem;
+use crate::simnet::Topology;
+use crate::termination::GlobalOracle;
+use crate::Result;
+
+use super::{build_ops, load_graph, profile_for, Partitioner};
+
+/// Shared context for an experiment series: one graph, one problem.
+pub struct ExperimentCtx {
+    pub problem: Arc<PagerankProblem>,
+    pub base: RunConfig,
+    pub engine: Option<crate::runtime::Engine>,
+}
+
+impl ExperimentCtx {
+    pub fn new(base: RunConfig) -> Result<Self> {
+        let csr = load_graph(&base.graph, base.seed)?;
+        let problem = Arc::new(PagerankProblem::new(csr, base.alpha));
+        let engine = if base.use_artifact {
+            Some(crate::runtime::Engine::new(crate::runtime::default_artifacts_dir())?)
+        } else {
+            None
+        };
+        Ok(ExperimentCtx { problem, base, engine })
+    }
+
+    /// Run one (mode, procs) cell against the shared problem.
+    pub fn run_cell(&self, procs: usize, mode: Mode, cfg_mut: impl Fn(&mut RunConfig)) -> Result<RunMetrics> {
+        let mut cfg = self.base.clone();
+        cfg.procs = procs;
+        cfg.mode = mode;
+        cfg_mut(&mut cfg);
+        cfg.validate()?;
+        let partitioner = Partitioner::consecutive(self.problem.n(), cfg.procs);
+        let mut ops = build_ops(&self.problem, &partitioner, &cfg, self.engine.as_ref())?;
+        let profile = profile_for(&cfg);
+        let spec = RunSpec {
+            mode: cfg.mode,
+            stop: cfg.stop_rule(),
+            adaptive: cfg.adaptive,
+            seed: cfg.seed,
+            max_total_iters: 2_000_000,
+        };
+        let sim = SimEngine::new(&profile, &self.problem);
+        Ok(sim.run(&mut ops, &spec))
+    }
+}
+
+/// T1: Table 1 — sync vs async for the given machine counts.
+pub fn table1(ctx: &ExperimentCtx, procs: &[usize]) -> Result<Vec<(Table1Row, RunMetrics, RunMetrics)>> {
+    let mut out = Vec::new();
+    for &p in procs {
+        let sync = ctx.run_cell(p, Mode::Synchronous, |_| {})?;
+        let asyn = ctx.run_cell(p, Mode::Asynchronous, |_| {})?;
+        out.push((Table1Row::from_runs(&sync, &asyn), sync, asyn));
+    }
+    Ok(out)
+}
+
+/// T2: Table 2 — async imports matrix at p UEs (paper: 4).
+pub fn table2(ctx: &ExperimentCtx, procs: usize) -> Result<RunMetrics> {
+    ctx.run_cell(procs, Mode::Asynchronous, |_| {})
+}
+
+/// G1 result: what global residual does the local threshold actually buy?
+#[derive(Debug, Clone)]
+pub struct GlobalThresholdResult {
+    pub local_tol: f32,
+    /// True ‖Gx−x‖₁ when the Figure-1 protocol stopped the async run.
+    pub achieved_global_residual: f32,
+    /// Kendall-τ of the stopped vector's ranking vs a tight reference.
+    pub ranking_tau: f64,
+    pub top100_overlap: f64,
+    /// G2: times to reach a common global threshold.
+    pub sync_time_global: f64,
+    pub async_time_global: f64,
+    pub speedup_global: f64,
+}
+
+/// G1+G2: run the async protocol at `local_tol`, measure the achieved
+/// global residual; then race both modes to that same global threshold.
+pub fn global_threshold(ctx: &ExperimentCtx, procs: usize, local_tol: f32) -> Result<GlobalThresholdResult> {
+    let asyn = ctx.run_cell(procs, Mode::Asynchronous, |c| c.tol = local_tol)?;
+    let achieved = asyn.final_global_residual;
+
+    let mut oracle = GlobalOracle::new(&ctx.problem, (local_tol * 1e-3).max(1e-9));
+    let tau = oracle.ranking_tau(&asyn.x);
+    let top100 = oracle.top_k(&asyn.x, 100);
+    let _ = &mut oracle;
+
+    // G2: race to the common global threshold
+    let g_tol = achieved.max(local_tol);
+    let sync_g = ctx.run_cell(procs, Mode::Synchronous, |c| {
+        c.global_threshold = true;
+        c.tol = g_tol;
+    })?;
+    let async_g = ctx.run_cell(procs, Mode::Asynchronous, |c| {
+        c.global_threshold = true;
+        c.tol = g_tol;
+    })?;
+    Ok(GlobalThresholdResult {
+        local_tol,
+        achieved_global_residual: achieved,
+        ranking_tau: tau,
+        top100_overlap: top100,
+        sync_time_global: sync_g.total_time,
+        async_time_global: async_g.total_time,
+        speedup_global: sync_g.total_time / async_g.total_time,
+    })
+}
+
+/// A1: cancellation-window sweep (async, fixed p).
+pub fn ablation_cancel_window(
+    ctx: &ExperimentCtx,
+    procs: usize,
+    windows: &[Option<f64>],
+) -> Result<Vec<(Option<f64>, RunMetrics)>> {
+    windows
+        .iter()
+        .map(|&w| Ok((w, ctx.run_cell(procs, Mode::Asynchronous, |c| c.cancel_window = w)?)))
+        .collect()
+}
+
+/// A2: adaptive per-peer rates on a cluster with one slow node.
+pub fn ablation_adaptive(
+    ctx: &ExperimentCtx,
+    procs: usize,
+    slow_factor: f64,
+) -> Result<(RunMetrics, RunMetrics)> {
+    // NOTE: the slow node enters through a modified profile, so this
+    // bypasses run_cell's profile_for and builds the sim directly.
+    let run = |adaptive: bool| -> Result<RunMetrics> {
+        let mut cfg = ctx.base.clone();
+        cfg.procs = procs;
+        cfg.mode = Mode::Asynchronous;
+        cfg.adaptive = adaptive;
+        let partitioner = Partitioner::consecutive(ctx.problem.n(), procs);
+        let mut ops = build_ops(&ctx.problem, &partitioner, &cfg, ctx.engine.as_ref())?;
+        let profile = profile_for(&cfg).with_slow_node(procs - 1, slow_factor);
+        let spec = RunSpec {
+            mode: cfg.mode,
+            stop: cfg.stop_rule(),
+            adaptive,
+            seed: cfg.seed,
+            max_total_iters: 2_000_000,
+        };
+        Ok(SimEngine::new(&profile, &ctx.problem).run(&mut ops, &spec))
+    };
+    Ok((run(false)?, run(true)?))
+}
+
+/// A3: topology sweep (async only; sync requires clique).
+pub fn ablation_topology(
+    ctx: &ExperimentCtx,
+    procs: usize,
+    topologies: &[Topology],
+) -> Result<Vec<(Topology, RunMetrics)>> {
+    topologies
+        .iter()
+        .map(|&t| Ok((t, ctx.run_cell(procs, Mode::Asynchronous, |c| c.topology = t)?)))
+        .collect()
+}
+
+/// A4: ranking robustness under relaxed thresholds.
+pub fn ablation_ranking(
+    ctx: &ExperimentCtx,
+    procs: usize,
+    tols: &[f32],
+) -> Result<Vec<(f32, f32, f64, f64)>> {
+    // returns (tol, achieved_global_resid, kendall_tau, top100)
+    let oracle = GlobalOracle::new(&ctx.problem, 1e-9);
+    tols.iter()
+        .map(|&tol| {
+            let m = ctx.run_cell(procs, Mode::Asynchronous, |c| c.tol = tol)?;
+            Ok((
+                tol,
+                m.final_global_residual,
+                oracle.ranking_tau(&m.x),
+                oracle.top_k(&m.x, 100),
+            ))
+        })
+        .collect()
+}

@@ -1,0 +1,100 @@
+//! The leader: partitioning, run orchestration, and reports.
+//!
+//! This is the role the paper's "Configuration objects" play (§5.1):
+//! load parameters, partition and distribute matrix data, launch the
+//! computation, and generate reports. [`run_experiment`] turns one
+//! [`crate::config::RunConfig`] into a [`crate::asynciter::RunMetrics`];
+//! [`experiments`] bundles the multi-run drivers behind Tables 1–2 and
+//! the G/A experiment series of DESIGN.md §5.
+
+mod partition;
+pub mod experiments;
+mod report;
+
+pub use partition::Partitioner;
+pub use report::Report;
+
+use std::sync::Arc;
+
+use crate::asynciter::{ArtifactBlockOp, BlockOperator, NativeBlockOp, RunMetrics, RunSpec, SimEngine};
+use crate::config::RunConfig;
+use crate::graph::{generators, io, Csr};
+use crate::pagerank::PagerankProblem;
+use crate::simnet::ClusterProfile;
+use crate::Result;
+
+/// Materialize the graph named by a config ("stanford", "scaled:<n>",
+/// "erdos:<n>:<m>", or a path).
+pub fn load_graph(spec: &str, seed: u64) -> Result<Csr> {
+    let el = if spec == "stanford" {
+        generators::stanford_web_like(seed)
+    } else if let Some(rest) = spec.strip_prefix("scaled:") {
+        let n: usize = rest.parse()?;
+        generators::power_law_web(&generators::WebParams::scaled(n), seed)
+    } else if let Some(rest) = spec.strip_prefix("erdos:") {
+        let (n, m) = rest
+            .split_once(':')
+            .ok_or_else(|| anyhow::anyhow!("erdos:<n>:<m>"))?;
+        generators::erdos_renyi(n.parse()?, m.parse()?, seed)
+    } else if spec.ends_with(".bin") {
+        io::load_edgelist_bin(spec)?
+    } else {
+        io::load_edgelist_text(spec, None)?
+    };
+    Csr::from_edgelist(&el)
+}
+
+/// Build the per-UE block operators for a problem.
+pub fn build_ops(
+    problem: &Arc<PagerankProblem>,
+    partitioner: &Partitioner,
+    cfg: &RunConfig,
+    engine: Option<&crate::runtime::Engine>,
+) -> Result<Vec<Box<dyn BlockOperator>>> {
+    let mut ops: Vec<Box<dyn BlockOperator>> = Vec::with_capacity(cfg.procs);
+    for (lo, hi) in partitioner.blocks() {
+        if cfg.use_artifact {
+            let eng = engine.ok_or_else(|| {
+                anyhow::anyhow!("use_artifact requires a runtime engine (make artifacts)")
+            })?;
+            ops.push(Box::new(ArtifactBlockOp::new(
+                eng,
+                problem.clone(),
+                lo,
+                hi,
+                cfg.ell_width,
+            )?));
+        } else {
+            ops.push(Box::new(NativeBlockOp::new(problem.clone(), lo, hi)));
+        }
+    }
+    Ok(ops)
+}
+
+/// Cluster profile matching a config (paper testbed + overrides).
+pub fn profile_for(cfg: &RunConfig) -> ClusterProfile {
+    let mut prof = ClusterProfile::paper_beowulf(cfg.procs)
+        .with_topology(cfg.topology)
+        .with_cancel_window(cfg.cancel_window);
+    prof.bandwidth *= cfg.bandwidth_scale;
+    prof
+}
+
+/// Execute one configured run end-to-end (graph → ops → simulation).
+pub fn run_experiment(cfg: &RunConfig, engine: Option<&crate::runtime::Engine>) -> Result<RunMetrics> {
+    cfg.validate()?;
+    let csr = load_graph(&cfg.graph, cfg.seed)?;
+    let problem = Arc::new(PagerankProblem::new(csr, cfg.alpha));
+    let partitioner = Partitioner::consecutive(problem.n(), cfg.procs);
+    let mut ops = build_ops(&problem, &partitioner, cfg, engine)?;
+    let profile = profile_for(cfg);
+    let spec = RunSpec {
+        mode: cfg.mode,
+        stop: cfg.stop_rule(),
+        adaptive: cfg.adaptive,
+        seed: cfg.seed,
+        max_total_iters: 2_000_000,
+    };
+    let sim = SimEngine::new(&profile, &problem);
+    Ok(sim.run(&mut ops, &spec))
+}

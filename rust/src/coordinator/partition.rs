@@ -1,0 +1,175 @@
+//! Row partitioning across UEs.
+//!
+//! The paper distributes "blocks of consecutive ⌈n/p⌉ rows" (§5.2);
+//! [`Partitioner::consecutive`] reproduces that exactly. The balanced
+//! variant splits by nonzero count instead — the natural fix for the
+//! heterogeneity the paper's own degree skew induces — and is compared
+//! in the ablation bench.
+
+use crate::graph::Csr;
+
+/// A partition of [0, n) into p contiguous blocks.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Partitioner {
+    bounds: Vec<usize>, // len p+1, bounds[0]=0, bounds[p]=n
+}
+
+impl Partitioner {
+    /// The paper's scheme: blocks of ⌈n/p⌉ consecutive rows (last block
+    /// takes the remainder).
+    pub fn consecutive(n: usize, p: usize) -> Partitioner {
+        assert!(p >= 1 && n >= p, "need n >= p >= 1");
+        let size = n.div_ceil(p);
+        let mut bounds = Vec::with_capacity(p + 1);
+        for i in 0..=p {
+            bounds.push((i * size).min(n));
+        }
+        // guard against empty trailing blocks when p*size >> n
+        for i in 1..=p {
+            if bounds[i] <= bounds[i - 1] {
+                bounds[i] = (bounds[i - 1] + 1).min(n);
+            }
+        }
+        *bounds.last_mut().unwrap() = n;
+        Partitioner { bounds }
+    }
+
+    /// Balanced-nnz scheme: contiguous blocks with roughly equal
+    /// nonzero counts (equalizes per-iteration compute across UEs).
+    pub fn balanced_nnz(csr: &Csr, p: usize) -> Partitioner {
+        let n = csr.n();
+        assert!(p >= 1 && n >= p);
+        let total: usize = csr.nnz();
+        let target = total as f64 / p as f64;
+        let mut bounds = vec![0usize];
+        let mut acc = 0usize;
+        let mut next_target = target;
+        for i in 0..n {
+            acc += csr.row_len(i);
+            if acc as f64 >= next_target && bounds.len() < p {
+                bounds.push(i + 1);
+                next_target += target;
+            }
+        }
+        while bounds.len() < p {
+            // degenerate: pad with single-row blocks at the end
+            bounds.push((bounds.last().unwrap() + 1).min(n - (p - bounds.len())));
+        }
+        bounds.push(n);
+        // ensure strictly increasing
+        for i in 1..bounds.len() {
+            if bounds[i] <= bounds[i - 1] {
+                bounds[i] = bounds[i - 1] + 1;
+            }
+        }
+        *bounds.last_mut().unwrap() = n;
+        Partitioner { bounds }
+    }
+
+    pub fn p(&self) -> usize {
+        self.bounds.len() - 1
+    }
+
+    /// Block ranges [(lo, hi); p].
+    pub fn blocks(&self) -> Vec<(usize, usize)> {
+        self.bounds.windows(2).map(|w| (w[0], w[1])).collect()
+    }
+
+    /// Which UE owns row i.
+    pub fn owner_of(&self, row: usize) -> usize {
+        debug_assert!(row < *self.bounds.last().unwrap());
+        match self.bounds.binary_search(&row) {
+            Ok(i) if i == self.p() => i - 1,
+            Ok(i) => i,
+            Err(i) => i - 1,
+        }
+    }
+
+    /// Max/min block size ratio (load imbalance indicator).
+    pub fn imbalance(&self) -> f64 {
+        let sizes: Vec<usize> = self.blocks().iter().map(|(l, h)| h - l).collect();
+        let max = *sizes.iter().max().unwrap();
+        let min = *sizes.iter().min().unwrap().max(&1);
+        max as f64 / min as f64
+    }
+
+    /// Nnz per block under a given matrix.
+    pub fn block_nnz(&self, csr: &Csr) -> Vec<usize> {
+        self.blocks()
+            .iter()
+            .map(|&(lo, hi)| (lo..hi).map(|i| csr.row_len(i)).sum())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{generators, Csr};
+
+    #[test]
+    fn consecutive_tiles_exactly() {
+        for (n, p) in [(10, 3), (281_903, 6), (7, 7), (100, 1)] {
+            let part = Partitioner::consecutive(n, p);
+            let blocks = part.blocks();
+            assert_eq!(blocks.len(), p);
+            assert_eq!(blocks[0].0, 0);
+            assert_eq!(blocks[p - 1].1, n);
+            for w in blocks.windows(2) {
+                assert_eq!(w[0].1, w[1].0);
+                assert!(w[0].0 < w[0].1);
+            }
+        }
+    }
+
+    #[test]
+    fn consecutive_matches_paper_ceil() {
+        // paper: blocks of ceil(n/p) consecutive rows
+        let part = Partitioner::consecutive(281_903, 6);
+        let blocks = part.blocks();
+        let size = 281_903usize.div_ceil(6); // 46984
+        assert_eq!(blocks[0], (0, size));
+        assert_eq!(blocks[1], (size, 2 * size));
+        assert_eq!(blocks[5].1, 281_903);
+    }
+
+    #[test]
+    fn owner_of_is_consistent() {
+        let part = Partitioner::consecutive(100, 7);
+        for (ue, (lo, hi)) in part.blocks().into_iter().enumerate() {
+            for r in lo..hi {
+                assert_eq!(part.owner_of(r), ue, "row {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn balanced_nnz_reduces_imbalance() {
+        let el = generators::power_law_web(&generators::WebParams::scaled(5_000), 5);
+        let csr = Csr::from_edgelist(&el).unwrap();
+        let p = 4;
+        let cons = Partitioner::consecutive(csr.n(), p);
+        let bal = Partitioner::balanced_nnz(&csr, p);
+        assert_eq!(bal.p(), p);
+        let spread = |nnz: &[usize]| {
+            let max = *nnz.iter().max().unwrap() as f64;
+            let min = *nnz.iter().min().unwrap().max(&1) as f64;
+            max / min
+        };
+        let s_cons = spread(&cons.block_nnz(&csr));
+        let s_bal = spread(&bal.block_nnz(&csr));
+        assert!(
+            s_bal <= s_cons,
+            "balanced {s_bal:.2} should not exceed consecutive {s_cons:.2}"
+        );
+        // and the balanced split still tiles the matrix
+        assert_eq!(bal.blocks()[0].0, 0);
+        assert_eq!(bal.blocks()[p - 1].1, csr.n());
+    }
+
+    #[test]
+    #[should_panic(expected = "need n >= p")]
+    fn rejects_more_blocks_than_rows() {
+        Partitioner::consecutive(3, 4);
+    }
+}

@@ -1,0 +1,111 @@
+//! Report generation (the paper's "automatic report generation" option,
+//! §5.1): collect run results into a JSON document + markdown summary.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::asynciter::RunMetrics;
+use crate::util::Json;
+use crate::Result;
+
+/// Accumulates experiment outputs and writes them out.
+#[derive(Default)]
+pub struct Report {
+    sections: Vec<(String, String)>, // (title, markdown body)
+    json: BTreeMap<String, Json>,
+}
+
+impl Report {
+    pub fn new() -> Report {
+        Report::default()
+    }
+
+    pub fn add_section(&mut self, title: &str, markdown: &str) {
+        self.sections.push((title.to_string(), markdown.to_string()));
+    }
+
+    pub fn add_json(&mut self, key: &str, value: Json) {
+        self.json.insert(key.to_string(), value);
+    }
+
+    pub fn add_run(&mut self, key: &str, m: &RunMetrics) {
+        let mut o = BTreeMap::new();
+        o.insert("mode".into(), Json::Str(format!("{:?}", m.mode)));
+        o.insert("p".into(), Json::Num(m.p as f64));
+        o.insert(
+            "iters".into(),
+            Json::Arr(m.iters.iter().map(|&i| Json::Num(i as f64)).collect()),
+        );
+        o.insert(
+            "finish_times".into(),
+            Json::Arr(m.finish_times.iter().map(|&t| Json::Num(t)).collect()),
+        );
+        o.insert("total_time".into(), Json::Num(m.total_time));
+        o.insert(
+            "global_residual".into(),
+            Json::Num(m.final_global_residual as f64),
+        );
+        o.insert(
+            "imports".into(),
+            Json::Arr(
+                m.imports
+                    .iter()
+                    .map(|row| Json::Arr(row.iter().map(|&v| Json::Num(v as f64)).collect()))
+                    .collect(),
+            ),
+        );
+        o.insert("wire_sent".into(), Json::Num(m.wire_sent as f64));
+        o.insert("wire_cancelled".into(), Json::Num(m.wire_cancelled as f64));
+        self.add_json(key, Json::Obj(o));
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let mut out = String::from("# asyncpr experiment report\n\n");
+        for (title, body) in &self.sections {
+            out.push_str(&format!("## {title}\n\n{body}\n\n"));
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> String {
+        Json::Obj(self.json.clone()).to_string_compact()
+    }
+
+    /// Write `<stem>.md` and `<stem>.json`.
+    pub fn write(&self, stem: impl AsRef<Path>) -> Result<()> {
+        let stem = stem.as_ref();
+        let md = stem.with_extension("md");
+        let js = stem.with_extension("json");
+        std::fs::write(&md, self.to_markdown())?;
+        std::fs::write(&js, self.to_json())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_roundtrip() {
+        let mut r = Report::new();
+        r.add_section("Table 1", "| a |\n|---|\n| 1 |");
+        r.add_json("x", Json::Num(1.0));
+        let md = r.to_markdown();
+        assert!(md.contains("## Table 1"));
+        let parsed = Json::parse(&r.to_json()).unwrap();
+        assert_eq!(parsed.get("x").unwrap().as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn write_creates_files() {
+        let dir = std::env::temp_dir().join(format!("asyncpr_report_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut r = Report::new();
+        r.add_section("s", "body");
+        r.write(dir.join("out")).unwrap();
+        assert!(dir.join("out.md").exists());
+        assert!(dir.join("out.json").exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

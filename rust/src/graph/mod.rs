@@ -1,0 +1,30 @@
+//! Web-graph substrate: structures, generators, and IO.
+//!
+//! The paper's matrices are built from a crawl-derived adjacency matrix
+//! (Stanford-Web: 281,903 pages, 2,312,497 links, 172 dangling). We
+//! implement the full pipeline: edge lists → CSR (by source) →
+//! transposed CSR (the `P^T` the iteration multiplies by) → padded
+//! ELLPACK with virtual-row splitting (the accelerator layout, see
+//! DESIGN.md §Hardware-Adaptation).
+//!
+//! Since the original dataset is not redistributable with this repo,
+//! [`generators::stanford_web_like`] synthesizes a power-law web graph
+//! with matched node count, edge count, and dangling-page count
+//! (substitution documented in DESIGN.md §3). Real crawls can be loaded
+//! through [`io`].
+
+mod csr;
+mod edgelist;
+mod ell;
+pub mod generators;
+pub mod io;
+mod stats;
+
+pub use csr::Csr;
+pub use edgelist::EdgeList;
+pub use ell::{Ell, EllBlock};
+pub use stats::GraphStats;
+
+/// Node index type. u32 caps us at ~4.2e9 pages, far above the paper's
+/// 2.8e5 and comfortably above anything a single host holds anyway.
+pub type NodeId = u32;

@@ -1,0 +1,45 @@
+//! # asyncpr — Asynchronous Iterative PageRank
+//!
+//! A production-grade reproduction of *"Asynchronous iterative
+//! computations with Web information retrieval structures: The PageRank
+//! case"* (Kollias, Gallopoulos & Szyld, 2006).
+//!
+//! The crate is the **Layer-3 coordinator** of a three-layer stack:
+//!
+//! * **L1** — Pallas ELLPACK SpMV / fused PageRank-step kernels
+//!   (`python/compile/kernels/`, build time only);
+//! * **L2** — the JAX block-update model (`python/compile/model.py`),
+//!   AOT-lowered to HLO-text artifacts (`artifacts/*.hlo.txt`);
+//! * **L3** — this crate: units of execution (UEs), the simulated
+//!   cluster network, the Figure-1 termination-detection protocol, the
+//!   partitioner, metrics, and the CLI. The hot path executes either
+//!   the PJRT artifacts ([`runtime`]) or the native SpMV
+//!   ([`pagerank`]); Python never runs at request time.
+//!
+//! ## Module map (see DESIGN.md §4)
+//!
+//! | module | role |
+//! |---|---|
+//! | [`graph`] | web-graph structures (CSR/ELL), generators, IO |
+//! | [`pagerank`] | PageRank operators, sync baselines, residuals, ranking metrics |
+//! | [`simnet`] | virtual-time discrete-event cluster/network simulator |
+//! | [`asynciter`] | generic asynchronous fixed-point engine (eq. 5) |
+//! | [`termination`] | Figure-1 centralized protocol + global oracle + tree detector |
+//! | [`coordinator`] | partitioning, run orchestration, adaptive comms, reports |
+//! | [`runtime`] | PJRT engine executing the AOT artifacts |
+//! | [`metrics`] | Table-1/Table-2 collectors, traces, emitters |
+//! | [`config`] | TOML experiment configs and presets |
+
+pub mod asynciter;
+pub mod config;
+pub mod coordinator;
+pub mod graph;
+pub mod metrics;
+pub mod pagerank;
+pub mod runtime;
+pub mod simnet;
+pub mod termination;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

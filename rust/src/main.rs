@@ -1,0 +1,308 @@
+//! `repro` — the asyncpr command-line launcher.
+//!
+//! Subcommands (hand-rolled parser; the offline build has no clap):
+//!
+//! ```text
+//! repro generate --graph stanford --seed 42 --out web.bin [--check]
+//! repro run [--config run.toml] [--graph G] [--procs P] [--mode sync|async]
+//!           [--tol T] [--topology clique|star|tree] [--adaptive]
+//!           [--artifact] [--global-threshold] [--seed S]
+//! repro experiment table1|table2|global|ablations [--graph G] [--out reports/X]
+//! repro artifacts-check
+//! repro help
+//! ```
+
+use std::collections::HashMap;
+
+use asyncpr::asynciter::Mode;
+use asyncpr::config::RunConfig;
+use asyncpr::coordinator::{self, experiments, Report};
+use asyncpr::graph::{io, GraphStats};
+use asyncpr::metrics::{run_summary, table1_markdown, table2_markdown};
+use asyncpr::simnet::Topology;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match dispatch(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn dispatch(args: &[String]) -> anyhow::Result<()> {
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    match cmd {
+        "generate" => {
+            let flags = parse_flags(&args[1..])?;
+            cmd_generate(&flags)
+        }
+        "run" => {
+            let flags = parse_flags(&args[1..])?;
+            cmd_run(&flags)
+        }
+        "experiment" => {
+            let which = args.get(1).map(String::as_str).unwrap_or("");
+            let rest = if args.len() > 2 { &args[2..] } else { &[] };
+            let flags = parse_flags(rest)?;
+            cmd_experiment(which, &flags)
+        }
+        "artifacts-check" => cmd_artifacts_check(),
+        "help" | "--help" | "-h" => {
+            print!("{HELP}");
+            Ok(())
+        }
+        other => anyhow::bail!("unknown command {other:?}; try `repro help`"),
+    }
+}
+
+const HELP: &str = r#"repro — asynchronous iterative PageRank (Kollias/Gallopoulos/Szyld 2006)
+
+USAGE:
+  repro generate --graph <SPEC> [--seed N] --out <FILE> [--check]
+  repro run [--config FILE] [--graph SPEC] [--procs P] [--mode sync|async]
+            [--tol T] [--topology clique|star|tree] [--adaptive]
+            [--artifact] [--global-threshold] [--seed N]
+  repro experiment <table1|table2|global|ablations> [--graph SPEC] [--out STEM]
+  repro artifacts-check
+  repro help
+
+GRAPH SPECS: stanford | scaled:<n> | erdos:<n>:<m> | path(.txt|.bin)
+"#;
+
+fn parse_flags(args: &[String]) -> anyhow::Result<HashMap<String, String>> {
+    let mut map = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        let key = a
+            .strip_prefix("--")
+            .ok_or_else(|| anyhow::anyhow!("expected --flag, got {a:?}"))?;
+        // boolean flags
+        if matches!(
+            key,
+            "check" | "adaptive" | "artifact" | "global-threshold" | "quick"
+        ) {
+            map.insert(key.to_string(), "true".to_string());
+            i += 1;
+            continue;
+        }
+        let val = args
+            .get(i + 1)
+            .ok_or_else(|| anyhow::anyhow!("--{key} needs a value"))?;
+        map.insert(key.to_string(), val.clone());
+        i += 2;
+    }
+    Ok(map)
+}
+
+fn config_from_flags(flags: &HashMap<String, String>) -> anyhow::Result<RunConfig> {
+    let mut cfg = if let Some(path) = flags.get("config") {
+        RunConfig::from_toml(&std::fs::read_to_string(path)?)?
+    } else {
+        RunConfig::default()
+    };
+    if let Some(g) = flags.get("graph") {
+        cfg.graph = g.clone();
+    }
+    if let Some(p) = flags.get("procs") {
+        cfg.procs = p.parse()?;
+    }
+    if let Some(m) = flags.get("mode") {
+        cfg.mode = match m.as_str() {
+            "sync" => Mode::Synchronous,
+            "async" => Mode::Asynchronous,
+            _ => anyhow::bail!("--mode sync|async"),
+        };
+    }
+    if let Some(t) = flags.get("tol") {
+        cfg.tol = t.parse()?;
+    }
+    if let Some(t) = flags.get("topology") {
+        cfg.topology =
+            Topology::parse(t).ok_or_else(|| anyhow::anyhow!("unknown topology {t:?}"))?;
+    }
+    if let Some(s) = flags.get("seed") {
+        cfg.seed = s.parse()?;
+    }
+    if flags.contains_key("adaptive") {
+        cfg.adaptive = true;
+    }
+    if flags.contains_key("artifact") {
+        cfg.use_artifact = true;
+    }
+    if flags.contains_key("global-threshold") {
+        cfg.global_threshold = true;
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn cmd_generate(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let spec = flags.get("graph").map(String::as_str).unwrap_or("stanford");
+    let seed: u64 = flags.get("seed").map(|s| s.parse()).transpose()?.unwrap_or(42);
+    let out = flags
+        .get("out")
+        .ok_or_else(|| anyhow::anyhow!("generate requires --out <file>"))?;
+    eprintln!("generating {spec} (seed {seed}) ...");
+    let csr = coordinator::load_graph(spec, seed)?;
+    if flags.contains_key("check") {
+        csr.validate()?;
+        eprintln!("structural validation OK");
+    }
+    println!("{}", GraphStats::compute(&csr).report());
+    // regenerate the edge list for storage
+    let el = match spec {
+        "stanford" => asyncpr::graph::generators::stanford_web_like(seed),
+        s if s.starts_with("scaled:") => {
+            let n: usize = s.trim_start_matches("scaled:").parse()?;
+            asyncpr::graph::generators::power_law_web(
+                &asyncpr::graph::generators::WebParams::scaled(n),
+                seed,
+            )
+        }
+        s if s.starts_with("erdos:") => {
+            let rest = s.trim_start_matches("erdos:");
+            let (n, m) = rest.split_once(':').unwrap();
+            asyncpr::graph::generators::erdos_renyi(n.parse()?, m.parse()?, seed)
+        }
+        other => anyhow::bail!("generate does not support loading from {other}"),
+    };
+    if out.ends_with(".bin") {
+        io::save_edgelist_bin(&el, out)?;
+    } else {
+        io::save_edgelist_text(&el, out)?;
+    }
+    eprintln!("wrote {out}");
+    Ok(())
+}
+
+fn cmd_run(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let cfg = config_from_flags(flags)?;
+    let engine = if cfg.use_artifact {
+        Some(asyncpr::runtime::Engine::new(asyncpr::runtime::default_artifacts_dir())?)
+    } else {
+        None
+    };
+    eprintln!(
+        "running {:?} p={} graph={} tol={:.0e} ...",
+        cfg.mode, cfg.procs, cfg.graph, cfg.tol
+    );
+    let m = coordinator::run_experiment(&cfg, engine.as_ref())?;
+    println!("{}", run_summary(&m));
+    let (imin, imax) = m.iters_range();
+    let (tmin, tmax) = m.time_range();
+    println!("iters [{imin}, {imax}]  t [{tmin:.1}, {tmax:.1}] s");
+    println!("\nimports matrix:\n{}", table2_markdown(&m));
+    Ok(())
+}
+
+fn cmd_experiment(which: &str, flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let graph = flags
+        .get("graph")
+        .cloned()
+        .unwrap_or_else(|| "stanford".to_string());
+    let out = flags.get("out").cloned();
+    let base = RunConfig { graph, ..Default::default() };
+    let ctx = experiments::ExperimentCtx::new(base)?;
+    let mut rep = Report::new();
+    match which {
+        "table1" => {
+            let rows = experiments::table1(&ctx, &[2, 4, 6])?;
+            let t1: Vec<_> = rows.iter().map(|(r, _, _)| r.clone()).collect();
+            let md = table1_markdown(&t1);
+            println!("{md}");
+            rep.add_section("Table 1", &md);
+            for (row, s, a) in &rows {
+                rep.add_run(&format!("sync_p{}", row.procs), s);
+                rep.add_run(&format!("async_p{}", row.procs), a);
+            }
+        }
+        "table2" => {
+            let m = experiments::table2(&ctx, 4)?;
+            let md = table2_markdown(&m);
+            println!("{md}");
+            rep.add_section("Table 2", &md);
+            rep.add_run("async_p4", &m);
+        }
+        "global" => {
+            let g = experiments::global_threshold(&ctx, 4, 1e-6)?;
+            let md = format!(
+                "local tol {:.0e} => achieved global residual {:.2e}\n\
+                 kendall-tau {:.6}, top-100 overlap {:.2}\n\
+                 race to global tol: sync {:.1}s vs async {:.1}s => speedup {:.2}",
+                g.local_tol,
+                g.achieved_global_residual,
+                g.ranking_tau,
+                g.top100_overlap,
+                g.sync_time_global,
+                g.async_time_global,
+                g.speedup_global,
+            );
+            println!("{md}");
+            rep.add_section("Global threshold (G1+G2)", &md);
+        }
+        "ablations" => {
+            let mut md = String::new();
+            let windows = [None, Some(1.0), Some(3.0), Some(10.0)];
+            md.push_str("cancel-window sweep (p=4, async):\n");
+            for (w, m) in experiments::ablation_cancel_window(&ctx, 4, &windows)? {
+                md.push_str(&format!(
+                    "  window {:?}: t={:.1}s cancelled={} queue_wait={:.1}s resid={:.1e}\n",
+                    w, m.total_time, m.wire_cancelled, m.wire_queue_wait, m.final_global_residual
+                ));
+            }
+            md.push_str("\nadaptive rates (p=4, one 3x-slow node):\n");
+            let (fixed, adap) = experiments::ablation_adaptive(&ctx, 4, 3.0)?;
+            md.push_str(&format!(
+                "  fixed:    t={:.1}s cancelled={}\n  adaptive: t={:.1}s cancelled={}\n",
+                fixed.total_time, fixed.wire_cancelled, adap.total_time, adap.wire_cancelled
+            ));
+            md.push_str("\ntopology sweep (p=6, async):\n");
+            for (t, m) in experiments::ablation_topology(
+                &ctx,
+                6,
+                &[Topology::Clique, Topology::Star, Topology::BinaryTree],
+            )? {
+                md.push_str(&format!(
+                    "  {:?}: t={:.1}s cancelled={} resid={:.1e}\n",
+                    t, m.total_time, m.wire_cancelled, m.final_global_residual
+                ));
+            }
+            println!("{md}");
+            rep.add_section("Ablations", &md);
+        }
+        other => anyhow::bail!("unknown experiment {other:?} (table1|table2|global|ablations)"),
+    }
+    if let Some(stem) = out {
+        rep.write(&stem)?;
+        eprintln!("wrote {stem}.md / {stem}.json");
+    }
+    Ok(())
+}
+
+fn cmd_artifacts_check() -> anyhow::Result<()> {
+    let dir = asyncpr::runtime::default_artifacts_dir();
+    let engine = asyncpr::runtime::Engine::new(&dir)?;
+    println!(
+        "platform: {}; artifacts dir: {}",
+        engine.platform(),
+        dir.display()
+    );
+    for a in &engine.manifest().artifacts.clone() {
+        // compile + one smoke execution per bucket
+        let mut exe = engine.pagerank_step(a.bucket.n, a.bucket.b, a.bucket.k)?;
+        let mut buf = exe.buffers();
+        buf.alpha = [0.85];
+        let (y, resid) = exe.step(&mut buf)?;
+        println!(
+            "  {:<44} bucket={:<9} n={:<7} b={:<7} k={:<2} smoke: y0={} resid={}",
+            a.path, a.bucket.name, a.bucket.n, a.bucket.b, a.bucket.k, y[0], resid
+        );
+    }
+    println!("all artifacts compile and execute");
+    Ok(())
+}

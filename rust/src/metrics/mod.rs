@@ -1,0 +1,181 @@
+//! Experiment metrics: the exact rows/cells the paper's tables report,
+//! plus emitters (markdown / JSON) for `repro report`.
+
+use crate::asynciter::RunMetrics;
+use crate::util::{Json, Table};
+
+/// One row of Table 1.
+#[derive(Debug, Clone)]
+pub struct Table1Row {
+    pub procs: usize,
+    pub sync_iters: u64,
+    pub sync_time: f64,
+    pub async_iters_min: u64,
+    pub async_iters_max: u64,
+    pub async_t_min: f64,
+    pub async_t_max: f64,
+    pub speedup: f64,
+}
+
+impl Table1Row {
+    pub fn from_runs(sync: &RunMetrics, asynchronous: &RunMetrics) -> Table1Row {
+        let (imin, imax) = asynchronous.iters_range();
+        let (tmin, tmax) = asynchronous.time_range();
+        Table1Row {
+            procs: sync.p,
+            sync_iters: sync.iters.iter().copied().max().unwrap_or(0),
+            sync_time: sync.total_time,
+            async_iters_min: imin,
+            async_iters_max: imax,
+            async_t_min: tmin,
+            async_t_max: tmax,
+            speedup: asynchronous.speedup_vs(sync.total_time),
+        }
+    }
+
+    pub fn cells(&self) -> Vec<String> {
+        vec![
+            self.procs.to_string(),
+            self.sync_iters.to_string(),
+            format!("{:.1}", self.sync_time),
+            format!("[{}, {}]", self.async_iters_min, self.async_iters_max),
+            format!("[{:.1}, {:.1}]", self.async_t_min, self.async_t_max),
+            format!("{:.2}", self.speedup),
+        ]
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = std::collections::BTreeMap::new();
+        o.insert("procs".into(), Json::Num(self.procs as f64));
+        o.insert("sync_iters".into(), Json::Num(self.sync_iters as f64));
+        o.insert("sync_time".into(), Json::Num(self.sync_time));
+        o.insert("async_iters_min".into(), Json::Num(self.async_iters_min as f64));
+        o.insert("async_iters_max".into(), Json::Num(self.async_iters_max as f64));
+        o.insert("async_t_min".into(), Json::Num(self.async_t_min));
+        o.insert("async_t_max".into(), Json::Num(self.async_t_max));
+        o.insert("speedup".into(), Json::Num(self.speedup));
+        Json::Obj(o)
+    }
+}
+
+/// Render Table 1 rows in the paper's layout.
+pub fn table1_markdown(rows: &[Table1Row]) -> String {
+    let mut t = Table::new(&[
+        "procs",
+        "sync iters",
+        "sync t (s)",
+        "async [it_min, it_max]",
+        "async [t_min, t_max] (s)",
+        "<speedUp>",
+    ]);
+    for r in rows {
+        t.row(&r.cells());
+    }
+    t.to_markdown()
+}
+
+/// Render Table 2 (completed-imports matrix) in the paper's layout.
+pub fn table2_markdown(m: &RunMetrics) -> String {
+    let p = m.p;
+    let mut header: Vec<String> = vec!["Receiver".into()];
+    header.extend((0..p).map(|j| format!("id = {j}")));
+    header.push("Completed Imports (%)".into());
+    let hdr_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(&hdr_refs);
+    for i in 0..p {
+        let mut cells: Vec<String> = vec![format!("id = {i}")];
+        cells.extend((0..p).map(|j| m.imports[i][j].to_string()));
+        cells.push(format!("{:.0}", m.import_pct[i]));
+        t.row(&cells);
+    }
+    t.to_markdown()
+}
+
+/// Run-level summary (global residual, wire stats) for EXPERIMENTS.md.
+pub fn run_summary(m: &RunMetrics) -> String {
+    format!(
+        "mode={:?} p={} iters={:?} total_t={:.1}s global_resid={:.2e} wire: sent={} cancelled={} queue_wait={:.1}s",
+        m.mode,
+        m.p,
+        m.iters,
+        m.total_time,
+        m.final_global_residual,
+        m.wire_sent,
+        m.wire_cancelled,
+        m.wire_queue_wait,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::asynciter::Mode;
+
+    fn fake_metrics(p: usize) -> RunMetrics {
+        RunMetrics {
+            mode: Mode::Asynchronous,
+            p,
+            iters: (0..p).map(|i| 60 + i as u64).collect(),
+            finish_times: (0..p).map(|i| 80.0 + i as f64).collect(),
+            total_time: 95.0,
+            imports: vec![vec![10; p]; p],
+            sends_attempted: vec![100; p],
+            sends_cancelled: vec![50; p],
+            final_global_residual: 4.2e-5,
+            x: vec![0.0; 8],
+            wire_sent: 123,
+            wire_cancelled: 45,
+            wire_queue_wait: 6.0,
+            import_pct: vec![30.0; p],
+        }
+    }
+
+    fn fake_sync(p: usize) -> RunMetrics {
+        RunMetrics {
+            mode: Mode::Synchronous,
+            iters: vec![44; p],
+            finish_times: vec![179.0; p],
+            total_time: 179.2,
+            ..fake_metrics(p)
+        }
+    }
+
+    #[test]
+    fn table1_row_shape() {
+        let r = Table1Row::from_runs(&fake_sync(2), &fake_metrics(2));
+        assert_eq!(r.procs, 2);
+        assert_eq!(r.sync_iters, 44);
+        assert_eq!(r.async_iters_min, 60);
+        assert_eq!(r.async_iters_max, 61);
+        // speedup = 179.2 / mean(80, 81)
+        assert!((r.speedup - 179.2 / 80.5).abs() < 1e-9);
+        let md = table1_markdown(&[r]);
+        assert!(md.contains("<speedUp>"));
+        assert!(md.contains("[60, 61]"));
+    }
+
+    #[test]
+    fn table1_json_roundtrip() {
+        let r = Table1Row::from_runs(&fake_sync(4), &fake_metrics(4));
+        let j = r.to_json();
+        assert_eq!(j.get("procs").unwrap().as_usize(), Some(4));
+        let txt = j.to_string_compact();
+        assert!(Json::parse(&txt).is_ok());
+    }
+
+    #[test]
+    fn table2_layout() {
+        let md = table2_markdown(&fake_metrics(4));
+        assert!(md.contains("id = 3"));
+        assert!(md.contains("Completed Imports"));
+        // 4 data rows + header + separator
+        assert_eq!(md.trim().lines().count(), 6);
+    }
+
+    #[test]
+    fn summary_contains_key_fields() {
+        let s = run_summary(&fake_metrics(2));
+        assert!(s.contains("4.2e-5") || s.contains("4.20e-5"));
+        assert!(s.contains("cancelled=45"));
+    }
+}

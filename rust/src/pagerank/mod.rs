@@ -1,0 +1,23 @@
+//! PageRank numerics: the paper's formulations (§2–§3) as operators
+//! over [`crate::graph::Csr`]/[`crate::graph::Ell`], synchronous
+//! baselines, residual/ranking metrics, and an extrapolation
+//! accelerator (paper refs [17–19] family) used in ablations.
+//!
+//! All formulations avoid materializing `S` or `G`: the dense rank-one
+//! pieces (`w d^T` dangling redistribution and `(1-α) v e^T` teleport)
+//! are applied implicitly, which is what makes the computation feasible
+//! at web scale (§1).
+
+mod operators;
+mod power;
+mod linsys;
+mod ranking;
+mod residual;
+mod extrapolation;
+
+pub use extrapolation::aitken_extrapolate;
+pub use linsys::{gauss_seidel, jacobi, LinsysOptions};
+pub use operators::PagerankProblem;
+pub use power::{power_method, PowerOptions, PowerResult};
+pub use ranking::{kendall_tau, top_k_overlap, rank_of};
+pub use residual::{l1_diff, l1_norm, linf_diff, normalize_l1};

@@ -1,0 +1,171 @@
+//! The PageRank problem: matrices of §2 as implicit operators.
+
+use crate::graph::Csr;
+
+/// A fully specified PageRank instance: the normalized link structure
+/// (`P^T` in CSR), the relaxation parameter α, and the teleportation
+/// distribution v (None = uniform w = e/n).
+///
+/// The Google matrix `G = α(P^T + w d^T) + (1-α) v e^T` is never
+/// materialized; [`PagerankProblem::apply_google`] computes `G x` in
+/// O(nnz + n) using the identities of §2.
+#[derive(Debug, Clone)]
+pub struct PagerankProblem {
+    pub csr: Csr,
+    pub alpha: f32,
+    /// Teleport distribution; uniform if None. Must sum to 1.
+    pub v: Option<Vec<f32>>,
+}
+
+impl PagerankProblem {
+    pub fn new(csr: Csr, alpha: f32) -> Self {
+        assert!((0.0..1.0).contains(&alpha), "alpha must be in [0,1)");
+        PagerankProblem { csr, alpha, v: None }
+    }
+
+    pub fn with_teleport(mut self, v: Vec<f32>) -> Self {
+        assert_eq!(v.len(), self.csr.n());
+        let s: f64 = v.iter().map(|&x| x as f64).sum();
+        assert!((s - 1.0).abs() < 1e-4, "teleport vector must sum to 1, got {s}");
+        self.v = Some(v);
+        self
+    }
+
+    pub fn n(&self) -> usize {
+        self.csr.n()
+    }
+
+    /// Teleport probability of page i: v_i or 1/n.
+    #[inline]
+    pub fn v_at(&self, i: usize) -> f32 {
+        match &self.v {
+            Some(v) => v[i],
+            None => 1.0 / self.n() as f32,
+        }
+    }
+
+    /// The teleport bias vector b = (1-α) v of eq. (2), restricted to
+    /// [lo, hi). This is the `bias` artifact argument.
+    pub fn bias_range(&self, lo: usize, hi: usize) -> Vec<f32> {
+        (lo..hi).map(|i| (1.0 - self.alpha) * self.v_at(i)).collect()
+    }
+
+    /// α·(d·x)/n — the dangling correction scalar (uniform w = e/n as
+    /// in the paper). This is the `dang` artifact argument.
+    pub fn dangling_term(&self, x: &[f32]) -> f32 {
+        self.alpha * self.csr.dangling_dot(x) / self.n() as f32
+    }
+
+    /// y = G x for rows [lo, hi):
+    /// `y_i = α (P^T x)_i + α (d·x)/n + (1-α) v_i`.
+    pub fn apply_google_range(&self, x: &[f32], lo: usize, hi: usize, y: &mut [f32]) {
+        self.csr.spmv_range(x, lo, hi, y);
+        let dang = self.dangling_term(x);
+        let one_minus = 1.0 - self.alpha;
+        for (k, i) in (lo..hi).enumerate() {
+            y[k] = self.alpha * y[k] + dang + one_minus * self.v_at(i);
+        }
+    }
+
+    /// Full y = G x.
+    pub fn apply_google(&self, x: &[f32], y: &mut [f32]) {
+        self.apply_google_range(x, 0, self.n(), y)
+    }
+
+    /// y = R x + b of eq. (2) (`R = α S`, `b = (1-α) v`): identical to
+    /// `apply_google` for stochastic x — kept as a distinct entry point
+    /// because eq. (7) is the kernel the asynchronous *linear-system*
+    /// variant iterates, and tests assert the identity.
+    pub fn apply_linsys(&self, x: &[f32], y: &mut [f32]) {
+        self.apply_google(x, y)
+    }
+
+    /// Uniform starting vector x(0) = e/n.
+    pub fn uniform_start(&self) -> Vec<f32> {
+        vec![1.0 / self.n() as f32; self.n()]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::EdgeList;
+
+    fn toy_problem() -> PagerankProblem {
+        let el = EdgeList::from_edges(4, vec![(0, 1), (0, 2), (1, 2), (2, 0)]).unwrap();
+        PagerankProblem::new(Csr::from_edgelist(&el).unwrap(), 0.85)
+    }
+
+    #[test]
+    fn google_apply_preserves_mass() {
+        let p = toy_problem();
+        let x = p.uniform_start();
+        let mut y = vec![0.0; 4];
+        p.apply_google(&x, &mut y);
+        let sum: f32 = y.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-6, "G is stochastic: sum {sum}");
+    }
+
+    #[test]
+    fn google_matches_dense_construction() {
+        let p = toy_problem();
+        let n = 4;
+        let a = p.alpha;
+        // dense G
+        let mut pt = [[0.0f32; 4]; 4];
+        pt[1][0] = 0.5;
+        pt[2][0] = 0.5;
+        pt[2][1] = 1.0;
+        pt[0][2] = 1.0;
+        let d = [0.0, 0.0, 0.0, 1.0f32];
+        let mut g = [[0.0f32; 4]; 4];
+        for i in 0..n {
+            for j in 0..n {
+                let s = pt[i][j] + d[j] / n as f32;
+                g[i][j] = a * s + (1.0 - a) / n as f32;
+            }
+        }
+        let x = [0.1f32, 0.2, 0.3, 0.4];
+        let mut y = vec![0.0f32; n];
+        p.apply_google(&x, &mut y);
+        for i in 0..n {
+            let want: f32 = (0..n).map(|j| g[i][j] * x[j]).sum();
+            assert!((y[i] - want).abs() < 1e-6, "row {i}: {} vs {}", y[i], want);
+        }
+    }
+
+    #[test]
+    fn custom_teleport_used() {
+        let p = toy_problem().with_teleport(vec![1.0, 0.0, 0.0, 0.0]);
+        assert_eq!(p.v_at(0), 1.0);
+        assert_eq!(p.v_at(1), 0.0);
+        let b = p.bias_range(0, 2);
+        assert!((b[0] - 0.15).abs() < 1e-6);
+        assert_eq!(b[1], 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "sum to 1")]
+    fn bad_teleport_rejected() {
+        toy_problem().with_teleport(vec![0.5, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn range_equals_full() {
+        let p = toy_problem();
+        let x = [0.4f32, 0.1, 0.3, 0.2];
+        let mut full = vec![0.0f32; 4];
+        p.apply_google(&x, &mut full);
+        let mut part = vec![0.0f32; 2];
+        p.apply_google_range(&x, 2, 4, &mut part);
+        assert_eq!(&full[2..4], &part[..]);
+    }
+
+    #[test]
+    fn dangling_term_scales_with_mass_on_dangling() {
+        let p = toy_problem();
+        assert_eq!(p.dangling_term(&[0.0, 0.0, 0.0, 0.0]), 0.0);
+        let t = p.dangling_term(&[0.0, 0.0, 0.0, 1.0]);
+        assert!((t - 0.85 / 4.0).abs() < 1e-7);
+    }
+}

@@ -1,0 +1,172 @@
+//! Ranking metrics.
+//!
+//! §5.2: "what is important are not the accurate values of the PageRank
+//! vector components, but their relative ranking. Therefore, an issue in
+//! our present investigations is the effect of a more relaxed global
+//! threshold criterion on the computed page ranks." Experiment A4
+//! quantifies this with Kendall-τ and top-k overlap between the vector
+//! computed at a relaxed threshold and a tight reference.
+
+/// Indices of pages sorted by descending score (ties by index for
+/// determinism).
+pub fn rank_of(x: &[f32]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..x.len()).collect();
+    idx.sort_by(|&a, &b| {
+        x[b].partial_cmp(&x[a]).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
+    });
+    idx
+}
+
+/// Fraction of the top-k sets shared by two score vectors.
+pub fn top_k_overlap(a: &[f32], b: &[f32], k: usize) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let k = k.min(a.len());
+    if k == 0 {
+        return 1.0;
+    }
+    let ra: std::collections::HashSet<usize> = rank_of(a)[..k].iter().copied().collect();
+    let rb: std::collections::HashSet<usize> = rank_of(b)[..k].iter().copied().collect();
+    ra.intersection(&rb).count() as f64 / k as f64
+}
+
+/// Kendall rank correlation τ-a between two score vectors, computed in
+/// O(n log n) with a merge-sort inversion count over b's scores taken
+/// in a's rank order.
+pub fn kendall_tau(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let n = a.len();
+    if n < 2 {
+        return 1.0;
+    }
+    let order = rank_of(a);
+    // positions of each item in b's ranking
+    let rb = rank_of(b);
+    let mut pos_in_b = vec![0usize; n];
+    for (pos, &item) in rb.iter().enumerate() {
+        pos_in_b[item] = pos;
+    }
+    let seq: Vec<usize> = order.iter().map(|&i| pos_in_b[i]).collect();
+    let inversions = count_inversions(seq);
+    let pairs = n * (n - 1) / 2;
+    1.0 - 2.0 * inversions as f64 / pairs as f64
+}
+
+fn count_inversions(mut xs: Vec<usize>) -> u64 {
+    let mut buf = vec![0usize; xs.len()];
+    fn rec(xs: &mut [usize], buf: &mut [usize]) -> u64 {
+        let n = xs.len();
+        if n <= 1 {
+            return 0;
+        }
+        let mid = n / 2;
+        let (l, r) = xs.split_at_mut(mid);
+        let mut inv = rec(l, &mut buf[..mid]) + rec(r, &mut buf[mid..]);
+        // merge
+        let (mut i, mut j, mut k) = (0usize, 0usize, 0usize);
+        while i < l.len() && j < r.len() {
+            if l[i] <= r[j] {
+                buf[k] = l[i];
+                i += 1;
+            } else {
+                buf[k] = r[j];
+                inv += (l.len() - i) as u64;
+                j += 1;
+            }
+            k += 1;
+        }
+        while i < l.len() {
+            buf[k] = l[i];
+            i += 1;
+            k += 1;
+        }
+        while j < r.len() {
+            buf[k] = r[j];
+            j += 1;
+            k += 1;
+        }
+        xs.copy_from_slice(&buf[..n]);
+        inv
+    }
+    rec(&mut xs, &mut buf)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rank_of_orders_descending() {
+        assert_eq!(rank_of(&[0.1, 0.5, 0.3]), vec![1, 2, 0]);
+        // ties broken by index
+        assert_eq!(rank_of(&[0.5, 0.5]), vec![0, 1]);
+    }
+
+    #[test]
+    fn tau_identical_is_one() {
+        let x = [0.4f32, 0.1, 0.3, 0.2];
+        assert!((kendall_tau(&x, &x) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tau_reversed_is_minus_one() {
+        let a = [1.0f32, 2.0, 3.0, 4.0];
+        let b = [4.0f32, 3.0, 2.0, 1.0];
+        assert!((kendall_tau(&a, &b) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tau_single_swap() {
+        // 4 elements, one adjacent transposition: tau = 1 - 2*1/6
+        let a = [4.0f32, 3.0, 2.0, 1.0];
+        let b = [4.0f32, 3.0, 1.0, 2.0];
+        assert!((kendall_tau(&a, &b) - (1.0 - 2.0 / 6.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tau_matches_naive_on_random() {
+        let mut rng = crate::util::Rng::new(12);
+        for _ in 0..20 {
+            let n = rng.range(2, 40);
+            let a: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+            let b: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+            // naive O(n^2) tau
+            let ra = rank_of(&a);
+            let rb = rank_of(&b);
+            let mut pos_a = vec![0usize; n];
+            let mut pos_b = vec![0usize; n];
+            for (p, &i) in ra.iter().enumerate() {
+                pos_a[i] = p;
+            }
+            for (p, &i) in rb.iter().enumerate() {
+                pos_b[i] = p;
+            }
+            let mut concordant = 0i64;
+            let mut discordant = 0i64;
+            for i in 0..n {
+                for j in i + 1..n {
+                    let s = (pos_a[i] as i64 - pos_a[j] as i64)
+                        * (pos_b[i] as i64 - pos_b[j] as i64);
+                    if s > 0 {
+                        concordant += 1;
+                    } else {
+                        discordant += 1;
+                    }
+                }
+            }
+            let naive =
+                (concordant - discordant) as f64 / (n * (n - 1) / 2) as f64;
+            let fast = kendall_tau(&a, &b);
+            assert!((naive - fast).abs() < 1e-9, "n={n}: {naive} vs {fast}");
+        }
+    }
+
+    #[test]
+    fn top_k_overlap_basics() {
+        let a = [0.9f32, 0.8, 0.1, 0.05];
+        let b = [0.9f32, 0.05, 0.8, 0.1];
+        assert_eq!(top_k_overlap(&a, &b, 1), 1.0);
+        assert_eq!(top_k_overlap(&a, &b, 2), 0.5);
+        assert_eq!(top_k_overlap(&a, &b, 4), 1.0);
+        assert_eq!(top_k_overlap(&a, &b, 0), 1.0);
+    }
+}

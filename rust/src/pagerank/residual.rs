@@ -1,0 +1,52 @@
+//! Vector norms and residuals (the convergence signals of §5.2).
+
+/// ||x||_1 (f64 accumulation: at web scale an f32 sum of 3e5 terms
+/// loses the very digits the 1e-6 stopping rule needs).
+pub fn l1_norm(x: &[f32]) -> f32 {
+    x.iter().map(|v| v.abs() as f64).sum::<f64>() as f32
+}
+
+/// ||a - b||_1 — the local/global convergence criterion of the paper.
+pub fn l1_diff(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| (x - y).abs() as f64).sum::<f64>() as f32
+}
+
+/// ||a - b||_inf.
+pub fn linf_diff(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}
+
+/// Normalize x to unit L1 norm in place (the final renormalization the
+/// paper notes can be "factored out in the end"; Lubachevsky–Mitra).
+pub fn normalize_l1(x: &mut [f32]) {
+    let s = l1_norm(x);
+    if s > 0.0 {
+        for v in x.iter_mut() {
+            *v /= s;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn norms_basics() {
+        assert_eq!(l1_norm(&[1.0, -2.0, 3.0]), 6.0);
+        assert_eq!(l1_diff(&[1.0, 2.0], &[0.0, 4.0]), 3.0);
+        assert_eq!(linf_diff(&[1.0, 2.0], &[0.0, 4.0]), 2.0);
+    }
+
+    #[test]
+    fn normalize_unit_sum() {
+        let mut x = vec![1.0, 3.0];
+        normalize_l1(&mut x);
+        assert_eq!(x, vec![0.25, 0.75]);
+        let mut z = vec![0.0, 0.0];
+        normalize_l1(&mut z); // no NaN on zero vector
+        assert_eq!(z, vec![0.0, 0.0]);
+    }
+}

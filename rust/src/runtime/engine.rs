@@ -1,0 +1,320 @@
+//! PJRT execution engine: loads HLO-text artifacts, compiles them on
+//! the CPU PJRT client, and exposes a typed `pagerank_step` entry point.
+//!
+//! Wiring follows `/opt/xla-example/load_hlo`: HLO **text** (not a
+//! serialized proto — xla_extension 0.5.1 rejects jax≥0.5's 64-bit ids)
+//! → `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `PjRtClient::compile` → `execute`.
+//!
+//! Executables are compiled once per bucket and cached; padded inputs
+//! are prepared by [`StepBuffers`] so the hot loop reuses allocations.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::Result;
+
+use super::manifest::{ArtifactEntry, Bucket, Manifest};
+
+/// Shared PJRT engine. Cheap to clone (Arc inside).
+#[derive(Clone)]
+pub struct Engine {
+    inner: Arc<EngineInner>,
+}
+
+struct EngineInner {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    /// artifact file name -> compiled executable
+    cache: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Engine {
+    /// Create an engine over an artifacts directory (validates the
+    /// manifest eagerly, compiles lazily).
+    pub fn new(artifacts_dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("creating PJRT CPU client: {e}"))?;
+        Ok(Self {
+            inner: Arc::new(EngineInner { client, manifest, cache: Mutex::new(HashMap::new()) }),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.inner.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.inner.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) the artifact for `entry`.
+    fn executable(&self, entry: &ArtifactEntry) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        {
+            let cache = self.inner.cache.lock().unwrap();
+            if let Some(exe) = cache.get(&entry.path) {
+                return Ok(exe.clone());
+            }
+        }
+        let path = self.inner.manifest.dir().join(&entry.path);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow::anyhow!("parsing HLO text {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .inner
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {}: {e}", path.display()))?;
+        let exe = Arc::new(exe);
+        self.inner
+            .cache
+            .lock()
+            .unwrap()
+            .insert(entry.path.clone(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Instantiate a step executor for a concrete problem size.
+    ///
+    /// `n_rows`: logical global vector length; `block_rows`: logical ELL
+    /// rows of this UE's block (incl. virtual rows); `width`: ELL width.
+    /// Picks the smallest bucket that fits and owns the padding.
+    pub fn pagerank_step(
+        &self,
+        n_rows: usize,
+        block_rows: usize,
+        width: usize,
+    ) -> Result<PagerankStepExe> {
+        let entry = self
+            .inner
+            .manifest
+            .best_fit("pagerank_step", n_rows, block_rows, width)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "no artifact bucket fits n={n_rows} b={block_rows} k={width}; \
+                     add a bucket to python/compile/shapes.py and re-run `make artifacts`"
+                )
+            })?
+            .clone();
+        let exe = self.executable(&entry)?;
+        Ok(PagerankStepExe::new(
+            exe,
+            self.inner.client.clone(),
+            entry.bucket,
+            n_rows,
+            block_rows,
+            width,
+        ))
+    }
+}
+
+/// Reusable, padded host-side buffers for one UE's step calls.
+///
+/// `vals`/`cols`/`bias` are fixed per run (the block's matrix rows and
+/// teleport bias); `x`, `xold`, `dang` change every step. The caller
+/// writes logical-sized data; padding stays zero (padded ELL slots have
+/// val=0 ⇒ no contribution; padded x entries are never referenced).
+pub struct StepBuffers {
+    pub vals: Vec<f32>,
+    pub cols: Vec<i32>,
+    pub x: Vec<f32>,
+    pub xold: Vec<f32>,
+    pub bias: Vec<f32>,
+    pub dang: [f32; 1],
+    pub alpha: [f32; 1],
+}
+
+/// A compiled `pagerank_step` bound to one bucket + logical shape.
+pub struct PagerankStepExe {
+    exe: Arc<xla::PjRtLoadedExecutable>,
+    client: xla::PjRtClient,
+    bucket: Bucket,
+    n_rows: usize,
+    block_rows: usize,
+    width: usize,
+    /// Device-resident copies of the per-run-constant inputs
+    /// (vals, cols, bias); uploading 2×BK f32 every step dominated the
+    /// hot path before this cache (EXPERIMENTS.md §Perf).
+    static_bufs: Option<(xla::PjRtBuffer, xla::PjRtBuffer, xla::PjRtBuffer)>,
+}
+
+impl PagerankStepExe {
+    fn new(
+        exe: Arc<xla::PjRtLoadedExecutable>,
+        client: xla::PjRtClient,
+        bucket: Bucket,
+        n_rows: usize,
+        block_rows: usize,
+        width: usize,
+    ) -> Self {
+        Self { exe, client, bucket, n_rows, block_rows, width, static_bufs: None }
+    }
+
+    pub fn bucket(&self) -> &Bucket {
+        &self.bucket
+    }
+
+    /// Allocate zeroed padded buffers for this executable.
+    pub fn buffers(&self) -> StepBuffers {
+        let (n, b, k) = (self.bucket.n, self.bucket.b, self.bucket.k);
+        StepBuffers {
+            vals: vec![0.0; b * k],
+            cols: vec![0; b * k],
+            x: vec![0.0; n],
+            xold: vec![0.0; b],
+            bias: vec![0.0; b],
+            dang: [0.0],
+            alpha: [0.85],
+        }
+    }
+
+    /// Fill the fixed matrix slots from logical ELL data
+    /// (`vals`/`cols` are `block_rows * width`, row-major).
+    pub fn load_matrix(&mut self, buf: &mut StepBuffers, vals: &[f32], cols: &[u32]) {
+        self.static_bufs = None;
+        assert_eq!(vals.len(), self.block_rows * self.width, "ELL vals size");
+        assert_eq!(cols.len(), vals.len(), "ELL cols size");
+        let k_pad = self.bucket.k;
+        for r in 0..self.block_rows {
+            let src = r * self.width;
+            let dst = r * k_pad;
+            buf.vals[dst..dst + self.width]
+                .copy_from_slice(&vals[src..src + self.width]);
+            for (d, &c) in buf.cols[dst..dst + self.width]
+                .iter_mut()
+                .zip(&cols[src..src + self.width])
+            {
+                *d = c as i32;
+            }
+        }
+    }
+
+    /// Execute one fused step. `buf.x[..n_rows]`, `buf.xold[..block_rows]`,
+    /// `buf.bias`, `buf.dang`, `buf.alpha` must be current.
+    ///
+    /// Returns the new block iterate (`block_rows` long, truncating the
+    /// padding) and the L1 residual against `xold`.
+    ///
+    /// Padded rows compute `y = dang` (all-zero ELL slots, zero bias);
+    /// to keep them out of the residual we pin `xold` padding to `dang`
+    /// before executing, making their |y - xold| exactly zero.
+    pub fn step(&mut self, buf: &mut StepBuffers) -> Result<(Vec<f32>, f32)> {
+        for v in buf.xold[self.block_rows..].iter_mut() {
+            *v = buf.dang[0];
+        }
+        let (n, b, k) = (self.bucket.n, self.bucket.b, self.bucket.k);
+        let mk = |e: xla::Error| anyhow::anyhow!("pjrt: {e}");
+        debug_assert_eq!(buf.x.len(), n);
+        // per-run-constant inputs live on the device across steps
+        if self.static_bufs.is_none() {
+            let vals = self
+                .client
+                .buffer_from_host_buffer(&buf.vals, &[b, k], None)
+                .map_err(mk)?;
+            let cols = self
+                .client
+                .buffer_from_host_buffer(&buf.cols, &[b, k], None)
+                .map_err(mk)?;
+            let bias = self
+                .client
+                .buffer_from_host_buffer(&buf.bias, &[b], None)
+                .map_err(mk)?;
+            self.static_bufs = Some((vals, cols, bias));
+        }
+        // per-step inputs
+        let x = self.client.buffer_from_host_buffer(&buf.x, &[n], None).map_err(mk)?;
+        let xold =
+            self.client.buffer_from_host_buffer(&buf.xold, &[b], None).map_err(mk)?;
+        let dang =
+            self.client.buffer_from_host_buffer(&buf.dang, &[1], None).map_err(mk)?;
+        let alpha =
+            self.client.buffer_from_host_buffer(&buf.alpha, &[1], None).map_err(mk)?;
+        let (vals, cols, bias) = self.static_bufs.as_ref().unwrap();
+
+        let args: [&xla::PjRtBuffer; 7] = [vals, cols, &x, &xold, bias, &dang, &alpha];
+        let result = self
+            .exe
+            .execute_b::<&xla::PjRtBuffer>(&args)
+            .map_err(mk)?[0][0]
+            .to_literal_sync()
+            .map_err(mk)?;
+        let (y_lit, r_lit) = result.to_tuple2().map_err(mk)?;
+        let mut y = y_lit.to_vec::<f32>().map_err(mk)?;
+        y.truncate(self.block_rows);
+        let resid = r_lit.to_vec::<f32>().map_err(mk)?[0];
+        Ok((y, resid))
+    }
+
+    pub fn logical_shape(&self) -> (usize, usize, usize) {
+        (self.n_rows, self.block_rows, self.width)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn engine() -> Engine {
+        Engine::new(super::super::default_artifacts_dir()).expect("make artifacts first")
+    }
+
+    #[test]
+    fn step_matches_hand_computation() {
+        let eng = engine();
+        // logical problem: n=8 pages, block = rows 0..4, width 2
+        let mut exe = eng.pagerank_step(8, 4, 2).unwrap();
+        assert_eq!(exe.bucket().n, 1 << 10);
+        let mut buf = exe.buffers();
+        // row 0: 0.5*x[1] + 0.5*x[2]; row 1: 1.0*x[0]; rows 2,3: empty
+        let vals = [0.5, 0.5, 1.0, 0.0, 0.0, 0.0, 0.0, 0.0];
+        let cols = [1u32, 2, 0, 0, 0, 0, 0, 0];
+        exe.load_matrix(&mut buf, &vals, &cols);
+        for i in 0..8 {
+            buf.x[i] = (i + 1) as f32 / 10.0; // 0.1 .. 0.8
+        }
+        buf.xold[..4].copy_from_slice(&[0.1, 0.2, 0.3, 0.4]);
+        for b in buf.bias[..4].iter_mut() {
+            *b = 0.15 / 8.0;
+        }
+        buf.dang = [0.01];
+        buf.alpha = [0.85];
+        let (y, resid) = exe.step(&mut buf).unwrap();
+        assert_eq!(y.len(), 4);
+        let expect = |sp: f32| 0.85 * sp + 0.01 + 0.15 / 8.0;
+        let want = [
+            expect(0.5 * 0.2 + 0.5 * 0.3),
+            expect(1.0 * 0.1),
+            expect(0.0),
+            expect(0.0),
+        ];
+        let mut resid_want = 0.0f32;
+        for i in 0..4 {
+            assert!((y[i] - want[i]).abs() < 1e-6, "y[{i}]={} want {}", y[i], want[i]);
+            resid_want += (want[i] - buf.xold[i]).abs();
+        }
+        assert!((resid - resid_want).abs() < 1e-5, "resid {resid} want {resid_want}");
+    }
+
+    #[test]
+    fn padded_rows_do_not_pollute_residual() {
+        let eng = engine();
+        let mut exe = eng.pagerank_step(8, 4, 2).unwrap();
+        let mut buf = exe.buffers();
+        // zero matrix, zero bias, nonzero dang: y = dang everywhere.
+        buf.dang = [0.25];
+        buf.xold[..4].copy_from_slice(&[0.25; 4]);
+        let (y, resid) = exe.step(&mut buf).unwrap();
+        assert!(y.iter().all(|&v| (v - 0.25).abs() < 1e-7));
+        assert!(resid.abs() < 1e-6, "padding leaked into residual: {resid}");
+    }
+
+    #[test]
+    fn engine_caches_executables() {
+        let eng = engine();
+        let a = eng.pagerank_step(8, 4, 2).unwrap();
+        let b = eng.pagerank_step(100, 50, 4).unwrap(); // same tiny bucket
+        assert_eq!(a.bucket(), b.bucket());
+        assert_eq!(eng.inner.cache.lock().unwrap().len(), 1);
+    }
+}

@@ -1,0 +1,285 @@
+//! Artifact manifest: the ABI contract between `python/compile/aot.py`
+//! and this runtime.
+//!
+//! `make artifacts` writes `artifacts/manifest.json` describing every
+//! emitted HLO-text artifact: its shape bucket, argument order, shapes
+//! and dtypes, and output arity. We validate all of it at load time so
+//! shape mismatches fail with a readable error instead of deep inside
+//! PJRT execution. Parsed with the crate's own JSON parser
+//! ([`crate::util::json`]); the offline build carries no serde.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context};
+
+use crate::util::Json;
+use crate::Result;
+
+/// One (N, B, K) shape bucket — mirrors `python/compile/shapes.py`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Bucket {
+    /// Human-readable bucket name ("tiny", "stanford", ...).
+    pub name: String,
+    /// Padded global vector length.
+    pub n: usize,
+    /// Padded block rows (ELL rows incl. virtual rows).
+    pub b: usize,
+    /// ELL width (padded slots per row).
+    pub k: usize,
+}
+
+impl Bucket {
+    /// Does a (rows, block_rows, width) problem fit this bucket?
+    pub fn fits(&self, n_rows: usize, block_rows: usize, width: usize) -> bool {
+        self.n >= n_rows && self.b >= block_rows && self.k >= width
+    }
+
+    /// Artifact file stem, matching `shapes.Bucket.artifact_name`.
+    pub fn artifact_name(&self, kernel: &str) -> String {
+        format!("{kernel}_n{}_b{}_k{}", self.n, self.b, self.k)
+    }
+
+    fn from_json(v: &Json) -> Result<Bucket> {
+        Ok(Bucket {
+            name: v.get("name").and_then(Json::as_str).unwrap_or("").to_string(),
+            n: v.get("n").and_then(Json::as_usize).context("bucket.n")?,
+            b: v.get("b").and_then(Json::as_usize).context("bucket.b")?,
+            k: v.get("k").and_then(Json::as_usize).context("bucket.k")?,
+        })
+    }
+}
+
+/// Shape+dtype of one artifact argument or output.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArgSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl ArgSpec {
+    fn from_json(v: &Json) -> Result<ArgSpec> {
+        let shape = v
+            .get("shape")
+            .and_then(Json::as_arr)
+            .context("arg.shape")?
+            .iter()
+            .map(|d| d.as_usize().context("arg.shape dim"))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ArgSpec {
+            name: v.get("name").and_then(Json::as_str).context("arg.name")?.to_string(),
+            shape,
+            dtype: v.get("dtype").and_then(Json::as_str).context("arg.dtype")?.to_string(),
+        })
+    }
+}
+
+/// One emitted artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub kernel: String,
+    pub bucket: Bucket,
+    /// File name relative to the artifacts directory.
+    pub path: String,
+    pub args: Vec<ArgSpec>,
+    pub outputs: Vec<ArgSpec>,
+}
+
+/// Parsed `manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub version: usize,
+    pub arg_order: Vec<String>,
+    pub artifacts: Vec<ArtifactEntry>,
+    dir: PathBuf,
+}
+
+/// Argument order the runtime hard-codes (must match shapes.ARG_ORDER).
+pub const ARG_ORDER: [&str; 7] = ["vals", "cols", "x", "xold", "bias", "dang", "alpha"];
+
+impl Manifest {
+    /// Load and validate `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!("reading {}; run `make artifacts` first", path.display())
+        })?;
+        let root = Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?;
+
+        let version = root.get("version").and_then(Json::as_usize).context("version")?;
+        let arg_order = root
+            .get("arg_order")
+            .and_then(Json::as_arr)
+            .context("arg_order")?
+            .iter()
+            .map(|v| v.as_str().context("arg_order entry").map(str::to_string))
+            .collect::<Result<Vec<_>>>()?;
+        let artifacts = root
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .context("artifacts")?
+            .iter()
+            .map(|v| {
+                Ok(ArtifactEntry {
+                    kernel: v.get("kernel").and_then(Json::as_str).context("kernel")?.to_string(),
+                    bucket: Bucket::from_json(v.get("bucket").context("bucket")?)?,
+                    path: v.get("path").and_then(Json::as_str).context("path")?.to_string(),
+                    args: v
+                        .get("args")
+                        .and_then(Json::as_arr)
+                        .context("args")?
+                        .iter()
+                        .map(ArgSpec::from_json)
+                        .collect::<Result<Vec<_>>>()?,
+                    outputs: v
+                        .get("outputs")
+                        .and_then(Json::as_arr)
+                        .context("outputs")?
+                        .iter()
+                        .map(ArgSpec::from_json)
+                        .collect::<Result<Vec<_>>>()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let m = Manifest { version, arg_order, artifacts, dir };
+        m.validate()?;
+        Ok(m)
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.version != 1 {
+            bail!("unsupported manifest version {}", self.version);
+        }
+        if self.arg_order != ARG_ORDER {
+            bail!(
+                "manifest arg_order {:?} != runtime ABI {:?}; rebuild artifacts",
+                self.arg_order,
+                ARG_ORDER
+            );
+        }
+        for a in &self.artifacts {
+            let names: Vec<&str> = a.args.iter().map(|s| s.name.as_str()).collect();
+            if names != ARG_ORDER {
+                bail!("artifact {} arg names {:?} mismatch ABI", a.path, names);
+            }
+            let by: BTreeMap<&str, &ArgSpec> =
+                a.args.iter().map(|s| (s.name.as_str(), s)).collect();
+            let (n, b, k) = (a.bucket.n, a.bucket.b, a.bucket.k);
+            let checks: [(&str, Vec<usize>, &str); 7] = [
+                ("vals", vec![b, k], "float32"),
+                ("cols", vec![b, k], "int32"),
+                ("x", vec![n], "float32"),
+                ("xold", vec![b], "float32"),
+                ("bias", vec![b], "float32"),
+                ("dang", vec![1], "float32"),
+                ("alpha", vec![1], "float32"),
+            ];
+            for (name, shape, dtype) in checks {
+                let spec = by[name];
+                if spec.shape != shape || spec.dtype != dtype {
+                    bail!(
+                        "artifact {}: arg {name} is {:?}/{} want {:?}/{dtype}",
+                        a.path, spec.shape, spec.dtype, shape
+                    );
+                }
+            }
+            if a.outputs.len() != 2
+                || a.outputs[0].shape != [b]
+                || a.outputs[1].shape != [1]
+            {
+                bail!("artifact {}: unexpected outputs {:?}", a.path, a.outputs);
+            }
+            if !self.dir.join(&a.path).exists() {
+                bail!("artifact file missing: {}", self.dir.join(&a.path).display());
+            }
+        }
+        Ok(())
+    }
+
+    /// Directory the manifest (and artifacts) live in.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Smallest bucket artifact (by N, then B, then K) of `kernel` that
+    /// fits the problem, or None if nothing fits.
+    pub fn best_fit(
+        &self,
+        kernel: &str,
+        n_rows: usize,
+        block_rows: usize,
+        width: usize,
+    ) -> Option<&ArtifactEntry> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.kernel == kernel && a.bucket.fits(n_rows, block_rows, width))
+            .min_by_key(|a| (a.bucket.n, a.bucket.b, a.bucket.k))
+    }
+
+    /// Exact-bucket lookup.
+    pub fn by_bucket(&self, kernel: &str, n: usize, b: usize, k: usize) -> Option<&ArtifactEntry> {
+        self.artifacts
+            .iter()
+            .find(|a| a.kernel == kernel && (a.bucket.n, a.bucket.b, a.bucket.k) == (n, b, k))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn repo_artifacts() -> Option<Manifest> {
+        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+        Manifest::load(dir).ok()
+    }
+
+    #[test]
+    fn loads_repo_manifest() {
+        let m = repo_artifacts().expect("run `make artifacts` before cargo test");
+        assert!(!m.artifacts.is_empty());
+        assert_eq!(m.arg_order, ARG_ORDER);
+    }
+
+    #[test]
+    fn best_fit_prefers_smallest() {
+        let m = match repo_artifacts() {
+            Some(m) => m,
+            None => return,
+        };
+        let a = m.best_fit("pagerank_step", 1000, 500, 8).unwrap();
+        assert_eq!(a.bucket.n, 1 << 10);
+        let a = m.best_fit("pagerank_step", 300_000, 100_000, 16).unwrap();
+        assert_eq!(a.bucket.n, 1 << 19);
+        assert!(m.best_fit("pagerank_step", 1 << 30, 1, 1).is_none());
+    }
+
+    #[test]
+    fn by_bucket_exact() {
+        let m = match repo_artifacts() {
+            Some(m) => m,
+            None => return,
+        };
+        assert!(m.by_bucket("pagerank_step", 1 << 10, 1 << 9, 8).is_some());
+        assert!(m.by_bucket("pagerank_step", 1 << 10, 1 << 9, 9).is_none());
+    }
+
+    #[test]
+    fn bucket_artifact_name_matches_python() {
+        let b = Bucket { name: String::new(), n: 1024, b: 512, k: 8 };
+        assert_eq!(b.artifact_name("pagerank_step"), "pagerank_step_n1024_b512_k8");
+    }
+
+    #[test]
+    fn rejects_bad_manifest() {
+        let dir = std::env::temp_dir().join(format!("asyncpr_mtest_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), r#"{"version": 2, "arg_order": [], "artifacts": []}"#).unwrap();
+        let err = Manifest::load(&dir).unwrap_err().to_string();
+        assert!(err.contains("unsupported manifest version"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,17 @@
+//! PJRT runtime: load + execute the AOT artifacts from the rust hot path.
+//!
+//! `python/compile/aot.py` lowers the L2 model once to HLO text; this
+//! module compiles those artifacts on the PJRT CPU client (the `xla`
+//! crate) and exposes a typed [`PagerankStepExe::step`] used by worker
+//! UEs. Python never runs at request time.
+
+mod engine;
+pub mod manifest;
+
+pub use engine::{Engine, PagerankStepExe, StepBuffers};
+pub use manifest::{ArtifactEntry, Bucket, Manifest};
+
+/// Default artifacts directory relative to the crate root.
+pub fn default_artifacts_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}

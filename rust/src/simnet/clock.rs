@@ -1,0 +1,155 @@
+//! Virtual time and the deterministic event queue.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Simulated seconds. Newtype so real `Duration`s can't leak in.
+#[derive(Debug, Clone, Copy, PartialEq, PartialOrd, Default)]
+pub struct VirtualTime(pub f64);
+
+impl VirtualTime {
+    pub const ZERO: VirtualTime = VirtualTime(0.0);
+
+    pub fn secs(self) -> f64 {
+        self.0
+    }
+
+    #[must_use]
+    pub fn after(self, dt: f64) -> VirtualTime {
+        debug_assert!(dt >= 0.0, "negative delay {dt}");
+        VirtualTime(self.0 + dt)
+    }
+
+    pub fn max(self, other: VirtualTime) -> VirtualTime {
+        VirtualTime(self.0.max(other.0))
+    }
+}
+
+struct Entry<E> {
+    at: VirtualTime,
+    seq: u64,
+    ev: E,
+}
+
+impl<E> PartialEq for Entry<E> {
+    fn eq(&self, o: &Self) -> bool {
+        self.at == o.at && self.seq == o.seq
+    }
+}
+impl<E> Eq for Entry<E> {}
+impl<E> PartialOrd for Entry<E> {
+    fn partial_cmp(&self, o: &Self) -> Option<Ordering> {
+        Some(self.cmp(o))
+    }
+}
+impl<E> Ord for Entry<E> {
+    fn cmp(&self, o: &Self) -> Ordering {
+        // BinaryHeap is a max-heap: invert for earliest-first; break
+        // time ties by insertion order (determinism).
+        o.at
+            .0
+            .partial_cmp(&self.at.0)
+            .unwrap_or(Ordering::Equal)
+            .then(o.seq.cmp(&self.seq))
+    }
+}
+
+/// Deterministic discrete-event queue: pops events in (time, insertion
+/// order). NaN times are rejected at push.
+pub struct EventQueue<E> {
+    heap: BinaryHeap<Entry<E>>,
+    seq: u64,
+    now: VirtualTime,
+}
+
+impl<E> Default for EventQueue<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<E> EventQueue<E> {
+    pub fn new() -> Self {
+        EventQueue { heap: BinaryHeap::new(), seq: 0, now: VirtualTime::ZERO }
+    }
+
+    /// Current simulation time (time of the last popped event).
+    pub fn now(&self) -> VirtualTime {
+        self.now
+    }
+
+    /// Schedule `ev` at absolute time `at` (must not be in the past).
+    pub fn push(&mut self, at: VirtualTime, ev: E) {
+        assert!(!at.0.is_nan(), "NaN event time");
+        assert!(at.0 >= self.now.0, "scheduling into the past: {} < {}", at.0, self.now.0);
+        self.heap.push(Entry { at, seq: self.seq, ev });
+        self.seq += 1;
+    }
+
+    /// Pop the earliest event, advancing `now`.
+    pub fn pop(&mut self) -> Option<(VirtualTime, E)> {
+        self.heap.pop().map(|e| {
+            self.now = e.at;
+            (e.at, e.ev)
+        })
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(VirtualTime(3.0), "c");
+        q.push(VirtualTime(1.0), "a");
+        q.push(VirtualTime(2.0), "b");
+        let order: Vec<&str> = std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
+        assert_eq!(order, vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    fn ties_break_by_insertion() {
+        let mut q = EventQueue::new();
+        q.push(VirtualTime(1.0), 1);
+        q.push(VirtualTime(1.0), 2);
+        q.push(VirtualTime(1.0), 3);
+        let order: Vec<i32> = std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
+        assert_eq!(order, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn now_advances() {
+        let mut q = EventQueue::new();
+        q.push(VirtualTime(5.0), ());
+        assert_eq!(q.now(), VirtualTime::ZERO);
+        q.pop();
+        assert_eq!(q.now(), VirtualTime(5.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "past")]
+    fn rejects_past_events() {
+        let mut q = EventQueue::new();
+        q.push(VirtualTime(5.0), ());
+        q.pop();
+        q.push(VirtualTime(1.0), ());
+    }
+
+    #[test]
+    fn virtual_time_arithmetic() {
+        let t = VirtualTime(1.5).after(0.5);
+        assert_eq!(t, VirtualTime(2.0));
+        assert_eq!(t.max(VirtualTime(1.0)), t);
+        assert_eq!(t.secs(), 2.0);
+    }
+}

@@ -1,0 +1,154 @@
+//! Shared-Ethernet transfer model with cancellation windows.
+//!
+//! The paper's cluster hangs off one 10 Mbps LAN: all transfers share
+//! the wire. We model it as a FIFO resource — a transfer enqueued at
+//! `t` starts when the wire frees up, takes `bytes/bandwidth`, and is
+//! delivered `latency` later. The §6 guard ("we guard against this
+//! misfortune by cancelling send()/recv() threads not having completed
+//! within a time window") becomes: if the transfer cannot *finish*
+//! within `cancel_window` of its enqueue, it is dropped at enqueue time
+//! (the sender's thread is cancelled; the paper's Table 2 counts the
+//! survivors as "completed imports").
+
+use super::clock::VirtualTime;
+
+/// Outcome of attempting a transfer.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SendOutcome {
+    /// Transfer accepted; fragment arrives at `deliver_at`.
+    Delivered { deliver_at: VirtualTime },
+    /// Transfer cancelled (would exceed the cancellation window).
+    Cancelled,
+}
+
+/// The shared wire.
+#[derive(Debug, Clone)]
+pub struct SharedMedium {
+    /// Bytes per (virtual) second, e.g. 1.25e6 for 10 Mbps.
+    bandwidth: f64,
+    /// Per-message propagation + protocol latency, seconds.
+    latency: f64,
+    /// None = never cancel (sync mode); Some(w) = drop transfers that
+    /// could not complete within `w` seconds of enqueue.
+    cancel_window: Option<f64>,
+    /// When the wire next becomes free.
+    free_at: VirtualTime,
+    /// Counters for §6's buffer-bloat observations.
+    pub sent: u64,
+    pub cancelled: u64,
+    /// Total queue-wait seconds accumulated (buffer pressure metric).
+    pub queue_wait: f64,
+}
+
+impl SharedMedium {
+    pub fn new(bandwidth: f64, latency: f64, cancel_window: Option<f64>) -> Self {
+        assert!(bandwidth > 0.0 && latency >= 0.0);
+        SharedMedium {
+            bandwidth,
+            latency,
+            cancel_window,
+            free_at: VirtualTime::ZERO,
+            sent: 0,
+            cancelled: 0,
+            queue_wait: 0.0,
+        }
+    }
+
+    /// Queue depth in seconds at time `now` (how far ahead the wire is
+    /// booked) — the sender-side buffer pressure of §6.
+    pub fn backlog(&self, now: VirtualTime) -> f64 {
+        (self.free_at.secs() - now.secs()).max(0.0)
+    }
+
+    /// Attempt to transfer `bytes` enqueued at `now`.
+    pub fn send(&mut self, now: VirtualTime, bytes: f64) -> SendOutcome {
+        let start = self.free_at.max(now);
+        let duration = bytes / self.bandwidth;
+        let finish = start.after(duration);
+        if let Some(w) = self.cancel_window {
+            // could this transfer complete within the window?
+            if finish.secs() - now.secs() > w {
+                self.cancelled += 1;
+                return SendOutcome::Cancelled;
+            }
+        }
+        self.queue_wait += start.secs() - now.secs();
+        self.free_at = finish;
+        self.sent += 1;
+        SendOutcome::Delivered { deliver_at: finish.after(self.latency) }
+    }
+
+    /// Completed-transfer fraction (Table 2's aggregate view).
+    pub fn completion_ratio(&self) -> f64 {
+        let total = self.sent + self.cancelled;
+        if total == 0 {
+            1.0
+        } else {
+            self.sent as f64 / total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serializes_transfers_fifo() {
+        let mut m = SharedMedium::new(100.0, 0.5, None);
+        let a = m.send(VirtualTime(0.0), 100.0); // 1s on the wire
+        let b = m.send(VirtualTime(0.0), 100.0); // queued behind a
+        match (a, b) {
+            (
+                SendOutcome::Delivered { deliver_at: da },
+                SendOutcome::Delivered { deliver_at: db },
+            ) => {
+                assert!((da.secs() - 1.5).abs() < 1e-12);
+                assert!((db.secs() - 2.5).abs() < 1e-12);
+            }
+            _ => panic!("unexpected cancel"),
+        }
+        assert_eq!(m.sent, 2);
+        assert!((m.queue_wait - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn wire_idles_then_accepts() {
+        let mut m = SharedMedium::new(100.0, 0.0, None);
+        m.send(VirtualTime(0.0), 100.0);
+        // wire free at 1.0; enqueue at 5.0 starts immediately
+        match m.send(VirtualTime(5.0), 100.0) {
+            SendOutcome::Delivered { deliver_at } => {
+                assert!((deliver_at.secs() - 6.0).abs() < 1e-12)
+            }
+            _ => panic!(),
+        }
+        assert_eq!(m.backlog(VirtualTime(5.5)), 0.5);
+    }
+
+    #[test]
+    fn cancels_when_window_exceeded() {
+        let mut m = SharedMedium::new(100.0, 0.0, Some(1.5));
+        assert!(matches!(m.send(VirtualTime(0.0), 100.0), SendOutcome::Delivered { .. }));
+        // second transfer would finish at 2.0 > window 1.5 -> cancelled
+        assert_eq!(m.send(VirtualTime(0.0), 100.0), SendOutcome::Cancelled);
+        assert_eq!(m.cancelled, 1);
+        assert!((m.completion_ratio() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn oversize_single_transfer_cancelled() {
+        let mut m = SharedMedium::new(10.0, 0.0, Some(1.0));
+        assert_eq!(m.send(VirtualTime(0.0), 100.0), SendOutcome::Cancelled);
+    }
+
+    #[test]
+    fn no_window_never_cancels() {
+        let mut m = SharedMedium::new(1.0, 0.0, None);
+        for _ in 0..50 {
+            assert!(matches!(m.send(VirtualTime(0.0), 10.0), SendOutcome::Delivered { .. }));
+        }
+        assert_eq!(m.cancelled, 0);
+        assert_eq!(m.completion_ratio(), 1.0);
+    }
+}

@@ -1,0 +1,29 @@
+//! Virtual-time cluster & network simulator (substitution for the
+//! paper's Beowulf testbed — DESIGN.md §3).
+//!
+//! The paper ran on six 900 MHz Pentiums on a **10 Mbps shared
+//! Ethernet**; every phenomenon it reports (sync time *growing* with p,
+//! 2× async speedup at local threshold, 28–45 % completed imports,
+//! sender-side buffer bloat, cancellation windows) is a function of the
+//! compute-time / bandwidth / latency ratios. We reproduce those ratios
+//! in a deterministic discrete-event simulation:
+//!
+//! * [`EventQueue`] — stable priority queue over [`VirtualTime`];
+//! * [`SharedMedium`] — the shared-Ethernet model: one transfer at a
+//!   time, FIFO, serialization delay = bytes/bandwidth, plus per-hop
+//!   latency and an optional *cancellation window* (the paper cancels
+//!   send/recv threads that don't complete in time, §6);
+//! * [`Topology`] — who exchanges fragments with whom (clique as in the
+//!   paper; star/tree for the §6 future-work ablation);
+//! * [`ClusterProfile`] — calibrated node/network parameters, with
+//!   [`ClusterProfile::paper_beowulf`] matching the paper's testbed.
+
+mod clock;
+mod medium;
+mod profile;
+mod topology;
+
+pub use clock::{EventQueue, VirtualTime};
+pub use medium::{SendOutcome, SharedMedium};
+pub use profile::{ClusterProfile, NodeProfile};
+pub use topology::Topology;

@@ -1,0 +1,175 @@
+//! Communication topologies.
+//!
+//! The paper's experiments use the all-to-all ("clique") scheme and §6
+//! concludes: "We would thus like to avoid the use of all-to-all
+//! communication schemes … Since trees are naturally occurring
+//! internetwork topologies we also plan to study the performance of
+//! moving a clique-based synchronous iterative method to an
+//! asynchronous, tree-based counterpart." Ablation A3 does exactly
+//! that: under a tree, fragments still reach every UE, but relayed
+//! through intermediate nodes (extra hops, less wire contention per
+//! step because each UE emits fewer messages).
+
+/// Who sends fragments directly to whom.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Topology {
+    /// Every UE sends to every other UE (the paper's setup).
+    Clique,
+    /// Star centered at UE 0: leaves exchange through the hub.
+    Star,
+    /// Balanced binary tree rooted at UE 0: parent/child links only.
+    BinaryTree,
+}
+
+impl Topology {
+    /// Direct neighbors of `ue` among `p` UEs.
+    pub fn neighbors(&self, ue: usize, p: usize) -> Vec<usize> {
+        assert!(ue < p);
+        match self {
+            Topology::Clique => (0..p).filter(|&j| j != ue).collect(),
+            Topology::Star => {
+                if ue == 0 {
+                    (1..p).collect()
+                } else {
+                    vec![0]
+                }
+            }
+            Topology::BinaryTree => {
+                let mut out = Vec::new();
+                if ue > 0 {
+                    out.push((ue - 1) / 2);
+                }
+                let l = 2 * ue + 1;
+                let r = 2 * ue + 2;
+                if l < p {
+                    out.push(l);
+                }
+                if r < p {
+                    out.push(r);
+                }
+                out
+            }
+        }
+    }
+
+    /// Number of directed fragment messages per full exchange round.
+    pub fn messages_per_round(&self, p: usize) -> usize {
+        (0..p).map(|u| self.neighbors(u, p).len()).sum()
+    }
+
+    /// Hop count between two UEs (for relayed fragment staleness).
+    pub fn hops(&self, a: usize, b: usize, p: usize) -> usize {
+        if a == b {
+            return 0;
+        }
+        match self {
+            Topology::Clique => 1,
+            Topology::Star => {
+                if a == 0 || b == 0 {
+                    1
+                } else {
+                    2
+                }
+            }
+            Topology::BinaryTree => {
+                // distance in the implicit binary tree
+                let (mut x, mut y) = (a, b);
+                let depth = |mut v: usize| {
+                    let mut d = 0;
+                    while v > 0 {
+                        v = (v - 1) / 2;
+                        d += 1;
+                    }
+                    d
+                };
+                let (mut dx, mut dy) = (depth(x), depth(y));
+                let mut dist = 0;
+                while dx > dy {
+                    x = (x - 1) / 2;
+                    dx -= 1;
+                    dist += 1;
+                }
+                while dy > dx {
+                    y = (y - 1) / 2;
+                    dy -= 1;
+                    dist += 1;
+                }
+                while x != y {
+                    x = (x - 1) / 2;
+                    y = (y - 1) / 2;
+                    dist += 2;
+                }
+                let _ = p;
+                dist
+            }
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Topology> {
+        match s {
+            "clique" => Some(Topology::Clique),
+            "star" => Some(Topology::Star),
+            "tree" | "binary-tree" => Some(Topology::BinaryTree),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clique_all_pairs() {
+        let t = Topology::Clique;
+        assert_eq!(t.neighbors(1, 4), vec![0, 2, 3]);
+        assert_eq!(t.messages_per_round(4), 12);
+        assert_eq!(t.hops(0, 3, 4), 1);
+    }
+
+    #[test]
+    fn star_hub_and_leaves() {
+        let t = Topology::Star;
+        assert_eq!(t.neighbors(0, 4), vec![1, 2, 3]);
+        assert_eq!(t.neighbors(2, 4), vec![0]);
+        assert_eq!(t.messages_per_round(4), 6);
+        assert_eq!(t.hops(1, 2, 4), 2);
+        assert_eq!(t.hops(0, 2, 4), 1);
+    }
+
+    #[test]
+    fn tree_structure() {
+        let t = Topology::BinaryTree;
+        assert_eq!(t.neighbors(0, 6), vec![1, 2]);
+        assert_eq!(t.neighbors(1, 6), vec![0, 3, 4]);
+        assert_eq!(t.neighbors(5, 6), vec![2]);
+        // fewer messages than clique at p=6
+        assert!(t.messages_per_round(6) < Topology::Clique.messages_per_round(6));
+        assert_eq!(t.hops(3, 4, 6), 2);
+        assert_eq!(t.hops(3, 5, 6), 4);
+        assert_eq!(t.hops(1, 1, 6), 0);
+    }
+
+    #[test]
+    fn all_topologies_symmetric_neighbors() {
+        for topo in [Topology::Clique, Topology::Star, Topology::BinaryTree] {
+            for p in [2usize, 3, 6, 9] {
+                for a in 0..p {
+                    for &b in &topo.neighbors(a, p) {
+                        assert!(
+                            topo.neighbors(b, p).contains(&a),
+                            "{topo:?} p={p}: {a}->{b} not symmetric"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(Topology::parse("clique"), Some(Topology::Clique));
+        assert_eq!(Topology::parse("tree"), Some(Topology::BinaryTree));
+        assert_eq!(Topology::parse("x"), None);
+    }
+}

@@ -1,0 +1,24 @@
+//! Termination detection (§4.2) — the paper's Figure-1 protocol.
+//!
+//! "The termination of asynchronous iterative algorithms is a
+//! non-trivial matter since local convergence at an UE does not
+//! automatically ensure global convergence." The paper's answer is a
+//! centralized protocol with *persistence counters*: computing UEs
+//! signal CONVERGE after `pcMax` consecutive locally-converged
+//! iterations (and DIVERGE on leaving that state); a monitor UE issues
+//! STOP once its own persistence counter — advanced while *all* UEs are
+//! logged converged — reaches its `pcMax`.
+//!
+//! [`WorkerTermination`] and [`MonitorTermination`] are pure state
+//! machines (no clock, no IO) driven by the simulation engine and unit/
+//! property tested in isolation. [`GlobalOracle`] is the omniscient
+//! checker used by tests and by experiment G1 (the paper's observation
+//! that local 1e-6 ⇔ global ≈5e-5). [`tree`] is the decentralized
+//! detector of the §6 outlook (cf. Bahi et al., paper ref [6]).
+
+mod protocol;
+pub mod tree;
+mod oracle;
+
+pub use oracle::GlobalOracle;
+pub use protocol::{MonitorTermination, TermMsg, WorkerTermination};

@@ -1,0 +1,114 @@
+//! Omniscient global-convergence checker.
+//!
+//! §5.2: "Assembling vector fragments resulting from asynchronous
+//! computations at monitor UE and then checking global convergence
+//! reveals that a threshold of the order of 5×10⁻⁵ has actually been
+//! reached" (against the local threshold 10⁻⁶). The oracle measures
+//! exactly that: given the assembled iterate it computes the TRUE
+//! global residual ‖Gx − x‖₁ and the distance to a converged reference.
+
+use crate::pagerank::{l1_diff, normalize_l1, PagerankProblem};
+
+/// Global truth for a PageRank instance.
+pub struct GlobalOracle<'a> {
+    problem: &'a PagerankProblem,
+    /// Tightly converged reference vector (L1-normalized).
+    reference: Vec<f32>,
+    scratch: Vec<f32>,
+}
+
+impl<'a> GlobalOracle<'a> {
+    /// Build with a reference solved to `ref_tol` (use ≤1e-9 in tests).
+    pub fn new(problem: &'a PagerankProblem, ref_tol: f32) -> Self {
+        let r = crate::pagerank::power_method(
+            problem,
+            &crate::pagerank::PowerOptions {
+                tol: ref_tol,
+                max_iters: 100_000,
+                record_residuals: false,
+            },
+        );
+        let mut reference = r.x;
+        normalize_l1(&mut reference);
+        GlobalOracle { problem, reference, scratch: vec![0.0; problem.n()] }
+    }
+
+    /// True global residual ‖Gx − x‖₁ of an assembled iterate.
+    pub fn global_residual(&mut self, x: &[f32]) -> f32 {
+        self.problem.apply_google(x, &mut self.scratch);
+        l1_diff(&self.scratch, x)
+    }
+
+    /// L1 error against the converged reference (both L1-normalized,
+    /// factoring out the Lubachevsky–Mitra multiplicative constant).
+    pub fn error_vs_reference(&self, x: &[f32]) -> f32 {
+        let mut xn = x.to_vec();
+        normalize_l1(&mut xn);
+        l1_diff(&xn, &self.reference)
+    }
+
+    /// Kendall-τ of the ranking induced by `x` vs the reference (§5.2's
+    /// "what matters is the relative ranking").
+    pub fn ranking_tau(&self, x: &[f32]) -> f64 {
+        crate::pagerank::kendall_tau(x, &self.reference)
+    }
+
+    /// Top-k overlap vs the reference.
+    pub fn top_k(&self, x: &[f32], k: usize) -> f64 {
+        crate::pagerank::top_k_overlap(x, &self.reference, k)
+    }
+
+    pub fn reference(&self) -> &[f32] {
+        &self.reference
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{generators, Csr};
+    use crate::pagerank::{power_method, PowerOptions};
+
+    fn problem() -> PagerankProblem {
+        let el = generators::power_law_web(&generators::WebParams::scaled(2_000), 21);
+        PagerankProblem::new(Csr::from_edgelist(&el).unwrap(), 0.85)
+    }
+
+    #[test]
+    fn reference_is_fixed_point() {
+        let p = problem();
+        let mut o = GlobalOracle::new(&p, 1e-9);
+        let xref = o.reference().to_vec();
+        assert!(o.global_residual(&xref) < 1e-6);
+        assert!(o.error_vs_reference(&xref) < 1e-6);
+        assert!((o.ranking_tau(&xref) - 1.0).abs() < 1e-12);
+        assert_eq!(o.top_k(&xref, 10), 1.0);
+    }
+
+    #[test]
+    fn residual_decreases_along_power_iterates() {
+        let p = problem();
+        let mut o = GlobalOracle::new(&p, 1e-9);
+        let mut res = Vec::new();
+        for iters in [1usize, 5, 20] {
+            let r = power_method(
+                &p,
+                &PowerOptions { tol: 0.0, max_iters: iters, record_residuals: false },
+            );
+            res.push(o.global_residual(&r.x));
+        }
+        assert!(res[0] > res[1] && res[1] > res[2], "{res:?}");
+    }
+
+    #[test]
+    fn local_tol_implies_coarser_global_band() {
+        // the G1 experiment in miniature: stopping at residual 1e-6
+        // leaves a true error vs reference in a coarser band
+        let p = problem();
+        let o = GlobalOracle::new(&p, 1e-10);
+        let r = power_method(&p, &PowerOptions::default());
+        let err = o.error_vs_reference(&r.x);
+        assert!(err > 1e-8, "error unexpectedly tiny: {err}");
+        assert!(err < 1e-4, "error unexpectedly large: {err}");
+    }
+}

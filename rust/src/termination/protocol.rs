@@ -1,0 +1,267 @@
+//! Figure-1 state machines, ported faithfully.
+//!
+//! ```text
+//! computing UE                      | monitor UE
+//! ----------------------------------+--------------------------------
+//! if(checkConvergence())            | recv(CONVERGE|DIVERGE, all)
+//!   if(not converged)               | if(checkConvergence())
+//!     converged = true              |   if(not converged)
+//!   pc++                            |     converged = true
+//!   if(pc = pcMax)                  |   pc++
+//!     send(CONVERGE, monitor)       |   if(pc = pcMax)
+//!     recv(STOP, monitor)           |     send(STOP, all)
+//! else                              | else
+//!   if(converged)                   |   if(converged)
+//!     converged = false             |     converged = false
+//!     send(DIVERGE, monitor)        |   pc = 0
+//!   pc = 0                          |
+//! ```
+//!
+//! At the computing UE, `checkConvergence()` is `local_residual < tol`
+//! for the current iteration. At the monitor, it is "all computing UEs
+//! currently logged CONVERGE". `recv(STOP)` is non-blocking in our
+//! port (a blocking read would make the DIVERGE branch unreachable);
+//! iteration continues until STOP is actually delivered, which matches
+//! the paper's observed behaviour (UEs keep producing messages after
+//! local convergence).
+
+/// Messages of the protocol.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TermMsg {
+    Converge,
+    Diverge,
+    Stop,
+}
+
+/// Computing-UE side of Figure 1.
+#[derive(Debug, Clone)]
+pub struct WorkerTermination {
+    pc_max: u32,
+    pc: u32,
+    converged: bool,
+    /// CONVERGE already emitted for the current converged streak.
+    announced: bool,
+}
+
+impl WorkerTermination {
+    pub fn new(pc_max: u32) -> Self {
+        assert!(pc_max >= 1, "pcMax must be >= 1");
+        WorkerTermination { pc_max, pc: 0, converged: false, announced: false }
+    }
+
+    /// Feed one local iteration's convergence check; returns the
+    /// message to send to the monitor, if any.
+    pub fn on_iteration(&mut self, locally_converged: bool) -> Option<TermMsg> {
+        if locally_converged {
+            if !self.converged {
+                self.converged = true;
+            }
+            self.pc += 1;
+            if self.pc == self.pc_max && !self.announced {
+                self.announced = true;
+                return Some(TermMsg::Converge);
+            }
+            None
+        } else {
+            let was = self.converged;
+            self.converged = false;
+            self.pc = 0;
+            let emitted = self.announced;
+            self.announced = false;
+            if was && emitted {
+                // only notify the monitor if it was told we converged
+                Some(TermMsg::Diverge)
+            } else {
+                None
+            }
+        }
+    }
+
+    pub fn is_converged(&self) -> bool {
+        self.converged
+    }
+
+    pub fn pc(&self) -> u32 {
+        self.pc
+    }
+}
+
+/// Monitor side of Figure 1.
+#[derive(Debug, Clone)]
+pub struct MonitorTermination {
+    pc_max: u32,
+    pc: u32,
+    converged: bool,
+    /// Convergence log, one slot per computing UE.
+    log: Vec<bool>,
+    stopped: bool,
+}
+
+impl MonitorTermination {
+    pub fn new(p: usize, pc_max: u32) -> Self {
+        assert!(pc_max >= 1, "pcMax must be >= 1");
+        MonitorTermination { pc_max, pc: 0, converged: false, log: vec![false; p], stopped: false }
+    }
+
+    /// Process one CONVERGE/DIVERGE message from `ue`; returns true if
+    /// STOP must be broadcast now.
+    pub fn on_message(&mut self, ue: usize, msg: TermMsg) -> bool {
+        if self.stopped {
+            return false;
+        }
+        match msg {
+            TermMsg::Converge => self.log[ue] = true,
+            TermMsg::Diverge => self.log[ue] = false,
+            TermMsg::Stop => panic!("monitor does not receive STOP"),
+        }
+        if self.log.iter().all(|&c| c) {
+            if !self.converged {
+                self.converged = true;
+            }
+            self.pc += 1;
+            if self.pc >= self.pc_max {
+                self.stopped = true;
+                return true;
+            }
+        } else {
+            if self.converged {
+                self.converged = false;
+            }
+            self.pc = 0;
+        }
+        false
+    }
+
+    pub fn stopped(&self) -> bool {
+        self.stopped
+    }
+
+    pub fn converged_count(&self) -> usize {
+        self.log.iter().filter(|&&c| c).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn worker_announces_after_pc_max() {
+        let mut w = WorkerTermination::new(3);
+        assert_eq!(w.on_iteration(true), None); // pc=1
+        assert_eq!(w.on_iteration(true), None); // pc=2
+        assert_eq!(w.on_iteration(true), Some(TermMsg::Converge)); // pc=3
+        assert_eq!(w.on_iteration(true), None); // no re-announce
+        assert!(w.is_converged());
+    }
+
+    #[test]
+    fn worker_diverge_only_after_announce() {
+        let mut w = WorkerTermination::new(2);
+        assert_eq!(w.on_iteration(true), None); // pc=1
+        // diverges before announcing: monitor never knew, no DIVERGE
+        assert_eq!(w.on_iteration(false), None);
+        assert_eq!(w.pc(), 0);
+        // converge fully, then diverge: DIVERGE emitted
+        assert_eq!(w.on_iteration(true), None);
+        assert_eq!(w.on_iteration(true), Some(TermMsg::Converge));
+        assert_eq!(w.on_iteration(false), Some(TermMsg::Diverge));
+        // can re-announce after re-converging
+        assert_eq!(w.on_iteration(true), None);
+        assert_eq!(w.on_iteration(true), Some(TermMsg::Converge));
+    }
+
+    #[test]
+    #[should_panic(expected = "pcMax")]
+    fn worker_rejects_zero_pc_max() {
+        WorkerTermination::new(0);
+    }
+
+    #[test]
+    fn monitor_stops_when_all_converged_pcmax1() {
+        let mut m = MonitorTermination::new(3, 1);
+        assert!(!m.on_message(0, TermMsg::Converge));
+        assert!(!m.on_message(1, TermMsg::Converge));
+        assert_eq!(m.converged_count(), 2);
+        assert!(m.on_message(2, TermMsg::Converge)); // all -> STOP
+        assert!(m.stopped());
+        // further messages ignored
+        assert!(!m.on_message(0, TermMsg::Diverge));
+    }
+
+    #[test]
+    fn monitor_persistence_pcmax2() {
+        let mut m = MonitorTermination::new(2, 2);
+        assert!(!m.on_message(0, TermMsg::Converge));
+        assert!(!m.on_message(1, TermMsg::Converge)); // all converged, pc=1
+        // a diverge resets persistence
+        assert!(!m.on_message(0, TermMsg::Diverge));
+        assert!(!m.on_message(0, TermMsg::Converge)); // pc=1 again
+        assert!(m.on_message(1, TermMsg::Converge)); // pc=2 -> STOP
+    }
+
+    #[test]
+    fn monitor_never_stops_while_any_diverged() {
+        let mut m = MonitorTermination::new(4, 1);
+        let mut rng = Rng::new(13);
+        // UE 3 never converges; messages from others arrive in random order
+        for _ in 0..200 {
+            let ue = rng.range(0, 3);
+            let msg = if rng.chance(0.7) { TermMsg::Converge } else { TermMsg::Diverge };
+            let stop = m.on_message(ue, msg);
+            assert!(!stop, "stopped while UE 3 never converged");
+        }
+        assert!(!m.stopped());
+    }
+
+    /// Property: in any message sequence, STOP implies the last message
+    /// from every UE was CONVERGE (safety of the central log).
+    #[test]
+    fn prop_stop_implies_all_last_converge() {
+        let mut rng = Rng::new(14);
+        for trial in 0..200 {
+            let p = rng.range(1, 6);
+            let pc_max = rng.range(1, 4) as u32;
+            let mut m = MonitorTermination::new(p, pc_max);
+            let mut last: Vec<Option<TermMsg>> = vec![None; p];
+            for _ in 0..500 {
+                let ue = rng.range(0, p);
+                let msg =
+                    if rng.chance(0.6) { TermMsg::Converge } else { TermMsg::Diverge };
+                let stop = m.on_message(ue, msg);
+                last[ue] = Some(msg);
+                if stop {
+                    for (u, l) in last.iter().enumerate() {
+                        assert_eq!(
+                            *l,
+                            if u == ue { Some(msg) } else { *l },
+                        );
+                    }
+                    assert!(
+                        last.iter().all(|l| *l == Some(TermMsg::Converge)),
+                        "trial {trial}: STOP though some UE last said DIVERGE: {last:?}"
+                    );
+                    break;
+                }
+            }
+        }
+    }
+
+    /// Property: worker emits alternating CONVERGE/DIVERGE (never two
+    /// of the same kind in a row).
+    #[test]
+    fn prop_worker_messages_alternate() {
+        let mut rng = Rng::new(15);
+        for _ in 0..100 {
+            let mut w = WorkerTermination::new(rng.range(1, 5) as u32);
+            let mut lastmsg = None;
+            for _ in 0..300 {
+                if let Some(m) = w.on_iteration(rng.chance(0.5)) {
+                    assert_ne!(Some(m), lastmsg, "repeated {m:?}");
+                    lastmsg = Some(m);
+                }
+            }
+        }
+    }
+}

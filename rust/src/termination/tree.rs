@@ -1,0 +1,253 @@
+//! Decentralized tree-based termination detector (extension).
+//!
+//! §4.2 notes distributed protocols "are flexible but rather complex to
+//! implement. They typically assume a specific underlying communication
+//! topology. For example in [6] a leader election protocol is used,
+//! which in turn assumes a tree topology." We implement the tree
+//! aggregation core of that family: every UE keeps the convergence
+//! state of its subtree; state changes propagate upward; the root
+//! (playing leader) applies the persistence rule and floods STOP down.
+//!
+//! The detector is again a pure state machine per node; the engine
+//! moves [`TreeMsg`]s between nodes (paying network costs), so the
+//! ablation can compare it fairly with the centralized monitor.
+
+/// Messages of the tree protocol.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TreeMsg {
+    /// Child -> parent: my whole subtree is (true)/is no longer (false)
+    /// locally converged.
+    Subtree { converged: bool },
+    /// Root -> everyone via the tree: stop.
+    Stop,
+}
+
+/// One node of the detector, arranged in an implicit binary tree
+/// (parent of i is (i-1)/2, matching `Topology::BinaryTree`).
+#[derive(Debug, Clone)]
+pub struct TreeNode {
+    id: usize,
+    #[allow(dead_code)] // kept for diagnostics / Debug output
+    p: usize,
+    /// Local convergence of this UE.
+    local: bool,
+    /// Last reported state of each child subtree.
+    children: Vec<(usize, bool)>,
+    /// Last state sent to the parent (to suppress duplicates).
+    sent_up: Option<bool>,
+    /// Root-only persistence counter.
+    pc: u32,
+    pc_max: u32,
+    stopped: bool,
+}
+
+/// Effects the engine must carry out after feeding a node.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct TreeEffects {
+    /// (dst, msg) messages to send.
+    pub send: Vec<(usize, TreeMsg)>,
+    /// Root decided to stop (engine floods Stop to children itself via
+    /// `send`; this flag is for run bookkeeping).
+    pub stop: bool,
+}
+
+impl TreeNode {
+    pub fn new(id: usize, p: usize, pc_max: u32) -> Self {
+        assert!(pc_max >= 1);
+        let children: Vec<(usize, bool)> = [2 * id + 1, 2 * id + 2]
+            .into_iter()
+            .filter(|&c| c < p)
+            .map(|c| (c, false))
+            .collect();
+        TreeNode { id, p, local: false, children, sent_up: None, pc: 0, pc_max, stopped: false }
+    }
+
+    pub fn is_root(&self) -> bool {
+        self.id == 0
+    }
+
+    fn parent(&self) -> usize {
+        (self.id - 1) / 2
+    }
+
+    /// Subtree converged = local && all children's subtrees.
+    fn subtree_converged(&self) -> bool {
+        self.local && self.children.iter().all(|&(_, c)| c)
+    }
+
+    fn after_state_change(&mut self) -> TreeEffects {
+        let mut fx = TreeEffects::default();
+        if self.stopped {
+            return fx;
+        }
+        let agg = self.subtree_converged();
+        if self.is_root() {
+            if agg {
+                self.pc += 1;
+                if self.pc >= self.pc_max {
+                    self.stopped = true;
+                    fx.stop = true;
+                    for &(c, _) in &self.children {
+                        fx.send.push((c, TreeMsg::Stop));
+                    }
+                }
+            } else {
+                self.pc = 0;
+            }
+        } else if self.sent_up != Some(agg) {
+            self.sent_up = Some(agg);
+            fx.send.push((self.parent(), TreeMsg::Subtree { converged: agg }));
+        }
+        fx
+    }
+
+    /// Feed this UE's own local-convergence check for an iteration.
+    pub fn on_local(&mut self, converged: bool) -> TreeEffects {
+        self.local = converged;
+        self.after_state_change()
+    }
+
+    /// Feed a message from `src`.
+    pub fn on_message(&mut self, src: usize, msg: TreeMsg) -> TreeEffects {
+        match msg {
+            TreeMsg::Subtree { converged } => {
+                if let Some(slot) = self.children.iter_mut().find(|(c, _)| *c == src) {
+                    slot.1 = converged;
+                } else {
+                    panic!("UE {} got subtree msg from non-child {}", self.id, src);
+                }
+                self.after_state_change()
+            }
+            TreeMsg::Stop => {
+                self.stopped = true;
+                let mut fx = TreeEffects { stop: true, ..Default::default() };
+                for &(c, _) in &self.children {
+                    fx.send.push((c, TreeMsg::Stop));
+                }
+                fx
+            }
+        }
+    }
+
+    pub fn stopped(&self) -> bool {
+        self.stopped
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+    use std::collections::VecDeque;
+
+    /// Drive p nodes with an in-order message pump; returns true if the
+    /// system reached global stop.
+    fn pump(nodes: &mut [TreeNode], initial: Vec<(usize, TreeEffects)>) -> bool {
+        let mut queue: VecDeque<(usize, usize, TreeMsg)> = VecDeque::new();
+        for (src, fx) in initial {
+            for (dst, m) in fx.send {
+                queue.push_back((src, dst, m));
+            }
+        }
+        let mut steps = 0;
+        while let Some((src, dst, m)) = queue.pop_front() {
+            let fx = nodes[dst].on_message(src, m);
+            for (d2, m2) in fx.send {
+                queue.push_back((dst, d2, m2));
+            }
+            steps += 1;
+            assert!(steps < 10_000, "message storm");
+        }
+        nodes.iter().all(|n| n.stopped())
+    }
+
+    #[test]
+    fn all_converged_leads_to_global_stop() {
+        for p in [1usize, 2, 3, 6, 7] {
+            let mut nodes: Vec<TreeNode> =
+                (0..p).map(|i| TreeNode::new(i, p, 1)).collect();
+            let initial: Vec<(usize, TreeEffects)> = (0..p)
+                .map(|i| {
+                    let fx = nodes[i].on_local(true);
+                    (i, fx)
+                })
+                .collect();
+            assert!(pump(&mut nodes, initial), "p={p} did not stop");
+        }
+    }
+
+    #[test]
+    fn one_unconverged_blocks_stop() {
+        let p = 6;
+        let mut nodes: Vec<TreeNode> = (0..p).map(|i| TreeNode::new(i, p, 1)).collect();
+        let initial: Vec<(usize, TreeEffects)> = (0..p)
+            .map(|i| {
+                let fx = nodes[i].on_local(i != 4);
+                (i, fx)
+            })
+            .collect();
+        assert!(!pump(&mut nodes, initial));
+        assert!(nodes.iter().all(|n| !n.stopped()));
+    }
+
+    #[test]
+    fn diverge_after_converge_retracts() {
+        let p = 3;
+        let mut nodes: Vec<TreeNode> = (0..p).map(|i| TreeNode::new(i, p, 2)).collect();
+        // all converge once: root pc=1 < pcMax=2, no stop yet
+        let initial: Vec<(usize, TreeEffects)> = (0..p)
+            .map(|i| {
+                let fx = nodes[i].on_local(true);
+                (i, fx)
+            })
+            .collect();
+        assert!(!pump(&mut nodes, initial));
+        // leaf 2 diverges then re-converges: root persistence RESETS
+        // (pc back to 0, then 1 on the re-converge report)
+        let fx = nodes[2].on_local(false);
+        assert!(!pump(&mut nodes, vec![(2, fx)]));
+        let fx = nodes[2].on_local(true);
+        assert!(!pump(&mut nodes, vec![(2, fx)]));
+        // persistence accumulates across subsequent all-converged
+        // events — the root's own next locally-converged iteration
+        // pushes pc to pcMax and floods STOP
+        let fx = nodes[0].on_local(true);
+        assert!(pump(&mut nodes, vec![(0, fx)]));
+    }
+
+    #[test]
+    fn duplicate_reports_suppressed() {
+        let p = 3;
+        let mut n1 = TreeNode::new(1, p, 1);
+        let fx1 = n1.on_local(true);
+        assert_eq!(fx1.send.len(), 1);
+        let fx2 = n1.on_local(true); // no state change -> no resend
+        assert!(fx2.send.is_empty());
+    }
+
+    /// Safety property: if some node NEVER converges, no amount of
+    /// churn elsewhere can stop the system. (The analogue of the
+    /// centralized monitor's safety test; a transiently-converged node
+    /// CAN legitimately race a STOP — the paper's pcMax persistence
+    /// exists exactly to make that window small.)
+    #[test]
+    fn prop_no_stop_while_one_node_never_converges() {
+        let mut rng = Rng::new(31);
+        for _ in 0..100 {
+            let p = rng.range(2, 8);
+            let never = rng.range(0, p);
+            let mut nodes: Vec<TreeNode> =
+                (0..p).map(|i| TreeNode::new(i, p, 1)).collect();
+            let mut pending = Vec::new();
+            for _ in 0..40 {
+                let ue = rng.range(0, p);
+                let conv = if ue == never { false } else { rng.chance(0.7) };
+                let fx = nodes[ue].on_local(conv);
+                pending.push((ue, fx));
+            }
+            let stopped = pump(&mut nodes, pending);
+            assert!(!stopped, "stopped though UE {never} never converged");
+            assert!(nodes.iter().all(|n| !n.stopped()));
+        }
+    }
+}

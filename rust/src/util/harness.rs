@@ -1,0 +1,164 @@
+//! Micro-benchmark harness — substrate built from scratch (criterion is
+//! unavailable offline). Provides warmup, repeated timed runs, and
+//! mean/σ/min/max reporting; `benches/*.rs` (harness = false) binaries
+//! use it and print the paper's table rows.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark: timings over the measured iterations.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub stddev: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl BenchStats {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<40} {:>10.3?} ±{:>9.3?}  (min {:.3?}, max {:.3?}, n={})",
+            self.name, self.mean, self.stddev, self.min, self.max, self.iters
+        )
+    }
+}
+
+/// Benchmark runner. Honors `BENCH_FAST=1` (few iterations — used by
+/// `cargo test`-adjacent smoke runs) to keep CI time bounded.
+pub struct Bench {
+    warmup: usize,
+    iters: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        if std::env::var("BENCH_FAST").ok().as_deref() == Some("1") {
+            Bench { warmup: 1, iters: 3 }
+        } else {
+            Bench { warmup: 2, iters: 10 }
+        }
+    }
+}
+
+impl Bench {
+    pub fn new(warmup: usize, iters: usize) -> Self {
+        Bench { warmup, iters }
+    }
+
+    /// Time `f` (which should perform one complete unit of work) after
+    /// warmup, and return stats.
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchStats {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed());
+        }
+        stats(name, &samples)
+    }
+}
+
+fn stats(name: &str, samples: &[Duration]) -> BenchStats {
+    let n = samples.len().max(1) as f64;
+    let secs: Vec<f64> = samples.iter().map(|d| d.as_secs_f64()).collect();
+    let mean = secs.iter().sum::<f64>() / n;
+    let var = secs.iter().map(|s| (s - mean).powi(2)).sum::<f64>() / n;
+    BenchStats {
+        name: name.to_string(),
+        iters: samples.len(),
+        mean: Duration::from_secs_f64(mean),
+        stddev: Duration::from_secs_f64(var.sqrt()),
+        min: *samples.iter().min().unwrap_or(&Duration::ZERO),
+        max: *samples.iter().max().unwrap_or(&Duration::ZERO),
+    }
+}
+
+/// Markdown table emitter for paper-style rows.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Table { header: header.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "row arity");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| {
+            let mut s = String::from("|");
+            for (c, w) in cells.iter().zip(&widths) {
+                s.push_str(&format!(" {:<w$} |", c, w = w));
+            }
+            s
+        };
+        let mut out = fmt_row(&self.header);
+        out.push('\n');
+        out.push('|');
+        for w in &widths {
+            out.push_str(&format!("{:-<w$}|", "", w = w + 2));
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let b = Bench::new(1, 3);
+        let mut count = 0;
+        let s = b.run("noop", || count += 1);
+        assert_eq!(count, 4); // warmup + iters
+        assert_eq!(s.iters, 3);
+        assert!(s.report().contains("noop"));
+    }
+
+    #[test]
+    fn stats_sane() {
+        let samples = vec![Duration::from_millis(10); 5];
+        let s = stats("x", &samples);
+        assert_eq!(s.mean, Duration::from_millis(10));
+        assert_eq!(s.stddev, Duration::ZERO);
+        assert_eq!(s.min, s.max);
+    }
+
+    #[test]
+    fn table_markdown() {
+        let mut t = Table::new(&["procs", "iters"]);
+        t.row(&["2".into(), "44".into()]);
+        let md = t.to_markdown();
+        assert!(md.contains("| procs | iters |"));
+        assert!(md.contains("| 2     | 44    |"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn table_rejects_bad_arity() {
+        let mut t = Table::new(&["a"]);
+        t.row(&["1".into(), "2".into()]);
+    }
+}

@@ -1,0 +1,12 @@
+//! From-scratch substrates the offline build requires: JSON parsing
+//! (no serde), deterministic PRNG (no rand), and a micro-benchmark
+//! harness (no criterion). Each is small, fully tested, and used
+//! across the crate.
+
+pub mod harness;
+pub mod json;
+pub mod rng;
+
+pub use harness::{Bench, BenchStats, Table};
+pub use json::Json;
+pub use rng::Rng;

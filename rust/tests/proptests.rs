@@ -1,0 +1,206 @@
+//! Property-based tests over coordinator invariants (seeded random
+//! campaigns — the offline build carries no proptest crate, so the
+//! generators are explicit and every failure prints its trial seed).
+//!
+//! Invariants covered:
+//!   * partitioning: any (n, p) tiles [0, n) exactly; owner_of agrees;
+//!   * ELL virtual-row splitting: SpMV identical to CSR for any graph;
+//!   * async runs: converge to the power-method ranking for any
+//!     topology/jitter/window; mass stays bounded;
+//!   * sync runs: iteration-identical to the power method at any p;
+//!   * determinism: bit-identical metrics for equal seeds.
+
+use std::sync::Arc;
+
+use asyncpr::asynciter::{BlockOperator, Mode, NativeBlockOp, RunSpec, SimEngine};
+use asyncpr::coordinator::Partitioner;
+use asyncpr::graph::{generators, Csr, EdgeList, Ell};
+use asyncpr::pagerank::{kendall_tau, l1_norm, power_method, PagerankProblem, PowerOptions};
+use asyncpr::simnet::{ClusterProfile, Topology};
+use asyncpr::util::Rng;
+
+fn random_graph(rng: &mut Rng, n: usize) -> Csr {
+    let m = rng.range(n, n * 6);
+    let mut el = EdgeList::new(n);
+    for _ in 0..m {
+        el.push(rng.range(0, n) as u32, rng.range(0, n) as u32);
+    }
+    Csr::from_edgelist(&el).unwrap()
+}
+
+#[test]
+fn prop_partitioner_tiles_any_n_p() {
+    let mut rng = Rng::new(101);
+    for trial in 0..300 {
+        let p = rng.range(1, 12);
+        let n = rng.range(p, p + 5000);
+        let part = Partitioner::consecutive(n, p);
+        let blocks = part.blocks();
+        assert_eq!(blocks.len(), p, "trial {trial}");
+        assert_eq!(blocks[0].0, 0);
+        assert_eq!(blocks[p - 1].1, n);
+        let mut covered = 0usize;
+        for (i, &(lo, hi)) in blocks.iter().enumerate() {
+            assert!(lo < hi, "trial {trial}: empty block {i}");
+            covered += hi - lo;
+        }
+        assert_eq!(covered, n, "trial {trial}: over/under-cover");
+        // spot-check owner_of
+        for _ in 0..20 {
+            let r = rng.range(0, n);
+            let ue = part.owner_of(r);
+            let (lo, hi) = blocks[ue];
+            assert!((lo..hi).contains(&r), "trial {trial} row {r} ue {ue}");
+        }
+    }
+}
+
+#[test]
+fn prop_balanced_partitioner_tiles_and_orders() {
+    let mut rng = Rng::new(102);
+    for trial in 0..40 {
+        let n = rng.range(50, 2000);
+        let g = random_graph(&mut rng, n);
+        let p = rng.range(1, 9.min(n));
+        let part = Partitioner::balanced_nnz(&g, p);
+        let blocks = part.blocks();
+        assert_eq!(blocks.len(), p, "trial {trial}");
+        assert_eq!(blocks[0].0, 0);
+        assert_eq!(blocks[p - 1].1, n);
+        for w in blocks.windows(2) {
+            assert_eq!(w[0].1, w[1].0, "trial {trial}: gap");
+        }
+    }
+}
+
+#[test]
+fn prop_ell_spmv_equals_csr_any_width() {
+    let mut rng = Rng::new(103);
+    for trial in 0..60 {
+        let n = rng.range(10, 400);
+        let g = random_graph(&mut rng, n);
+        let width = rng.range(1, 9);
+        let ell = Ell::from_csr(&g, width);
+        let x: Vec<f32> = (0..n).map(|_| rng.f32() * 2.0 - 1.0).collect();
+        let mut y1 = vec![0.0f32; n];
+        let mut y2 = vec![0.0f32; n];
+        g.spmv(&x, &mut y1);
+        ell.spmv(&x, &mut y2);
+        for (i, (a, b)) in y1.iter().zip(&y2).enumerate() {
+            assert!(
+                (a - b).abs() < 1e-4,
+                "trial {trial} width {width} row {i}: {a} vs {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_async_converges_any_topology_and_window() {
+    let mut rng = Rng::new(104);
+    for trial in 0..12 {
+        let n = rng.range(400, 1200);
+        let el = generators::power_law_web(&generators::WebParams::scaled(n), trial);
+        let problem = Arc::new(PagerankProblem::new(Csr::from_edgelist(&el).unwrap(), 0.85));
+        let p = rng.range(2, 6);
+        let topo =
+            [Topology::Clique, Topology::Star, Topology::BinaryTree][rng.range(0, 3)];
+        let window = if rng.chance(0.5) { None } else { Some(rng.f64() * 5.0 + 0.1) };
+        let mut profile = ClusterProfile::test_profile(p).with_topology(topo);
+        profile.cancel_window = window;
+        // random mild heterogeneity
+        for node in profile.nodes.iter_mut() {
+            node.slowdown = 1.0 + rng.f64();
+        }
+        let mut ops: Vec<Box<dyn BlockOperator>> = Partitioner::consecutive(problem.n(), p)
+            .blocks()
+            .into_iter()
+            .map(|(lo, hi)| {
+                Box::new(NativeBlockOp::new(problem.clone(), lo, hi))
+                    as Box<dyn BlockOperator>
+            })
+            .collect();
+        let spec = RunSpec { seed: trial * 7 + 1, ..RunSpec::paper_table1(Mode::Asynchronous) };
+        let m = SimEngine::new(&profile, &problem).run(&mut ops, &spec);
+
+        // mass bounded (the stochastic iteration cannot blow up)
+        let mass = l1_norm(&m.x);
+        assert!(
+            (0.5..2.0).contains(&(mass as f64)),
+            "trial {trial} ({topo:?}, w={window:?}): mass {mass}"
+        );
+        // ranking agrees with the reference
+        let pm = power_method(
+            &problem,
+            &PowerOptions { tol: 1e-9, max_iters: 5000, record_residuals: false },
+        );
+        let tau = kendall_tau(&m.x, &pm.x);
+        assert!(
+            tau > 0.99,
+            "trial {trial} ({topo:?}, p={p}, w={window:?}): tau {tau}"
+        );
+    }
+}
+
+#[test]
+fn prop_sync_equals_power_method_any_p() {
+    let mut rng = Rng::new(105);
+    for trial in 0..8 {
+        let n = rng.range(300, 900);
+        let el = generators::power_law_web(&generators::WebParams::scaled(n), trial + 50);
+        let problem = Arc::new(PagerankProblem::new(Csr::from_edgelist(&el).unwrap(), 0.85));
+        let p = rng.range(1, 7);
+        let profile = ClusterProfile::test_profile(p);
+        let mut ops: Vec<Box<dyn BlockOperator>> = Partitioner::consecutive(problem.n(), p)
+            .blocks()
+            .into_iter()
+            .map(|(lo, hi)| {
+                Box::new(NativeBlockOp::new(problem.clone(), lo, hi))
+                    as Box<dyn BlockOperator>
+            })
+            .collect();
+        let m = SimEngine::new(&profile, &problem)
+            .run(&mut ops, &RunSpec::paper_table1(Mode::Synchronous));
+        let pm = power_method(&problem, &PowerOptions::default());
+        assert_eq!(
+            m.iters[0], pm.iters as u64,
+            "trial {trial} p={p}: BSP must be iteration-identical to the power method"
+        );
+        for (i, (a, b)) in m.x.iter().zip(&pm.x).enumerate() {
+            assert!((a - b).abs() < 1e-6, "trial {trial} p={p} row {i}");
+        }
+    }
+}
+
+#[test]
+fn prop_determinism_across_everything() {
+    let mut rng = Rng::new(106);
+    for trial in 0..6 {
+        let n = rng.range(300, 700);
+        let el = generators::power_law_web(&generators::WebParams::scaled(n), trial + 90);
+        let problem = Arc::new(PagerankProblem::new(Csr::from_edgelist(&el).unwrap(), 0.85));
+        let p = rng.range(2, 5);
+        let seed = rng.next_u64();
+        let mode = if rng.chance(0.5) { Mode::Asynchronous } else { Mode::Synchronous };
+        let run = || {
+            let profile = ClusterProfile::test_profile(p);
+            let mut ops: Vec<Box<dyn BlockOperator>> =
+                Partitioner::consecutive(problem.n(), p)
+                    .blocks()
+                    .into_iter()
+                    .map(|(lo, hi)| {
+                        Box::new(NativeBlockOp::new(problem.clone(), lo, hi))
+                            as Box<dyn BlockOperator>
+                    })
+                    .collect();
+            let spec = RunSpec { seed, ..RunSpec::paper_table1(mode) };
+            SimEngine::new(&profile, &problem).run(&mut ops, &spec)
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.iters, b.iters, "trial {trial}");
+        assert_eq!(a.x, b.x, "trial {trial}");
+        assert_eq!(a.imports, b.imports, "trial {trial}");
+        assert_eq!(a.total_time, b.total_time, "trial {trial}");
+    }
+}

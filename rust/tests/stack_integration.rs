@@ -1,0 +1,124 @@
+//! Whole-stack integration: the AOT artifacts (L1 Pallas kernel inside
+//! the L2 jax model, lowered to HLO text) executed from the L3
+//! coordinator via PJRT, cross-validated against the native path.
+//!
+//! Requires `make artifacts`.
+
+use std::sync::Arc;
+
+use asyncpr::asynciter::{ArtifactBlockOp, BlockOperator, Mode, NativeBlockOp, RunSpec, SimEngine};
+use asyncpr::config::RunConfig;
+use asyncpr::coordinator::{self, Partitioner};
+use asyncpr::graph::{generators, Csr};
+use asyncpr::pagerank::{l1_diff, normalize_l1, PagerankProblem};
+use asyncpr::runtime::Engine;
+use asyncpr::simnet::ClusterProfile;
+
+fn engine() -> Engine {
+    Engine::new(asyncpr::runtime::default_artifacts_dir())
+        .expect("run `make artifacts` before cargo test")
+}
+
+fn problem(n: usize, seed: u64) -> Arc<PagerankProblem> {
+    let el = generators::power_law_web(&generators::WebParams::scaled(n), seed);
+    Arc::new(PagerankProblem::new(Csr::from_edgelist(&el).unwrap(), 0.85))
+}
+
+#[test]
+fn full_async_run_on_artifacts_matches_native() {
+    let eng = engine();
+    let problem = problem(900, 31);
+    let p = 3;
+    let profile = ClusterProfile::test_profile(p);
+    let spec = RunSpec::paper_table1(Mode::Asynchronous);
+
+    let run_native = || {
+        let mut ops: Vec<Box<dyn BlockOperator>> = Partitioner::consecutive(problem.n(), p)
+            .blocks()
+            .into_iter()
+            .map(|(lo, hi)| {
+                Box::new(NativeBlockOp::new(problem.clone(), lo, hi))
+                    as Box<dyn BlockOperator>
+            })
+            .collect();
+        SimEngine::new(&profile, &problem).run(&mut ops, &spec)
+    };
+    let run_artifact = || {
+        let mut ops: Vec<Box<dyn BlockOperator>> = Partitioner::consecutive(problem.n(), p)
+            .blocks()
+            .into_iter()
+            .map(|(lo, hi)| {
+                Box::new(ArtifactBlockOp::new(&eng, problem.clone(), lo, hi, 8).unwrap())
+                    as Box<dyn BlockOperator>
+            })
+            .collect();
+        SimEngine::new(&profile, &problem).run(&mut ops, &spec)
+    };
+
+    let native = run_native();
+    let art = run_artifact();
+    // same DES schedule (same seeds, same block nnz) => same iteration
+    // counts; numerics agree to f32 kernel tolerance
+    assert_eq!(native.iters, art.iters, "DES schedule must be identical");
+    let mut a = native.x.clone();
+    let mut b = art.x.clone();
+    normalize_l1(&mut a);
+    normalize_l1(&mut b);
+    let d = l1_diff(&a, &b);
+    assert!(d < 1e-4, "native vs artifact drift {d}");
+}
+
+#[test]
+fn sync_run_on_artifacts_converges() {
+    let eng = engine();
+    let problem = problem(700, 32);
+    let p = 2;
+    let profile = ClusterProfile::test_profile(p);
+    let mut ops: Vec<Box<dyn BlockOperator>> = Partitioner::consecutive(problem.n(), p)
+        .blocks()
+        .into_iter()
+        .map(|(lo, hi)| {
+            Box::new(ArtifactBlockOp::new(&eng, problem.clone(), lo, hi, 8).unwrap())
+                as Box<dyn BlockOperator>
+        })
+        .collect();
+    let m = SimEngine::new(&profile, &problem)
+        .run(&mut ops, &RunSpec::paper_table1(Mode::Synchronous));
+    assert!(m.final_global_residual < 2e-6, "resid {}", m.final_global_residual);
+}
+
+#[test]
+fn run_experiment_with_artifact_config() {
+    let eng = engine();
+    let cfg = RunConfig {
+        graph: "scaled:800".into(),
+        procs: 2,
+        use_artifact: true,
+        ell_width: 8,
+        ..Default::default()
+    };
+    let m = coordinator::run_experiment(&cfg, Some(&eng)).unwrap();
+    assert!(m.iters.iter().all(|&i| i > 5));
+    assert!(m.final_global_residual < 1e-3);
+}
+
+#[test]
+fn artifact_op_reports_bucket() {
+    let eng = engine();
+    let problem = problem(500, 33);
+    let op = ArtifactBlockOp::new(&eng, problem, 0, 500, 8).unwrap();
+    // n=500 fits the tiny bucket (n=1024) as long as virtual rows fit
+    assert!(!op.bucket_name().is_empty());
+}
+
+#[test]
+fn artifact_rejects_oversized_problem() {
+    let eng = engine();
+    // 2^21 rows exceeds every bucket
+    let err = eng.pagerank_step(1 << 21, 1 << 20, 16);
+    let msg = match err {
+        Ok(_) => panic!("oversized problem must not fit any bucket"),
+        Err(e) => format!("{e:#}"),
+    };
+    assert!(msg.contains("no artifact bucket"), "{msg}");
+}
