@@ -1,0 +1,95 @@
+//! Bench S1: evolving-graph epochs — incremental warm-start push vs.
+//! from-scratch recomputation.
+//!
+//! The subsystem's claim is "recompute cost ∝ change size, not graph
+//! size": after a crawl-sized churn batch (~0.5 % of edges), the
+//! warm-started Gauss–Southwell solve should cost a small fraction of a
+//! cold solve's pushes AND wall time, while landing on the same ranks.
+//! This bench measures both the operation counts (deterministic) and
+//! timed medians for (a) one update epoch solved incrementally, (b) the
+//! same snapshot solved from scratch by push, and (c) the f64 power
+//! method baseline.
+
+use asyncpr::coordinator::experiments::{self, StreamOptions};
+use asyncpr::graph::generators::{churn_batch, ChurnParams};
+use asyncpr::stream::{power_method_f64, DeltaGraph, PushState};
+use asyncpr::util::{Bench, Rng, Table};
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick")
+        || std::env::var("BENCH_FAST").ok().as_deref() == Some("1");
+    let graph = if quick { "scaled:8000" } else { "scaled:28190" };
+    println!("== bench stream (graph = {graph}) ==\n");
+
+    // ---- operation counts over a full epoch run (deterministic) ----
+    let opts = StreamOptions { epochs: if quick { 4 } else { 8 }, ..Default::default() };
+    let rep = experiments::stream_epochs(graph, &opts)?;
+    println!("{}", asyncpr::metrics::stream_markdown(&rep.rows));
+    println!(
+        "update epochs: {} inc pushes vs {} scratch pushes ({:.1}x), final L1 vs power {:.1e}\n",
+        rep.update_inc_pushes,
+        rep.update_scratch_pushes,
+        rep.update_scratch_pushes as f64 / rep.update_inc_pushes.max(1) as f64,
+        rep.final_l1_vs_power,
+    );
+
+    // ---- wall-clock per epoch style: warm vs cold vs power ----
+    let el = asyncpr::coordinator::load_edgelist(graph, 42)?;
+    let base = DeltaGraph::from_edgelist(&el);
+    let churn = ChurnParams::scaled_to(base.n(), base.m());
+    let tol = 1e-10;
+
+    let bench = Bench::default();
+    let mut t = Table::new(&["solver", "mean", "pushes / iters"]);
+
+    // pre-build one churned snapshot + a converged pre-churn state
+    let mut warm0 = PushState::new(base.n(), 0.85);
+    warm0.begin_epoch();
+    warm0.solve(&base, tol, u64::MAX);
+    let mut g1 = base.clone();
+    let delta = g1.apply(&churn_batch(&base, &churn, &mut Rng::new(7)))?;
+
+    let mut warm_pushes = 0u64;
+    let s_warm = bench.run("incremental (warm push)", || {
+        let mut s = warm0.clone();
+        s.begin_epoch();
+        s.apply_batch(&g1, &delta);
+        let st = s.solve(&g1, tol, u64::MAX);
+        warm_pushes = st.pushes;
+    });
+    let mut cold_pushes = 0u64;
+    let s_cold = bench.run("from-scratch (cold push)", || {
+        let mut s = PushState::new(g1.n(), 0.85);
+        s.begin_epoch();
+        let st = s.solve(&g1, tol, u64::MAX);
+        cold_pushes = st.pushes;
+    });
+    let mut power_iters = 0usize;
+    let s_power = bench.run("from-scratch (f64 power)", || {
+        let (_, it) = power_method_f64(&g1, 0.85, tol, 100_000);
+        power_iters = it;
+    });
+
+    t.row(&[
+        "incremental (warm push)".into(),
+        format!("{:?}", s_warm.mean),
+        format!("{warm_pushes} pushes"),
+    ]);
+    t.row(&[
+        "from-scratch (cold push)".into(),
+        format!("{:?}", s_cold.mean),
+        format!("{cold_pushes} pushes"),
+    ]);
+    t.row(&[
+        "from-scratch (f64 power)".into(),
+        format!("{:?}", s_power.mean),
+        format!("{power_iters} iters"),
+    ]);
+    println!("{}", t.to_markdown());
+    println!(
+        "one ~0.5% churn epoch: warm/cold push ratio {:.3} (time), {:.3} (pushes)",
+        s_warm.mean.as_secs_f64() / s_cold.mean.as_secs_f64(),
+        warm_pushes as f64 / cold_pushes.max(1) as f64,
+    );
+    Ok(())
+}

@@ -1,0 +1,86 @@
+//! Evolving-web walkthrough: rank a living graph across churn epochs.
+//!
+//! ```text
+//! cargo run --release --example evolving_web
+//! ```
+//!
+//! Builds a small statistics-matched web, converges PageRank once by
+//! residual push, then streams five crawl-like update batches through
+//! it (page arrivals + link churn). After each batch the ranks are
+//! repaired incrementally — cost proportional to the change — and
+//! cross-checked against a from-scratch f64 power-method run. Finally
+//! the same snapshot is ranked through the asynchronous DES cluster
+//! using the push operator per UE (`PushBlockOp`).
+
+use std::sync::Arc;
+
+use asyncpr::asynciter::{BlockOperator, Mode, RunSpec, SimEngine};
+use asyncpr::coordinator::Partitioner;
+use asyncpr::graph::generators::{churn_batch, ChurnParams};
+use asyncpr::pagerank::{kendall_tau, PagerankProblem};
+use asyncpr::simnet::ClusterProfile;
+use asyncpr::stream::{power_method_f64, DeltaGraph, PushBlockOp, PushState};
+use asyncpr::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let el = asyncpr::coordinator::load_edgelist("scaled:4000", 42)?;
+    let mut g = DeltaGraph::from_edgelist(&el);
+    println!("initial web: n={} m={} dangling={}", g.n(), g.m(), g.dangling_count());
+
+    let tol = 1e-10;
+    let mut state = PushState::new(g.n(), 0.85);
+    state.begin_epoch();
+    let cold = state.solve(&g, tol, u64::MAX);
+    println!("cold build: {} pushes, residual {:.1e}\n", cold.pushes, cold.residual);
+
+    let churn = ChurnParams::scaled_to(g.n(), g.m());
+    let mut rng = Rng::new(7);
+    for epoch in 1..=5 {
+        let batch = churn_batch(&g, &churn, &mut rng);
+        let delta = g.apply(&batch)?;
+        state.begin_epoch();
+        state.apply_batch(&g, &delta);
+        let st = state.solve(&g, tol, u64::MAX);
+        let (xref, _) = power_method_f64(&g, 0.85, tol, 100_000);
+        let l1: f64 = state
+            .ranks()
+            .iter()
+            .zip(&xref)
+            .map(|(a, b)| (a - b).abs())
+            .sum();
+        println!(
+            "epoch {epoch}: +{}n +{}e -{}e -> {} pushes ({}x cheaper than build), \
+             L1 vs fresh power {l1:.1e}",
+            batch.new_nodes,
+            delta.inserted,
+            delta.removed,
+            st.pushes,
+            cold.pushes / st.pushes.max(1),
+        );
+        anyhow::ensure!(l1 < 1e-8, "incremental ranks drifted: {l1}");
+    }
+
+    // same snapshot through the async simulated cluster, push op per UE
+    let problem = Arc::new(PagerankProblem::new(g.to_csr()?, 0.85));
+    let p = 3;
+    let profile = ClusterProfile::test_profile(p);
+    let mut ops: Vec<Box<dyn BlockOperator>> = Partitioner::consecutive(problem.n(), p)
+        .blocks()
+        .into_iter()
+        .map(|(lo, hi)| {
+            Box::new(PushBlockOp::new(problem.clone(), lo, hi)) as Box<dyn BlockOperator>
+        })
+        .collect();
+    let m = SimEngine::new(&profile, &problem)
+        .run(&mut ops, &RunSpec::paper_table1(Mode::Asynchronous));
+    let x64: Vec<f32> = state.ranks().iter().map(|&v| v as f32).collect();
+    let tau = kendall_tau(&m.x, &x64);
+    println!(
+        "\nasync cluster (push ops, p={p}): iters {:?}, global residual {:.1e}, \
+         ranking tau vs incremental {tau:.6}",
+        m.iters, m.final_global_residual
+    );
+    anyhow::ensure!(tau > 0.99, "cluster ranking diverged");
+    println!("evolving web OK");
+    Ok(())
+}

@@ -34,6 +34,9 @@ pub struct RunConfig {
     pub adaptive: bool,
     /// Use the PJRT artifact operator instead of native CSR.
     pub use_artifact: bool,
+    /// Use the push-diffusion block operator
+    /// ([`crate::stream::PushBlockOp`]) instead of native CSR.
+    pub use_push: bool,
     /// ELL width for the artifact path.
     pub ell_width: usize,
     /// Multiplier on the testbed bandwidth (1.0 = the paper's wire).
@@ -60,6 +63,7 @@ impl Default for RunConfig {
             cancel_window: Some(3.0),
             adaptive: false,
             use_artifact: false,
+            use_push: false,
             ell_width: 16,
             bandwidth_scale: 1.0,
         }
@@ -132,6 +136,9 @@ impl RunConfig {
         if let Some(v) = t.get_bool("runtime", "use_artifact") {
             c.use_artifact = v;
         }
+        if let Some(v) = t.get_bool("runtime", "use_push") {
+            c.use_push = v;
+        }
         if let Some(v) = t.get_int("runtime", "ell_width") {
             c.ell_width = v as usize;
         }
@@ -157,6 +164,9 @@ impl RunConfig {
         }
         if self.ell_width == 0 {
             anyhow::bail!("ell_width must be >= 1");
+        }
+        if self.use_artifact && self.use_push {
+            anyhow::bail!("use_artifact and use_push are mutually exclusive operators");
         }
         if self.bandwidth_scale <= 0.0 {
             anyhow::bail!("bandwidth_scale must be positive");
@@ -225,6 +235,16 @@ ell_width = 16
             RunConfig::from_toml("[run]\nmode = \"sync\"\n[network]\ntopology = \"tree\"\n")
                 .is_err()
         );
+    }
+
+    #[test]
+    fn push_operator_parses_and_excludes_artifact() {
+        let c = RunConfig::from_toml("[runtime]\nuse_push = true\n").unwrap();
+        assert!(c.use_push);
+        assert!(RunConfig::from_toml(
+            "[runtime]\nuse_push = true\nuse_artifact = true\n"
+        )
+        .is_err());
     }
 
     #[test]

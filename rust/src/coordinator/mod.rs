@@ -18,15 +18,18 @@ use std::sync::Arc;
 
 use crate::asynciter::{ArtifactBlockOp, BlockOperator, NativeBlockOp, RunMetrics, RunSpec, SimEngine};
 use crate::config::RunConfig;
-use crate::graph::{generators, io, Csr};
+use crate::graph::{generators, io, Csr, EdgeList};
 use crate::pagerank::PagerankProblem;
 use crate::simnet::ClusterProfile;
+use crate::stream::PushBlockOp;
 use crate::Result;
 
-/// Materialize the graph named by a config ("stanford", "scaled:<n>",
-/// "erdos:<n>:<m>", or a path).
-pub fn load_graph(spec: &str, seed: u64) -> Result<Csr> {
-    let el = if spec == "stanford" {
+/// Materialize the edge list named by a graph spec ("stanford",
+/// "scaled:<n>", "erdos:<n>:<m>", or a path to a .txt/.bin edge list).
+/// The raw-edge form is what `repro generate` saves and what the
+/// `stream` subsystem's [`crate::stream::DeltaGraph`] consumes.
+pub fn load_edgelist(spec: &str, seed: u64) -> Result<EdgeList> {
+    Ok(if spec == "stanford" {
         generators::stanford_web_like(seed)
     } else if let Some(rest) = spec.strip_prefix("scaled:") {
         let n: usize = rest.parse()?;
@@ -40,8 +43,12 @@ pub fn load_graph(spec: &str, seed: u64) -> Result<Csr> {
         io::load_edgelist_bin(spec)?
     } else {
         io::load_edgelist_text(spec, None)?
-    };
-    Csr::from_edgelist(&el)
+    })
+}
+
+/// Materialize the (transposed, normalized) CSR for a graph spec.
+pub fn load_graph(spec: &str, seed: u64) -> Result<Csr> {
+    Csr::from_edgelist(&load_edgelist(spec, seed)?)
 }
 
 /// Build the per-UE block operators for a problem.
@@ -64,6 +71,8 @@ pub fn build_ops(
                 hi,
                 cfg.ell_width,
             )?));
+        } else if cfg.use_push {
+            ops.push(Box::new(PushBlockOp::new(problem.clone(), lo, hi)));
         } else {
             ops.push(Box::new(NativeBlockOp::new(problem.clone(), lo, hi)));
         }

@@ -283,6 +283,104 @@ pub fn rmat(scale: u32, m: usize, probs: (f64, f64, f64, f64), seed: u64) -> Edg
     el
 }
 
+/// Parameters for the crawl-like update stream ([`churn_batch`]).
+///
+/// Models what successive crawls of a living web region observe:
+/// *arrivals* (new pages, linking out immediately — preferential
+/// attachment, the mechanism behind the in-degree power law) and *link
+/// churn* (existing pages gaining and losing links as sites are
+/// edited). Defaults follow [`ChurnParams::scaled_to`], which sizes one
+/// epoch to roughly half a percent of the graph.
+#[derive(Debug, Clone)]
+pub struct ChurnParams {
+    /// New pages per epoch (each born with out-links).
+    pub arrivals: usize,
+    /// Out-links per arriving page.
+    pub links_per_arrival: usize,
+    /// New links between existing pages per epoch.
+    pub churn_inserts: usize,
+    /// Existing links deleted per epoch.
+    pub churn_removes: usize,
+    /// Probability a link target is chosen ∝ in-degree (preferential
+    /// attachment) instead of uniformly.
+    pub pref_attach: f64,
+}
+
+impl ChurnParams {
+    /// Epoch sized to a graph with `n` nodes / `m` edges: ~0.1 % node
+    /// arrivals and ~0.5 % edge churn, the "small change between
+    /// crawls" regime where incremental recomputation should win big.
+    pub fn scaled_to(n: usize, m: usize) -> ChurnParams {
+        ChurnParams {
+            arrivals: (n / 1000).max(1),
+            links_per_arrival: 8,
+            churn_inserts: (m / 400).max(4),
+            churn_removes: (m / 800).max(2),
+            pref_attach: 0.8,
+        }
+    }
+}
+
+/// Generate one epoch's [`UpdateBatch`](crate::stream::UpdateBatch) of
+/// crawl-like mutations against the current graph state.
+///
+/// Deterministic given the `rng` stream. Arriving pages get
+/// `links_per_arrival` out-links to (mostly) degree-proportional
+/// targets and, with probability ½, one in-link from a random existing
+/// page (so newcomers can accrue rank). Churn removals are sampled
+/// uniformly from the current edge set — deleting a page's last
+/// out-link legitimately makes it dangling, which the incremental
+/// solver must absorb.
+pub fn churn_batch(
+    g: &crate::stream::DeltaGraph,
+    p: &ChurnParams,
+    rng: &mut Rng,
+) -> crate::stream::UpdateBatch {
+    let n0 = g.n();
+    assert!(n0 > 0, "churn_batch on an empty graph");
+    // flatten the current edges once: uniform-edge sampling gives a
+    // degree-proportional *target* distribution (each edge nominates
+    // its destination), the standard preferential-attachment trick
+    let mut edges: Vec<(NodeId, NodeId)> = Vec::with_capacity(g.m());
+    g.for_each_edge(|s, d| edges.push((s, d)));
+
+    let mut batch = crate::stream::UpdateBatch {
+        new_nodes: p.arrivals,
+        insert: Vec::new(),
+        remove: Vec::new(),
+    };
+    let mut pick_target = |rng: &mut Rng| -> NodeId {
+        if !edges.is_empty() && rng.chance(p.pref_attach) {
+            edges[rng.range(0, edges.len())].1
+        } else {
+            rng.range(0, n0) as NodeId
+        }
+    };
+
+    // arrivals: out-links immediately, maybe one in-link
+    for j in 0..p.arrivals {
+        let newcomer = (n0 + j) as NodeId;
+        for _ in 0..p.links_per_arrival {
+            batch.insert.push((newcomer, pick_target(rng)));
+        }
+        if rng.chance(0.5) {
+            batch.insert.push((rng.range(0, n0) as NodeId, newcomer));
+        }
+    }
+    // link churn among existing pages
+    for _ in 0..p.churn_inserts {
+        let src = rng.range(0, n0) as NodeId;
+        batch.insert.push((src, pick_target(rng)));
+    }
+    if !edges.is_empty() {
+        let k = p.churn_removes.min(edges.len());
+        for idx in rng.sample_distinct(edges.len(), k) {
+            batch.remove.push(edges[idx]);
+        }
+    }
+    batch
+}
+
 /// Directed chain 0→1→…→n-1 (last node dangling). Worst case for
 /// information propagation; property tests use it.
 pub fn chain(n: usize) -> EdgeList {
@@ -399,6 +497,58 @@ mod tests {
     #[should_panic(expected = "sum to 1")]
     fn rmat_rejects_bad_probs() {
         rmat(4, 10, (0.5, 0.2, 0.2, 0.2), 1);
+    }
+
+    #[test]
+    fn churn_batch_is_deterministic_and_in_bounds() {
+        use crate::stream::DeltaGraph;
+        let el = power_law_web(&WebParams::scaled(3_000), 20);
+        let g = DeltaGraph::from_edgelist(&el);
+        let p = ChurnParams::scaled_to(g.n(), g.m());
+        let a = churn_batch(&g, &p, &mut crate::util::Rng::new(5));
+        let b = churn_batch(&g, &p, &mut crate::util::Rng::new(5));
+        assert_eq!(a, b, "same rng stream, same batch");
+        let c = churn_batch(&g, &p, &mut crate::util::Rng::new(6));
+        assert_ne!(a, c);
+        assert_eq!(a.new_nodes, p.arrivals);
+        // applying must succeed: every endpoint within n + arrivals
+        let mut g2 = g.clone();
+        let d = g2.apply(&a).unwrap();
+        assert_eq!(d.new_n, g.n() + p.arrivals);
+        assert!(d.inserted > 0 && d.removed > 0);
+        // removals were sampled from real edges
+        for &(s, t) in &a.remove {
+            assert!(g.has_edge(s, t), "({s},{t}) not in the pre-batch graph");
+        }
+    }
+
+    #[test]
+    fn churn_targets_skew_preferential() {
+        use crate::stream::DeltaGraph;
+        let el = power_law_web(&WebParams::scaled(3_000), 21);
+        let g = DeltaGraph::from_edgelist(&el);
+        let csr = Csr::from_edgelist(&el).unwrap();
+        let mean_in = csr.nnz() as f64 / csr.n() as f64;
+        let p = ChurnParams {
+            churn_inserts: 2_000,
+            arrivals: 0,
+            churn_removes: 0,
+            pref_attach: 1.0,
+            links_per_arrival: 0,
+        };
+        let batch = churn_batch(&g, &p, &mut crate::util::Rng::new(7));
+        // fully preferential targets land on high in-degree pages far
+        // more often than uniform would
+        let avg_target_indeg: f64 = batch
+            .insert
+            .iter()
+            .map(|&(_, t)| csr.row_len(t as usize) as f64)
+            .sum::<f64>()
+            / batch.insert.len() as f64;
+        assert!(
+            avg_target_indeg > 3.0 * mean_in,
+            "avg target in-degree {avg_target_indeg} vs mean {mean_in}"
+        );
     }
 
     #[test]

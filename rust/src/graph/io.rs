@@ -66,10 +66,22 @@ pub fn save_edgelist_bin(el: &EdgeList, path: impl AsRef<Path>) -> Result<()> {
     Ok(())
 }
 
+/// Header size of the binary format: magic + u64 n + u64 m.
+const BIN_HEADER: u64 = 8 + 8 + 8;
+
 /// Load the binary format written by [`save_edgelist_bin`].
+///
+/// The `n`/`m` header is validated against the actual file size BEFORE
+/// any `m`-sized allocation, so a corrupt or truncated file fails with
+/// a readable error instead of attempting a massive `Vec::with_capacity`
+/// (a 16-byte header flip could otherwise request exabytes).
 pub fn load_edgelist_bin(path: impl AsRef<Path>) -> Result<EdgeList> {
     let f = std::fs::File::open(path.as_ref())
         .with_context(|| format!("opening {}", path.as_ref().display()))?;
+    let file_len = f
+        .metadata()
+        .with_context(|| format!("stat {}", path.as_ref().display()))?
+        .len();
     let mut r = BufReader::new(f);
     let mut magic = [0u8; 8];
     r.read_exact(&mut magic)?;
@@ -78,9 +90,25 @@ pub fn load_edgelist_bin(path: impl AsRef<Path>) -> Result<EdgeList> {
     }
     let mut u64buf = [0u8; 8];
     r.read_exact(&mut u64buf)?;
-    let n = u64::from_le_bytes(u64buf) as usize;
+    let n = u64::from_le_bytes(u64buf);
     r.read_exact(&mut u64buf)?;
-    let m = u64::from_le_bytes(u64buf) as usize;
+    let m = u64::from_le_bytes(u64buf);
+    // node ids are u32, so any readable file has n <= 2^32
+    if n > u64::from(u32::MAX) + 1 {
+        anyhow::bail!("graph header claims n={n}, beyond the u32 node-id space (corrupt file?)");
+    }
+    let want_len = m
+        .checked_mul(8)
+        .and_then(|b| b.checked_add(BIN_HEADER))
+        .ok_or_else(|| anyhow::anyhow!("graph header claims m={m} edges; size overflows"))?;
+    if want_len != file_len {
+        anyhow::bail!(
+            "graph file is {file_len} bytes but header (n={n}, m={m}) requires {want_len}: \
+             truncated or corrupt"
+        );
+    }
+    let n = n as usize;
+    let m = m as usize;
     let mut edges = Vec::with_capacity(m);
     let mut pair = [0u8; 8];
     for _ in 0..m {
@@ -146,6 +174,59 @@ mod tests {
         save_edgelist_bin(&el, &p).unwrap();
         let back = load_edgelist_bin(&p).unwrap();
         assert_eq!(el, back);
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn bin_rejects_truncated_header_vs_size() {
+        // regression: a header claiming a huge edge count must fail on
+        // the size check, not attempt the allocation
+        let d = tmpdir();
+        let p = d.join("huge.bin");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(BIN_MAGIC);
+        bytes.extend_from_slice(&100u64.to_le_bytes()); // n
+        bytes.extend_from_slice(&u64::MAX.to_le_bytes()); // m: absurd
+        std::fs::write(&p, &bytes).unwrap();
+        let err = format!("{:#}", load_edgelist_bin(&p).unwrap_err());
+        assert!(err.contains("overflows") || err.contains("truncated"), "{err}");
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn bin_rejects_size_mismatch_both_ways() {
+        let d = tmpdir();
+        let el = generators::erdos_renyi(50, 200, 9);
+        let p = d.join("g.bin");
+        save_edgelist_bin(&el, &p).unwrap();
+        let good = std::fs::read(&p).unwrap();
+        // truncated payload
+        std::fs::write(&p, &good[..good.len() - 5]).unwrap();
+        let err = format!("{:#}", load_edgelist_bin(&p).unwrap_err());
+        assert!(err.contains("truncated or corrupt"), "{err}");
+        // trailing garbage
+        let mut padded = good.clone();
+        padded.extend_from_slice(b"junk");
+        std::fs::write(&p, &padded).unwrap();
+        let err = format!("{:#}", load_edgelist_bin(&p).unwrap_err());
+        assert!(err.contains("truncated or corrupt"), "{err}");
+        // pristine file still loads
+        std::fs::write(&p, &good).unwrap();
+        assert_eq!(load_edgelist_bin(&p).unwrap(), el);
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn bin_rejects_oversized_n() {
+        let d = tmpdir();
+        let p = d.join("bign.bin");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(BIN_MAGIC);
+        bytes.extend_from_slice(&(u64::from(u32::MAX) + 2).to_le_bytes()); // n too big
+        bytes.extend_from_slice(&0u64.to_le_bytes()); // m
+        std::fs::write(&p, &bytes).unwrap();
+        let err = format!("{:#}", load_edgelist_bin(&p).unwrap_err());
+        assert!(err.contains("node-id space"), "{err}");
         std::fs::remove_dir_all(&d).ok();
     }
 

@@ -20,14 +20,15 @@
 //!
 //! | module | role |
 //! |---|---|
-//! | [`graph`] | web-graph structures (CSR/ELL), generators, IO |
+//! | [`graph`] | web-graph structures (CSR/ELL), generators, update streams, IO |
 //! | [`pagerank`] | PageRank operators, sync baselines, residuals, ranking metrics |
+//! | [`stream`] | evolving-graph workload: `DeltaGraph` epochs + push-based incremental PageRank |
 //! | [`simnet`] | virtual-time discrete-event cluster/network simulator |
 //! | [`asynciter`] | generic asynchronous fixed-point engine (eq. 5) |
 //! | [`termination`] | Figure-1 centralized protocol + global oracle + tree detector |
 //! | [`coordinator`] | partitioning, run orchestration, adaptive comms, reports |
-//! | [`runtime`] | PJRT engine executing the AOT artifacts |
-//! | [`metrics`] | Table-1/Table-2 collectors, traces, emitters |
+//! | [`runtime`] | PJRT engine executing the AOT artifacts (stubbed without `--features xla`) |
+//! | [`metrics`] | Table-1/Table-2 collectors, stream epoch reports, traces, emitters |
 //! | [`config`] | TOML experiment configs and presets |
 
 pub mod asynciter;
@@ -38,6 +39,7 @@ pub mod metrics;
 pub mod pagerank;
 pub mod runtime;
 pub mod simnet;
+pub mod stream;
 pub mod termination;
 pub mod util;
 

@@ -6,8 +6,11 @@
 //! repro generate --graph stanford --seed 42 --out web.bin [--check]
 //! repro run [--config run.toml] [--graph G] [--procs P] [--mode sync|async]
 //!           [--tol T] [--topology clique|star|tree] [--adaptive]
-//!           [--artifact] [--global-threshold] [--seed S]
+//!           [--artifact] [--push] [--global-threshold] [--seed S]
 //! repro experiment table1|table2|global|ablations [--graph G] [--out reports/X]
+//! repro stream [--graph G] [--epochs E] [--seed S] [--tol T] [--alpha A]
+//!              [--arrivals K] [--links L] [--inserts I] [--removes R]
+//!              [--out reports/X]
 //! repro artifacts-check
 //! repro help
 //! ```
@@ -17,9 +20,10 @@ use std::collections::HashMap;
 use asyncpr::asynciter::Mode;
 use asyncpr::config::RunConfig;
 use asyncpr::coordinator::{self, experiments, Report};
-use asyncpr::graph::{io, GraphStats};
-use asyncpr::metrics::{run_summary, table1_markdown, table2_markdown};
+use asyncpr::graph::{io, Csr, GraphStats};
+use asyncpr::metrics::{run_summary, stream_markdown, table1_markdown, table2_markdown};
 use asyncpr::simnet::Topology;
+use asyncpr::util::Json;
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -50,6 +54,10 @@ fn dispatch(args: &[String]) -> anyhow::Result<()> {
             let flags = parse_flags(rest)?;
             cmd_experiment(which, &flags)
         }
+        "stream" => {
+            let flags = parse_flags(&args[1..])?;
+            cmd_stream(&flags)
+        }
         "artifacts-check" => cmd_artifacts_check(),
         "help" | "--help" | "-h" => {
             print!("{HELP}");
@@ -65,12 +73,18 @@ USAGE:
   repro generate --graph <SPEC> [--seed N] --out <FILE> [--check]
   repro run [--config FILE] [--graph SPEC] [--procs P] [--mode sync|async]
             [--tol T] [--topology clique|star|tree] [--adaptive]
-            [--artifact] [--global-threshold] [--seed N]
+            [--artifact] [--push] [--global-threshold] [--seed N]
   repro experiment <table1|table2|global|ablations> [--graph SPEC] [--out STEM]
+  repro stream [--graph SPEC] [--epochs E] [--seed N] [--tol T] [--alpha A]
+               [--arrivals K] [--links L] [--inserts I] [--removes R] [--out STEM]
   repro artifacts-check
   repro help
 
 GRAPH SPECS: stanford | scaled:<n> | erdos:<n>:<m> | path(.txt|.bin)
+
+`stream` runs the evolving-graph workload: E churn epochs over the
+graph, re-ranking incrementally (warm-started residual push) vs. from
+scratch, and checks final ranks against a fresh power-method run.
 "#;
 
 fn parse_flags(args: &[String]) -> anyhow::Result<HashMap<String, String>> {
@@ -84,7 +98,7 @@ fn parse_flags(args: &[String]) -> anyhow::Result<HashMap<String, String>> {
         // boolean flags
         if matches!(
             key,
-            "check" | "adaptive" | "artifact" | "global-threshold" | "quick"
+            "check" | "adaptive" | "artifact" | "push" | "global-threshold" | "quick"
         ) {
             map.insert(key.to_string(), "true".to_string());
             i += 1;
@@ -134,6 +148,9 @@ fn config_from_flags(flags: &HashMap<String, String>) -> anyhow::Result<RunConfi
     if flags.contains_key("artifact") {
         cfg.use_artifact = true;
     }
+    if flags.contains_key("push") {
+        cfg.use_push = true;
+    }
     if flags.contains_key("global-threshold") {
         cfg.global_threshold = true;
     }
@@ -148,29 +165,15 @@ fn cmd_generate(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         .get("out")
         .ok_or_else(|| anyhow::anyhow!("generate requires --out <file>"))?;
     eprintln!("generating {spec} (seed {seed}) ...");
-    let csr = coordinator::load_graph(spec, seed)?;
+    // one materialization serves both the stats/validation CSR and the
+    // saved edge list (the old code generated the graph twice)
+    let el = coordinator::load_edgelist(spec, seed)?;
+    let csr = Csr::from_edgelist(&el)?;
     if flags.contains_key("check") {
         csr.validate()?;
         eprintln!("structural validation OK");
     }
     println!("{}", GraphStats::compute(&csr).report());
-    // regenerate the edge list for storage
-    let el = match spec {
-        "stanford" => asyncpr::graph::generators::stanford_web_like(seed),
-        s if s.starts_with("scaled:") => {
-            let n: usize = s.trim_start_matches("scaled:").parse()?;
-            asyncpr::graph::generators::power_law_web(
-                &asyncpr::graph::generators::WebParams::scaled(n),
-                seed,
-            )
-        }
-        s if s.starts_with("erdos:") => {
-            let rest = s.trim_start_matches("erdos:");
-            let (n, m) = rest.split_once(':').unwrap();
-            asyncpr::graph::generators::erdos_renyi(n.parse()?, m.parse()?, seed)
-        }
-        other => anyhow::bail!("generate does not support loading from {other}"),
-    };
     if out.ends_with(".bin") {
         io::save_edgelist_bin(&el, out)?;
     } else {
@@ -280,6 +283,81 @@ fn cmd_experiment(which: &str, flags: &HashMap<String, String>) -> anyhow::Resul
     if let Some(stem) = out {
         rep.write(&stem)?;
         eprintln!("wrote {stem}.md / {stem}.json");
+    }
+    Ok(())
+}
+
+fn cmd_stream(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let graph = flags
+        .get("graph")
+        .cloned()
+        .unwrap_or_else(|| "scaled:50000".to_string());
+    let mut opts = experiments::StreamOptions::default();
+    if let Some(v) = flags.get("epochs") {
+        opts.epochs = v.parse()?;
+    }
+    if let Some(v) = flags.get("seed") {
+        opts.seed = v.parse()?;
+    }
+    if let Some(v) = flags.get("tol") {
+        opts.tol = v.parse()?;
+    }
+    if let Some(v) = flags.get("alpha") {
+        opts.alpha = v.parse()?;
+    }
+    // churn overrides ride as options; the driver resolves them against
+    // graph-scaled defaults once the graph is loaded (loading it here
+    // just to size the defaults would build it twice)
+    if let Some(v) = flags.get("arrivals") {
+        opts.arrivals = Some(v.parse()?);
+    }
+    if let Some(v) = flags.get("links") {
+        opts.links_per_arrival = Some(v.parse()?);
+    }
+    if let Some(v) = flags.get("inserts") {
+        opts.churn_inserts = Some(v.parse()?);
+    }
+    if let Some(v) = flags.get("removes") {
+        opts.churn_removes = Some(v.parse()?);
+    }
+
+    eprintln!(
+        "streaming {graph}: {} update epochs, tol {:.0e}, alpha {} ...",
+        opts.epochs, opts.tol, opts.alpha
+    );
+    let rep = experiments::stream_epochs(&graph, &opts)?;
+    let md = stream_markdown(&rep.rows);
+    println!("{md}");
+    let saving = rep.update_scratch_pushes as f64 / rep.update_inc_pushes.max(1) as f64;
+    println!(
+        "update epochs: incremental {} pushes vs from-scratch {} ({saving:.1}x saving)",
+        rep.update_inc_pushes, rep.update_scratch_pushes
+    );
+    println!(
+        "warm start strictly cheaper on every update epoch: {}",
+        if rep.all_updates_cheaper { "yes" } else { "NO" }
+    );
+    // the L1 bar scales with the requested tolerance (floored at the
+    // repo's 1e-8 acceptance threshold, which the default tol meets)
+    let l1_bar = opts.l1_check_threshold();
+    println!(
+        "final-epoch ranks vs fresh power method: L1 = {:.2e} ({} {l1_bar:.0e})",
+        rep.final_l1_vs_power,
+        if rep.final_l1_vs_power < l1_bar { "within" } else { "OUTSIDE" }
+    );
+
+    if let Some(stem) = flags.get("out") {
+        let mut report = Report::new();
+        report.add_section("Evolving-graph epochs (stream)", &md);
+        report.add_json(
+            "stream",
+            Json::Arr(rep.rows.iter().map(|r| r.to_json()).collect()),
+        );
+        report.write(stem)?;
+        eprintln!("wrote {stem}.md / {stem}.json");
+    }
+    if !rep.all_updates_cheaper || rep.final_l1_vs_power >= l1_bar {
+        anyhow::bail!("stream acceptance check failed (see report above)");
     }
     Ok(())
 }

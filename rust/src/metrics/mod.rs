@@ -91,6 +91,84 @@ pub fn table2_markdown(m: &RunMetrics) -> String {
     t.to_markdown()
 }
 
+/// One epoch of the evolving-graph experiment (`repro stream`): the
+/// incremental warm-start solve vs. the from-scratch baseline on the
+/// same snapshot.
+#[derive(Debug, Clone)]
+pub struct StreamEpochRow {
+    pub epoch: usize,
+    pub n: usize,
+    pub m: usize,
+    /// Effective batch contents (0/0/0 for the initial build epoch).
+    pub new_nodes: usize,
+    pub inserted: usize,
+    pub removed: usize,
+    /// Warm-start (incremental) solve cost.
+    pub inc_pushes: u64,
+    pub inc_touched: usize,
+    pub inc_residual: f64,
+    /// From-scratch push solve on the identical snapshot, same tol.
+    pub scratch_pushes: u64,
+    /// L1 distance of the incremental ranks to a fresh f64 power-method
+    /// run on the snapshot.
+    pub l1_vs_power: f64,
+}
+
+impl StreamEpochRow {
+    pub fn cells(&self) -> Vec<String> {
+        vec![
+            self.epoch.to_string(),
+            self.n.to_string(),
+            self.m.to_string(),
+            format!("+{}n +{}e -{}e", self.new_nodes, self.inserted, self.removed),
+            self.inc_pushes.to_string(),
+            self.inc_touched.to_string(),
+            self.scratch_pushes.to_string(),
+            if self.scratch_pushes > 0 {
+                format!("{:.1}x", self.scratch_pushes as f64 / self.inc_pushes.max(1) as f64)
+            } else {
+                "-".into()
+            },
+            format!("{:.1e}", self.l1_vs_power),
+        ]
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = std::collections::BTreeMap::new();
+        o.insert("epoch".into(), Json::Num(self.epoch as f64));
+        o.insert("n".into(), Json::Num(self.n as f64));
+        o.insert("m".into(), Json::Num(self.m as f64));
+        o.insert("new_nodes".into(), Json::Num(self.new_nodes as f64));
+        o.insert("inserted".into(), Json::Num(self.inserted as f64));
+        o.insert("removed".into(), Json::Num(self.removed as f64));
+        o.insert("inc_pushes".into(), Json::Num(self.inc_pushes as f64));
+        o.insert("inc_touched".into(), Json::Num(self.inc_touched as f64));
+        o.insert("inc_residual".into(), Json::Num(self.inc_residual));
+        o.insert("scratch_pushes".into(), Json::Num(self.scratch_pushes as f64));
+        o.insert("l1_vs_power".into(), Json::Num(self.l1_vs_power));
+        Json::Obj(o)
+    }
+}
+
+/// Render the per-epoch stream table.
+pub fn stream_markdown(rows: &[StreamEpochRow]) -> String {
+    let mut t = Table::new(&[
+        "epoch",
+        "n",
+        "m",
+        "batch",
+        "inc pushes",
+        "touched",
+        "scratch pushes",
+        "saving",
+        "L1 vs power",
+    ]);
+    for r in rows {
+        t.row(&r.cells());
+    }
+    t.to_markdown()
+}
+
 /// Run-level summary (global residual, wire stats) for EXPERIMENTS.md.
 pub fn run_summary(m: &RunMetrics) -> String {
     format!(
@@ -170,6 +248,39 @@ mod tests {
         assert!(md.contains("Completed Imports"));
         // 4 data rows + header + separator
         assert_eq!(md.trim().lines().count(), 6);
+    }
+
+    fn fake_stream_row(epoch: usize) -> StreamEpochRow {
+        StreamEpochRow {
+            epoch,
+            n: 1000 + epoch,
+            m: 8000,
+            new_nodes: 1,
+            inserted: 20,
+            removed: 10,
+            inc_pushes: 500,
+            inc_touched: 300,
+            inc_residual: 9.0e-11,
+            scratch_pushes: 50_000,
+            l1_vs_power: 3.0e-10,
+        }
+    }
+
+    #[test]
+    fn stream_table_layout_and_saving_ratio() {
+        let md = stream_markdown(&[fake_stream_row(0), fake_stream_row(1)]);
+        assert!(md.contains("inc pushes"));
+        assert!(md.contains("100.0x"), "{md}");
+        assert!(md.contains("+1n +20e -10e"));
+        assert_eq!(md.trim().lines().count(), 4);
+    }
+
+    #[test]
+    fn stream_row_json() {
+        let j = fake_stream_row(3).to_json();
+        assert_eq!(j.get("epoch").unwrap().as_usize(), Some(3));
+        assert_eq!(j.get("scratch_pushes").unwrap().as_usize(), Some(50_000));
+        assert!(Json::parse(&j.to_string_compact()).is_ok());
     }
 
     #[test]

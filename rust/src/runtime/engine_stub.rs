@@ -1,0 +1,106 @@
+//! Stub PJRT engine for builds without the `xla` feature.
+//!
+//! Mirrors the public API of `engine.rs` exactly — same types, same
+//! signatures — but [`Engine::new`] always fails, and the remaining
+//! methods are statically unreachable (the types carry an
+//! [`std::convert::Infallible`] witness, so no instance can exist).
+//! This keeps `ArtifactBlockOp`, the CLI `--artifact` path, benches and
+//! examples compiling in the offline build while the error surfaces at
+//! the single entry point with an actionable message.
+
+use crate::Result;
+
+use super::manifest::{Bucket, Manifest};
+
+/// Shared PJRT engine (stub: unconstructible).
+#[derive(Clone)]
+pub struct Engine {
+    never: std::convert::Infallible,
+    manifest: Manifest,
+}
+
+impl Engine {
+    /// Always fails: this build does not carry the PJRT bindings.
+    pub fn new(artifacts_dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        anyhow::bail!(
+            "asyncpr was built without the `xla` feature; the PJRT artifact \
+             runtime is unavailable (artifacts dir: {}). Rebuild with \
+             `--features xla` (plus the external `xla` dependency and \
+             `make artifacts`) or drop `--artifact`/`use_artifact`.",
+            artifacts_dir.as_ref().display()
+        )
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        match self.never {}
+    }
+
+    pub fn platform(&self) -> String {
+        match self.never {}
+    }
+
+    /// Instantiate a step executor (stub: statically unreachable).
+    pub fn pagerank_step(
+        &self,
+        _n_rows: usize,
+        _block_rows: usize,
+        _width: usize,
+    ) -> Result<PagerankStepExe> {
+        match self.never {}
+    }
+}
+
+/// Reusable, padded host-side buffers for one UE's step calls.
+///
+/// Kept layout-identical to the real engine so caller code that fills
+/// `x`/`bias`/`dang`/`alpha` type-checks unchanged.
+pub struct StepBuffers {
+    pub vals: Vec<f32>,
+    pub cols: Vec<i32>,
+    pub x: Vec<f32>,
+    pub xold: Vec<f32>,
+    pub bias: Vec<f32>,
+    pub dang: [f32; 1],
+    pub alpha: [f32; 1],
+}
+
+/// A compiled `pagerank_step` (stub: unconstructible).
+pub struct PagerankStepExe {
+    never: std::convert::Infallible,
+    bucket: Bucket,
+}
+
+impl PagerankStepExe {
+    pub fn bucket(&self) -> &Bucket {
+        match self.never {}
+    }
+
+    pub fn buffers(&self) -> StepBuffers {
+        match self.never {}
+    }
+
+    pub fn load_matrix(&mut self, _buf: &mut StepBuffers, _vals: &[f32], _cols: &[u32]) {
+        match self.never {}
+    }
+
+    pub fn step(&mut self, _buf: &mut StepBuffers) -> Result<(Vec<f32>, f32)> {
+        match self.never {}
+    }
+
+    pub fn logical_shape(&self) -> (usize, usize, usize) {
+        match self.never {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_engine_errors_with_guidance() {
+        let err = Engine::new(super::super::default_artifacts_dir()).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("xla"), "{msg}");
+        assert!(msg.contains("--artifact") || msg.contains("use_artifact"), "{msg}");
+    }
+}

@@ -4,7 +4,19 @@
 //! module compiles those artifacts on the PJRT CPU client (the `xla`
 //! crate) and exposes a typed [`PagerankStepExe::step`] used by worker
 //! UEs. Python never runs at request time.
+//!
+//! The real engine requires the external `xla` bindings, which the
+//! offline build environment does not carry; it is compiled only with
+//! `--features xla` (after adding the `xla` dependency to Cargo.toml).
+//! The default build substitutes [`engine_stub`], an API-identical stub
+//! whose `Engine::new` fails with a readable error, so every artifact
+//! code path type-checks and errors cleanly at runtime instead of at
+//! link time.
 
+#[cfg(feature = "xla")]
+mod engine;
+#[cfg(not(feature = "xla"))]
+#[path = "engine_stub.rs"]
 mod engine;
 pub mod manifest;
 

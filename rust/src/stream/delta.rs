@@ -1,0 +1,319 @@
+//! `DeltaGraph` — a mutable, epoch-batched overlay over the static CSR
+//! pipeline.
+//!
+//! The crawl view of the Web is never frozen: pages arrive, links churn.
+//! The paper's asynchronous premise (§1) is that synchronized global
+//! recomputation is untenable at that scale; this structure supplies the
+//! other half of the story — a graph that *changes between solves*.
+//!
+//! Representation: forward (out-edge) adjacency, sorted and
+//! deduplicated per source. That is the orientation a crawler produces
+//! and the one the push solver ([`super::PushState`]) walks; the static
+//! analysis stack keeps using the transposed [`Csr`] obtained through
+//! [`DeltaGraph::to_csr`] (the "snapshot handoff").
+//!
+//! Updates are applied in batches ([`UpdateBatch`]) — one batch per
+//! epoch — and every apply returns an [`AppliedDelta`] recording which
+//! sources changed and what their out-lists were, which is exactly the
+//! information the warm-start residual injection needs
+//! (`PushState::apply_batch`).
+
+use std::collections::BTreeMap;
+
+use crate::graph::{Csr, EdgeList, NodeId};
+use crate::Result;
+
+/// One epoch's worth of graph mutations.
+///
+/// Semantics of `apply`: the node set grows by `new_nodes` first (ids
+/// `old_n..old_n + new_nodes`, born dangling), then `insert` edges are
+/// added, then `remove` edges are deleted. Inserts of already-present
+/// edges and removals of absent edges are no-ops (the adjacency is 0/1,
+/// matching CSR dedup semantics).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct UpdateBatch {
+    pub new_nodes: usize,
+    pub insert: Vec<(NodeId, NodeId)>,
+    pub remove: Vec<(NodeId, NodeId)>,
+}
+
+impl UpdateBatch {
+    pub fn is_empty(&self) -> bool {
+        self.new_nodes == 0 && self.insert.is_empty() && self.remove.is_empty()
+    }
+
+    /// Nominal size of the batch (requested ops, before dedup).
+    pub fn len(&self) -> usize {
+        self.new_nodes + self.insert.len() + self.remove.len()
+    }
+}
+
+/// What actually changed when a batch was applied.
+#[derive(Debug, Clone)]
+pub struct AppliedDelta {
+    pub old_n: usize,
+    pub new_n: usize,
+    /// Effective (post-dedup) edge insertions / removals.
+    pub inserted: usize,
+    pub removed: usize,
+    /// Every source whose out-edge set changed, with its *previous*
+    /// out-list (sorted). Sources whose list ended up identical (an
+    /// insert cancelled by a removal in the same batch) are omitted.
+    pub changed_sources: Vec<(NodeId, Vec<NodeId>)>,
+}
+
+/// Mutable forward-adjacency web graph, updated in epochs.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DeltaGraph {
+    /// Sorted, deduplicated out-neighbors per source.
+    out: Vec<Vec<NodeId>>,
+    /// Total edge count (Σ out-degrees).
+    m: usize,
+    /// Number of batches applied so far.
+    epoch: u64,
+}
+
+impl DeltaGraph {
+    /// Empty graph on `n` nodes (all dangling).
+    pub fn new(n: usize) -> Self {
+        DeltaGraph { out: vec![Vec::new(); n], m: 0, epoch: 0 }
+    }
+
+    /// Build from an edge list (duplicates collapsed, like CSR).
+    pub fn from_edgelist(el: &EdgeList) -> Self {
+        let mut out = vec![Vec::new(); el.n()];
+        for &(s, d) in el.edges() {
+            out[s as usize].push(d);
+        }
+        let mut m = 0;
+        for l in out.iter_mut() {
+            l.sort_unstable();
+            l.dedup();
+            m += l.len();
+        }
+        DeltaGraph { out, m, epoch: 0 }
+    }
+
+    pub fn n(&self) -> usize {
+        self.out.len()
+    }
+
+    /// Deduplicated edge count.
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    /// Batches applied so far.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    #[inline]
+    pub fn outdeg(&self, u: usize) -> usize {
+        self.out[u].len()
+    }
+
+    /// Sorted out-neighbors of `u`.
+    #[inline]
+    pub fn out(&self, u: usize) -> &[NodeId] {
+        &self.out[u]
+    }
+
+    #[inline]
+    pub fn is_dangling(&self, u: usize) -> bool {
+        self.out[u].is_empty()
+    }
+
+    pub fn dangling_count(&self) -> usize {
+        self.out.iter().filter(|l| l.is_empty()).count()
+    }
+
+    pub fn has_edge(&self, u: NodeId, v: NodeId) -> bool {
+        self.out[u as usize].binary_search(&v).is_ok()
+    }
+
+    /// Visit every edge (source, target), sources in order.
+    pub fn for_each_edge(&self, mut f: impl FnMut(NodeId, NodeId)) {
+        for (u, l) in self.out.iter().enumerate() {
+            for &v in l {
+                f(u as NodeId, v);
+            }
+        }
+    }
+
+    /// Apply one batch; returns the effective delta (see
+    /// [`AppliedDelta`]). Fails on out-of-bounds endpoints — the graph
+    /// is left untouched in that case.
+    pub fn apply(&mut self, batch: &UpdateBatch) -> Result<AppliedDelta> {
+        let old_n = self.n();
+        let new_n = old_n + batch.new_nodes;
+        for &(s, d) in batch.insert.iter().chain(&batch.remove) {
+            if s as usize >= new_n || d as usize >= new_n {
+                anyhow::bail!(
+                    "update edge ({s}, {d}) out of bounds for n={new_n} \
+                     (old n {old_n} + {} arrivals)",
+                    batch.new_nodes
+                );
+            }
+        }
+        self.out.resize(new_n, Vec::new());
+
+        // old out-lists, captured lazily the first time a source changes
+        let mut old_lists: BTreeMap<NodeId, Vec<NodeId>> = BTreeMap::new();
+        let mut inserted = 0usize;
+        let mut removed = 0usize;
+        for &(s, d) in &batch.insert {
+            let l = &mut self.out[s as usize];
+            if let Err(pos) = l.binary_search(&d) {
+                old_lists.entry(s).or_insert_with(|| l.clone());
+                l.insert(pos, d);
+                self.m += 1;
+                inserted += 1;
+            }
+        }
+        for &(s, d) in &batch.remove {
+            let l = &mut self.out[s as usize];
+            if let Ok(pos) = l.binary_search(&d) {
+                old_lists.entry(s).or_insert_with(|| l.clone());
+                l.remove(pos);
+                self.m -= 1;
+                removed += 1;
+            }
+        }
+
+        // drop sources whose list round-tripped back to its old value
+        let changed_sources: Vec<(NodeId, Vec<NodeId>)> = old_lists
+            .into_iter()
+            .filter(|(s, old)| &self.out[*s as usize] != old)
+            .collect();
+
+        self.epoch += 1;
+        Ok(AppliedDelta { old_n, new_n, inserted, removed, changed_sources })
+    }
+
+    /// Materialize as an edge list (sorted by source, then target).
+    pub fn to_edgelist(&self) -> EdgeList {
+        let mut el = EdgeList::with_capacity(self.n(), self.m);
+        self.for_each_edge(|s, d| el.push(s, d));
+        el
+    }
+
+    /// Snapshot handoff to the static stack: the transposed, normalized
+    /// CSR the synchronous baselines and the DES engine consume.
+    pub fn to_csr(&self) -> Result<Csr> {
+        Csr::from_edgelist(&self.to_edgelist())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> DeltaGraph {
+        // 0->1, 0->2, 1->2, 2->0; 3 dangling
+        let el = EdgeList::from_edges(4, vec![(0, 1), (0, 2), (1, 2), (2, 0)]).unwrap();
+        DeltaGraph::from_edgelist(&el)
+    }
+
+    #[test]
+    fn builds_and_dedups() {
+        let el = EdgeList::from_edges(3, vec![(0, 1), (0, 1), (1, 2), (0, 0)]).unwrap();
+        let g = DeltaGraph::from_edgelist(&el);
+        assert_eq!(g.m(), 3);
+        assert_eq!(g.out(0), &[0, 1]);
+        assert_eq!(g.outdeg(1), 1);
+        assert!(g.is_dangling(2));
+        assert_eq!(g.dangling_count(), 1);
+    }
+
+    #[test]
+    fn apply_inserts_removes_and_grows() {
+        let mut g = toy();
+        let batch = UpdateBatch {
+            new_nodes: 2,
+            insert: vec![(3, 0), (4, 1), (0, 5), (0, 1)], // (0,1) is a dup
+            remove: vec![(1, 2), (2, 3)],                 // (2,3) absent
+        };
+        let d = g.apply(&batch).unwrap();
+        assert_eq!((d.old_n, d.new_n), (4, 6));
+        assert_eq!(d.inserted, 3);
+        assert_eq!(d.removed, 1);
+        assert_eq!(g.n(), 6);
+        assert_eq!(g.m(), 4 + 3 - 1);
+        assert!(g.has_edge(3, 0) && g.has_edge(4, 1) && g.has_edge(0, 5));
+        assert!(!g.has_edge(1, 2));
+        assert!(g.is_dangling(1), "1 lost its only out-link");
+        assert!(g.is_dangling(5));
+        // changed sources carry their OLD lists
+        let changed: BTreeMap<_, _> = d.changed_sources.into_iter().collect();
+        assert_eq!(changed[&0], vec![1, 2]);
+        assert_eq!(changed[&1], vec![2]);
+        assert_eq!(changed[&3], Vec::<NodeId>::new());
+        assert_eq!(changed[&4], Vec::<NodeId>::new());
+        assert!(!changed.contains_key(&2));
+        assert_eq!(g.epoch(), 1);
+    }
+
+    #[test]
+    fn cancelled_mutation_not_reported_changed() {
+        let mut g = toy();
+        let d = g
+            .apply(&UpdateBatch {
+                new_nodes: 0,
+                insert: vec![(0, 3)],
+                remove: vec![(0, 3)],
+            })
+            .unwrap();
+        assert_eq!(d.inserted, 1);
+        assert_eq!(d.removed, 1);
+        assert!(d.changed_sources.is_empty());
+        assert_eq!(g, toy_with_epoch(1));
+    }
+
+    fn toy_with_epoch(e: u64) -> DeltaGraph {
+        let mut g = toy();
+        g.epoch = e;
+        g
+    }
+
+    #[test]
+    fn rejects_out_of_bounds() {
+        let mut g = toy();
+        let before = g.clone();
+        assert!(g
+            .apply(&UpdateBatch { new_nodes: 1, insert: vec![(0, 5)], remove: vec![] })
+            .is_err());
+        assert_eq!(g, before, "failed apply must not mutate");
+    }
+
+    #[test]
+    fn snapshot_matches_csr_pipeline() {
+        let mut g = toy();
+        g.apply(&UpdateBatch {
+            new_nodes: 1,
+            insert: vec![(4, 0), (3, 4)],
+            remove: vec![(0, 2)],
+        })
+        .unwrap();
+        let csr = g.to_csr().unwrap();
+        csr.validate().unwrap();
+        assert_eq!(csr.n(), g.n());
+        assert_eq!(csr.nnz(), g.m());
+        // outdeg agreement
+        for u in 0..g.n() {
+            assert_eq!(csr.outdeg()[u] as usize, g.outdeg(u), "node {u}");
+        }
+        assert_eq!(
+            csr.dangling().len(),
+            g.dangling_count(),
+            "dangling sets must agree"
+        );
+    }
+
+    #[test]
+    fn edgelist_roundtrip() {
+        let g = toy();
+        let el = g.to_edgelist();
+        assert_eq!(DeltaGraph::from_edgelist(&el), g);
+    }
+}

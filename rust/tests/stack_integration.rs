@@ -2,7 +2,10 @@
 //! the L2 jax model, lowered to HLO text) executed from the L3
 //! coordinator via PJRT, cross-validated against the native path.
 //!
-//! Requires `make artifacts`.
+//! Requires `make artifacts` and a build with `--features xla` (the
+//! default offline build substitutes a stub PJRT engine that cannot
+//! execute kernels, so this whole suite is feature-gated).
+#![cfg(feature = "xla")]
 
 use std::sync::Arc;
 

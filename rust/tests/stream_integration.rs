@@ -1,0 +1,212 @@
+//! Property & integration tests for the evolving-graph `stream`
+//! subsystem (seeded random campaigns, same style as proptests.rs —
+//! every failure prints its trial seed).
+//!
+//! Invariants covered:
+//!   * push diffusion converges to `power_method`'s vector within
+//!     tolerance on random graphs (satellite requirement a);
+//!   * incremental per-epoch ranks match from-scratch recomputation
+//!     after EVERY update batch (satellite requirement b);
+//!   * `DeltaGraph` snapshots stay structurally consistent with the
+//!     `Csr` pipeline across arbitrary batches;
+//!   * the epoch driver reports warm-start savings and power-method
+//!     agreement end-to-end.
+
+use asyncpr::coordinator::experiments::{self, StreamOptions};
+use asyncpr::graph::generators::{self, churn_batch, ChurnParams};
+use asyncpr::graph::{Csr, EdgeList};
+use asyncpr::pagerank::{power_method, PagerankProblem, PowerOptions};
+use asyncpr::stream::{power_method_f64, DeltaGraph, PushState, UpdateBatch};
+use asyncpr::util::Rng;
+
+fn l1_64(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).sum()
+}
+
+fn random_edgelist(rng: &mut Rng, n: usize) -> EdgeList {
+    let m = rng.range(n, n * 6);
+    let mut el = EdgeList::new(n);
+    for _ in 0..m {
+        el.push(rng.range(0, n) as u32, rng.range(0, n) as u32);
+    }
+    el
+}
+
+fn random_batch(rng: &mut Rng, g: &DeltaGraph) -> UpdateBatch {
+    let n0 = g.n();
+    let new_nodes = rng.range(0, 4);
+    let n1 = n0 + new_nodes;
+    let mut batch = UpdateBatch { new_nodes, ..Default::default() };
+    for _ in 0..rng.range(0, 30) {
+        batch
+            .insert
+            .push((rng.range(0, n1) as u32, rng.range(0, n1) as u32));
+    }
+    let mut edges = Vec::new();
+    g.for_each_edge(|s, d| edges.push((s, d)));
+    if !edges.is_empty() {
+        for _ in 0..rng.range(0, 20) {
+            batch.remove.push(edges[rng.range(0, edges.len())]);
+        }
+    }
+    batch
+}
+
+#[test]
+fn prop_push_converges_to_power_method_any_graph() {
+    // requirement (a): the f64 push solver lands on the f32
+    // power_method fixed point within f32 cross-precision tolerance
+    let mut rng = Rng::new(301);
+    for trial in 0..20 {
+        let n = rng.range(20, 800);
+        let el = random_edgelist(&mut rng, n);
+        let g = DeltaGraph::from_edgelist(&el);
+        let mut s = PushState::new(n, 0.85);
+        s.begin_epoch();
+        let st = s.solve(&g, 1e-11, u64::MAX);
+        assert!(st.converged, "trial {trial}");
+
+        let problem = PagerankProblem::new(Csr::from_edgelist(&el).unwrap(), 0.85);
+        let pm = power_method(
+            &problem,
+            &PowerOptions { tol: 1e-7, max_iters: 50_000, record_residuals: false },
+        );
+        assert!(pm.converged, "trial {trial}");
+        let d: f64 = s
+            .ranks()
+            .iter()
+            .zip(&pm.x)
+            .map(|(a, b)| (a - *b as f64).abs())
+            .sum();
+        // budget: f32 power tail (~tol·α/(1-α)) plus f32 rounding
+        assert!(d < 1e-4, "trial {trial} (n={n}): push vs power_method L1 {d}");
+    }
+}
+
+#[test]
+fn prop_incremental_matches_scratch_after_every_batch() {
+    // requirement (b): after EVERY batch the warm-started state equals
+    // a from-scratch solve of the same snapshot to 1e-8 L1
+    let mut rng = Rng::new(302);
+    for trial in 0..8 {
+        let n = rng.range(50, 500);
+        let el = random_edgelist(&mut rng, n);
+        let mut g = DeltaGraph::from_edgelist(&el);
+        let mut inc = PushState::new(g.n(), 0.85);
+        inc.begin_epoch();
+        inc.solve(&g, 1e-11, u64::MAX);
+        for round in 0..5 {
+            let batch = random_batch(&mut rng, &g);
+            let delta = g.apply(&batch).unwrap();
+            inc.begin_epoch();
+            inc.apply_batch(&g, &delta);
+            inc.solve(&g, 1e-11, u64::MAX);
+
+            let mut cold = PushState::new(g.n(), 0.85);
+            cold.begin_epoch();
+            cold.solve(&g, 1e-11, u64::MAX);
+            let d = l1_64(inc.ranks(), cold.ranks());
+            assert!(d < 1e-8, "trial {trial} round {round}: inc vs scratch {d}");
+
+            let (xref, _) = power_method_f64(&g, 0.85, 1e-12, 100_000);
+            let dp = l1_64(inc.ranks(), &xref);
+            assert!(dp < 1e-8, "trial {trial} round {round}: inc vs power {dp}");
+        }
+    }
+}
+
+#[test]
+fn prop_delta_graph_snapshot_consistent_with_csr() {
+    let mut rng = Rng::new(303);
+    for trial in 0..20 {
+        let n = rng.range(10, 300);
+        let el = random_edgelist(&mut rng, n);
+        let mut g = DeltaGraph::from_edgelist(&el);
+        for _ in 0..3 {
+            let batch = random_batch(&mut rng, &g);
+            g.apply(&batch).unwrap();
+        }
+        let csr = g.to_csr().unwrap();
+        csr.validate().unwrap();
+        assert_eq!(csr.n(), g.n(), "trial {trial}");
+        assert_eq!(csr.nnz(), g.m(), "trial {trial}");
+        for u in 0..g.n() {
+            assert_eq!(
+                csr.outdeg()[u] as usize,
+                g.outdeg(u),
+                "trial {trial} node {u}"
+            );
+        }
+        // roundtrip through the edge list is structurally lossless
+        let rt = DeltaGraph::from_edgelist(&g.to_edgelist());
+        assert_eq!(rt.m(), g.m(), "trial {trial}");
+        for u in 0..g.n() {
+            assert_eq!(rt.out(u), g.out(u), "trial {trial} node {u}");
+        }
+    }
+}
+
+#[test]
+fn stream_epochs_driver_end_to_end() {
+    // the `repro stream` acceptance shape at test scale: warm start
+    // strictly cheaper on every update epoch, final ranks within 1e-8
+    // of a fresh power-method run
+    let opts = StreamOptions { epochs: 4, seed: 9, ..Default::default() };
+    let rep = experiments::stream_epochs("scaled:3000", &opts).unwrap();
+    assert_eq!(rep.rows.len(), 5);
+    assert!(rep.rows[0].inc_pushes > 0);
+    for r in &rep.rows[1..] {
+        assert!(
+            r.inc_pushes < r.scratch_pushes,
+            "epoch {}: warm {} >= scratch {}",
+            r.epoch,
+            r.inc_pushes,
+            r.scratch_pushes
+        );
+        assert!(r.l1_vs_power < 1e-8, "epoch {}: L1 {}", r.epoch, r.l1_vs_power);
+        assert!(r.inserted + r.new_nodes > 0, "churn must do something");
+    }
+    assert!(rep.all_updates_cheaper);
+    assert!(rep.final_l1_vs_power < 1e-8);
+    // and meaningfully cheaper, not just strictly:
+    assert!(
+        rep.update_scratch_pushes as f64 / rep.update_inc_pushes as f64 > 2.0,
+        "warm start saved too little: {} vs {}",
+        rep.update_inc_pushes,
+        rep.update_scratch_pushes
+    );
+}
+
+#[test]
+fn stream_epochs_deterministic() {
+    let opts = StreamOptions { epochs: 2, seed: 11, ..Default::default() };
+    let a = experiments::stream_epochs("scaled:1500", &opts).unwrap();
+    let b = experiments::stream_epochs("scaled:1500", &opts).unwrap();
+    assert_eq!(a.rows.len(), b.rows.len());
+    for (ra, rb) in a.rows.iter().zip(&b.rows) {
+        assert_eq!(ra.inc_pushes, rb.inc_pushes);
+        assert_eq!(ra.scratch_pushes, rb.scratch_pushes);
+        assert_eq!(ra.m, rb.m);
+        assert_eq!(ra.l1_vs_power, rb.l1_vs_power);
+    }
+}
+
+#[test]
+fn churned_web_stays_web_like() {
+    // after heavy churn the snapshot still feeds the whole static
+    // stack: CSR validates, power method converges in a sane band
+    let el = generators::power_law_web(&generators::WebParams::scaled(3_000), 5);
+    let mut g = DeltaGraph::from_edgelist(&el);
+    let churn = ChurnParams::scaled_to(g.n(), g.m());
+    let mut rng = Rng::new(13);
+    for _ in 0..10 {
+        let batch = churn_batch(&g, &churn, &mut rng);
+        g.apply(&batch).unwrap();
+    }
+    let csr = g.to_csr().unwrap();
+    csr.validate().unwrap();
+    let problem = PagerankProblem::new(csr, 0.85);
+    let pm = power_method(&problem, &PowerOptions::default());
+    assert!(pm.converged);
+    assert!(pm.iters < 200, "churn degenerated the graph: {} iters", pm.iters);
+}
