@@ -1,0 +1,89 @@
+//! Bench: shard-count scaling of the parallel residual-push engine.
+//!
+//! Cold-solves one generated power-law web (~200k edges at full scale)
+//! with `ShardedPush` + `run_threaded_push` at shard counts 1/2/4/8 and
+//! reports wall time, total pushes (staleness inflates the count as
+//! shards grow — the price of asynchrony the paper trades for wall
+//! time), fragments exchanged, and speedup over the single-shard run.
+//! A correctness postlude checks every shard count lands on the same
+//! ranks as the f64 power method.
+//!
+//! The speedup ceiling is min(shards, host cores); on the paper's
+//! premise the interesting number is that it is > 1 at all — no
+//! synchronization phase, residual fragments only, and the solver
+//! still accelerates.
+
+use asyncpr::asynciter::{run_threaded_push, PushThreadOptions};
+use asyncpr::metrics::{parallel_push_markdown, ShardScaleRow};
+use asyncpr::stream::{power_method_f64, DeltaGraph, ShardedPush};
+use asyncpr::util::Bench;
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick")
+        || std::env::var("BENCH_FAST").ok().as_deref() == Some("1");
+    // WebParams::scaled keeps Stanford-Web's ~8.2 edges/node, so
+    // scaled:25000 carries ~205k edges
+    let graph = if quick { "scaled:8000" } else { "scaled:25000" };
+    let tol = 1e-9;
+    println!("== bench push_parallel (graph = {graph}, tol = {tol:.0e}) ==\n");
+
+    let el = asyncpr::coordinator::load_edgelist(graph, 42)?;
+    let g = DeltaGraph::from_edgelist(&el);
+    println!(
+        "n = {}, m = {}, host parallelism = {}\n",
+        g.n(),
+        g.m(),
+        std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1)
+    );
+
+    let bench = if quick { Bench::new(1, 3) } else { Bench::new(1, 5) };
+    let opts = PushThreadOptions { tol, ..Default::default() };
+
+    let mut rows: Vec<ShardScaleRow> = Vec::new();
+    let mut base_wall = 0.0f64;
+    for shards in [1usize, 2, 4, 8] {
+        let mut pushes = 0u64;
+        let mut fragments = 0u64;
+        let mut residual = 0.0f64;
+        let stats = bench.run(&format!("cold solve, {shards} shard(s)"), || {
+            let mut sp = ShardedPush::new(&g, 0.85, shards);
+            let tm = run_threaded_push(&g, &mut sp, &opts);
+            pushes = tm.shard_pushes.iter().sum();
+            fragments = tm.fragments_sent.iter().sum();
+            residual = tm.residual;
+        });
+        let wall_ms = stats.mean.as_secs_f64() * 1e3;
+        if shards == 1 {
+            base_wall = wall_ms;
+        }
+        println!("{}", stats.report());
+        rows.push(ShardScaleRow {
+            shards,
+            wall_ms,
+            pushes,
+            fragments,
+            speedup: if wall_ms > 0.0 { base_wall / wall_ms } else { 0.0 },
+            residual,
+        });
+    }
+    println!("\n{}", parallel_push_markdown(&rows));
+
+    // correctness postlude: every shard count lands on the reference
+    let (xref, _) = power_method_f64(&g, 0.85, 1e-10, 10_000);
+    for shards in [1usize, 4] {
+        let mut sp = ShardedPush::new(&g, 0.85, shards);
+        let tm = run_threaded_push(&g, &mut sp, &opts);
+        let x = sp.ranks();
+        let l1: f64 = x.iter().zip(&xref).map(|(a, b)| (a - b).abs()).sum();
+        println!(
+            "{shards} shard(s): residual {:.1e} (converged: {}), L1 vs power {l1:.1e}",
+            tm.residual, tm.converged
+        );
+    }
+    let at4 = rows.iter().find(|r| r.shards == 4).map(|r| r.speedup).unwrap_or(0.0);
+    println!(
+        "\n4-shard speedup over 1 shard: {at4:.2}x (ceiling: min(4, {} cores))",
+        std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1)
+    );
+    Ok(())
+}

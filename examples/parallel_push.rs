@@ -1,0 +1,83 @@
+//! Parallel residual-push on an evolving web — the multicore face of
+//! the stream subsystem.
+//!
+//! Builds a power-law web, cold-solves it on 4 worker threads (balanced-
+//! nnz shards exchanging residual fragments over bounded channels),
+//! then streams a few churn epochs through the *same* sharded machinery
+//! warm-started from the previous fixed point: scatter the global push
+//! state, drain in parallel, gather, and (if the termination monitor
+//! cut early) polish sequentially. Run with:
+//!
+//! ```sh
+//! cargo run --release --example parallel_push
+//! ```
+
+use asyncpr::asynciter::{run_threaded_push, PushThreadOptions};
+use asyncpr::graph::generators::{self, churn_batch, ChurnParams};
+use asyncpr::stream::{power_method_f64, DeltaGraph, PushState, ShardedPush};
+use asyncpr::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let threads = 4;
+    let tol = 1e-10;
+    let el = generators::power_law_web(&generators::WebParams::scaled(20_000), 42);
+    let mut g = DeltaGraph::from_edgelist(&el);
+    println!("web: n = {}, m = {}, solving on {threads} threads\n", g.n(), g.m());
+
+    // cold build, fully parallel
+    let mut sharded = ShardedPush::new(&g, 0.85, threads);
+    let opts = PushThreadOptions { tol, ..Default::default() };
+    let tm = run_threaded_push(&g, &mut sharded, &opts);
+    println!(
+        "cold solve: {:?} pushes/shard, {} fragments, {:.1} ms, residual {:.1e}",
+        tm.shard_pushes,
+        tm.fragments_sent.iter().sum::<u64>(),
+        tm.wall.as_secs_f64() * 1e3,
+        tm.residual
+    );
+
+    // adopt the parallel result as the persistent warm state
+    let mut state = PushState::new(g.n(), 0.85);
+    state.begin_epoch();
+    sharded.gather_into(&mut state);
+    if tm.residual >= tol {
+        state.solve(&g, tol, u64::MAX);
+    }
+
+    // stream churn epochs through the same parallel path
+    let churn = ChurnParams::scaled_to(g.n(), g.m());
+    let mut rng = Rng::new(7);
+    for epoch in 1..=3 {
+        let batch = churn_batch(&g, &churn, &mut rng);
+        let delta = g.apply(&batch)?;
+        state.begin_epoch();
+        state.apply_batch(&g, &delta);
+
+        let mut sharded = ShardedPush::from_state(&state, &g, threads);
+        let tm = run_threaded_push(&g, &mut sharded, &opts);
+        let parallel_pushes: u64 = tm.shard_pushes.iter().sum();
+        sharded.gather_into(&mut state);
+        let polish = state.solve(&g, tol, u64::MAX);
+
+        let (xref, _) = power_method_f64(&g, 0.85, 1e-11, 10_000);
+        let l1: f64 = state
+            .ranks()
+            .iter()
+            .zip(&xref)
+            .map(|(a, b)| (a - b).abs())
+            .sum();
+        println!(
+            "epoch {epoch}: +{}n +{}e -{}e -> {} parallel + {} polish pushes, \
+             {:.1} ms parallel, L1 vs power {l1:.1e}",
+            batch.new_nodes,
+            delta.inserted,
+            delta.removed,
+            parallel_pushes,
+            polish.pushes,
+            tm.wall.as_secs_f64() * 1e3,
+        );
+    }
+    println!("\nwarm epochs cost pushes proportional to the churn, not the graph —");
+    println!("and the drain itself now runs on every core the host offers.");
+    Ok(())
+}

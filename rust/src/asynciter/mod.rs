@@ -22,4 +22,7 @@ pub mod threads;
 
 pub use engine::{Mode, RunMetrics, RunSpec, SimEngine, StopRule};
 pub use operator::{ArtifactBlockOp, BlockOperator, NativeBlockOp};
-pub use threads::{run_threaded, ThreadRunMetrics, ThreadRunOptions};
+pub use threads::{
+    run_threaded, run_threaded_push, PushThreadMetrics, PushThreadOptions,
+    ThreadRunMetrics, ThreadRunOptions,
+};

@@ -37,6 +37,11 @@ pub struct RunConfig {
     /// Use the push-diffusion block operator
     /// ([`crate::stream::PushBlockOp`]) instead of native CSR.
     pub use_push: bool,
+    /// Partition rows by balanced nonzero count
+    /// ([`crate::coordinator::Partitioner::balanced_nnz`]) instead of
+    /// the paper's consecutive ⌈n/p⌉ blocks — equalizes per-UE compute
+    /// under the web's degree skew.
+    pub balanced_partition: bool,
     /// ELL width for the artifact path.
     pub ell_width: usize,
     /// Multiplier on the testbed bandwidth (1.0 = the paper's wire).
@@ -64,6 +69,7 @@ impl Default for RunConfig {
             adaptive: false,
             use_artifact: false,
             use_push: false,
+            balanced_partition: false,
             ell_width: 16,
             bandwidth_scale: 1.0,
         }
@@ -138,6 +144,14 @@ impl RunConfig {
         }
         if let Some(v) = t.get_bool("runtime", "use_push") {
             c.use_push = v;
+        }
+        // accepted in both sections: it is a run-level layout choice,
+        // but users naturally group it with use_push/use_artifact
+        if let Some(v) = t
+            .get_bool("run", "balanced_partition")
+            .or_else(|| t.get_bool("runtime", "balanced_partition"))
+        {
+            c.balanced_partition = v;
         }
         if let Some(v) = t.get_int("runtime", "ell_width") {
             c.ell_width = v as usize;
@@ -235,6 +249,15 @@ ell_width = 16
             RunConfig::from_toml("[run]\nmode = \"sync\"\n[network]\ntopology = \"tree\"\n")
                 .is_err()
         );
+    }
+
+    #[test]
+    fn balanced_partition_parses_from_either_section() {
+        let c = RunConfig::from_toml("[run]\nbalanced_partition = true\n").unwrap();
+        assert!(c.balanced_partition);
+        let c = RunConfig::from_toml("[runtime]\nbalanced_partition = true\n").unwrap();
+        assert!(c.balanced_partition);
+        assert!(!RunConfig::default().balanced_partition);
     }
 
     #[test]

@@ -5,18 +5,20 @@
 
 use std::sync::Arc;
 
-use crate::asynciter::{Mode, RunMetrics, RunSpec, SimEngine};
+use crate::asynciter::{
+    run_threaded_push, Mode, PushThreadOptions, RunMetrics, RunSpec, SimEngine,
+};
 use crate::config::RunConfig;
 use crate::graph::generators::{churn_batch, ChurnParams};
 use crate::metrics::{StreamEpochRow, Table1Row};
 use crate::pagerank::PagerankProblem;
 use crate::simnet::Topology;
-use crate::stream::{power_method_f64, DeltaGraph, PushState};
+use crate::stream::{power_method_f64, DeltaGraph, PushState, ShardedPush};
 use crate::termination::GlobalOracle;
 use crate::util::Rng;
 use crate::Result;
 
-use super::{build_ops, load_edgelist, load_graph, profile_for, Partitioner};
+use super::{build_ops, load_edgelist, load_graph, partition_for, profile_for};
 
 /// Shared context for an experiment series: one graph, one problem.
 pub struct ExperimentCtx {
@@ -44,7 +46,7 @@ impl ExperimentCtx {
         cfg.mode = mode;
         cfg_mut(&mut cfg);
         cfg.validate()?;
-        let partitioner = Partitioner::consecutive(self.problem.n(), cfg.procs);
+        let partitioner = partition_for(&self.problem, &cfg)?;
         let mut ops = build_ops(&self.problem, &partitioner, &cfg, self.engine.as_ref())?;
         let profile = profile_for(&cfg);
         let spec = RunSpec {
@@ -147,7 +149,7 @@ pub fn ablation_adaptive(
         cfg.procs = procs;
         cfg.mode = Mode::Asynchronous;
         cfg.adaptive = adaptive;
-        let partitioner = Partitioner::consecutive(ctx.problem.n(), procs);
+        let partitioner = partition_for(&ctx.problem, &cfg)?;
         let mut ops = build_ops(&ctx.problem, &partitioner, &cfg, ctx.engine.as_ref())?;
         let profile = profile_for(&cfg).with_slow_node(procs - 1, slow_factor);
         let spec = RunSpec {
@@ -198,6 +200,16 @@ pub struct StreamOptions {
     pub churn_removes: Option<usize>,
     /// Per-solve push budget (safety cap).
     pub max_pushes: u64,
+    /// Worker threads (= shards) for the incremental solve. `1` keeps
+    /// the single-queue deterministic solver; `> 1` scatters the warm
+    /// state into a balanced-nnz [`ShardedPush`] drained by
+    /// [`run_threaded_push`] on real OS threads, then gathers and — if
+    /// the monitor cut early — finishes sequentially, so the reported
+    /// ranks meet `tol` either way.
+    ///
+    /// [`ShardedPush`]: crate::stream::ShardedPush
+    /// [`run_threaded_push`]: crate::asynciter::threads::run_threaded_push
+    pub threads: usize,
 }
 
 impl Default for StreamOptions {
@@ -213,6 +225,7 @@ impl Default for StreamOptions {
             churn_inserts: None,
             churn_removes: None,
             max_pushes: u64::MAX,
+            threads: 1,
         }
     }
 }
@@ -253,6 +266,11 @@ pub fn stream_epochs(graph_spec: &str, opts: &StreamOptions) -> Result<StreamRep
         opts.alpha
     );
     anyhow::ensure!(opts.tol > 0.0, "tol must be positive, got {}", opts.tol);
+    anyhow::ensure!(
+        (1..=64).contains(&opts.threads),
+        "threads {} out of [1, 64] (outbox memory scales with shards x n)",
+        opts.threads
+    );
     let el = load_edgelist(graph_spec, opts.seed)?;
     let mut g = DeltaGraph::from_edgelist(&el);
     anyhow::ensure!(g.n() > 0, "graph {graph_spec} is empty");
@@ -288,7 +306,35 @@ pub fn stream_epochs(graph_spec: &str, opts: &StreamOptions) -> Result<StreamRep
             inc.apply_batch(&g, &delta);
             (batch.new_nodes, delta.inserted, delta.removed)
         };
-        let stats = inc.solve(&g, opts.tol, opts.max_pushes);
+        // the parallel path pays an O(n) scatter/gather per epoch, so
+        // it only engages when the injected residual is big enough to
+        // need real drain work; a near-converged epoch (tiny churn)
+        // solves sequentially in a handful of pushes either way
+        let parallel_worthwhile = inc.residual_l1() > 1e3 * opts.tol;
+        let stats = if opts.threads > 1 && parallel_worthwhile {
+            // scatter → parallel drain on real threads → gather; any
+            // residual the monitor left behind is polished sequentially
+            // so the epoch meets `tol` regardless of scheduling
+            let mut sharded = ShardedPush::from_state(&inc, &g, opts.threads);
+            let topts = PushThreadOptions {
+                tol: opts.tol,
+                max_pushes: opts.max_pushes,
+                ..Default::default()
+            };
+            let tm = run_threaded_push(&g, &mut sharded, &topts);
+            let parallel_pushes: u64 = tm.shard_pushes.iter().sum();
+            sharded.gather_into(&mut inc);
+            // the polish only gets whatever the parallel phase left of
+            // the per-solve budget
+            let polish =
+                inc.solve(&g, opts.tol, opts.max_pushes.saturating_sub(parallel_pushes));
+            crate::stream::SolveStats {
+                pushes: parallel_pushes + polish.pushes,
+                ..polish
+            }
+        } else {
+            inc.solve(&g, opts.tol, opts.max_pushes)
+        };
         anyhow::ensure!(
             stats.converged,
             "epoch {epoch}: incremental solve hit the push budget at residual {:.2e}",

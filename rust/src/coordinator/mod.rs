@@ -80,6 +80,29 @@ pub fn build_ops(
     Ok(ops)
 }
 
+/// Row partition matching a config: the paper's consecutive ⌈n/p⌉
+/// blocks, or balanced-nnz when `cfg.balanced_partition` is set (the
+/// sharding the parallel push engine uses, applied here to the DES
+/// operators so the simulator runs the same sharded layout under
+/// virtual time).
+///
+/// Errors (rather than panicking downstream) when the config asks for
+/// more UEs than the graph has rows — `RunConfig::validate` cannot
+/// check this, it never sees the graph.
+pub fn partition_for(problem: &PagerankProblem, cfg: &RunConfig) -> Result<Partitioner> {
+    anyhow::ensure!(
+        cfg.procs <= problem.n(),
+        "procs {} exceeds the graph's {} rows",
+        cfg.procs,
+        problem.n()
+    );
+    Ok(if cfg.balanced_partition {
+        Partitioner::balanced_nnz(&problem.csr, cfg.procs)
+    } else {
+        Partitioner::consecutive(problem.n(), cfg.procs)
+    })
+}
+
 /// Cluster profile matching a config (paper testbed + overrides).
 pub fn profile_for(cfg: &RunConfig) -> ClusterProfile {
     let mut prof = ClusterProfile::paper_beowulf(cfg.procs)
@@ -94,7 +117,7 @@ pub fn run_experiment(cfg: &RunConfig, engine: Option<&crate::runtime::Engine>) 
     cfg.validate()?;
     let csr = load_graph(&cfg.graph, cfg.seed)?;
     let problem = Arc::new(PagerankProblem::new(csr, cfg.alpha));
-    let partitioner = Partitioner::consecutive(problem.n(), cfg.procs);
+    let partitioner = partition_for(&problem, cfg)?;
     let mut ops = build_ops(&problem, &partitioner, cfg, engine)?;
     let profile = profile_for(cfg);
     let spec = RunSpec {

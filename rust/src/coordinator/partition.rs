@@ -37,33 +37,66 @@ impl Partitioner {
     /// Balanced-nnz scheme: contiguous blocks with roughly equal
     /// nonzero counts (equalizes per-iteration compute across UEs).
     pub fn balanced_nnz(csr: &Csr, p: usize) -> Partitioner {
-        let n = csr.n();
-        assert!(p >= 1 && n >= p);
-        let total: usize = csr.nnz();
+        let lens: Vec<usize> = (0..csr.n()).map(|i| csr.row_len(i)).collect();
+        Partitioner::balanced_nnz_lens(&lens, p)
+    }
+
+    /// Balanced split over explicit per-row weights — the same greedy
+    /// prefix scheme as [`Partitioner::balanced_nnz`] but usable with
+    /// any row-cost vector (CSR in-rows for the DES operators,
+    /// [`crate::stream::DeltaGraph`] out-rows for the sharded push
+    /// engine). `p` is clamped to the row count, so `p > n` degrades
+    /// to one row per block instead of panicking.
+    ///
+    /// Each interior cut is placed where the running weight sum crosses
+    /// a multiple of `total/p`, assigning the boundary row to whichever
+    /// side lands closer to the target; every block keeps at least one
+    /// row. On graphs whose heaviest row does not exceed the ideal
+    /// block weight (power-law webs at moderate `p`), the heaviest
+    /// block therefore stays below 2x the ideal.
+    pub fn balanced_nnz_lens(lens: &[usize], p: usize) -> Partitioner {
+        let n = lens.len();
+        assert!(n >= 1, "cannot partition an empty row set");
+        assert!(p >= 1, "need at least one block");
+        let p = p.min(n);
+        let total: usize = lens.iter().sum();
         let target = total as f64 / p as f64;
-        let mut bounds = vec![0usize];
+        let mut bounds = Vec::with_capacity(p + 1);
+        bounds.push(0usize);
         let mut acc = 0usize;
-        let mut next_target = target;
-        for i in 0..n {
-            acc += csr.row_len(i);
-            if acc as f64 >= next_target && bounds.len() < p {
-                bounds.push(i + 1);
-                next_target += target;
+        for (i, &len) in lens.iter().enumerate() {
+            let cut_idx = bounds.len(); // next interior cut: 1..p-1
+            if cut_idx == p {
+                break;
             }
+            let boundary = target * cut_idx as f64;
+            let before = acc as f64;
+            let after = (acc + len) as f64;
+            if after >= boundary {
+                // the ideal boundary falls inside row i: cut on the
+                // closer side, but never create an empty block and
+                // always leave >= 1 row per remaining block
+                let cut = if boundary - before <= after - boundary { i } else { i + 1 };
+                let lo = bounds.last().unwrap() + 1;
+                let hi = n - (p - cut_idx);
+                bounds.push(cut.clamp(lo, hi.max(lo)));
+            }
+            acc += len;
         }
+        // degenerate tail (e.g. all remaining weight was zero): pad so
+        // every block still gets a row
         while bounds.len() < p {
-            // degenerate: pad with single-row blocks at the end
-            bounds.push((bounds.last().unwrap() + 1).min(n - (p - bounds.len())));
+            let cut_idx = bounds.len();
+            bounds.push((bounds.last().unwrap() + 1).min(n - (p - cut_idx)));
         }
         bounds.push(n);
-        // ensure strictly increasing
-        for i in 1..bounds.len() {
-            if bounds[i] <= bounds[i - 1] {
-                bounds[i] = bounds[i - 1] + 1;
-            }
-        }
-        *bounds.last_mut().unwrap() = n;
+        debug_assert!(bounds.windows(2).all(|w| w[0] < w[1]), "bounds {bounds:?}");
         Partitioner { bounds }
+    }
+
+    /// The raw cut points: `bounds()[i]..bounds()[i+1]` is block `i`.
+    pub fn bounds(&self) -> &[usize] {
+        &self.bounds
     }
 
     pub fn p(&self) -> usize {
@@ -171,5 +204,97 @@ mod tests {
     #[should_panic(expected = "need n >= p")]
     fn rejects_more_blocks_than_rows() {
         Partitioner::consecutive(3, 4);
+    }
+
+    fn assert_tiles(part: &Partitioner, n: usize) {
+        let blocks = part.blocks();
+        assert_eq!(blocks[0].0, 0);
+        assert_eq!(blocks[blocks.len() - 1].1, n);
+        for w in blocks.windows(2) {
+            assert_eq!(w[0].1, w[1].0, "gap between blocks");
+        }
+        for &(lo, hi) in &blocks {
+            assert!(lo < hi, "empty block in {blocks:?}");
+        }
+    }
+
+    #[test]
+    fn balanced_lens_clamps_p_above_n() {
+        // p > n degrades to one row per block instead of panicking
+        let part = Partitioner::balanced_nnz_lens(&[3, 1, 2], 10);
+        assert_eq!(part.p(), 3);
+        assert_tiles(&part, 3);
+        assert_eq!(part.blocks(), vec![(0, 1), (1, 2), (2, 3)]);
+    }
+
+    #[test]
+    fn balanced_lens_handles_empty_rows() {
+        // leading/trailing/interior zero-weight rows still tile
+        let lens = [0, 0, 5, 0, 0, 5, 0, 0];
+        for p in 1..=8 {
+            let part = Partitioner::balanced_nnz_lens(&lens, p);
+            assert_eq!(part.p(), p, "p={p}");
+            assert_tiles(&part, lens.len());
+        }
+        // all-zero weights (fully dangling graph) degrade gracefully
+        let part = Partitioner::balanced_nnz_lens(&[0; 6], 3);
+        assert_eq!(part.p(), 3);
+        assert_tiles(&part, 6);
+    }
+
+    #[test]
+    fn balanced_lens_isolates_dominant_hub() {
+        // one hub row carries ~all the weight: it must land alone-ish in
+        // one block while the partition still tiles and every other
+        // block gets its share of the remainder
+        let mut lens = vec![1usize; 64];
+        lens[20] = 10_000;
+        let part = Partitioner::balanced_nnz_lens(&lens, 4);
+        assert_eq!(part.p(), 4);
+        assert_tiles(&part, 64);
+        let nnz: Vec<usize> = part
+            .blocks()
+            .iter()
+            .map(|&(lo, hi)| lens[lo..hi].iter().sum())
+            .collect();
+        // the hub block dominates; no other block exceeds the non-hub total
+        let hub_block = part.owner_of(20);
+        for (i, &w) in nnz.iter().enumerate() {
+            if i != hub_block {
+                assert!(w <= 63, "block {i} holds {w} nnz without the hub");
+            }
+        }
+        assert!(nnz[hub_block] >= 10_000);
+    }
+
+    #[test]
+    fn balanced_nnz_within_2x_ideal_on_power_law() {
+        // the acceptance property for the sharded push engine: on
+        // power-law webs the heaviest block stays below 2x the ideal
+        for (n, seed) in [(4_000, 7), (8_000, 8)] {
+            let el = generators::power_law_web(&generators::WebParams::scaled(n), seed);
+            let csr = Csr::from_edgelist(&el).unwrap();
+            for p in [2usize, 4, 8] {
+                let part = Partitioner::balanced_nnz(&csr, p);
+                let nnz = part.block_nnz(&csr);
+                let ideal = csr.nnz() as f64 / p as f64;
+                let max = *nnz.iter().max().unwrap() as f64;
+                assert!(
+                    max <= 2.0 * ideal,
+                    "n={n} p={p}: max block {max} vs ideal {ideal}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn balanced_lens_matches_csr_variant() {
+        let el = generators::power_law_web(&generators::WebParams::scaled(2_000), 9);
+        let csr = Csr::from_edgelist(&el).unwrap();
+        let lens: Vec<usize> = (0..csr.n()).map(|i| csr.row_len(i)).collect();
+        assert_eq!(
+            Partitioner::balanced_nnz(&csr, 5),
+            Partitioner::balanced_nnz_lens(&lens, 5)
+        );
     }
 }

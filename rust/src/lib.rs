@@ -22,7 +22,7 @@
 //! |---|---|
 //! | [`graph`] | web-graph structures (CSR/ELL), generators, update streams, IO |
 //! | [`pagerank`] | PageRank operators, sync baselines, residuals, ranking metrics |
-//! | [`stream`] | evolving-graph workload: `DeltaGraph` epochs + push-based incremental PageRank |
+//! | [`stream`] | evolving-graph workload: `DeltaGraph` epochs + push-based incremental PageRank (single-queue + sharded parallel) |
 //! | [`simnet`] | virtual-time discrete-event cluster/network simulator |
 //! | [`asynciter`] | generic asynchronous fixed-point engine (eq. 5) |
 //! | [`termination`] | Figure-1 centralized protocol + global oracle + tree detector |

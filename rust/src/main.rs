@@ -6,11 +6,11 @@
 //! repro generate --graph stanford --seed 42 --out web.bin [--check]
 //! repro run [--config run.toml] [--graph G] [--procs P] [--mode sync|async]
 //!           [--tol T] [--topology clique|star|tree] [--adaptive]
-//!           [--artifact] [--push] [--global-threshold] [--seed S]
+//!           [--artifact] [--push] [--balanced] [--global-threshold] [--seed S]
 //! repro experiment table1|table2|global|ablations [--graph G] [--out reports/X]
 //! repro stream [--graph G] [--epochs E] [--seed S] [--tol T] [--alpha A]
-//!              [--arrivals K] [--links L] [--inserts I] [--removes R]
-//!              [--out reports/X]
+//!              [--threads N] [--arrivals K] [--links L] [--inserts I]
+//!              [--removes R] [--out reports/X]
 //! repro artifacts-check
 //! repro help
 //! ```
@@ -73,10 +73,11 @@ USAGE:
   repro generate --graph <SPEC> [--seed N] --out <FILE> [--check]
   repro run [--config FILE] [--graph SPEC] [--procs P] [--mode sync|async]
             [--tol T] [--topology clique|star|tree] [--adaptive]
-            [--artifact] [--push] [--global-threshold] [--seed N]
+            [--artifact] [--push] [--balanced] [--global-threshold] [--seed N]
   repro experiment <table1|table2|global|ablations> [--graph SPEC] [--out STEM]
   repro stream [--graph SPEC] [--epochs E] [--seed N] [--tol T] [--alpha A]
-               [--arrivals K] [--links L] [--inserts I] [--removes R] [--out STEM]
+               [--threads N] [--arrivals K] [--links L] [--inserts I]
+               [--removes R] [--out STEM]
   repro artifacts-check
   repro help
 
@@ -85,6 +86,10 @@ GRAPH SPECS: stanford | scaled:<n> | erdos:<n>:<m> | path(.txt|.bin)
 `stream` runs the evolving-graph workload: E churn epochs over the
 graph, re-ranking incrementally (warm-started residual push) vs. from
 scratch, and checks final ranks against a fresh power-method run.
+`--threads N` drains each epoch on N real worker threads (balanced-nnz
+shards exchanging residual fragments over bounded channels).
+`run --balanced` partitions rows by balanced nonzero count instead of
+the paper's consecutive ⌈n/p⌉ blocks.
 "#;
 
 fn parse_flags(args: &[String]) -> anyhow::Result<HashMap<String, String>> {
@@ -98,7 +103,8 @@ fn parse_flags(args: &[String]) -> anyhow::Result<HashMap<String, String>> {
         // boolean flags
         if matches!(
             key,
-            "check" | "adaptive" | "artifact" | "push" | "global-threshold" | "quick"
+            "check" | "adaptive" | "artifact" | "push" | "balanced" | "global-threshold"
+                | "quick"
         ) {
             map.insert(key.to_string(), "true".to_string());
             i += 1;
@@ -150,6 +156,9 @@ fn config_from_flags(flags: &HashMap<String, String>) -> anyhow::Result<RunConfi
     }
     if flags.contains_key("push") {
         cfg.use_push = true;
+    }
+    if flags.contains_key("balanced") {
+        cfg.balanced_partition = true;
     }
     if flags.contains_key("global-threshold") {
         cfg.global_threshold = true;
@@ -305,6 +314,9 @@ fn cmd_stream(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     if let Some(v) = flags.get("alpha") {
         opts.alpha = v.parse()?;
     }
+    if let Some(v) = flags.get("threads") {
+        opts.threads = v.parse()?;
+    }
     // churn overrides ride as options; the driver resolves them against
     // graph-scaled defaults once the graph is loaded (loading it here
     // just to size the defaults would build it twice)
@@ -322,8 +334,8 @@ fn cmd_stream(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     }
 
     eprintln!(
-        "streaming {graph}: {} update epochs, tol {:.0e}, alpha {} ...",
-        opts.epochs, opts.tol, opts.alpha
+        "streaming {graph}: {} update epochs, tol {:.0e}, alpha {}, threads {} ...",
+        opts.epochs, opts.tol, opts.alpha, opts.threads
     );
     let rep = experiments::stream_epochs(&graph, &opts)?;
     let md = stream_markdown(&rep.rows);

@@ -150,6 +150,64 @@ impl StreamEpochRow {
     }
 }
 
+/// One shard-count cell of the parallel-push scaling experiment
+/// (`benches/push_parallel.rs`): a cold sharded solve on real threads
+/// at a given shard count, against the single-shard wall time.
+#[derive(Debug, Clone)]
+pub struct ShardScaleRow {
+    pub shards: usize,
+    /// Mean wall time of the threaded solve.
+    pub wall_ms: f64,
+    /// Total pushes across shards (staleness inflates this vs. 1 shard).
+    pub pushes: u64,
+    /// Residual fragments delivered between shards.
+    pub fragments: u64,
+    /// Single-shard wall / this wall.
+    pub speedup: f64,
+    /// Exact residual after the run (per-run convergence evidence).
+    pub residual: f64,
+}
+
+impl ShardScaleRow {
+    pub fn cells(&self) -> Vec<String> {
+        vec![
+            self.shards.to_string(),
+            format!("{:.1}", self.wall_ms),
+            self.pushes.to_string(),
+            self.fragments.to_string(),
+            format!("{:.2}x", self.speedup),
+            format!("{:.1e}", self.residual),
+        ]
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = std::collections::BTreeMap::new();
+        o.insert("shards".into(), Json::Num(self.shards as f64));
+        o.insert("wall_ms".into(), Json::Num(self.wall_ms));
+        o.insert("pushes".into(), Json::Num(self.pushes as f64));
+        o.insert("fragments".into(), Json::Num(self.fragments as f64));
+        o.insert("speedup".into(), Json::Num(self.speedup));
+        o.insert("residual".into(), Json::Num(self.residual));
+        Json::Obj(o)
+    }
+}
+
+/// Render the shard-count scaling table.
+pub fn parallel_push_markdown(rows: &[ShardScaleRow]) -> String {
+    let mut t = Table::new(&[
+        "shards",
+        "wall (ms)",
+        "pushes",
+        "fragments",
+        "speedup",
+        "residual",
+    ]);
+    for r in rows {
+        t.row(&r.cells());
+    }
+    t.to_markdown()
+}
+
 /// Render the per-epoch stream table.
 pub fn stream_markdown(rows: &[StreamEpochRow]) -> String {
     let mut t = Table::new(&[
@@ -280,6 +338,35 @@ mod tests {
         let j = fake_stream_row(3).to_json();
         assert_eq!(j.get("epoch").unwrap().as_usize(), Some(3));
         assert_eq!(j.get("scratch_pushes").unwrap().as_usize(), Some(50_000));
+        assert!(Json::parse(&j.to_string_compact()).is_ok());
+    }
+
+    #[test]
+    fn parallel_push_table_layout() {
+        let rows = vec![
+            ShardScaleRow {
+                shards: 1,
+                wall_ms: 120.0,
+                pushes: 50_000,
+                fragments: 0,
+                speedup: 1.0,
+                residual: 9.0e-11,
+            },
+            ShardScaleRow {
+                shards: 4,
+                wall_ms: 48.0,
+                pushes: 61_000,
+                fragments: 320,
+                speedup: 2.5,
+                residual: 8.0e-11,
+            },
+        ];
+        let md = parallel_push_markdown(&rows);
+        assert!(md.contains("shards"));
+        assert!(md.contains("2.50x"), "{md}");
+        assert_eq!(md.trim().lines().count(), 4);
+        let j = rows[1].to_json();
+        assert_eq!(j.get("shards").unwrap().as_usize(), Some(4));
         assert!(Json::parse(&j.to_string_compact()).is_ok());
     }
 

@@ -193,6 +193,50 @@ impl PushState {
         self.total_pushes
     }
 
+    /// Materialized residual vector (scatter hook for the sharded
+    /// engine; the pending-uniform scalar rides separately).
+    pub(crate) fn residual(&self) -> &[f64] {
+        &self.r
+    }
+
+    /// Pending uniform residual scalar.
+    pub(crate) fn pending_uniform(&self) -> f64 {
+        self.rd
+    }
+
+    /// Credit pushes performed outside this state (a sharded parallel
+    /// drain) to the lifetime counter.
+    pub(crate) fn add_pushes(&mut self, k: u64) {
+        self.total_pushes += k;
+    }
+
+    /// Replace the solver state wholesale — the gather hook after a
+    /// sharded parallel drain. Keeps the epoch stamps and lifetime
+    /// counters; rebuilds the queue and the residual tally from `r`.
+    /// The node count must be unchanged (deltas are applied on the
+    /// global state *before* scattering).
+    pub(crate) fn adopt_parts(&mut self, p: Vec<f64>, r: Vec<f64>, rd: f64) {
+        assert_eq!(p.len(), self.p.len(), "adopt_parts must not resize");
+        assert_eq!(r.len(), self.p.len(), "adopt_parts must not resize");
+        // stamp every node the sharded phase changed, so the epoch's
+        // touched-node accounting survives the scatter/gather round-trip
+        for t in 0..p.len() {
+            if p[t] != self.p[t] || r[t] != self.r[t] {
+                self.touch(t);
+            }
+        }
+        self.p = p;
+        self.r = r;
+        self.rd = rd;
+        self.queue = BucketQueue::new(self.r.len());
+        let mut l1 = 0.0f64;
+        for (t, v) in self.r.iter().enumerate() {
+            l1 += v.abs();
+            self.queue.update(t, v.abs());
+        }
+        self.r_l1 = l1;
+    }
+
     /// Start a new epoch's touched-node accounting.
     pub fn begin_epoch(&mut self) {
         self.cur_stamp += 1;

@@ -1,0 +1,752 @@
+//! Sharded residual-push: the Gauss–Southwell diffusion split into
+//! per-shard bucket queues with *residual-fragment* exchange.
+//!
+//! The paper's premise is that synchronization phases are what stops
+//! PageRank from scaling on real hardware; [`super::PushState`] removed
+//! the sweep structure but kept a single queue. This module removes the
+//! single queue: rows are split into contiguous shards by
+//! [`Partitioner::balanced_nnz_lens`] over the *out*-row nonzeros (the
+//! cost a push actually pays), and each [`PushShard`] runs the push
+//! loop over its own rows with its own [`BucketQueue`].
+//!
+//! A push at `u` that hits an out-of-shard target does not touch the
+//! peer's state; the mass lands in a per-peer **outbox** — a dense
+//! accumulator over the peer's rows, so repeated hits coalesce instead
+//! of growing a message list. Outboxes are exchanged as
+//! [`ResidualFragment`]s: batches of `(node, mass)` pairs plus a
+//! uniform term for dangling emissions. Residual mass is *additive and
+//! conservative* — fragments can be deferred, reordered, or merged
+//! without changing the fixed point, which is exactly why D-Iteration
+//! (Hong et al.) and randomized distributed PageRank (Ishii–Tempo)
+//! distribute so naturally, and what whole-rank fragments (the
+//! `asynciter::threads` default) can never offer: a dropped rank
+//! fragment loses information, a deferred residual fragment just waits.
+//!
+//! Two drivers share the shard mechanics:
+//! * [`ShardedPush::solve`] — deterministic round-based superstep loop
+//!   (drain every shard, deliver every outbox, repeat), the reference
+//!   semantics and the property-test subject;
+//! * [`crate::asynciter::threads::run_threaded_push`] — the same shards
+//!   on real OS threads with bounded channels (fragments that meet a
+//!   full channel are re-accumulated locally and retried — never lost).
+//!
+//! The conserved quantity that makes all of this testable: with
+//! `R = Σr + Σ_s uni_s·|B_s|/n + pending outboxes`, the invariant
+//! `Σp + R/(1-α) = 1` holds after every push, exchange, and flush
+//! (each push at mass `m` moves `m` into the estimate and re-emits
+//! exactly `α·m`; transfers between shards move mass without creating
+//! it). [`ShardedPush::mass`] computes it; the property tests pin it to
+//! 1e-9.
+
+use super::delta::DeltaGraph;
+use super::push::{BucketQueue, PushState};
+use crate::coordinator::Partitioner;
+
+/// One batch of residual mass in flight between shards.
+///
+/// `entries` are `(global node id, mass)` pairs addressed to the
+/// receiving shard's rows; `uni` is uniform mass to be spread as
+/// `uni/n` over each of the receiver's rows (the receiver's slice of a
+/// dangling emission — every shard gets its own copy of the scalar, so
+/// the copies jointly cover the whole graph).
+#[derive(Debug, Clone)]
+pub struct ResidualFragment {
+    pub entries: Vec<(u32, f64)>,
+    pub uni: f64,
+}
+
+/// Outcome of one [`ShardedPush::solve`] call.
+#[derive(Debug, Clone, Copy)]
+pub struct ShardSolveStats {
+    /// Pushes performed across all shards.
+    pub pushes: u64,
+    /// Drain/exchange supersteps.
+    pub rounds: u64,
+    /// Fragments delivered between shards.
+    pub fragments: u64,
+    /// Residual mass at exit (exact, re-tallied).
+    pub residual: f64,
+    pub converged: bool,
+}
+
+/// One shard: a contiguous row range with its own push state, queue,
+/// and per-peer outboxes.
+#[derive(Debug, Clone)]
+pub struct PushShard {
+    id: usize,
+    lo: usize,
+    hi: usize,
+    /// Global node count (uniform terms divide by this, not by `bs`).
+    n: usize,
+    alpha: f64,
+    part: Partitioner,
+    /// Rank estimate over the local rows.
+    p: Vec<f64>,
+    /// Materialized residual over the local rows.
+    r: Vec<f64>,
+    /// Incrementally maintained Σ|r| (re-verified before convergence).
+    r_l1: f64,
+    /// Pending uniform residual, local-share semantics: stands for
+    /// `uni/n` on each *local* row (peers hold their own copies).
+    uni: f64,
+    queue: BucketQueue,
+    /// Per-peer dense outbox accumulators (`acc[j]` is indexed by peer
+    /// `j`'s local rows), allocated lazily on first use — worst case
+    /// O(shards·n) f64 across a shard set, so keep shard counts near
+    /// the core count. `acc[id]` stays empty: in-shard pushes apply
+    /// directly.
+    acc: Vec<Vec<f64>>,
+    /// Positions possibly nonzero in each `acc[j]`. May hold duplicates
+    /// (exact cancellation to 0.0 drops the membership marker); readers
+    /// must tolerate zeros and repeats.
+    dirty: Vec<Vec<u32>>,
+    /// Σ|acc| across all outboxes (incremental).
+    acc_mass: f64,
+    /// Per-peer pending uniform broadcast (dangling emissions waiting
+    /// to ship; `out_uni[id]` is the self-share, absorbed locally).
+    out_uni: Vec<f64>,
+    pushes: u64,
+}
+
+impl PushShard {
+    fn new(id: usize, part: &Partitioner, n: usize, alpha: f64) -> PushShard {
+        let s = part.p();
+        let (lo, hi) = part.blocks()[id];
+        let bs = hi - lo;
+        PushShard {
+            id,
+            lo,
+            hi,
+            n,
+            alpha,
+            part: part.clone(),
+            p: vec![0.0; bs],
+            r: vec![0.0; bs],
+            r_l1: 0.0,
+            uni: 0.0,
+            queue: BucketQueue::new(bs),
+            // outbox accumulators materialize on first use (warm epochs
+            // rarely touch every peer, and eager allocation would cost
+            // O(shards * n) memory up front)
+            acc: vec![Vec::new(); s],
+            dirty: vec![Vec::new(); s],
+            acc_mass: 0.0,
+            out_uni: vec![0.0; s],
+            pushes: 0,
+        }
+    }
+
+    /// Global row range `[lo, hi)`.
+    pub fn rows(&self) -> (usize, usize) {
+        (self.lo, self.hi)
+    }
+
+    /// Pushes performed by this shard so far.
+    pub fn pushes(&self) -> u64 {
+        self.pushes
+    }
+
+    #[inline]
+    fn add_r(&mut self, k: usize, w: f64) {
+        if w == 0.0 {
+            return;
+        }
+        let old = self.r[k];
+        let new = old + w;
+        self.r_l1 += new.abs() - old.abs();
+        self.r[k] = new;
+        self.queue.update(k, new.abs());
+    }
+
+    /// Accumulate out-of-shard mass for peer `j` at global node `t`.
+    #[inline]
+    fn add_out(&mut self, j: usize, t: usize, w: f64) {
+        debug_assert_ne!(j, self.id);
+        if self.acc[j].is_empty() {
+            let rows = self.part.bounds()[j + 1] - self.part.bounds()[j];
+            self.acc[j] = vec![0.0; rows];
+        }
+        let k = t - self.part.bounds()[j];
+        let old = self.acc[j][k];
+        if old == 0.0 && w != 0.0 {
+            self.dirty[j].push(k as u32);
+        }
+        let new = old + w;
+        self.acc_mass += new.abs() - old.abs();
+        self.acc[j][k] = new;
+    }
+
+    /// Spread the local pending uniform into the materialized residual.
+    pub(crate) fn flush_uni(&mut self) {
+        let add = self.uni / self.n as f64;
+        self.uni = 0.0;
+        if add == 0.0 {
+            return;
+        }
+        for k in 0..self.hi - self.lo {
+            self.add_r(k, add);
+        }
+    }
+
+    /// Move the self-addressed uniform share into the local pending
+    /// scalar (peers get theirs via fragments; we skip the channel).
+    pub(crate) fn absorb_self_uniform(&mut self) {
+        let u = std::mem::replace(&mut self.out_uni[self.id], 0.0);
+        self.uni += u;
+    }
+
+    /// One push at local row `k`: settle `r[k]`, re-emit `α·r[k]`
+    /// through the out-links — locally when the target is owned here,
+    /// into the peer outbox otherwise, into the per-peer uniform
+    /// broadcast when `u` dangles.
+    fn push_row(&mut self, g: &DeltaGraph, k: usize) {
+        let m = self.r[k];
+        if m == 0.0 {
+            return;
+        }
+        self.r_l1 -= m.abs();
+        self.r[k] = 0.0;
+        self.p[k] += m;
+        let u = self.lo + k;
+        let d = g.outdeg(u);
+        if d == 0 {
+            let q = self.alpha * m;
+            for j in 0..self.out_uni.len() {
+                self.out_uni[j] += q;
+            }
+        } else {
+            let w = self.alpha * m / d as f64;
+            for &t in g.out(u) {
+                let t = t as usize;
+                if (self.lo..self.hi).contains(&t) {
+                    self.add_r(t - self.lo, w);
+                } else {
+                    let j = self.part.owner_of(t);
+                    self.add_out(j, t, w);
+                }
+            }
+        }
+        self.pushes += 1;
+    }
+
+    /// Drain the local queue: push hottest-first until the local
+    /// residual drops below `target` or `budget` pushes are spent.
+    /// Returns the pushes performed.
+    pub(crate) fn drain(&mut self, g: &DeltaGraph, target: f64, budget: u64) -> u64 {
+        let bs_over_n = (self.hi - self.lo) as f64 / self.n as f64;
+        let mut spent = 0u64;
+        while spent < budget {
+            if self.r_l1 + self.uni.abs() * bs_over_n < target {
+                break;
+            }
+            // spread the pending uniform when it dominates what is
+            // materialized (same policy as PushState::solve)
+            if self.uni.abs() * bs_over_n >= self.r_l1.max(0.5 * target) {
+                self.flush_uni();
+                continue;
+            }
+            match self.queue.pop() {
+                Some(k) => {
+                    self.push_row(g, k);
+                    spent += 1;
+                }
+                None => {
+                    if self.uni != 0.0 {
+                        self.flush_uni();
+                    } else {
+                        // queue drained: every r is exactly zero, the
+                        // tally only holds accumulated drift
+                        self.recompute_r_l1();
+                        break;
+                    }
+                }
+            }
+        }
+        spent
+    }
+
+    /// Exact recomputation of the incremental Σ|r| tally.
+    pub(crate) fn recompute_r_l1(&mut self) {
+        self.r_l1 = self.r.iter().map(|v| v.abs()).sum();
+    }
+
+    /// Take everything pending for peer `j` as one fragment (`None`
+    /// when nothing is pending). The outbox is left empty; restoring a
+    /// rejected fragment re-accumulates it.
+    pub(crate) fn take_fragment(&mut self, j: usize) -> Option<ResidualFragment> {
+        debug_assert_ne!(j, self.id, "self mass is absorbed, not shipped");
+        let uni = std::mem::replace(&mut self.out_uni[j], 0.0);
+        if self.dirty[j].is_empty() && uni == 0.0 {
+            return None;
+        }
+        let base = self.part.bounds()[j];
+        let mut entries = Vec::with_capacity(self.dirty[j].len());
+        for idx in 0..self.dirty[j].len() {
+            let k = self.dirty[j][idx] as usize;
+            let w = self.acc[j][k];
+            if w != 0.0 {
+                entries.push(((base + k) as u32, w));
+                self.acc_mass -= w.abs();
+                self.acc[j][k] = 0.0;
+            }
+        }
+        self.dirty[j].clear();
+        Some(ResidualFragment { entries, uni })
+    }
+
+    /// Re-accumulate a fragment that could not be delivered (bounded
+    /// channel full). Residual mass is additive, so deferral is
+    /// lossless — the next `take_fragment` ships the merged batch.
+    pub(crate) fn restore_fragment(&mut self, j: usize, frag: ResidualFragment) {
+        self.out_uni[j] += frag.uni;
+        for (t, w) in frag.entries {
+            self.add_out(j, t as usize, w);
+        }
+    }
+
+    /// Apply a fragment addressed to this shard.
+    pub(crate) fn apply_fragment(&mut self, frag: &ResidualFragment) {
+        for &(t, w) in &frag.entries {
+            let t = t as usize;
+            debug_assert!(
+                (self.lo..self.hi).contains(&t),
+                "fragment node {t} outside shard [{}, {})",
+                self.lo,
+                self.hi
+            );
+            self.add_r(t - self.lo, w);
+        }
+        self.uni += frag.uni;
+    }
+
+    /// Conservative |residual| attributable to this shard: local
+    /// materialized + local uniform share + everything parked in the
+    /// outboxes (entries at full weight, uniforms at the receiver's
+    /// share).
+    pub(crate) fn residual_estimate(&self) -> f64 {
+        let nf = self.n as f64;
+        let mut est =
+            self.r_l1 + self.uni.abs() * (self.hi - self.lo) as f64 / nf + self.acc_mass;
+        for (j, u) in self.out_uni.iter().enumerate() {
+            let rows = self.part.bounds()[j + 1] - self.part.bounds()[j];
+            est += u.abs() * rows as f64 / nf;
+        }
+        est
+    }
+
+    /// Signed residual total (for the mass-conservation invariant).
+    /// Sums the dense accumulators directly: `dirty` may hold duplicate
+    /// indices (a slot that cancelled to exactly 0.0 and was re-dirtied
+    /// loses its membership marker), which is harmless for
+    /// `take_fragment` (zero entries are skipped, duplicates read 0.0
+    /// after the first) but would double-count here.
+    fn signed_residual(&self) -> f64 {
+        let nf = self.n as f64;
+        let mut s: f64 = self.r.iter().sum();
+        s += self.uni * (self.hi - self.lo) as f64 / nf;
+        for accj in &self.acc {
+            for &w in accj {
+                s += w;
+            }
+        }
+        for (j, u) in self.out_uni.iter().enumerate() {
+            let rows = self.part.bounds()[j + 1] - self.part.bounds()[j];
+            s += u * rows as f64 / nf;
+        }
+        s
+    }
+}
+
+/// The sharded push solver: a [`PushState`] split into per-shard bucket
+/// queues over a balanced-nnz partition, with residual-fragment
+/// exchange between shards.
+#[derive(Debug, Clone)]
+pub struct ShardedPush {
+    alpha: f64,
+    n: usize,
+    part: Partitioner,
+    /// Pushes each shard may spend between exchanges (per round).
+    pub round_pushes: u64,
+    pub(crate) shards: Vec<PushShard>,
+}
+
+impl ShardedPush {
+    fn build(g: &DeltaGraph, alpha: f64, shards: usize) -> ShardedPush {
+        assert!(g.n() > 0, "empty graph");
+        assert!((0.0..1.0).contains(&alpha), "alpha must be in [0,1)");
+        assert!(shards >= 1, "need at least one shard");
+        let lens: Vec<usize> = (0..g.n()).map(|u| g.outdeg(u)).collect();
+        let part = Partitioner::balanced_nnz_lens(&lens, shards);
+        let n = g.n();
+        let shards: Vec<PushShard> =
+            (0..part.p()).map(|id| PushShard::new(id, &part, n, alpha)).collect();
+        ShardedPush { alpha, n, part, round_pushes: 4096, shards }
+    }
+
+    /// Cold state: `p = 0` everywhere and the full teleport mass
+    /// `(1-α)` pending uniformly (each shard carries its own copy of
+    /// the scalar — together they cover the graph exactly).
+    pub fn new(g: &DeltaGraph, alpha: f64, shards: usize) -> ShardedPush {
+        let mut sp = ShardedPush::build(g, alpha, shards);
+        for sh in sp.shards.iter_mut() {
+            sh.uni = 1.0 - alpha;
+        }
+        sp
+    }
+
+    /// Scatter a (possibly warm) [`PushState`] into shards: rank and
+    /// residual slices move to their owners, the pending-uniform scalar
+    /// is replicated (local-share semantics). `state` must be sized to
+    /// `g` — apply deltas on the global state *before* scattering.
+    pub fn from_state(state: &PushState, g: &DeltaGraph, shards: usize) -> ShardedPush {
+        assert_eq!(state.n(), g.n(), "state sized to a different graph");
+        let mut sp = ShardedPush::build(g, state.alpha(), shards);
+        let ranks = state.ranks();
+        let resid = state.residual();
+        let rd = state.pending_uniform();
+        for sh in sp.shards.iter_mut() {
+            for k in 0..sh.hi - sh.lo {
+                sh.p[k] = ranks[sh.lo + k];
+                let v = resid[sh.lo + k];
+                sh.r[k] = v;
+                sh.r_l1 += v.abs();
+                sh.queue.update(k, v.abs());
+            }
+            sh.uni = rd;
+        }
+        sp
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn alpha(&self) -> f64 {
+        self.alpha
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The balanced-nnz partition in use.
+    pub fn partitioner(&self) -> &Partitioner {
+        &self.part
+    }
+
+    /// Pushes across all shards so far.
+    pub fn total_pushes(&self) -> u64 {
+        self.shards.iter().map(|sh| sh.pushes).sum()
+    }
+
+    /// Assemble the current global rank estimate (copy).
+    pub fn ranks(&self) -> Vec<f64> {
+        let mut x = vec![0.0f64; self.n];
+        for sh in &self.shards {
+            x[sh.lo..sh.hi].copy_from_slice(&sh.p);
+        }
+        x
+    }
+
+    /// Deliver every pending outbox and uniform broadcast, all-to-all,
+    /// in shard order (deterministic). Returns fragments delivered.
+    pub fn exchange(&mut self) -> u64 {
+        let s = self.shards.len();
+        let mut frags: Vec<(usize, ResidualFragment)> = Vec::new();
+        for i in 0..s {
+            self.shards[i].absorb_self_uniform();
+            for j in 0..s {
+                if j == i {
+                    continue;
+                }
+                if let Some(f) = self.shards[i].take_fragment(j) {
+                    frags.push((j, f));
+                }
+            }
+        }
+        let count = frags.len() as u64;
+        for (j, f) in frags {
+            self.shards[j].apply_fragment(&f);
+        }
+        count
+    }
+
+    /// Exact residual mass `Σ_s (‖r_s‖₁ + |uni_s|·|B_s|/n)` plus
+    /// anything still parked in outboxes (re-tallies every shard).
+    pub fn residual_exact(&mut self) -> f64 {
+        for sh in self.shards.iter_mut() {
+            sh.recompute_r_l1();
+        }
+        self.shards.iter().map(|sh| sh.residual_estimate()).sum()
+    }
+
+    /// The conserved mass `Σp + R/(1-α)` (signed residuals, pending
+    /// outboxes included). Equals 1 to float accumulation error after
+    /// every push, exchange, and flush — the invariant that makes
+    /// residual shipping safe.
+    pub fn mass(&self) -> f64 {
+        let mut m = 0.0f64;
+        for sh in &self.shards {
+            let ranks: f64 = sh.p.iter().sum();
+            m += ranks + sh.signed_residual() / (1.0 - self.alpha);
+        }
+        m
+    }
+
+    /// Deterministic superstep loop: drain every shard (bounded by
+    /// [`round_pushes`](Self::round_pushes)), deliver every outbox,
+    /// repeat until the global residual drops below `tol` or the push
+    /// budget is exhausted. Single-threaded and bit-reproducible — the
+    /// reference semantics that [`run_threaded_push`] relaxes onto real
+    /// threads.
+    ///
+    /// [`run_threaded_push`]: crate::asynciter::threads::run_threaded_push
+    pub fn solve(&mut self, g: &DeltaGraph, tol: f64, max_pushes: u64) -> ShardSolveStats {
+        assert_eq!(self.n, g.n(), "sharded state sized to a different graph");
+        assert!(tol > 0.0, "tol must be positive");
+        let s = self.shards.len();
+        // per-shard drain target: an equal split of half the global
+        // tolerance, so s shards below target sum below tol
+        let target = 0.5 * tol / s as f64;
+        let mut pushes = 0u64;
+        let mut rounds = 0u64;
+        let mut fragments = 0u64;
+        let converged = loop {
+            let mut round_pushes = 0u64;
+            let budget = self.round_pushes;
+            for sh in self.shards.iter_mut() {
+                round_pushes += sh.drain(g, target, budget);
+            }
+            pushes += round_pushes;
+            let delivered = self.exchange();
+            fragments += delivered;
+            rounds += 1;
+            let est: f64 = self.shards.iter().map(|sh| sh.residual_estimate()).sum();
+            if est < tol {
+                // confirm against exact tallies before declaring victory
+                if self.residual_exact() < tol {
+                    break true;
+                }
+            }
+            if pushes >= max_pushes {
+                break false;
+            }
+            if round_pushes == 0 && delivered == 0 {
+                // nothing moved: force the pending uniforms out, and if
+                // that leaves nothing either, the tally drift was all
+                // that kept us looping
+                let pending = self.shards.iter().any(|sh| sh.uni != 0.0);
+                if pending {
+                    for sh in self.shards.iter_mut() {
+                        sh.flush_uni();
+                    }
+                } else {
+                    break self.residual_exact() < tol;
+                }
+            }
+        };
+        ShardSolveStats {
+            pushes,
+            rounds,
+            fragments,
+            residual: self.residual_exact(),
+            converged,
+        }
+    }
+
+    /// Gather back into a global [`PushState`]: pending outboxes are
+    /// delivered and the state adopts the assembled vectors (epoch
+    /// stamps and lifetime counters are preserved; the parallel-phase
+    /// pushes are credited to the state's counter).
+    ///
+    /// The per-shard uniform scalars decompose exactly into a common
+    /// part — which becomes the state's global pending-uniform `rd` —
+    /// plus per-shard differences folded into the residual. Any split
+    /// is exact (`rd/n` lands on every row); picking shard 0's value as
+    /// the common part means the frequent "no shard flushed or pushed a
+    /// dangling row" case folds nothing, leaving untouched rows
+    /// bit-identical so the epoch's touched-node accounting stays
+    /// churn-proportional.
+    pub fn gather_into(mut self, state: &mut PushState) {
+        assert_eq!(state.n(), self.n, "gather into a different-sized state");
+        self.exchange();
+        let nf = self.n as f64;
+        let u_common = self.shards[0].uni;
+        let mut p = vec![0.0f64; self.n];
+        let mut r = vec![0.0f64; self.n];
+        let mut pushes = 0u64;
+        for sh in &self.shards {
+            let add = (sh.uni - u_common) / nf;
+            for k in 0..sh.hi - sh.lo {
+                p[sh.lo + k] = sh.p[k];
+                r[sh.lo + k] = sh.r[k] + add;
+            }
+            pushes += sh.pushes;
+        }
+        state.adopt_parts(p, r, u_common);
+        state.add_pushes(pushes);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{generators, EdgeList};
+    use crate::stream::{power_method_f64, UpdateBatch};
+    use crate::util::Rng;
+
+    fn l1(a: &[f64], b: &[f64]) -> f64 {
+        a.iter().zip(b).map(|(x, y)| (x - y).abs()).sum()
+    }
+
+    fn web(n: usize, seed: u64) -> DeltaGraph {
+        let el = generators::power_law_web(&generators::WebParams::scaled(n), seed);
+        DeltaGraph::from_edgelist(&el)
+    }
+
+    #[test]
+    fn sharded_cold_solve_matches_power_method() {
+        let g = web(2_000, 31);
+        for shards in [1usize, 2, 4, 7] {
+            let mut sp = ShardedPush::new(&g, 0.85, shards);
+            let st = sp.solve(&g, 1e-11, u64::MAX);
+            assert!(st.converged, "shards {shards}: residual {}", st.residual);
+            assert!((sp.mass() - 1.0).abs() < 1e-9, "shards {shards}: mass {}", sp.mass());
+            let (xref, _) = power_method_f64(&g, 0.85, 1e-12, 10_000);
+            let d = l1(&sp.ranks(), &xref);
+            assert!(d < 1e-9, "shards {shards}: drift {d}");
+            if shards > 1 {
+                assert!(st.fragments > 0, "no residual fragments exchanged");
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_solve_is_deterministic() {
+        let g = web(1_200, 32);
+        let run = || {
+            let mut sp = ShardedPush::new(&g, 0.85, 4);
+            let st = sp.solve(&g, 1e-10, u64::MAX);
+            (st.pushes, st.rounds, sp.ranks())
+        };
+        let (pa, ra, xa) = run();
+        let (pb, rb, xb) = run();
+        assert_eq!(pa, pb);
+        assert_eq!(ra, rb);
+        assert_eq!(xa, xb);
+    }
+
+    #[test]
+    fn scatter_gather_roundtrip_preserves_solution() {
+        let g = web(1_500, 33);
+        let mut state = PushState::new(g.n(), 0.85);
+        state.begin_epoch();
+        state.solve(&g, 1e-11, u64::MAX);
+        let before = state.ranks().to_vec();
+        let sp = ShardedPush::from_state(&state, &g, 4);
+        assert!((sp.mass() - 1.0).abs() < 1e-9, "scatter broke mass: {}", sp.mass());
+        sp.gather_into(&mut state);
+        // gathering an untouched sharded state must not move the ranks
+        assert!(l1(state.ranks(), &before) < 1e-15);
+        // and the state remains a working solver
+        let st = state.solve(&g, 1e-11, u64::MAX);
+        assert!(st.converged);
+    }
+
+    #[test]
+    fn warm_start_through_shards_matches_cold() {
+        let mut g = web(1_200, 34);
+        let mut inc = PushState::new(g.n(), 0.85);
+        inc.begin_epoch();
+        inc.solve(&g, 1e-11, u64::MAX);
+        let mut rng = Rng::new(35);
+        for round in 0..3 {
+            let n = g.n();
+            let mut batch = UpdateBatch { new_nodes: 2, ..Default::default() };
+            for _ in 0..30 {
+                batch
+                    .insert
+                    .push((rng.range(0, n + 2) as u32, rng.range(0, n) as u32));
+            }
+            let delta = g.apply(&batch).unwrap();
+            inc.begin_epoch();
+            inc.apply_batch(&g, &delta);
+            // solve the epoch through the sharded engine
+            let mut sp = ShardedPush::from_state(&inc, &g, 3);
+            let st = sp.solve(&g, 1e-11, u64::MAX);
+            assert!(st.converged, "round {round}");
+            assert!((sp.mass() - 1.0).abs() < 1e-9, "round {round}: mass {}", sp.mass());
+            sp.gather_into(&mut inc);
+
+            let mut cold = PushState::new(g.n(), 0.85);
+            cold.begin_epoch();
+            cold.solve(&g, 1e-11, u64::MAX);
+            let d = l1(inc.ranks(), cold.ranks());
+            assert!(d < 1e-8, "round {round}: sharded warm vs cold drift {d}");
+        }
+    }
+
+    #[test]
+    fn dangling_heavy_graph_converges_sharded() {
+        // star + extra dangling rows: uniform broadcasts dominate
+        let el = EdgeList::from_edges(40, (1..20).map(|i| (0u32, i as u32)).collect())
+            .unwrap();
+        let g = DeltaGraph::from_edgelist(&el);
+        let mut sp = ShardedPush::new(&g, 0.85, 4);
+        let st = sp.solve(&g, 1e-12, u64::MAX);
+        assert!(st.converged);
+        assert!((sp.mass() - 1.0).abs() < 1e-9);
+        let (xref, _) = power_method_f64(&g, 0.85, 1e-13, 100_000);
+        assert!(l1(&sp.ranks(), &xref) < 1e-10);
+    }
+
+    #[test]
+    fn more_shards_than_rows_degrades_gracefully() {
+        let el = generators::chain(5);
+        let g = DeltaGraph::from_edgelist(&el);
+        let mut sp = ShardedPush::new(&g, 0.85, 16);
+        assert_eq!(sp.shard_count(), 5);
+        let st = sp.solve(&g, 1e-12, u64::MAX);
+        assert!(st.converged);
+        let (xref, _) = power_method_f64(&g, 0.85, 1e-13, 100_000);
+        assert!(l1(&sp.ranks(), &xref) < 1e-10);
+    }
+
+    #[test]
+    fn budget_cap_reports_unconverged_but_conserves_mass() {
+        let g = web(2_000, 36);
+        let mut sp = ShardedPush::new(&g, 0.85, 4);
+        sp.round_pushes = 64;
+        let st = sp.solve(&g, 1e-12, 500);
+        assert!(!st.converged);
+        assert!(st.residual > 1e-12);
+        assert!((sp.mass() - 1.0).abs() < 1e-9, "mass {}", sp.mass());
+        // finishing the interrupted solve still lands on the fixed point
+        sp.round_pushes = 4096;
+        let st2 = sp.solve(&g, 1e-11, u64::MAX);
+        assert!(st2.converged);
+        let (xref, _) = power_method_f64(&g, 0.85, 1e-12, 10_000);
+        assert!(l1(&sp.ranks(), &xref) < 1e-9);
+    }
+
+    #[test]
+    fn fragment_defer_and_restore_is_lossless() {
+        let g = web(800, 37);
+        let mut sp = ShardedPush::new(&g, 0.85, 2);
+        // run a few rounds without exchanging so outboxes fill
+        for sh in sp.shards.iter_mut() {
+            sh.drain(&g, 1e-12, 2_000);
+        }
+        let m0 = sp.mass();
+        assert!((m0 - 1.0).abs() < 1e-9, "mass before defer {m0}");
+        // take a fragment and put it back — mass must not move
+        if let Some(frag) = sp.shards[0].take_fragment(1) {
+            sp.shards[0].restore_fragment(1, frag);
+        }
+        let m1 = sp.mass();
+        assert!((m0 - m1).abs() < 1e-12, "defer/restore moved mass: {m0} vs {m1}");
+        // delivering it is equally conservative
+        sp.exchange();
+        assert!((sp.mass() - 1.0).abs() < 1e-9);
+    }
+}

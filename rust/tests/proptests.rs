@@ -17,15 +17,20 @@ use asyncpr::coordinator::Partitioner;
 use asyncpr::graph::{generators, Csr, EdgeList, Ell};
 use asyncpr::pagerank::{kendall_tau, l1_norm, power_method, PagerankProblem, PowerOptions};
 use asyncpr::simnet::{ClusterProfile, Topology};
+use asyncpr::stream::{power_method_f64, DeltaGraph, PushState, ShardedPush, UpdateBatch};
 use asyncpr::util::Rng;
 
-fn random_graph(rng: &mut Rng, n: usize) -> Csr {
+fn random_edgelist(rng: &mut Rng, n: usize) -> EdgeList {
     let m = rng.range(n, n * 6);
     let mut el = EdgeList::new(n);
     for _ in 0..m {
         el.push(rng.range(0, n) as u32, rng.range(0, n) as u32);
     }
-    Csr::from_edgelist(&el).unwrap()
+    el
+}
+
+fn random_graph(rng: &mut Rng, n: usize) -> Csr {
+    Csr::from_edgelist(&random_edgelist(rng, n)).unwrap()
 }
 
 #[test]
@@ -168,6 +173,116 @@ fn prop_sync_equals_power_method_any_p() {
         );
         for (i, (a, b)) in m.x.iter().zip(&pm.x).enumerate() {
             assert!((a - b).abs() < 1e-6, "trial {trial} p={p} row {i}");
+        }
+    }
+}
+
+fn l1_64(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).sum()
+}
+
+#[test]
+fn prop_sharded_push_matches_single_shard_and_power() {
+    // the sharded engine is the same fixed point at every shard count:
+    // for random graphs and shard counts 1..8, final ranks match the
+    // single-queue PushState AND the f64 power method within the
+    // tolerance-implied bound, and the conserved mass stays 1 to 1e-9
+    let mut rng = Rng::new(107);
+    let tol = 1e-11;
+    for trial in 0..6 {
+        let n = rng.range(100, 900);
+        let el = random_edgelist(&mut rng, n);
+        let g = DeltaGraph::from_edgelist(&el);
+
+        let mut single = PushState::new(n, 0.85);
+        single.begin_epoch();
+        let st = single.solve(&g, tol, u64::MAX);
+        assert!(st.converged, "trial {trial}");
+        let (xref, _) = power_method_f64(&g, 0.85, 1e-12, 100_000);
+
+        for shards in 1..=8usize {
+            let mut sp = ShardedPush::new(&g, 0.85, shards);
+            let sst = sp.solve(&g, tol, u64::MAX);
+            assert!(sst.converged, "trial {trial} shards {shards}");
+            let mass = sp.mass();
+            assert!(
+                (mass - 1.0).abs() < 1e-9,
+                "trial {trial} shards {shards}: mass {mass}"
+            );
+            let x = sp.ranks();
+            let d = l1_64(&x, single.ranks());
+            assert!(
+                d < 1e-9,
+                "trial {trial} shards {shards}: sharded vs single-shard L1 {d}"
+            );
+            let dp = l1_64(&x, &xref);
+            assert!(
+                dp < 1e-9,
+                "trial {trial} shards {shards}: sharded vs power L1 {dp}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_sharded_epochs_conserve_mass() {
+    // warm-start epochs through scatter -> sharded solve -> gather:
+    // total mass (ranks + residual) is conserved after every epoch,
+    // and the gathered state keeps matching a from-scratch solve
+    let mut rng = Rng::new(108);
+    let tol = 1e-11;
+    for trial in 0..4 {
+        let n = rng.range(80, 400);
+        let el = random_edgelist(&mut rng, n);
+        let mut g = DeltaGraph::from_edgelist(&el);
+        let mut inc = PushState::new(g.n(), 0.85);
+        inc.begin_epoch();
+        inc.solve(&g, tol, u64::MAX);
+        for round in 0..4 {
+            let n0 = g.n();
+            let new_nodes = rng.range(0, 3);
+            let mut batch = UpdateBatch { new_nodes, ..Default::default() };
+            for _ in 0..rng.range(1, 25) {
+                batch.insert.push((
+                    rng.range(0, n0 + new_nodes) as u32,
+                    rng.range(0, n0) as u32,
+                ));
+            }
+            let mut edges = Vec::new();
+            g.for_each_edge(|s, d| edges.push((s, d)));
+            if !edges.is_empty() {
+                for _ in 0..rng.range(0, 15) {
+                    batch.remove.push(edges[rng.range(0, edges.len())]);
+                }
+            }
+            let delta = g.apply(&batch).unwrap();
+            inc.begin_epoch();
+            inc.apply_batch(&g, &delta);
+
+            let shards = rng.range(2, 7);
+            let mut sp = ShardedPush::from_state(&inc, &g, shards);
+            let mass_in = sp.mass();
+            assert!(
+                (mass_in - 1.0).abs() < 1e-9,
+                "trial {trial} round {round}: scatter mass {mass_in}"
+            );
+            let sst = sp.solve(&g, tol, u64::MAX);
+            assert!(sst.converged, "trial {trial} round {round}");
+            let mass_out = sp.mass();
+            assert!(
+                (mass_out - 1.0).abs() < 1e-9,
+                "trial {trial} round {round}: post-solve mass {mass_out}"
+            );
+            sp.gather_into(&mut inc);
+
+            let mut cold = PushState::new(g.n(), 0.85);
+            cold.begin_epoch();
+            cold.solve(&g, tol, u64::MAX);
+            let d = l1_64(inc.ranks(), cold.ranks());
+            assert!(
+                d < 1e-8,
+                "trial {trial} round {round}: sharded warm vs cold {d}"
+            );
         }
     }
 }

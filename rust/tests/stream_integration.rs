@@ -178,6 +178,30 @@ fn stream_epochs_driver_end_to_end() {
 }
 
 #[test]
+fn stream_epochs_with_threads_meets_acceptance() {
+    // the `repro stream --threads 4` path: each epoch scatters the warm
+    // state into 4 balanced-nnz shards, drains on real threads, gathers
+    // and polishes — the acceptance shape must hold despite the
+    // nondeterministic schedule, because the gathered state is exact
+    let opts = StreamOptions { epochs: 3, seed: 9, threads: 4, ..Default::default() };
+    let rep = experiments::stream_epochs("scaled:3000", &opts).unwrap();
+    assert_eq!(rep.rows.len(), 4);
+    for r in &rep.rows {
+        assert!(r.l1_vs_power < 1e-8, "epoch {}: L1 {}", r.epoch, r.l1_vs_power);
+    }
+    assert!(rep.final_l1_vs_power < 1e-8);
+    // warm epochs stay far cheaper than from-scratch even counting the
+    // staleness-inflated parallel pushes (aggregate: per-epoch counts
+    // wobble with the schedule)
+    assert!(
+        rep.update_scratch_pushes as f64 / rep.update_inc_pushes.max(1) as f64 > 2.0,
+        "threaded warm start saved too little: {} vs {}",
+        rep.update_inc_pushes,
+        rep.update_scratch_pushes
+    );
+}
+
+#[test]
 fn stream_epochs_deterministic() {
     let opts = StreamOptions { epochs: 2, seed: 11, ..Default::default() };
     let a = experiments::stream_epochs("scaled:1500", &opts).unwrap();
