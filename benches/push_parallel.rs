@@ -13,10 +13,13 @@
 //! synchronization phase, residual fragments only, and the solver
 //! still accelerates.
 
+use std::time::Instant;
+
 use asyncpr::asynciter::{run_threaded_push, PushThreadOptions};
+use asyncpr::graph::generators::{churn_batch, ChurnParams};
 use asyncpr::metrics::{parallel_push_markdown, ShardScaleRow};
-use asyncpr::stream::{power_method_f64, DeltaGraph, ShardedPush};
-use asyncpr::util::Bench;
+use asyncpr::stream::{power_method_f64, DeltaGraph, PushState, ShardedPush};
+use asyncpr::util::{Bench, Rng};
 
 fn main() -> anyhow::Result<()> {
     let quick = std::env::args().any(|a| a == "--quick")
@@ -85,5 +88,95 @@ fn main() -> anyhow::Result<()> {
         "\n4-shard speedup over 1 shard: {at4:.2}x (ceiling: min(4, {} cores))",
         std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1)
     );
+
+    // ---- resident vs roundtrip epoch pipeline -----------------------
+    // The same churn stream (identical batches: cloned graph + same
+    // rng seed) driven through both epoch handoffs. Work metric is
+    // pushes + CSR rows rebuilt: the roundtrip path pays a full
+    // O(n)-row rebuild and a scatter/gather every epoch, the resident
+    // path splices dirty rows and injects deltas into the live shards.
+    let epochs = if quick { 4 } else { 10 };
+    let shards = 4usize;
+    println!("\n== resident vs roundtrip epoch pipeline ({epochs} churn epochs, {shards} shards) ==\n");
+    let churn = ChurnParams::scaled_to(g.n(), g.m());
+    let seed = 4242u64;
+
+    // roundtrip: global PushState; per epoch inject -> full to_csr
+    // rebuild -> scatter -> threaded drain -> gather -> polish
+    let t0 = Instant::now();
+    let (round_pushes, round_rows) = {
+        let mut g2 = g.clone();
+        let mut rng = Rng::new(seed);
+        let mut state = PushState::new(g2.n(), 0.85);
+        state.begin_epoch();
+        let mut sp = ShardedPush::from_state(&state, &g2, shards);
+        run_threaded_push(&g2, &mut sp, &opts);
+        sp.gather_into(&mut state);
+        state.solve(&g2, tol, u64::MAX);
+        let mut rebuilt_rows = 0usize;
+        for _ in 0..epochs {
+            let batch = churn_batch(&g2, &churn, &mut rng);
+            let delta = g2.apply(&batch)?;
+            state.begin_epoch();
+            state.apply_batch(&g2, &delta);
+            let csr = g2.to_csr()?; // full rebuild: every row pays
+            rebuilt_rows += csr.n();
+            let mut sp = ShardedPush::from_state(&state, &g2, shards);
+            run_threaded_push(&g2, &mut sp, &opts);
+            sp.gather_into(&mut state);
+            state.solve(&g2, tol, u64::MAX);
+        }
+        (state.total_pushes(), rebuilt_rows)
+    };
+    let round_wall = t0.elapsed().as_secs_f64() * 1e3;
+
+    // resident: one ShardedPush lives across all epochs; deltas inject
+    // in place, bounds re-balance on skew, the CSR snapshot is spliced
+    let t0 = Instant::now();
+    let (res_pushes, res_rows) = {
+        let mut g2 = g.clone();
+        let mut rng = Rng::new(seed);
+        let mut sharded = ShardedPush::new(&g2, 0.85, shards);
+        let ropts = PushThreadOptions { rebalance_factor: Some(2.0), ..opts.clone() };
+        let tm = run_threaded_push(&g2, &mut sharded, &ropts);
+        if !tm.converged {
+            sharded.solve(&g2, tol, u64::MAX);
+        }
+        let mut csr = g2.to_csr()?; // splice-chain baseline (epoch 0)
+        let mut spliced_rows = 0usize;
+        for _ in 0..epochs {
+            let batch = churn_batch(&g2, &churn, &mut rng);
+            let delta = g2.apply(&batch)?;
+            sharded.begin_epoch();
+            sharded.apply_batch(&g2, &delta);
+            let (next, ms) = g2.merge_csr(&csr)?;
+            csr = next;
+            spliced_rows += ms.dirty_rows;
+            let tm = run_threaded_push(&g2, &mut sharded, &ropts);
+            if !tm.converged {
+                sharded.solve(&g2, tol, u64::MAX);
+            }
+        }
+        (sharded.total_pushes(), spliced_rows)
+    };
+    let res_wall = t0.elapsed().as_secs_f64() * 1e3;
+
+    let round_work = round_pushes + round_rows as u64;
+    let res_work = res_pushes + res_rows as u64;
+    println!(
+        "roundtrip: {round_pushes} pushes + {round_rows} rebuilt CSR rows = {round_work} \
+         ({round_wall:.1} ms)"
+    );
+    println!(
+        "resident:  {res_pushes} pushes + {res_rows} spliced CSR rows = {res_work} \
+         ({res_wall:.1} ms)"
+    );
+    println!(
+        "resident does strictly less push+copy work: {}",
+        if res_work < round_work { "yes" } else { "NO" }
+    );
+    if res_work >= round_work {
+        anyhow::bail!("resident epoch path did not beat the scatter/gather roundtrip");
+    }
     Ok(())
 }

@@ -232,6 +232,11 @@ pub struct PushThreadOptions {
     /// Consecutive quiet monitor samples required before stopping
     /// (guards against the publish/apply race around fragment hand-off).
     pub quiet_checks: u32,
+    /// When set, re-balance the shard bounds before spawning workers if
+    /// churn has skewed the per-shard out-nnz beyond this factor of the
+    /// ideal share ([`ShardedPush::rebalance`]) — the epoch-resident
+    /// path's answer to hubs arriving in one shard's row range.
+    pub rebalance_factor: Option<f64>,
 }
 
 impl Default for PushThreadOptions {
@@ -243,6 +248,7 @@ impl Default for PushThreadOptions {
             timeout: std::time::Duration::from_secs(30),
             max_pushes: u64::MAX,
             quiet_checks: 3,
+            rebalance_factor: None,
         }
     }
 }
@@ -266,6 +272,9 @@ pub struct PushThreadMetrics {
     /// quiet window), the caller finishes the solve sequentially; the
     /// state is exact either way.
     pub converged: bool,
+    /// Whether the pre-run skew check migrated the shard bounds
+    /// (only with [`PushThreadOptions::rebalance_factor`]).
+    pub rebalanced: bool,
 }
 
 /// Run the sharded residual-push solver on real OS threads — the
@@ -297,8 +306,15 @@ pub fn run_threaded_push(
 ) -> PushThreadMetrics {
     assert_eq!(state.n(), g.n(), "sharded state sized to a different graph");
     assert!(opts.tol > 0.0, "tol must be positive");
-    let s = state.shard_count();
     let t0 = Instant::now();
+    // epoch-resident callers leave the state in place across churn; the
+    // entry skew check is where the bounds catch up with the degree
+    // distribution (shard count may change — read it after)
+    let rebalanced = match opts.rebalance_factor {
+        Some(f) => state.rebalance(g, f),
+        None => false,
+    };
+    let s = state.shard_count();
     let deadline = t0 + opts.timeout;
     if s == 1 {
         // no peers, no channels: the deterministic drain is the run —
@@ -326,6 +342,7 @@ pub fn run_threaded_push(
             wall: t0.elapsed(),
             residual,
             converged,
+            rebalanced,
         };
     }
 
@@ -458,9 +475,10 @@ pub fn run_threaded_push(
     });
 
     // anything still parked in outboxes (deferred at the cut-off) is
-    // delivered deterministically before the exact re-tally
+    // delivered deterministically before the exact re-tally (dense:
+    // the converged flag must not ride on drifted increments)
     state.exchange();
-    let residual = state.residual_exact();
+    let residual = state.residual_recompute();
     let mut shard_pushes = Vec::with_capacity(s);
     let mut rounds = Vec::with_capacity(s);
     let mut fragments_sent = Vec::with_capacity(s);
@@ -479,6 +497,7 @@ pub fn run_threaded_push(
         wall: t0.elapsed(),
         residual,
         converged: residual < opts.tol,
+        rebalanced,
     }
 }
 

@@ -210,6 +210,22 @@ pub struct StreamOptions {
     /// [`ShardedPush`]: crate::stream::ShardedPush
     /// [`run_threaded_push`]: crate::asynciter::threads::run_threaded_push
     pub threads: usize,
+    /// Keep ONE [`ShardedPush`] alive across every epoch (the
+    /// epoch-resident path): churn batches inject directly into the
+    /// live shards via [`ShardedPush::apply_batch`] — no per-epoch
+    /// scatter/gather round-trip through a global [`PushState`] — and
+    /// the CSR snapshot for the static stack is maintained by
+    /// [`DeltaGraph::merge_csr`] splices instead of full rebuilds.
+    ///
+    /// [`ShardedPush`]: crate::stream::ShardedPush
+    /// [`ShardedPush::apply_batch`]: crate::stream::ShardedPush::apply_batch
+    pub resident: bool,
+    /// Resident path only: re-balance the shard bounds between epochs
+    /// when churn skews the per-shard out-nnz beyond this factor of the
+    /// ideal share ([`ShardedPush::rebalance`]).
+    ///
+    /// [`ShardedPush::rebalance`]: crate::stream::ShardedPush::rebalance
+    pub rebalance_factor: Option<f64>,
 }
 
 impl Default for StreamOptions {
@@ -226,6 +242,8 @@ impl Default for StreamOptions {
             churn_removes: None,
             max_pushes: u64::MAX,
             threads: 1,
+            resident: false,
+            rebalance_factor: None,
         }
     }
 }
@@ -253,12 +271,41 @@ pub struct StreamReport {
     pub final_l1_vs_power: f64,
 }
 
+/// From-scratch push baseline + fresh power-method check on the current
+/// snapshot — the per-epoch yardstick shared by the roundtrip and
+/// resident drivers. Returns `(scratch_pushes, L1 of ranks vs power)`.
+fn epoch_baseline(
+    g: &DeltaGraph,
+    alpha: f64,
+    tol: f64,
+    power_tol: f64,
+    max_pushes: u64,
+    epoch: usize,
+    ranks: &[f64],
+) -> Result<(u64, f64)> {
+    let mut cold = PushState::new(g.n(), alpha);
+    cold.begin_epoch();
+    let cold_stats = cold.solve(g, tol, max_pushes);
+    anyhow::ensure!(cold_stats.converged, "epoch {epoch}: baseline hit the push budget");
+    let (xref, _) = power_method_f64(g, alpha, power_tol, 100_000);
+    let l1: f64 = ranks.iter().zip(&xref).map(|(a, b)| (a - b).abs()).sum();
+    Ok((cold_stats.pushes, l1))
+}
+
 /// S1: the evolving-graph experiment. One initial build plus
 /// `opts.epochs` churn epochs; each epoch solves incrementally
 /// (warm-started push) AND from scratch on the identical snapshot, and
 /// checks both against a fresh f64 power-method run. This is the
 /// measurable form of the subsystem's claim: recompute cost ∝ change
 /// size, not graph size.
+///
+/// Two incremental drivers share the loop: the default **roundtrip**
+/// path (global [`PushState`] per epoch, scattered into a
+/// [`ShardedPush`] when `threads > 1` and gathered back), and the
+/// **resident** path (`opts.resident`) where one `ShardedPush` lives
+/// across all epochs — deltas inject in place, the shard bounds
+/// re-balance on demand, and the static-stack CSR snapshot is spliced
+/// by [`DeltaGraph::merge_csr`] instead of rebuilt.
 pub fn stream_epochs(graph_spec: &str, opts: &StreamOptions) -> Result<StreamReport> {
     anyhow::ensure!(
         (0.0..1.0).contains(&opts.alpha),
@@ -271,6 +318,14 @@ pub fn stream_epochs(graph_spec: &str, opts: &StreamOptions) -> Result<StreamRep
         "threads {} out of [1, 64] (outbox memory scales with shards x n)",
         opts.threads
     );
+    if let Some(f) = opts.rebalance_factor {
+        anyhow::ensure!(f >= 1.0, "rebalance factor {f} must be >= 1");
+        anyhow::ensure!(
+            opts.resident,
+            "--rebalance-factor only applies to the resident path \
+             (the roundtrip path re-partitions every epoch by construction)"
+        );
+    }
     let el = load_edgelist(graph_spec, opts.seed)?;
     let mut g = DeltaGraph::from_edgelist(&el);
     anyhow::ensure!(g.n() > 0, "graph {graph_spec} is empty");
@@ -291,82 +346,155 @@ pub fn stream_epochs(graph_spec: &str, opts: &StreamOptions) -> Result<StreamRep
         churn.churn_removes = v;
     }
     let mut rng = Rng::new(opts.seed ^ 0x5354_5245_414d); // "STREAM"
-    let mut inc = PushState::new(g.n(), opts.alpha);
     let power_tol = opts.tol.min(1e-10);
 
     let mut rows = Vec::with_capacity(opts.epochs + 1);
-    for epoch in 0..=opts.epochs {
-        let (new_nodes, inserted, removed) = if epoch == 0 {
-            inc.begin_epoch();
-            (0, 0, 0)
-        } else {
-            let batch = churn_batch(&g, &churn, &mut rng);
-            let delta = g.apply(&batch)?;
-            inc.begin_epoch();
-            inc.apply_batch(&g, &delta);
-            (batch.new_nodes, delta.inserted, delta.removed)
-        };
-        // the parallel path pays an O(n) scatter/gather per epoch, so
-        // it only engages when the injected residual is big enough to
-        // need real drain work; a near-converged epoch (tiny churn)
-        // solves sequentially in a handful of pushes either way
-        let parallel_worthwhile = inc.residual_l1() > 1e3 * opts.tol;
-        let stats = if opts.threads > 1 && parallel_worthwhile {
-            // scatter → parallel drain on real threads → gather; any
-            // residual the monitor left behind is polished sequentially
-            // so the epoch meets `tol` regardless of scheduling
-            let mut sharded = ShardedPush::from_state(&inc, &g, opts.threads);
-            let topts = PushThreadOptions {
-                tol: opts.tol,
-                max_pushes: opts.max_pushes,
-                ..Default::default()
+    if opts.resident {
+        // ---- epoch-resident path: ONE ShardedPush lives across every
+        // epoch; churn injects in place, the CSR snapshot is spliced ----
+        let mut sharded = ShardedPush::new(&g, opts.alpha, opts.threads);
+        let mut csr = g.to_csr()?; // the splice chain's baseline
+        for epoch in 0..=opts.epochs {
+            let (new_nodes, inserted, removed, csr_dirty) = if epoch == 0 {
+                sharded.begin_epoch();
+                (0, 0, 0, 0)
+            } else {
+                let batch = churn_batch(&g, &churn, &mut rng);
+                let delta = g.apply(&batch)?;
+                sharded.begin_epoch();
+                sharded.apply_batch(&g, &delta);
+                if let Some(f) = opts.rebalance_factor {
+                    sharded.rebalance(&g, f);
+                }
+                let (next, ms) = g.merge_csr(&csr)?;
+                csr = next;
+                anyhow::ensure!(
+                    csr.n() == g.n() && csr.nnz() == g.m(),
+                    "epoch {epoch}: spliced CSR inconsistent with the graph"
+                );
+                (batch.new_nodes, delta.inserted, delta.removed, ms.dirty_rows)
             };
-            let tm = run_threaded_push(&g, &mut sharded, &topts);
-            let parallel_pushes: u64 = tm.shard_pushes.iter().sum();
-            sharded.gather_into(&mut inc);
-            // the polish only gets whatever the parallel phase left of
-            // the per-solve budget
-            let polish =
-                inc.solve(&g, opts.tol, opts.max_pushes.saturating_sub(parallel_pushes));
-            crate::stream::SolveStats {
-                pushes: parallel_pushes + polish.pushes,
-                ..polish
-            }
-        } else {
-            inc.solve(&g, opts.tol, opts.max_pushes)
-        };
-        anyhow::ensure!(
-            stats.converged,
-            "epoch {epoch}: incremental solve hit the push budget at residual {:.2e}",
-            stats.residual
-        );
-
-        let mut cold = PushState::new(g.n(), opts.alpha);
-        cold.begin_epoch();
-        let cold_stats = cold.solve(&g, opts.tol, opts.max_pushes);
-        anyhow::ensure!(cold_stats.converged, "epoch {epoch}: baseline hit the push budget");
-
-        let (xref, _) = power_method_f64(&g, opts.alpha, power_tol, 100_000);
-        let l1: f64 = inc
-            .ranks()
-            .iter()
-            .zip(&xref)
-            .map(|(a, b)| (a - b).abs())
-            .sum();
-
-        rows.push(StreamEpochRow {
-            epoch,
-            n: g.n(),
-            m: g.m(),
-            new_nodes,
-            inserted,
-            removed,
-            inc_pushes: stats.pushes,
-            inc_touched: stats.touched,
-            inc_residual: stats.residual,
-            scratch_pushes: cold_stats.pushes,
-            l1_vs_power: l1,
-        });
+            let p0 = sharded.total_pushes();
+            let (residual, converged) = if opts.threads > 1 {
+                let topts = PushThreadOptions {
+                    tol: opts.tol,
+                    max_pushes: opts.max_pushes,
+                    ..Default::default()
+                };
+                let tm = run_threaded_push(&g, &mut sharded, &topts);
+                if tm.converged {
+                    (tm.residual, true)
+                } else {
+                    // monitor cut early (timeout / quiet race): finish
+                    // deterministically on whatever budget remains
+                    let used = sharded.total_pushes() - p0;
+                    let st =
+                        sharded.solve(&g, opts.tol, opts.max_pushes.saturating_sub(used));
+                    (st.residual, st.converged)
+                }
+            } else {
+                let st = sharded.solve(&g, opts.tol, opts.max_pushes);
+                (st.residual, st.converged)
+            };
+            anyhow::ensure!(
+                converged,
+                "epoch {epoch}: resident solve hit the push budget at residual {residual:.2e}"
+            );
+            let mass = sharded.mass();
+            anyhow::ensure!(
+                (mass - 1.0).abs() < 1e-8,
+                "epoch {epoch}: conserved mass drifted to {mass}"
+            );
+            let ranks = sharded.ranks();
+            let (scratch_pushes, l1) = epoch_baseline(
+                &g, opts.alpha, opts.tol, power_tol, opts.max_pushes, epoch, &ranks,
+            )?;
+            rows.push(StreamEpochRow {
+                epoch,
+                n: g.n(),
+                m: g.m(),
+                new_nodes,
+                inserted,
+                removed,
+                inc_pushes: sharded.total_pushes() - p0,
+                inc_touched: sharded.touched(),
+                inc_residual: residual,
+                scratch_pushes,
+                l1_vs_power: l1,
+                csr_dirty_rows: csr_dirty,
+            });
+        }
+    } else {
+        let mut inc = PushState::new(g.n(), opts.alpha);
+        for epoch in 0..=opts.epochs {
+            let (new_nodes, inserted, removed) = if epoch == 0 {
+                inc.begin_epoch();
+                (0, 0, 0)
+            } else {
+                let batch = churn_batch(&g, &churn, &mut rng);
+                let delta = g.apply(&batch)?;
+                inc.begin_epoch();
+                inc.apply_batch(&g, &delta);
+                (batch.new_nodes, delta.inserted, delta.removed)
+            };
+            // the parallel path pays an O(n) scatter/gather per epoch, so
+            // it only engages when the injected residual is big enough to
+            // need real drain work; a near-converged epoch (tiny churn)
+            // solves sequentially in a handful of pushes either way
+            let parallel_worthwhile = inc.residual_l1() > 1e3 * opts.tol;
+            let stats = if opts.threads > 1 && parallel_worthwhile {
+                // scatter → parallel drain on real threads → gather; any
+                // residual the monitor left behind is polished sequentially
+                // so the epoch meets `tol` regardless of scheduling
+                let mut sharded = ShardedPush::from_state(&inc, &g, opts.threads);
+                let topts = PushThreadOptions {
+                    tol: opts.tol,
+                    max_pushes: opts.max_pushes,
+                    ..Default::default()
+                };
+                let tm = run_threaded_push(&g, &mut sharded, &topts);
+                let parallel_pushes: u64 = tm.shard_pushes.iter().sum();
+                sharded.gather_into(&mut inc);
+                // the polish only gets whatever the parallel phase left of
+                // the per-solve budget
+                let polish =
+                    inc.solve(&g, opts.tol, opts.max_pushes.saturating_sub(parallel_pushes));
+                crate::stream::SolveStats {
+                    pushes: parallel_pushes + polish.pushes,
+                    ..polish
+                }
+            } else {
+                inc.solve(&g, opts.tol, opts.max_pushes)
+            };
+            anyhow::ensure!(
+                stats.converged,
+                "epoch {epoch}: incremental solve hit the push budget at residual {:.2e}",
+                stats.residual
+            );
+            let (scratch_pushes, l1) = epoch_baseline(
+                &g,
+                opts.alpha,
+                opts.tol,
+                power_tol,
+                opts.max_pushes,
+                epoch,
+                inc.ranks(),
+            )?;
+            rows.push(StreamEpochRow {
+                epoch,
+                n: g.n(),
+                m: g.m(),
+                new_nodes,
+                inserted,
+                removed,
+                inc_pushes: stats.pushes,
+                inc_touched: stats.touched,
+                inc_residual: stats.residual,
+                scratch_pushes,
+                l1_vs_power: l1,
+                csr_dirty_rows: 0,
+            });
+        }
     }
 
     let update_rows = &rows[1..];

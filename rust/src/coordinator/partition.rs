@@ -94,6 +94,20 @@ impl Partitioner {
         Partitioner { bounds }
     }
 
+    /// Adopt explicit cut points: `bounds[0] == 0`, strictly
+    /// increasing, `bounds[p] == n`. The epoch-resident sharded solver
+    /// uses this to extend the last block over newly arrived rows
+    /// without disturbing the interior cuts.
+    pub fn from_bounds(bounds: Vec<usize>) -> Partitioner {
+        assert!(bounds.len() >= 2, "need at least one block");
+        assert_eq!(bounds[0], 0, "bounds must start at 0");
+        assert!(
+            bounds.windows(2).all(|w| w[0] < w[1]),
+            "bounds must be strictly increasing: {bounds:?}"
+        );
+        Partitioner { bounds }
+    }
+
     /// The raw cut points: `bounds()[i]..bounds()[i+1]` is block `i`.
     pub fn bounds(&self) -> &[usize] {
         &self.bounds
@@ -132,6 +146,30 @@ impl Partitioner {
             .iter()
             .map(|&(lo, hi)| (lo..hi).map(|i| csr.row_len(i)).sum())
             .collect()
+    }
+
+    /// Total weight per block under an explicit per-row weight vector
+    /// (the out-row nnz the sharded push engine balances on).
+    pub fn block_weights(&self, lens: &[usize]) -> Vec<usize> {
+        debug_assert_eq!(lens.len(), *self.bounds.last().unwrap());
+        self.blocks()
+            .iter()
+            .map(|&(lo, hi)| lens[lo..hi].iter().sum())
+            .collect()
+    }
+
+    /// Heaviest block weight over the ideal `total/p` — the skew signal
+    /// the between-epoch re-balancer thresholds on. `1.0` means
+    /// perfectly balanced; an all-zero weight vector reports `1.0`
+    /// (nothing to balance).
+    pub fn weight_imbalance(&self, lens: &[usize]) -> f64 {
+        let w = self.block_weights(lens);
+        let total: usize = w.iter().sum();
+        if total == 0 {
+            return 1.0;
+        }
+        let ideal = total as f64 / self.p() as f64;
+        *w.iter().max().unwrap() as f64 / ideal
     }
 }
 
@@ -285,6 +323,39 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn from_bounds_roundtrips_and_validates() {
+        let part = Partitioner::balanced_nnz_lens(&[3, 1, 4, 1, 5], 3);
+        let same = Partitioner::from_bounds(part.bounds().to_vec());
+        assert_eq!(part, same);
+        // extending the last block (node arrivals) keeps interior cuts
+        let mut b = part.bounds().to_vec();
+        *b.last_mut().unwrap() = 9;
+        let grown = Partitioner::from_bounds(b);
+        assert_eq!(grown.p(), part.p());
+        assert_eq!(grown.blocks().last().unwrap().1, 9);
+        assert_eq!(grown.bounds()[..part.p()], part.bounds()[..part.p()]);
+    }
+
+    #[test]
+    #[should_panic(expected = "strictly increasing")]
+    fn from_bounds_rejects_empty_block() {
+        Partitioner::from_bounds(vec![0, 2, 2, 5]);
+    }
+
+    #[test]
+    fn weight_imbalance_flags_skew() {
+        let lens = [1usize, 1, 1, 1, 1, 1, 1, 1];
+        let part = Partitioner::balanced_nnz_lens(&lens, 4);
+        assert_eq!(part.block_weights(&lens), vec![2, 2, 2, 2]);
+        assert!((part.weight_imbalance(&lens) - 1.0).abs() < 1e-12);
+        // a hub arriving in block 0 skews it
+        let skewed = [100usize, 1, 1, 1, 1, 1, 1, 1];
+        assert!(part.weight_imbalance(&skewed) > 3.0);
+        // all-zero weights: nothing to balance
+        assert_eq!(part.weight_imbalance(&[0; 8]), 1.0);
     }
 
     #[test]

@@ -62,6 +62,26 @@ impl Csr {
         Ok(Csr { n, rowptr, cols, vals, dangling, outdeg })
     }
 
+    /// Assemble a CSR from already-built parts — the splice path of
+    /// `DeltaGraph::merge_csr`, which rebuilds only dirty rows and
+    /// copies the rest verbatim. Debug builds re-validate the full
+    /// structural invariants; release builds trust the splicer (the
+    /// property suite pins splice == rebuild bit-for-bit).
+    pub(crate) fn from_raw_parts(
+        n: usize,
+        rowptr: Vec<usize>,
+        cols: Vec<NodeId>,
+        vals: Vec<f32>,
+        dangling: Vec<NodeId>,
+        outdeg: Vec<u32>,
+    ) -> Csr {
+        let csr = Csr { n, rowptr, cols, vals, dangling, outdeg };
+        if cfg!(debug_assertions) {
+            csr.validate().expect("spliced CSR violates structural invariants");
+        }
+        csr
+    }
+
     pub fn n(&self) -> usize {
         self.n
     }

@@ -9,7 +9,8 @@
 //!           [--artifact] [--push] [--balanced] [--global-threshold] [--seed S]
 //! repro experiment table1|table2|global|ablations [--graph G] [--out reports/X]
 //! repro stream [--graph G] [--epochs E] [--seed S] [--tol T] [--alpha A]
-//!              [--threads N] [--arrivals K] [--links L] [--inserts I]
+//!              [--threads N] [--resident] [--rebalance-factor F]
+//!              [--arrivals K] [--links L] [--inserts I]
 //!              [--removes R] [--out reports/X]
 //! repro artifacts-check
 //! repro help
@@ -76,7 +77,8 @@ USAGE:
             [--artifact] [--push] [--balanced] [--global-threshold] [--seed N]
   repro experiment <table1|table2|global|ablations> [--graph SPEC] [--out STEM]
   repro stream [--graph SPEC] [--epochs E] [--seed N] [--tol T] [--alpha A]
-               [--threads N] [--arrivals K] [--links L] [--inserts I]
+               [--threads N] [--resident] [--rebalance-factor F]
+               [--arrivals K] [--links L] [--inserts I]
                [--removes R] [--out STEM]
   repro artifacts-check
   repro help
@@ -88,6 +90,11 @@ graph, re-ranking incrementally (warm-started residual push) vs. from
 scratch, and checks final ranks against a fresh power-method run.
 `--threads N` drains each epoch on N real worker threads (balanced-nnz
 shards exchanging residual fragments over bounded channels).
+`--resident` keeps ONE sharded state alive across all epochs: churn
+injects directly into the live shards (no scatter/gather round-trip)
+and the CSR snapshot is spliced incrementally; `--rebalance-factor F`
+re-cuts the shard bounds between epochs once churn skews the per-shard
+nnz beyond F times the ideal share.
 `run --balanced` partitions rows by balanced nonzero count instead of
 the paper's consecutive ⌈n/p⌉ blocks.
 "#;
@@ -104,7 +111,7 @@ fn parse_flags(args: &[String]) -> anyhow::Result<HashMap<String, String>> {
         if matches!(
             key,
             "check" | "adaptive" | "artifact" | "push" | "balanced" | "global-threshold"
-                | "quick"
+                | "quick" | "resident"
         ) {
             map.insert(key.to_string(), "true".to_string());
             i += 1;
@@ -317,6 +324,12 @@ fn cmd_stream(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     if let Some(v) = flags.get("threads") {
         opts.threads = v.parse()?;
     }
+    if flags.contains_key("resident") {
+        opts.resident = true;
+    }
+    if let Some(v) = flags.get("rebalance-factor") {
+        opts.rebalance_factor = Some(v.parse()?);
+    }
     // churn overrides ride as options; the driver resolves them against
     // graph-scaled defaults once the graph is loaded (loading it here
     // just to size the defaults would build it twice)
@@ -334,12 +347,24 @@ fn cmd_stream(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     }
 
     eprintln!(
-        "streaming {graph}: {} update epochs, tol {:.0e}, alpha {}, threads {} ...",
-        opts.epochs, opts.tol, opts.alpha, opts.threads
+        "streaming {graph}: {} update epochs, tol {:.0e}, alpha {}, threads {}{} ...",
+        opts.epochs,
+        opts.tol,
+        opts.alpha,
+        opts.threads,
+        if opts.resident { " (epoch-resident shards)" } else { "" }
     );
     let rep = experiments::stream_epochs(&graph, &opts)?;
     let md = stream_markdown(&rep.rows);
     println!("{md}");
+    if opts.resident {
+        let dirty: usize = rep.rows.iter().map(|r| r.csr_dirty_rows).sum();
+        let full: usize = rep.rows[1..].iter().map(|r| r.n).sum();
+        println!(
+            "CSR handoff: {dirty} rows spliced across update epochs \
+             (full rebuilds would have paid {full})"
+        );
+    }
     let saving = rep.update_scratch_pushes as f64 / rep.update_inc_pushes.max(1) as f64;
     println!(
         "update epochs: incremental {} pushes vs from-scratch {} ({saving:.1}x saving)",

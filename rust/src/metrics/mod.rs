@@ -112,6 +112,11 @@ pub struct StreamEpochRow {
     /// L1 distance of the incremental ranks to a fresh f64 power-method
     /// run on the snapshot.
     pub l1_vs_power: f64,
+    /// Resident path only: transposed rows the incremental CSR splice
+    /// (`DeltaGraph::merge_csr`) rebuilt this epoch — a full rebuild
+    /// would have paid for all `n`. 0 on the roundtrip path (no
+    /// per-epoch CSR is maintained there).
+    pub csr_dirty_rows: usize,
 }
 
 impl StreamEpochRow {
@@ -146,6 +151,7 @@ impl StreamEpochRow {
         o.insert("inc_residual".into(), Json::Num(self.inc_residual));
         o.insert("scratch_pushes".into(), Json::Num(self.scratch_pushes as f64));
         o.insert("l1_vs_power".into(), Json::Num(self.l1_vs_power));
+        o.insert("csr_dirty_rows".into(), Json::Num(self.csr_dirty_rows as f64));
         Json::Obj(o)
     }
 }
@@ -321,6 +327,7 @@ mod tests {
             inc_residual: 9.0e-11,
             scratch_pushes: 50_000,
             l1_vs_power: 3.0e-10,
+            csr_dirty_rows: 25,
         }
     }
 
@@ -338,6 +345,7 @@ mod tests {
         let j = fake_stream_row(3).to_json();
         assert_eq!(j.get("epoch").unwrap().as_usize(), Some(3));
         assert_eq!(j.get("scratch_pushes").unwrap().as_usize(), Some(50_000));
+        assert_eq!(j.get("csr_dirty_rows").unwrap().as_usize(), Some(25));
         assert!(Json::parse(&j.to_string_compact()).is_ok());
     }
 

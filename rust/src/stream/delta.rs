@@ -62,6 +62,16 @@ pub struct AppliedDelta {
     pub changed_sources: Vec<(NodeId, Vec<NodeId>)>,
 }
 
+/// Cost accounting for one [`DeltaGraph::merge_csr`] splice.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MergeCsrStats {
+    /// Transposed rows rebuilt entry-by-entry (dirty in-rows of changed
+    /// sources, plus rows that arrived since the baseline).
+    pub dirty_rows: usize,
+    /// Rows copied verbatim from the previous snapshot.
+    pub copied_rows: usize,
+}
+
 /// Mutable forward-adjacency web graph, updated in epochs.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct DeltaGraph {
@@ -71,12 +81,29 @@ pub struct DeltaGraph {
     m: usize,
     /// Number of batches applied so far.
     epoch: u64,
+    /// First-touch capture of each changed source's out-list as of the
+    /// last CSR baseline (construction or the last [`merge_csr`]) — the
+    /// splice set for the incremental snapshot handoff.
+    ///
+    /// [`merge_csr`]: DeltaGraph::merge_csr
+    snapshot_changed: BTreeMap<NodeId, Vec<NodeId>>,
+    /// Node / deduped-edge count at the last CSR baseline (guards
+    /// `merge_csr` against being handed a mismatched snapshot).
+    snapshot_n: usize,
+    snapshot_m: usize,
 }
 
 impl DeltaGraph {
     /// Empty graph on `n` nodes (all dangling).
     pub fn new(n: usize) -> Self {
-        DeltaGraph { out: vec![Vec::new(); n], m: 0, epoch: 0 }
+        DeltaGraph {
+            out: vec![Vec::new(); n],
+            m: 0,
+            epoch: 0,
+            snapshot_changed: BTreeMap::new(),
+            snapshot_n: n,
+            snapshot_m: 0,
+        }
     }
 
     /// Build from an edge list (duplicates collapsed, like CSR).
@@ -91,7 +118,15 @@ impl DeltaGraph {
             l.dedup();
             m += l.len();
         }
-        DeltaGraph { out, m, epoch: 0 }
+        let (n, m0) = (out.len(), m);
+        DeltaGraph {
+            out,
+            m,
+            epoch: 0,
+            snapshot_changed: BTreeMap::new(),
+            snapshot_n: n,
+            snapshot_m: m0,
+        }
     }
 
     pub fn n(&self) -> usize {
@@ -187,6 +222,14 @@ impl DeltaGraph {
             .filter(|(s, old)| &self.out[*s as usize] != old)
             .collect();
 
+        // accumulate the CSR-baseline capture: the FIRST list a source
+        // had after the last materialization wins, so merge_csr sees
+        // exactly the delta since its `prev` snapshot even when several
+        // batches land between handoffs
+        for (s, old) in &changed_sources {
+            self.snapshot_changed.entry(*s).or_insert_with(|| old.clone());
+        }
+
         self.epoch += 1;
         Ok(AppliedDelta { old_n, new_n, inserted, removed, changed_sources })
     }
@@ -200,8 +243,158 @@ impl DeltaGraph {
 
     /// Snapshot handoff to the static stack: the transposed, normalized
     /// CSR the synchronous baselines and the DES engine consume.
+    ///
+    /// Rebuilds from scratch in O(n + m). For big-graph epoch handoff
+    /// prefer [`merge_csr`](DeltaGraph::merge_csr), which splices only
+    /// the rows churn actually touched into the previous snapshot.
+    /// (This method does not move the merge baseline — interleaving it
+    /// with `merge_csr` on the same graph is fine, but keep feeding
+    /// `merge_csr` the snapshot chain it produced.)
     pub fn to_csr(&self) -> Result<Csr> {
         Csr::from_edgelist(&self.to_edgelist())
+    }
+
+    /// Incremental snapshot handoff: splice the churn since the last
+    /// baseline into `prev` instead of rebuilding the whole matrix.
+    ///
+    /// `prev` must be the CSR materialized at the current baseline —
+    /// construction or the previous `merge_csr` call (guarded by the
+    /// recorded `(n, nnz)` of the baseline). Only the transposed rows a
+    /// changed source points at (under its old OR new out-list) are
+    /// rebuilt entry-by-entry; every other row is copied verbatim, so
+    /// the result is row-for-row **bit-identical** to a full
+    /// [`to_csr`](DeltaGraph::to_csr) rebuild at
+    /// O(dirty rows + copied prefix) splice cost instead of an
+    /// O(n + m) sort-and-count. Rows that arrived since the baseline
+    /// are rebuilt too (they are either empty or targets of a changed
+    /// source).
+    pub fn merge_csr(&mut self, prev: &Csr) -> Result<(Csr, MergeCsrStats)> {
+        anyhow::ensure!(
+            prev.n() == self.snapshot_n && prev.nnz() == self.snapshot_m,
+            "merge_csr: prev is n={}/nnz={} but the tracked baseline is n={}/nnz={} — \
+             pass the CSR materialized at the last baseline",
+            prev.n(),
+            prev.nnz(),
+            self.snapshot_n,
+            self.snapshot_m
+        );
+        let n = self.n();
+        let n0 = prev.n();
+        // effective changed sources since the baseline (sources whose
+        // list round-tripped back across batches drop out here)
+        let changed: Vec<(NodeId, &[NodeId])> = self
+            .snapshot_changed
+            .iter()
+            .filter(|(s, old)| &self.out[**s as usize] != *old)
+            .map(|(s, old)| (*s, old.as_slice()))
+            .collect();
+        // sorted (BTreeMap order) — membership test during the splice
+        let changed_ids: Vec<NodeId> = changed.iter().map(|(s, _)| *s).collect();
+
+        // dirty transposed rows: every target a changed source pointed
+        // at (entry leaves, or its 1/outdeg weight moved) or points at
+        // now (entry arrives, or weight moved)
+        let mut dirty = vec![false; n];
+        for (s, old) in &changed {
+            for &t in *old {
+                dirty[t as usize] = true;
+            }
+            for &t in self.out(*s as usize) {
+                dirty[t as usize] = true;
+            }
+        }
+
+        // replacement entries, sorted by (row, source) so each dirty
+        // row's splice is a linear sorted merge
+        let mut adds: Vec<(NodeId, NodeId, f32)> = Vec::new();
+        for (s, _) in &changed {
+            let out = self.out(*s as usize);
+            if out.is_empty() {
+                continue;
+            }
+            let w = 1.0 / out.len() as f32;
+            for &t in out {
+                adds.push((t, *s, w));
+            }
+        }
+        adds.sort_unstable_by_key(|&(t, s, _)| (t, s));
+
+        let mut rowptr = Vec::with_capacity(n + 1);
+        let mut cols: Vec<NodeId> = Vec::with_capacity(self.m);
+        let mut vals: Vec<f32> = Vec::with_capacity(self.m);
+        rowptr.push(0usize);
+        let mut ai = 0usize;
+        let mut dirty_rows = 0usize;
+        for i in 0..n {
+            if i >= n0 || dirty[i] {
+                dirty_rows += 1;
+                let (pc, pv): (&[NodeId], &[f32]) =
+                    if i < n0 { prev.row(i) } else { (&[], &[]) };
+                let lo = ai;
+                while ai < adds.len() && adds[ai].0 as usize == i {
+                    ai += 1;
+                }
+                let row_adds = &adds[lo..ai];
+                let mut pi = 0usize;
+                let mut qi = 0usize;
+                loop {
+                    // entries of changed sources are dropped from the
+                    // prev side; their new lists re-enter via row_adds
+                    while pi < pc.len() && changed_ids.binary_search(&pc[pi]).is_ok() {
+                        pi += 1;
+                    }
+                    match (pi < pc.len(), qi < row_adds.len()) {
+                        (false, false) => break,
+                        (true, false) => {
+                            cols.push(pc[pi]);
+                            vals.push(pv[pi]);
+                            pi += 1;
+                        }
+                        (false, true) => {
+                            cols.push(row_adds[qi].1);
+                            vals.push(row_adds[qi].2);
+                            qi += 1;
+                        }
+                        (true, true) => {
+                            // never equal: a surviving prev source is by
+                            // definition not a changed one
+                            if pc[pi] < row_adds[qi].1 {
+                                cols.push(pc[pi]);
+                                vals.push(pv[pi]);
+                                pi += 1;
+                            } else {
+                                cols.push(row_adds[qi].1);
+                                vals.push(row_adds[qi].2);
+                                qi += 1;
+                            }
+                        }
+                    }
+                }
+            } else {
+                // clean row: verbatim copy (adds only target dirty rows,
+                // so the cursor cannot be pointing here)
+                let (c, v) = prev.row(i);
+                cols.extend_from_slice(c);
+                vals.extend_from_slice(v);
+            }
+            rowptr.push(cols.len());
+        }
+        anyhow::ensure!(
+            cols.len() == self.m,
+            "merge produced {} nnz but the graph holds {} edges",
+            cols.len(),
+            self.m
+        );
+
+        let outdeg: Vec<u32> = (0..n).map(|u| self.outdeg(u) as u32).collect();
+        let dangling: Vec<NodeId> = (0..n as NodeId)
+            .filter(|&u| self.out[u as usize].is_empty())
+            .collect();
+        let csr = Csr::from_raw_parts(n, rowptr, cols, vals, dangling, outdeg);
+        self.snapshot_changed.clear();
+        self.snapshot_n = n;
+        self.snapshot_m = self.m;
+        Ok((csr, MergeCsrStats { dirty_rows, copied_rows: n - dirty_rows }))
     }
 }
 
@@ -315,5 +508,72 @@ mod tests {
         let g = toy();
         let el = g.to_edgelist();
         assert_eq!(DeltaGraph::from_edgelist(&el), g);
+    }
+
+    #[test]
+    fn merge_csr_matches_full_rebuild_and_counts_dirty_rows() {
+        let mut g = toy();
+        let prev = g.to_csr().unwrap();
+        g.apply(&UpdateBatch {
+            new_nodes: 1,
+            insert: vec![(4, 0), (3, 4)],
+            remove: vec![(0, 2)],
+        })
+        .unwrap();
+        let full = g.to_csr().unwrap();
+        let (merged, stats) = g.merge_csr(&prev).unwrap();
+        assert_eq!(merged, full, "splice must be bit-identical to the rebuild");
+        // dirty rows: 0 and 4 (source 4's new target + source 3's), and
+        // 2 (source 0 dropped it + weight change on its survivors)
+        assert_eq!(stats.dirty_rows + stats.copied_rows, g.n());
+        assert!(stats.dirty_rows < g.n(), "a small batch must not dirty every row");
+        assert!(stats.dirty_rows >= 2);
+    }
+
+    #[test]
+    fn merge_csr_accumulates_batches_between_handoffs() {
+        let mut g = toy();
+        let prev = g.to_csr().unwrap();
+        // three batches between materializations, including a cross-batch
+        // round-trip (edge (0,3) inserted then removed)
+        g.apply(&UpdateBatch { new_nodes: 0, insert: vec![(0, 3)], remove: vec![] })
+            .unwrap();
+        g.apply(&UpdateBatch { new_nodes: 0, insert: vec![(3, 1)], remove: vec![(0, 3)] })
+            .unwrap();
+        g.apply(&UpdateBatch { new_nodes: 2, insert: vec![(5, 3)], remove: vec![(2, 0)] })
+            .unwrap();
+        let full = g.to_csr().unwrap();
+        let (merged, stats) = g.merge_csr(&prev).unwrap();
+        assert_eq!(merged, full);
+        // and the baseline moved: a second merge chains off the new CSR
+        g.apply(&UpdateBatch { new_nodes: 0, insert: vec![(1, 0)], remove: vec![] })
+            .unwrap();
+        let (merged2, stats2) = g.merge_csr(&merged).unwrap();
+        assert_eq!(merged2, g.to_csr().unwrap());
+        assert!(stats2.dirty_rows <= stats.dirty_rows + 1);
+    }
+
+    #[test]
+    fn merge_csr_rejects_mismatched_baseline() {
+        let mut g = toy();
+        let _baseline = g.to_csr().unwrap();
+        g.apply(&UpdateBatch { new_nodes: 1, insert: vec![(4, 0)], remove: vec![] })
+            .unwrap();
+        // handing it the CURRENT state's CSR (not the baseline) fails
+        let wrong = g.to_csr().unwrap();
+        assert!(g.merge_csr(&wrong).is_err());
+    }
+
+    #[test]
+    fn merge_csr_no_churn_is_all_copy() {
+        let mut g = toy();
+        let prev = g.to_csr().unwrap();
+        // a batch that nets out to nothing
+        g.apply(&UpdateBatch { new_nodes: 0, insert: vec![(0, 3)], remove: vec![(0, 3)] })
+            .unwrap();
+        let (merged, stats) = g.merge_csr(&prev).unwrap();
+        assert_eq!(merged, prev);
+        assert_eq!(stats.dirty_rows, 0);
+        assert_eq!(stats.copied_rows, g.n());
     }
 }

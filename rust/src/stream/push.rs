@@ -94,6 +94,19 @@ impl BucketQueue {
         }
     }
 
+    /// Build a queue seeded from a residual slice, returning it with
+    /// the slice's Σ|r| — the shared rebuild step after a wholesale
+    /// state swap (scatter, gather-adopt, shard-bounds migration).
+    pub(crate) fn seeded_from(r: &[f64]) -> (BucketQueue, f64) {
+        let mut q = BucketQueue::new(r.len());
+        let mut l1 = 0.0f64;
+        for (t, v) in r.iter().enumerate() {
+            l1 += v.abs();
+            q.update(t, v.abs());
+        }
+        (q, l1)
+    }
+
     /// Pop the node in the hottest bucket (approximate argmax |r|).
     pub(crate) fn pop(&mut self) -> Option<usize> {
         while self.hint < NB {
@@ -228,12 +241,8 @@ impl PushState {
         self.p = p;
         self.r = r;
         self.rd = rd;
-        self.queue = BucketQueue::new(self.r.len());
-        let mut l1 = 0.0f64;
-        for (t, v) in self.r.iter().enumerate() {
-            l1 += v.abs();
-            self.queue.update(t, v.abs());
-        }
+        let (queue, l1) = BucketQueue::seeded_from(&self.r);
+        self.queue = queue;
         self.r_l1 = l1;
     }
 

@@ -106,6 +106,19 @@ pub struct PushShard {
     /// to ship; `out_uni[id]` is the self-share, absorbed locally).
     out_uni: Vec<f64>,
     pushes: u64,
+    /// Signed Σp over the local rows (incremental — lets
+    /// [`ShardedPush::mass`] stay O(shards) instead of O(n)).
+    p_sum: f64,
+    /// Signed Σr over the local rows (incremental).
+    r_sum: f64,
+    /// Signed Σacc over all outboxes (incremental).
+    acc_sum: f64,
+    /// Epoch stamp per local row + the shard's current epoch — the
+    /// touched-node accounting that used to live only in the global
+    /// [`PushState`], needed here once the state is epoch-resident.
+    stamp: Vec<u64>,
+    cur_stamp: u64,
+    touched: usize,
 }
 
 impl PushShard {
@@ -133,6 +146,12 @@ impl PushShard {
             acc_mass: 0.0,
             out_uni: vec![0.0; s],
             pushes: 0,
+            p_sum: 0.0,
+            r_sum: 0.0,
+            acc_sum: 0.0,
+            stamp: vec![0; bs],
+            cur_stamp: 0,
+            touched: 0,
         }
     }
 
@@ -147,6 +166,14 @@ impl PushShard {
     }
 
     #[inline]
+    fn touch(&mut self, k: usize) {
+        if self.stamp[k] != self.cur_stamp {
+            self.stamp[k] = self.cur_stamp;
+            self.touched += 1;
+        }
+    }
+
+    #[inline]
     fn add_r(&mut self, k: usize, w: f64) {
         if w == 0.0 {
             return;
@@ -154,8 +181,10 @@ impl PushShard {
         let old = self.r[k];
         let new = old + w;
         self.r_l1 += new.abs() - old.abs();
+        self.r_sum += w;
         self.r[k] = new;
         self.queue.update(k, new.abs());
+        self.touch(k);
     }
 
     /// Accumulate out-of-shard mass for peer `j` at global node `t`.
@@ -173,6 +202,7 @@ impl PushShard {
         }
         let new = old + w;
         self.acc_mass += new.abs() - old.abs();
+        self.acc_sum += w;
         self.acc[j][k] = new;
     }
 
@@ -205,8 +235,11 @@ impl PushShard {
             return;
         }
         self.r_l1 -= m.abs();
+        self.r_sum -= m;
         self.r[k] = 0.0;
         self.p[k] += m;
+        self.p_sum += m;
+        self.touch(k);
         let u = self.lo + k;
         let d = g.outdeg(u);
         if d == 0 {
@@ -265,9 +298,18 @@ impl PushShard {
         spent
     }
 
-    /// Exact recomputation of the incremental Σ|r| tally.
+    /// Exact recomputation of the incremental Σ|r| / Σr tallies (clears
+    /// float-accumulation drift; the signed and rank sums re-tally in
+    /// the same pass so `mass` stays honest too).
     pub(crate) fn recompute_r_l1(&mut self) {
-        self.r_l1 = self.r.iter().map(|v| v.abs()).sum();
+        let (mut l1, mut s) = (0.0f64, 0.0f64);
+        for &v in &self.r {
+            l1 += v.abs();
+            s += v;
+        }
+        self.r_l1 = l1;
+        self.r_sum = s;
+        self.p_sum = self.p.iter().sum();
     }
 
     /// Take everything pending for peer `j` as one fragment (`None`
@@ -287,6 +329,7 @@ impl PushShard {
             if w != 0.0 {
                 entries.push(((base + k) as u32, w));
                 self.acc_mass -= w.abs();
+                self.acc_sum -= w;
                 self.acc[j][k] = 0.0;
             }
         }
@@ -334,13 +377,37 @@ impl PushShard {
         est
     }
 
-    /// Signed residual total (for the mass-conservation invariant).
-    /// Sums the dense accumulators directly: `dirty` may hold duplicate
-    /// indices (a slot that cancelled to exactly 0.0 and was re-dirtied
-    /// loses its membership marker), which is harmless for
+    /// Signed residual total (for the mass-conservation invariant),
+    /// O(shards): the dense Σr / Σacc sweeps this used to pay per call
+    /// are carried incrementally (`r_sum`, `acc_sum`) and verified
+    /// against [`signed_residual_dense`](Self::signed_residual_dense)
+    /// in debug builds.
+    fn signed_residual(&self) -> f64 {
+        let nf = self.n as f64;
+        let mut s = self.r_sum + self.acc_sum;
+        s += self.uni * (self.hi - self.lo) as f64 / nf;
+        for (j, u) in self.out_uni.iter().enumerate() {
+            let rows = self.part.bounds()[j + 1] - self.part.bounds()[j];
+            s += u * rows as f64 / nf;
+        }
+        debug_assert!(
+            {
+                let dense = self.signed_residual_dense();
+                (s - dense).abs() <= 1e-7 * (1.0 + dense.abs())
+            },
+            "incremental signed residual drifted from the dense tally"
+        );
+        s
+    }
+
+    /// Dense recomputation of the signed residual — the exact fallback
+    /// behind the incremental accumulators. Sums the accumulators
+    /// directly rather than walking `dirty`: the lists may hold
+    /// duplicate indices (a slot that cancelled to exactly 0.0 and was
+    /// re-dirtied loses its membership marker), which is harmless for
     /// `take_fragment` (zero entries are skipped, duplicates read 0.0
     /// after the first) but would double-count here.
-    fn signed_residual(&self) -> f64 {
+    fn signed_residual_dense(&self) -> f64 {
         let nf = self.n as f64;
         let mut s: f64 = self.r.iter().sum();
         s += self.uni * (self.hi - self.lo) as f64 / nf;
@@ -355,6 +422,20 @@ impl PushShard {
         }
         s
     }
+
+    /// Re-tally the outbox accumulators exactly (drift fallback for
+    /// `acc_mass` / `acc_sum`).
+    fn recompute_acc_sums(&mut self) {
+        let (mut mass, mut sum) = (0.0f64, 0.0f64);
+        for accj in &self.acc {
+            for &w in accj {
+                mass += w.abs();
+                sum += w;
+            }
+        }
+        self.acc_mass = mass;
+        self.acc_sum = sum;
+    }
 }
 
 /// The sharded push solver: a [`PushState`] split into per-shard bucket
@@ -368,6 +449,19 @@ pub struct ShardedPush {
     /// Pushes each shard may spend between exchanges (per round).
     pub round_pushes: u64,
     pub(crate) shards: Vec<PushShard>,
+    /// The shard count the caller asked for — [`rebalance`] re-targets
+    /// this even when the initial partition clamped it to the row count.
+    ///
+    /// [`rebalance`]: Self::rebalance
+    requested_shards: usize,
+    /// Pushes performed by shard generations retired by `rebalance`.
+    carried_pushes: u64,
+    /// Epoch stamp mirrored into every shard by [`begin_epoch`]
+    /// (the shards carry their own copy so the touched accounting works
+    /// inside `run_threaded_push` workers).
+    ///
+    /// [`begin_epoch`]: Self::begin_epoch
+    cur_stamp: u64,
 }
 
 impl ShardedPush {
@@ -375,12 +469,22 @@ impl ShardedPush {
         assert!(g.n() > 0, "empty graph");
         assert!((0.0..1.0).contains(&alpha), "alpha must be in [0,1)");
         assert!(shards >= 1, "need at least one shard");
+        let requested = shards;
         let lens: Vec<usize> = (0..g.n()).map(|u| g.outdeg(u)).collect();
         let part = Partitioner::balanced_nnz_lens(&lens, shards);
         let n = g.n();
         let shards: Vec<PushShard> =
             (0..part.p()).map(|id| PushShard::new(id, &part, n, alpha)).collect();
-        ShardedPush { alpha, n, part, round_pushes: 4096, shards }
+        ShardedPush {
+            alpha,
+            n,
+            part,
+            round_pushes: 4096,
+            shards,
+            requested_shards: requested,
+            carried_pushes: 0,
+            cur_stamp: 0,
+        }
     }
 
     /// Cold state: `p = 0` everywhere and the full teleport mass
@@ -410,6 +514,8 @@ impl ShardedPush {
                 let v = resid[sh.lo + k];
                 sh.r[k] = v;
                 sh.r_l1 += v.abs();
+                sh.r_sum += v;
+                sh.p_sum += sh.p[k];
                 sh.queue.update(k, v.abs());
             }
             sh.uni = rd;
@@ -434,9 +540,262 @@ impl ShardedPush {
         &self.part
     }
 
-    /// Pushes across all shards so far.
+    /// Pushes across all shards so far (shard generations retired by
+    /// [`rebalance`](Self::rebalance) included).
     pub fn total_pushes(&self) -> u64 {
-        self.shards.iter().map(|sh| sh.pushes).sum()
+        self.carried_pushes + self.shards.iter().map(|sh| sh.pushes).sum::<u64>()
+    }
+
+    /// Start a new epoch's touched-node accounting (mirrors
+    /// [`PushState::begin_epoch`]; the resident epoch driver calls this
+    /// before injecting a churn batch).
+    pub fn begin_epoch(&mut self) {
+        self.cur_stamp += 1;
+        for sh in self.shards.iter_mut() {
+            sh.cur_stamp = self.cur_stamp;
+            sh.touched = 0;
+        }
+    }
+
+    /// Distinct rows whose state changed since [`begin_epoch`]
+    /// (delta injection, pushes, and received fragments included).
+    ///
+    /// [`begin_epoch`]: Self::begin_epoch
+    pub fn touched(&self) -> usize {
+        self.shards.iter().map(|sh| sh.touched).sum()
+    }
+
+    /// Rank estimate at global row `u` (reads the owning shard).
+    pub fn rank_at(&self, u: usize) -> f64 {
+        let j = self.part.owner_of(u);
+        self.shards[j].p[u - self.shards[j].lo]
+    }
+
+    /// Inject the residual a graph delta creates **directly into the
+    /// live shards** — the epoch-resident counterpart of
+    /// [`PushState::apply_batch`], with no scatter/gather round-trip
+    /// through a global state. `g` must be the graph *after* `delta`
+    /// was applied; `self` must be sized to `delta.old_n`.
+    ///
+    /// Mechanics: pending outboxes are delivered first (so the
+    /// injection lands on a settled state and node arrivals never have
+    /// to remap an in-flight accumulator), arrived rows extend the last
+    /// shard, the teleport/dangling uniform renormalizes through each
+    /// shard's replicated `uni` scalar, and every column swap
+    /// `α(S'−S)p` is routed to the owning shard as a
+    /// [`ResidualFragment`] — the same additive currency the solver
+    /// exchanges, so conservation (`Σp + R/(1-α) = 1`) holds by
+    /// construction.
+    pub fn apply_batch(&mut self, g: &DeltaGraph, delta: &super::AppliedDelta) {
+        assert_eq!(self.n, delta.old_n, "sharded state vs delta old_n");
+        assert_eq!(g.n(), delta.new_n, "graph vs delta new_n");
+        self.exchange();
+        let alpha = self.alpha;
+        let (n0, n1) = (delta.old_n, delta.new_n);
+
+        if n1 != n0 {
+            // each shard's uni stands for uni/n per LOCAL row; make it
+            // explicit before n changes its meaning
+            for sh in self.shards.iter_mut() {
+                sh.flush_uni();
+            }
+            self.grow_to(n1);
+
+            // Teleport + dangling columns are uniform e/n; growing n
+            // rescales them everywhere. The OLD dangling set is what p
+            // converged against: changed sources report their old
+            // lists, everyone else kept today's.
+            let mut old_dangling_mass = 0.0f64;
+            {
+                let mut changed_iter = delta.changed_sources.iter().peekable();
+                for sh in &self.shards {
+                    let live = (sh.hi.min(n0)).saturating_sub(sh.lo);
+                    for k in 0..live {
+                        let u = sh.lo + k;
+                        let old_deg = if changed_iter
+                            .peek()
+                            .map_or(false, |(s, _)| *s as usize == u)
+                        {
+                            changed_iter.next().unwrap().1.len()
+                        } else {
+                            g.outdeg(u)
+                        };
+                        if old_deg == 0 {
+                            old_dangling_mass += sh.p[k];
+                        }
+                    }
+                }
+            }
+            let uniform_mass = (1.0 - alpha) + alpha * old_dangling_mass;
+            let shift_old = uniform_mass * (1.0 / n1 as f64 - 1.0 / n0 as f64);
+            let add_new = uniform_mass / n1 as f64;
+            for sh in self.shards.iter_mut() {
+                let bs = sh.hi - sh.lo;
+                let live = (sh.hi.min(n0)).saturating_sub(sh.lo);
+                for k in 0..live {
+                    sh.add_r(k, shift_old);
+                }
+                for k in live..bs {
+                    sh.add_r(k, add_new);
+                }
+            }
+        }
+
+        // Swap each changed source's old column of αS for its new one,
+        // r += α(S'-S)p, batched into one fragment per owning shard.
+        // Uniform (dangling) columns move every shard's replicated
+        // scalar — exactly how a dangling push broadcasts at runtime.
+        let s = self.shards.len();
+        let mut frags: Vec<ResidualFragment> = (0..s)
+            .map(|_| ResidualFragment { entries: Vec::new(), uni: 0.0 })
+            .collect();
+        for (src, old_out) in &delta.changed_sources {
+            let u = *src as usize;
+            let q = alpha * self.rank_at(u);
+            if q == 0.0 {
+                continue;
+            }
+            let mut uni_dq = 0.0f64;
+            if old_out.is_empty() {
+                uni_dq -= q;
+            } else {
+                let w = q / old_out.len() as f64;
+                for &t in old_out {
+                    frags[self.part.owner_of(t as usize)].entries.push((t, -w));
+                }
+            }
+            let new_out = g.out(u);
+            if new_out.is_empty() {
+                uni_dq += q;
+            } else {
+                let w = q / new_out.len() as f64;
+                for &t in new_out {
+                    frags[self.part.owner_of(t as usize)].entries.push((t, w));
+                }
+            }
+            if uni_dq != 0.0 {
+                for f in frags.iter_mut() {
+                    f.uni += uni_dq;
+                }
+            }
+        }
+        for (j, f) in frags.into_iter().enumerate() {
+            if !f.entries.is_empty() || f.uni != 0.0 {
+                self.shards[j].apply_fragment(&f);
+            }
+        }
+    }
+
+    /// Extend the row space to `n1` (node arrivals): interior shard
+    /// bounds stay put, the last shard absorbs the new rows. Requires
+    /// settled outboxes (the `apply_batch` exchange guarantees it).
+    fn grow_to(&mut self, n1: usize) {
+        debug_assert!(n1 > self.n);
+        let mut bounds = self.part.bounds().to_vec();
+        *bounds.last_mut().unwrap() = n1;
+        let part = Partitioner::from_bounds(bounds);
+        self.part = part.clone();
+        self.n = n1;
+        let last = self.shards.len() - 1;
+        for sh in self.shards.iter_mut() {
+            sh.part = part.clone();
+            sh.n = n1;
+            // outboxes addressed to the grown shard were delivered by
+            // the exchange; drop the stale allocation so it
+            // re-materializes at the new size
+            debug_assert!(sh.id == last || sh.dirty[last].is_empty());
+            if sh.id != last {
+                sh.acc[last] = Vec::new();
+            }
+        }
+        let sh = &mut self.shards[last];
+        let bs1 = n1 - sh.lo;
+        sh.hi = n1;
+        sh.p.resize(bs1, 0.0);
+        sh.r.resize(bs1, 0.0);
+        sh.stamp.resize(bs1, 0);
+        sh.queue.grow(bs1);
+    }
+
+    /// Re-balance the shard bounds when churn has skewed the per-shard
+    /// out-nnz beyond `factor` times the ideal share. Queued residual,
+    /// rank state, epoch stamps, and the conserved mass all migrate;
+    /// pending outboxes are delivered first so nothing is in flight
+    /// across the bounds change. Returns whether a migration happened.
+    ///
+    /// O(n) when it fires, O(n) for the skew scan when it does not —
+    /// call it at epoch boundaries, not inside the push loop.
+    pub fn rebalance(&mut self, g: &DeltaGraph, factor: f64) -> bool {
+        assert_eq!(self.n, g.n(), "sharded state sized to a different graph");
+        assert!(factor >= 1.0, "imbalance factor must be >= 1");
+        let lens: Vec<usize> = (0..self.n).map(|u| g.outdeg(u)).collect();
+        if self.part.weight_imbalance(&lens) <= factor {
+            return false;
+        }
+        let new_part = Partitioner::balanced_nnz_lens(&lens, self.requested_shards);
+        if new_part.bounds() == self.part.bounds() {
+            return false;
+        }
+        self.exchange();
+        self.adopt_partition(new_part);
+        true
+    }
+
+    /// Migrate all row state onto a new partition. Outboxes must be
+    /// empty (exchange first). The replicated per-shard uniform scalars
+    /// are unified onto a common value — the differences fold into the
+    /// materialized residual, an exact representation change — so a row
+    /// crossing a bounds line carries the same pending mass on both
+    /// sides.
+    fn adopt_partition(&mut self, part: Partitioner) {
+        let nf = self.n as f64;
+        let u_common = self.shards[0].uni;
+        for sh in self.shards.iter_mut() {
+            debug_assert!(sh.acc_mass == 0.0 && sh.dirty.iter().all(Vec::is_empty));
+            let d = (sh.uni - u_common) / nf;
+            if d != 0.0 {
+                // raw writes, not add_r: this is a representation change
+                // (pending-uniform share -> materialized residual), so it
+                // must not stamp every row as epoch-touched; the retiring
+                // generation's queue/tally fields are rebuilt from `r`
+                // below and never read again
+                for v in sh.r.iter_mut() {
+                    *v += d;
+                }
+            }
+            sh.uni = u_common;
+        }
+        // snapshot the global vectors, retiring the old generation
+        let mut p = vec![0.0f64; self.n];
+        let mut r = vec![0.0f64; self.n];
+        let mut stamp = vec![0u64; self.n];
+        for sh in &self.shards {
+            p[sh.lo..sh.hi].copy_from_slice(&sh.p);
+            r[sh.lo..sh.hi].copy_from_slice(&sh.r);
+            stamp[sh.lo..sh.hi].copy_from_slice(&sh.stamp);
+            self.carried_pushes += sh.pushes;
+        }
+        self.part = part.clone();
+        let s = part.p();
+        let mut shards: Vec<PushShard> = Vec::with_capacity(s);
+        for id in 0..s {
+            let mut sh = PushShard::new(id, &part, self.n, self.alpha);
+            sh.p.copy_from_slice(&p[sh.lo..sh.hi]);
+            sh.r.copy_from_slice(&r[sh.lo..sh.hi]);
+            sh.stamp.copy_from_slice(&stamp[sh.lo..sh.hi]);
+            let (queue, l1) = BucketQueue::seeded_from(&sh.r);
+            sh.queue = queue;
+            sh.r_l1 = l1;
+            sh.r_sum = sh.r.iter().sum();
+            sh.p_sum = sh.p.iter().sum();
+            sh.uni = u_common;
+            sh.cur_stamp = self.cur_stamp;
+            if self.cur_stamp > 0 {
+                sh.touched = sh.stamp.iter().filter(|&&t| t == self.cur_stamp).count();
+            }
+            shards.push(sh);
+        }
+        self.shards = shards;
     }
 
     /// Assemble the current global rank estimate (copy).
@@ -463,6 +822,11 @@ impl ShardedPush {
                     frags.push((j, f));
                 }
             }
+            // every outbox slot is now exactly 0.0 — pin the incremental
+            // tallies back to zero so defer/take float residue cannot
+            // accumulate across epochs
+            self.shards[i].acc_mass = 0.0;
+            self.shards[i].acc_sum = 0.0;
         }
         let count = frags.len() as u64;
         for (j, f) in frags {
@@ -471,11 +835,49 @@ impl ShardedPush {
         count
     }
 
-    /// Exact residual mass `Σ_s (‖r_s‖₁ + |uni_s|·|B_s|/n)` plus
-    /// anything still parked in outboxes (re-tallies every shard).
+    /// Residual mass `Σ_s (‖r_s‖₁ + |uni_s|·|B_s|/n)` plus anything
+    /// still parked in outboxes — O(shards), read from the
+    /// incrementally maintained tallies. Debug builds verify the
+    /// tallies against a dense re-sweep; callers that need a
+    /// drift-proof figure (convergence confirmation) use
+    /// [`residual_recompute`](Self::residual_recompute), the exact
+    /// fallback. Quiet-window pollers and per-epoch reporting stay
+    /// O(shards) here instead of paying O(n) per call.
     pub fn residual_exact(&mut self) -> f64 {
+        let est: f64 = self.shards.iter().map(|sh| sh.residual_estimate()).sum();
+        debug_assert!(
+            {
+                let dense: f64 = self
+                    .shards
+                    .iter()
+                    .map(|sh| {
+                        let l1: f64 = sh.r.iter().map(|v| v.abs()).sum();
+                        let nf = sh.n as f64;
+                        let mut d = l1 + sh.uni.abs() * (sh.hi - sh.lo) as f64 / nf;
+                        for accj in &sh.acc {
+                            d += accj.iter().map(|w| w.abs()).sum::<f64>();
+                        }
+                        for (j, u) in sh.out_uni.iter().enumerate() {
+                            let rows = sh.part.bounds()[j + 1] - sh.part.bounds()[j];
+                            d += u.abs() * rows as f64 / nf;
+                        }
+                        d
+                    })
+                    .sum();
+                (est - dense).abs() <= 1e-7 * (1.0 + dense)
+            },
+            "incremental residual tally drifted from the dense re-sweep"
+        );
+        est
+    }
+
+    /// Dense re-tally of the residual mass (clears incremental drift in
+    /// every shard before summing) — the exact fallback behind
+    /// [`residual_exact`](Self::residual_exact).
+    pub fn residual_recompute(&mut self) -> f64 {
         for sh in self.shards.iter_mut() {
             sh.recompute_r_l1();
+            sh.recompute_acc_sums();
         }
         self.shards.iter().map(|sh| sh.residual_estimate()).sum()
     }
@@ -483,12 +885,13 @@ impl ShardedPush {
     /// The conserved mass `Σp + R/(1-α)` (signed residuals, pending
     /// outboxes included). Equals 1 to float accumulation error after
     /// every push, exchange, and flush — the invariant that makes
-    /// residual shipping safe.
+    /// residual shipping safe. O(shards): rank and residual sums are
+    /// carried incrementally (debug builds cross-check the dense
+    /// sweep inside the per-shard signed-residual tally).
     pub fn mass(&self) -> f64 {
         let mut m = 0.0f64;
         for sh in &self.shards {
-            let ranks: f64 = sh.p.iter().sum();
-            m += ranks + sh.signed_residual() / (1.0 - self.alpha);
+            m += sh.p_sum + sh.signed_residual() / (1.0 - self.alpha);
         }
         m
     }
@@ -523,8 +926,9 @@ impl ShardedPush {
             rounds += 1;
             let est: f64 = self.shards.iter().map(|sh| sh.residual_estimate()).sum();
             if est < tol {
-                // confirm against exact tallies before declaring victory
-                if self.residual_exact() < tol {
+                // confirm against a dense re-tally before declaring
+                // victory (the incremental tallies can drift low)
+                if self.residual_recompute() < tol {
                     break true;
                 }
             }
@@ -541,7 +945,7 @@ impl ShardedPush {
                         sh.flush_uni();
                     }
                 } else {
-                    break self.residual_exact() < tol;
+                    break self.residual_recompute() < tol;
                 }
             }
         };
@@ -549,7 +953,7 @@ impl ShardedPush {
             pushes,
             rounds,
             fragments,
-            residual: self.residual_exact(),
+            residual: self.residual_recompute(),
             converged,
         }
     }
@@ -574,7 +978,8 @@ impl ShardedPush {
         let u_common = self.shards[0].uni;
         let mut p = vec![0.0f64; self.n];
         let mut r = vec![0.0f64; self.n];
-        let mut pushes = 0u64;
+        // retired shard generations (rebalance) count toward the credit
+        let mut pushes = self.carried_pushes;
         for sh in &self.shards {
             let add = (sh.uni - u_common) / nf;
             for k in 0..sh.hi - sh.lo {
@@ -727,6 +1132,198 @@ mod tests {
         assert!(st2.converged);
         let (xref, _) = power_method_f64(&g, 0.85, 1e-12, 10_000);
         assert!(l1(&sp.ranks(), &xref) < 1e-9);
+    }
+
+    #[test]
+    fn resident_apply_batch_matches_scatter_roundtrip() {
+        // the tentpole equivalence at unit scale: injecting a delta into
+        // the LIVE shards lands on the same fixed point as the
+        // scatter -> inject -> re-scatter path, and conserves mass at
+        // every stage (before the solve, not just after)
+        let mut g = web(1_000, 44);
+        let mut resident = ShardedPush::new(&g, 0.85, 3);
+        resident.solve(&g, 1e-11, u64::MAX);
+        let mut state = PushState::new(g.n(), 0.85);
+        state.begin_epoch();
+        state.solve(&g, 1e-11, u64::MAX);
+        let mut rng = Rng::new(45);
+        for round in 0..3 {
+            let n = g.n();
+            let mut batch = UpdateBatch { new_nodes: 2, ..Default::default() };
+            for _ in 0..40 {
+                batch
+                    .insert
+                    .push((rng.range(0, n + 2) as u32, rng.range(0, n) as u32));
+            }
+            let mut edges = Vec::new();
+            g.for_each_edge(|s, d| edges.push((s, d)));
+            for _ in 0..20 {
+                batch.remove.push(edges[rng.range(0, edges.len())]);
+            }
+            let delta = g.apply(&batch).unwrap();
+
+            resident.begin_epoch();
+            resident.apply_batch(&g, &delta);
+            let m = resident.mass();
+            assert!((m - 1.0).abs() < 1e-9, "round {round}: mass after inject {m}");
+            assert!(resident.touched() > 0, "round {round}: injection touched nothing");
+            let st = resident.solve(&g, 1e-11, u64::MAX);
+            assert!(st.converged, "round {round}");
+
+            state.begin_epoch();
+            state.apply_batch(&g, &delta);
+            let mut sp = ShardedPush::from_state(&state, &g, 3);
+            let st2 = sp.solve(&g, 1e-11, u64::MAX);
+            assert!(st2.converged, "round {round}");
+            sp.gather_into(&mut state);
+
+            let d = l1(&resident.ranks(), state.ranks());
+            assert!(d < 1e-9, "round {round}: resident vs roundtrip drift {d}");
+        }
+    }
+
+    #[test]
+    fn rebalance_is_noop_below_the_factor() {
+        let g = web(1_000, 41);
+        let mut sp = ShardedPush::new(&g, 0.85, 4);
+        let bounds = sp.partitioner().bounds().to_vec();
+        let lens: Vec<usize> = (0..g.n()).map(|u| g.outdeg(u)).collect();
+        let imb = sp.partitioner().weight_imbalance(&lens);
+        assert!(!sp.rebalance(&g, imb + 0.1), "fresh balanced bounds must not move");
+        assert_eq!(sp.partitioner().bounds(), &bounds[..]);
+        assert_eq!(sp.total_pushes(), 0);
+    }
+
+    #[test]
+    fn rebalance_after_hub_arrival_preserves_state() {
+        let mut g = web(400, 42);
+        let mut sp = ShardedPush::new(&g, 0.85, 4);
+        let st = sp.solve(&g, 1e-10, u64::MAX);
+        assert!(st.converged);
+        // five arriving hubs, all owned by the last shard: per-shard nnz
+        // skews hard in one place
+        let n = g.n();
+        let mut batch = UpdateBatch { new_nodes: 5, ..Default::default() };
+        for h in 0..5u32 {
+            for t in 0..n {
+                batch.insert.push(((n + h as usize) as u32, t as u32));
+            }
+        }
+        let delta = g.apply(&batch).unwrap();
+        sp.begin_epoch();
+        sp.apply_batch(&g, &delta);
+        let lens: Vec<usize> = (0..g.n()).map(|u| g.outdeg(u)).collect();
+        let before = sp.partitioner().weight_imbalance(&lens);
+        assert!(before > 1.1, "hub arrival should skew the bounds: {before}");
+
+        let tp0 = sp.total_pushes();
+        let r0 = sp.residual_exact();
+        let m0 = sp.mass();
+        assert!(sp.rebalance(&g, 1.1), "skew {before} must trigger a migration");
+        // nothing lost across the bounds migration
+        assert_eq!(sp.total_pushes(), tp0, "rebalance must not spend pushes");
+        let r1 = sp.residual_exact();
+        assert!((r0 - r1).abs() < 1e-9, "queued residual moved: {r0} vs {r1}");
+        assert!((sp.mass() - m0).abs() < 1e-12, "mass moved: {m0} vs {}", sp.mass());
+        let after = sp.partitioner().weight_imbalance(&lens);
+        assert!(after <= before, "rebalance made skew worse: {before} -> {after}");
+        // and the migrated state still lands on the reference
+        let st = sp.solve(&g, 1e-11, u64::MAX);
+        assert!(st.converged);
+        let (xref, _) = power_method_f64(&g, 0.85, 1e-12, 10_000);
+        assert!(l1(&sp.ranks(), &xref) < 1e-9);
+    }
+
+    #[test]
+    fn rebalance_mid_solve_keeps_queued_residual() {
+        // interrupt a solve (hot queues, residual everywhere), skew the
+        // graph, rebalance: the queued mass must survive the migration
+        // even though the per-shard uniform scalars have diverged
+        let mut g = web(800, 46);
+        let mut sp = ShardedPush::new(&g, 0.85, 4);
+        sp.round_pushes = 128;
+        let st = sp.solve(&g, 1e-12, 600);
+        assert!(!st.converged, "budget too generous for this test");
+        let n = g.n();
+        let mut batch = UpdateBatch { new_nodes: 2, ..Default::default() };
+        for t in 0..n {
+            batch.insert.push((n as u32, t as u32));
+        }
+        let delta = g.apply(&batch).unwrap();
+        sp.begin_epoch();
+        sp.apply_batch(&g, &delta);
+        let tp0 = sp.total_pushes();
+        let r0 = sp.residual_exact();
+        let m0 = sp.mass();
+        assert!((m0 - 1.0).abs() < 1e-9);
+        if sp.rebalance(&g, 1.05) {
+            assert_eq!(sp.total_pushes(), tp0);
+            let r1 = sp.residual_exact();
+            // the uniform unification folds signed mass into |r|, so the
+            // L1 tally may shift by cancellation — but only a little
+            assert!((r0 - r1).abs() < 1e-7 * (1.0 + r0), "residual jumped: {r0} vs {r1}");
+            assert!((sp.mass() - m0).abs() < 1e-10, "mass moved across migration");
+        }
+        sp.round_pushes = 4096;
+        let st = sp.solve(&g, 1e-11, u64::MAX);
+        assert!(st.converged);
+        let (xref, _) = power_method_f64(&g, 0.85, 1e-12, 10_000);
+        assert!(l1(&sp.ranks(), &xref) < 1e-9);
+    }
+
+    #[test]
+    fn rebalance_survives_mass_deletion_with_more_shards_than_weight() {
+        // heavy deletion: 8 shards but only a handful of rows still
+        // carry out-edges — the re-cut pads empty blocks and the solver
+        // keeps working
+        let mut g = web(300, 43);
+        let mut sp = ShardedPush::new(&g, 0.85, 8);
+        sp.solve(&g, 1e-10, u64::MAX);
+        let mut batch = UpdateBatch::default();
+        g.for_each_edge(|s, d| {
+            if s >= 10 {
+                batch.remove.push((s, d));
+            }
+        });
+        let delta = g.apply(&batch).unwrap();
+        sp.begin_epoch();
+        sp.apply_batch(&g, &delta);
+        assert!((sp.mass() - 1.0).abs() < 1e-9, "mass {}", sp.mass());
+        let fired = sp.rebalance(&g, 1.5);
+        assert_eq!(sp.shard_count(), 8, "shard count must survive the re-cut");
+        let st = sp.solve(&g, 1e-11, u64::MAX);
+        assert!(st.converged);
+        let (xref, _) = power_method_f64(&g, 0.85, 1e-13, 100_000);
+        assert!(l1(&sp.ranks(), &xref) < 1e-9, "fired={fired}");
+    }
+
+    #[test]
+    fn resident_epoch_touched_counts_are_churn_proportional() {
+        // warm epochs must not touch the whole graph: the resident
+        // injection + drain only visits rows the churn actually reaches
+        let mut g = web(2_000, 47);
+        let mut sp = ShardedPush::new(&g, 0.85, 4);
+        sp.solve(&g, 1e-10, u64::MAX);
+        // a guaranteed-new edge, so the delta is never a no-op
+        let t = (0..g.n()).find(|&t| !g.has_edge(17, t as u32)).unwrap();
+        let delta = g
+            .apply(&UpdateBatch {
+                new_nodes: 0,
+                insert: vec![(17, t as u32)],
+                remove: vec![],
+            })
+            .unwrap();
+        sp.begin_epoch();
+        sp.apply_batch(&g, &delta);
+        let st = sp.solve(&g, 1e-10, u64::MAX);
+        assert!(st.converged);
+        let touched = sp.touched();
+        assert!(touched > 0);
+        assert!(
+            touched < g.n() / 2,
+            "single-edge epoch touched {touched} of {} rows",
+            g.n()
+        );
     }
 
     #[test]

@@ -1,0 +1,242 @@
+//! Cross-epoch invariant suite for the epoch-resident sharded push
+//! path (seeded random campaigns, same style as proptests.rs — every
+//! failure names its trial/round).
+//!
+//! Invariants covered:
+//!   * `DeltaGraph::merge_csr(prev)` is row-for-row identical to the
+//!     full `to_csr()` rebuild across 100+ random churn batches
+//!     (insertions, deletions, dangling transitions, node arrivals);
+//!   * the resident `ShardedPush::apply_batch` path converges to the
+//!     same ranks as the scatter -> inject -> re-scatter path to 1e-9
+//!     L1, with `Σp + R/(1-α) = 1` holding to 1e-9 after every epoch,
+//!     for 10 epochs with re-balancing enabled at every shard count in
+//!     1..8;
+//!   * the threaded resident path (real workers + entry re-balancing)
+//!     stays on the power-method reference across churn epochs;
+//!   * the `repro stream --resident` driver meets the acceptance shape
+//!     end-to-end and is deterministic at `threads = 1`.
+//!
+//! Every test name starts with `resident_`: CI's debug pass skips them
+//! (`--skip resident_`) and the release pass runs the whole file.
+
+use asyncpr::asynciter::{run_threaded_push, PushThreadOptions};
+use asyncpr::coordinator::experiments::{self, StreamOptions};
+use asyncpr::graph::generators::{self, churn_batch, ChurnParams};
+use asyncpr::stream::{power_method_f64, DeltaGraph, PushState, ShardedPush, UpdateBatch};
+use asyncpr::util::Rng;
+
+fn l1_64(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).sum()
+}
+
+fn web(n: usize, seed: u64) -> DeltaGraph {
+    let el = generators::power_law_web(&generators::WebParams::scaled(n), seed);
+    DeltaGraph::from_edgelist(&el)
+}
+
+/// Random batch exercising every churn mode: inserts (existing and
+/// arriving endpoints), deletions, a forced all-out-links deletion
+/// (node becomes dangling), and a forced un-dangling edge.
+fn random_batch(rng: &mut Rng, g: &DeltaGraph) -> UpdateBatch {
+    let n0 = g.n();
+    let new_nodes = rng.range(0, 4);
+    let n1 = n0 + new_nodes;
+    let mut b = UpdateBatch { new_nodes, ..Default::default() };
+    for _ in 0..rng.range(0, 25) {
+        b.insert
+            .push((rng.range(0, n1) as u32, rng.range(0, n1) as u32));
+    }
+    let mut edges = Vec::new();
+    g.for_each_edge(|s, d| edges.push((s, d)));
+    if !edges.is_empty() {
+        for _ in 0..rng.range(0, 15) {
+            b.remove.push(edges[rng.range(0, edges.len())]);
+        }
+        // dangling transition: strip one source bare
+        let (s, _) = edges[rng.range(0, edges.len())];
+        for &(es, ed) in &edges {
+            if es == s {
+                b.remove.push((es, ed));
+            }
+        }
+    }
+    // and give one dangling page an out-link (uniform column -> sparse)
+    if let Some(u) = (0..n0).find(|&u| g.is_dangling(u)) {
+        b.insert.push((u as u32, rng.range(0, n0) as u32));
+    }
+    b
+}
+
+#[test]
+fn resident_merge_csr_matches_full_rebuild_100plus_batches() {
+    let mut rng = Rng::new(901);
+    let mut batches = 0usize;
+    for trial in 0..10u64 {
+        let n = rng.range(50, 400);
+        let mut g = web(n, 9_000 + trial);
+        let mut csr = g.to_csr().unwrap();
+        for round in 0..12 {
+            let batch = random_batch(&mut rng, &g);
+            g.apply(&batch).unwrap();
+            let full = g.to_csr().unwrap();
+            let (merged, stats) = g.merge_csr(&csr).unwrap();
+            assert_eq!(
+                merged, full,
+                "trial {trial} round {round}: splice != rebuild"
+            );
+            assert_eq!(
+                stats.dirty_rows + stats.copied_rows,
+                g.n(),
+                "trial {trial} round {round}: row accounting"
+            );
+            csr = merged;
+            batches += 1;
+        }
+    }
+    assert!(batches >= 100, "campaign too small: {batches} batches");
+}
+
+#[test]
+fn resident_matches_roundtrip_10_epochs_all_shard_counts() {
+    for shards in 1..=8usize {
+        let mut g = web(800, 70 + shards as u64);
+        let churn = ChurnParams::scaled_to(g.n(), g.m());
+        let mut rng = Rng::new(500 + shards as u64);
+
+        let mut resident = ShardedPush::new(&g, 0.85, shards);
+        let st = resident.solve(&g, 1e-11, u64::MAX);
+        assert!(st.converged, "shards {shards}: cold build");
+        let mut state = PushState::new(g.n(), 0.85);
+        state.begin_epoch();
+        state.solve(&g, 1e-11, u64::MAX);
+
+        for epoch in 0..10 {
+            let batch = churn_batch(&g, &churn, &mut rng);
+            let delta = g.apply(&batch).unwrap();
+
+            // resident: inject into the live shards, re-balance, drain
+            resident.begin_epoch();
+            resident.apply_batch(&g, &delta);
+            resident.rebalance(&g, 1.5);
+            let st = resident.solve(&g, 1e-11, u64::MAX);
+            assert!(st.converged, "shards {shards} epoch {epoch}: resident");
+            let mass = resident.mass();
+            assert!(
+                (mass - 1.0).abs() < 1e-9,
+                "shards {shards} epoch {epoch}: mass {mass}"
+            );
+
+            // roundtrip: global inject, scatter, drain, gather
+            state.begin_epoch();
+            state.apply_batch(&g, &delta);
+            let mut sp = ShardedPush::from_state(&state, &g, shards);
+            let st2 = sp.solve(&g, 1e-11, u64::MAX);
+            assert!(st2.converged, "shards {shards} epoch {epoch}: roundtrip");
+            sp.gather_into(&mut state);
+
+            let d = l1_64(&resident.ranks(), state.ranks());
+            assert!(
+                d < 1e-9,
+                "shards {shards} epoch {epoch}: resident vs roundtrip drift {d}"
+            );
+        }
+    }
+}
+
+#[test]
+fn resident_threaded_path_tracks_power_reference() {
+    let tol = 1e-10;
+    let mut g = web(2_000, 81);
+    let mut sharded = ShardedPush::new(&g, 0.85, 4);
+    let opts = PushThreadOptions {
+        tol,
+        rebalance_factor: Some(1.5),
+        ..Default::default()
+    };
+    let tm = run_threaded_push(&g, &mut sharded, &opts);
+    if !tm.converged {
+        let st = sharded.solve(&g, tol, u64::MAX);
+        assert!(st.converged, "cold polish");
+    }
+    let churn = ChurnParams::scaled_to(g.n(), g.m());
+    let mut rng = Rng::new(82);
+    for epoch in 0..5 {
+        let batch = churn_batch(&g, &churn, &mut rng);
+        let delta = g.apply(&batch).unwrap();
+        sharded.begin_epoch();
+        sharded.apply_batch(&g, &delta);
+        let mass = sharded.mass();
+        assert!((mass - 1.0).abs() < 1e-9, "epoch {epoch}: inject mass {mass}");
+        let tm = run_threaded_push(&g, &mut sharded, &opts);
+        if !tm.converged {
+            let st = sharded.solve(&g, tol, u64::MAX);
+            assert!(st.converged, "epoch {epoch}: polish");
+        }
+        let mass = sharded.mass();
+        assert!((mass - 1.0).abs() < 1e-9, "epoch {epoch}: post mass {mass}");
+        let (xref, _) = power_method_f64(&g, 0.85, 1e-11, 100_000);
+        let d = l1_64(&sharded.ranks(), &xref);
+        assert!(d < 1e-8, "epoch {epoch}: L1 vs power {d}");
+    }
+}
+
+#[test]
+fn resident_stream_driver_meets_acceptance_shape() {
+    let opts = StreamOptions {
+        epochs: 3,
+        seed: 9,
+        threads: 4,
+        resident: true,
+        rebalance_factor: Some(1.5),
+        ..Default::default()
+    };
+    let rep = experiments::stream_epochs("scaled:3000", &opts).unwrap();
+    assert_eq!(rep.rows.len(), 4);
+    assert_eq!(rep.rows[0].csr_dirty_rows, 0, "epoch 0 has no splice");
+    for r in &rep.rows {
+        assert!(r.l1_vs_power < 1e-8, "epoch {}: L1 {}", r.epoch, r.l1_vs_power);
+    }
+    for r in &rep.rows[1..] {
+        assert!(r.inserted + r.new_nodes > 0, "churn must do something");
+        assert!(
+            r.csr_dirty_rows > 0 && r.csr_dirty_rows < r.n,
+            "epoch {}: splice rebuilt {} of {} rows",
+            r.epoch,
+            r.csr_dirty_rows,
+            r.n
+        );
+    }
+    assert!(rep.final_l1_vs_power < 1e-8);
+    // resident warm epochs stay far cheaper than from-scratch even with
+    // staleness-inflated parallel pushes (aggregate: per-epoch counts
+    // wobble with the schedule)
+    assert!(
+        rep.update_scratch_pushes as f64 / rep.update_inc_pushes.max(1) as f64 > 2.0,
+        "resident warm start saved too little: {} vs {}",
+        rep.update_inc_pushes,
+        rep.update_scratch_pushes
+    );
+}
+
+#[test]
+fn resident_stream_driver_deterministic_single_thread() {
+    let opts = StreamOptions {
+        epochs: 2,
+        seed: 11,
+        threads: 1,
+        resident: true,
+        rebalance_factor: Some(1.5),
+        ..Default::default()
+    };
+    let a = experiments::stream_epochs("scaled:1500", &opts).unwrap();
+    let b = experiments::stream_epochs("scaled:1500", &opts).unwrap();
+    assert_eq!(a.rows.len(), b.rows.len());
+    for (ra, rb) in a.rows.iter().zip(&b.rows) {
+        assert_eq!(ra.inc_pushes, rb.inc_pushes);
+        assert_eq!(ra.inc_touched, rb.inc_touched);
+        assert_eq!(ra.scratch_pushes, rb.scratch_pushes);
+        assert_eq!(ra.csr_dirty_rows, rb.csr_dirty_rows);
+        assert_eq!(ra.m, rb.m);
+        assert_eq!(ra.l1_vs_power, rb.l1_vs_power);
+    }
+}
