@@ -1,0 +1,136 @@
+//! Bench: certified top-k early stop vs. full convergence on the
+//! evolving stream — the serving-path payoff.
+//!
+//! Two identical 10-epoch churn runs (cloned graph, same rng seed) over
+//! one epoch-resident sharded push state:
+//!
+//! * **certified**: each epoch's solve ends the moment the top-k head
+//!   certifies (`stop_when_topk_certified` semantics via
+//!   `solve_certified_sharded`), falling back to full convergence only
+//!   when the head cannot certify;
+//! * **full**: each epoch runs the classic `residual_exact < τ` drain.
+//!
+//! The metric is pushes (the work unit the whole stream subsystem
+//! accounts in); the acceptance criterion is that the certified run
+//! needs STRICTLY fewer — the run bails otherwise. A soundness postlude
+//! audits every certified head against a fresh power-method reference.
+
+use std::time::Instant;
+
+use asyncpr::graph::generators::{churn_batch, ChurnParams};
+use asyncpr::stream::{
+    power_method_f64, solve_certified_sharded, DeltaGraph, ShardedPush, TopKGoal, TopKTracker,
+};
+use asyncpr::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick")
+        || std::env::var("BENCH_FAST").ok().as_deref() == Some("1");
+    let graph = if quick { "scaled:6000" } else { "scaled:20000" };
+    let epochs = if quick { 4 } else { 10 };
+    let (k, shards, tol) = (32usize, 4usize, 1e-9f64);
+    println!(
+        "== bench topk_stream (graph = {graph}, k = {k}, {epochs} churn epochs, \
+         {shards} shards, tol = {tol:.0e}) ==\n"
+    );
+
+    let el = asyncpr::coordinator::load_edgelist(graph, 42)?;
+    let g0 = DeltaGraph::from_edgelist(&el);
+    println!("n = {}, m = {}\n", g0.n(), g0.m());
+    let churn = ChurnParams::scaled_to(g0.n(), g0.m());
+    let seed = 777u64;
+    let goal = TopKGoal { k, order: false };
+
+    // ---- certified early-stop run --------------------------------
+    let t0 = Instant::now();
+    let (cert_pushes, cert_epochs, heads) = {
+        let mut g = g0.clone();
+        let mut rng = Rng::new(seed);
+        let mut sp = ShardedPush::new(&g, 0.85, shards);
+        let mut tracker = TopKTracker::new(goal);
+        let mut total = 0u64;
+        let mut certified = 0usize;
+        // (epoch, certified head, graph snapshot for the audit)
+        let mut heads: Vec<(usize, Vec<u32>, DeltaGraph)> = Vec::new();
+        for epoch in 0..=epochs {
+            if epoch > 0 {
+                let batch = churn_batch(&g, &churn, &mut rng);
+                let delta = g.apply(&batch)?;
+                sp.begin_epoch();
+                sp.apply_batch(&g, &delta);
+            }
+            let st = solve_certified_sharded(&mut sp, &g, &mut tracker, tol, u64::MAX, true);
+            anyhow::ensure!(
+                st.pushes_to_cert.is_some() || st.converged,
+                "epoch {epoch}: neither certified nor converged"
+            );
+            total += st.pushes;
+            if st.cert.set_certified {
+                certified += 1;
+                heads.push((epoch, st.cert.head.clone(), g.clone()));
+            }
+            println!(
+                "  epoch {epoch}: {} pushes, cert@{:?}, residual {:.1e}",
+                st.pushes, st.pushes_to_cert, st.residual
+            );
+        }
+        (total, certified, heads)
+    };
+    let cert_wall = t0.elapsed().as_secs_f64() * 1e3;
+
+    // ---- full-convergence run ------------------------------------
+    let t0 = Instant::now();
+    let full_pushes = {
+        let mut g = g0.clone();
+        let mut rng = Rng::new(seed);
+        let mut sp = ShardedPush::new(&g, 0.85, shards);
+        let mut total = 0u64;
+        for epoch in 0..=epochs {
+            if epoch > 0 {
+                let batch = churn_batch(&g, &churn, &mut rng);
+                let delta = g.apply(&batch)?;
+                sp.begin_epoch();
+                sp.apply_batch(&g, &delta);
+            }
+            let st = sp.solve(&g, tol, u64::MAX);
+            anyhow::ensure!(st.converged, "epoch {epoch}: full run did not converge");
+            total += st.pushes;
+        }
+        total
+    };
+    let full_wall = t0.elapsed().as_secs_f64() * 1e3;
+
+    println!(
+        "\ncertified early stop: {cert_pushes} pushes ({cert_wall:.0} ms), \
+         head certified in {cert_epochs}/{} epochs",
+        epochs + 1
+    );
+    println!("full convergence:     {full_pushes} pushes ({full_wall:.0} ms)");
+    println!(
+        "push saving: {:.1}x fewer pushes on the serving path",
+        full_pushes as f64 / cert_pushes.max(1) as f64
+    );
+
+    // ---- soundness audit -----------------------------------------
+    // every certified head must equal the fresh power reference's
+    // top-k on that epoch's snapshot
+    for (epoch, head, g) in &heads {
+        let (xref, _) = power_method_f64(g, 0.85, 1e-12, 10_000);
+        let mut want = asyncpr::pagerank::top_k_ids(&xref, k);
+        let mut got = head.clone();
+        want.sort_unstable();
+        got.sort_unstable();
+        anyhow::ensure!(
+            got == want,
+            "epoch {epoch}: certified head disagrees with the power reference"
+        );
+    }
+    println!("audit: all {} certified heads exact vs the power reference", heads.len());
+
+    anyhow::ensure!(
+        cert_pushes < full_pushes,
+        "certified early stop must need strictly fewer pushes \
+         ({cert_pushes} vs {full_pushes})"
+    );
+    Ok(())
+}

@@ -23,6 +23,6 @@ pub mod threads;
 pub use engine::{Mode, RunMetrics, RunSpec, SimEngine, StopRule};
 pub use operator::{ArtifactBlockOp, BlockOperator, NativeBlockOp};
 pub use threads::{
-    run_threaded, run_threaded_push, PushThreadMetrics, PushThreadOptions,
-    ThreadRunMetrics, ThreadRunOptions,
+    run_threaded, run_threaded_push, run_threaded_push_certified, CertifiedRunOutcome,
+    PushThreadMetrics, PushThreadOptions, ThreadRunMetrics, ThreadRunOptions,
 };

@@ -21,11 +21,14 @@
 
 use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
-use std::sync::{Arc, Barrier};
+use std::sync::{Arc, Barrier, Mutex};
 use std::time::Instant;
 
 use crate::pagerank::PagerankProblem;
-use crate::stream::{DeltaGraph, ResidualFragment, ShardedPush};
+use crate::stream::{
+    certify_frames, shard_frame, DeltaGraph, HeadList, ResidualFragment, ShardHeadFrame,
+    ShardedPush, TopKCertificate, TopKGoal, TopKTracker,
+};
 use crate::termination::{MonitorTermination, TermMsg, WorkerTermination};
 
 /// Options for a threaded run.
@@ -237,6 +240,18 @@ pub struct PushThreadOptions {
     /// ideal share ([`ShardedPush::rebalance`]) — the epoch-resident
     /// path's answer to hubs arriving in one shard's row range.
     pub rebalance_factor: Option<f64>,
+    /// Serving-path early stop: workers stream per-shard head-candidate
+    /// frames to the monitor alongside their residual estimates, and
+    /// the run winds down as soon as the merged frames *tentatively*
+    /// certify this top-k goal (see [`crate::stream::TopKTracker`]).
+    /// Tentative because worker frames are asynchronous snapshots — the
+    /// caller must re-check on the gathered/settled state (an exact
+    /// [`TopKTracker::check_sharded`] call) and resume if the exact
+    /// check fails. Ignored on the single-shard fast path (drive that
+    /// with [`crate::stream::solve_certified_sharded`] instead).
+    ///
+    /// [`TopKTracker::check_sharded`]: crate::stream::TopKTracker::check_sharded
+    pub topk: Option<TopKGoal>,
 }
 
 impl Default for PushThreadOptions {
@@ -249,6 +264,7 @@ impl Default for PushThreadOptions {
             max_pushes: u64::MAX,
             quiet_checks: 3,
             rebalance_factor: None,
+            topk: None,
         }
     }
 }
@@ -275,6 +291,10 @@ pub struct PushThreadMetrics {
     /// Whether the pre-run skew check migrated the shard bounds
     /// (only with [`PushThreadOptions::rebalance_factor`]).
     pub rebalanced: bool,
+    /// Whether the monitor cut the run on a *tentative* top-k
+    /// certification (only with [`PushThreadOptions::topk`]; the caller
+    /// re-checks exactly on the settled state).
+    pub topk_stopped: bool,
 }
 
 /// Run the sharded residual-push solver on real OS threads — the
@@ -343,10 +363,13 @@ pub fn run_threaded_push(
             residual,
             converged,
             rebalanced,
+            topk_stopped: false,
         };
     }
 
     let tol = opts.tol;
+    let alpha = state.alpha();
+    let goal = opts.topk;
     let local_target = 0.5 * tol / s as f64;
     let round_budget = opts.round_pushes.max(1);
     // per-worker slice of the global push budget; s * floor never
@@ -360,6 +383,11 @@ pub fn run_threaded_push(
     let in_flight = Arc::new(AtomicI64::new(0));
     let published: Arc<Vec<AtomicU64>> =
         Arc::new((0..s).map(|_| AtomicU64::new(f64::MAX.to_bits())).collect());
+    // per-shard head-candidate frames for the serving-path monitor
+    // (None until the owning worker's first publish)
+    let head_frames: Arc<Vec<Mutex<Option<ShardHeadFrame>>>> =
+        Arc::new((0..s).map(|_| Mutex::new(None)).collect());
+    let topk_stop = Arc::new(AtomicBool::new(false));
     // all senders stop before this barrier; inboxes are drained after
     // it, so no fragment can be stranded in a dead channel
     let drained = Arc::new(Barrier::new(s));
@@ -381,12 +409,18 @@ pub fn run_threaded_push(
             let stop = Arc::clone(&stop);
             let in_flight = Arc::clone(&in_flight);
             let published = Arc::clone(&published);
+            let head_frames = Arc::clone(&head_frames);
             let drained = Arc::clone(&drained);
             handles.push(scope.spawn(move || {
                 let p0 = shard.pushes();
                 let mut rounds = 0u64;
                 let mut sent = 0u64;
                 let mut deferred = 0u64;
+                // serving path: this worker's head-candidate pool, fed
+                // by the shard's hit stream (first refresh scans the
+                // shard, later ones are O(hits))
+                let mut head_list = goal.map(|gl| HeadList::new(gl.pool_cap()));
+                let mut frame_due = true;
                 loop {
                     // import residual fragments queued by the peers
                     let mut received = false;
@@ -429,6 +463,12 @@ pub fn run_threaded_push(
                             }
                         }
                     }
+                    if let Some(hl) = head_list.as_mut() {
+                        if frame_due || pushed > 0 || received {
+                            *head_frames[id].lock().unwrap() = Some(shard_frame(hl, shard));
+                            frame_due = false;
+                        }
+                    }
                     published[id]
                         .store(shard.residual_estimate().to_bits(), Ordering::Release);
                     rounds += 1;
@@ -450,10 +490,29 @@ pub fn run_threaded_push(
         }
 
         // inline monitor: quiet = published residual under tol with no
-        // fragments in flight, persisted across consecutive samples
+        // fragments in flight, persisted across consecutive samples.
+        // With a top-k goal it additionally merges the workers' head
+        // frames and stops the moment they certify — tentatively, since
+        // the frames are asynchronous snapshots; the caller re-checks
+        // exactly on the settled state.
         let mut quiet = 0u32;
         while !stop.load(Ordering::Acquire) && Instant::now() < deadline {
             std::thread::sleep(std::time::Duration::from_micros(300));
+            if let Some(gl) = goal {
+                if in_flight.load(Ordering::Acquire) == 0 {
+                    let frames: Vec<ShardHeadFrame> = head_frames
+                        .iter()
+                        .filter_map(|m| m.lock().unwrap().clone())
+                        .collect();
+                    if frames.len() == s
+                        && certify_frames(&frames, gl.k, alpha).certified(gl.order)
+                    {
+                        topk_stop.store(true, Ordering::Release);
+                        stop.store(true, Ordering::Release);
+                        continue;
+                    }
+                }
+            }
             let total: f64 = published
                 .iter()
                 .map(|a| f64::from_bits(a.load(Ordering::Acquire)))
@@ -478,6 +537,13 @@ pub fn run_threaded_push(
     // delivered deterministically before the exact re-tally (dense:
     // the converged flag must not ride on drifted increments)
     state.exchange();
+    if goal.is_some() {
+        // the workers' head lists consumed the shards' hit streams and
+        // re-armed the entry floors — detach so any outer tracker
+        // rebuilds on its next check and no floor stays armed under
+        // later untracked solves
+        state.detach_head_tracking();
+    }
     let residual = state.residual_recompute();
     let mut shard_pushes = Vec::with_capacity(s);
     let mut rounds = Vec::with_capacity(s);
@@ -498,7 +564,74 @@ pub fn run_threaded_push(
         residual,
         converged: residual < opts.tol,
         rebalanced,
+        topk_stopped: topk_stop.load(Ordering::Acquire),
     }
+}
+
+/// Outcome of [`run_threaded_push_certified`].
+#[derive(Debug, Clone)]
+pub struct CertifiedRunOutcome {
+    /// The last *exact* certificate (head reflects the settled state).
+    pub cert: TopKCertificate,
+    /// Pushes this call spent when the goal's certificate first held
+    /// exactly (`Some(0)` = already certified at entry; `None` = the
+    /// run ended — converged, timed out, or exhausted its budget —
+    /// without one).
+    pub pushes_to_cert: Option<u64>,
+    /// Whether `residual < opts.tol` was reached.
+    pub converged: bool,
+    /// Exact residual at exit.
+    pub residual: f64,
+}
+
+/// The tentative-certify / exact-recheck / resume protocol around
+/// [`run_threaded_push`], packaged so every caller gets it right: the
+/// monitor's top-k stop is only a *hint* (worker frames are
+/// asynchronous snapshots), so each stopped run is re-checked exactly
+/// on the settled state via `tracker` and resumed when the proof does
+/// not actually hold — bounded attempts, so racing churn near the
+/// k-boundary falls through to the caller's finish instead of
+/// spinning. `opts.topk` is ignored; the goal comes from `tracker`.
+pub fn run_threaded_push_certified(
+    g: &DeltaGraph,
+    state: &mut ShardedPush,
+    tracker: &mut TopKTracker,
+    opts: &PushThreadOptions,
+) -> CertifiedRunOutcome {
+    let goal = tracker.goal();
+    let p0 = state.total_pushes();
+    let mut cert = tracker.check_sharded(state);
+    let mut pushes_to_cert = if cert.certified(goal.order) { Some(0) } else { None };
+    let mut converged = false;
+    let mut residual = f64::NAN;
+    for _attempt in 0..8 {
+        if pushes_to_cert.is_some() {
+            break;
+        }
+        let used = state.total_pushes() - p0;
+        let topts = PushThreadOptions {
+            topk: Some(goal),
+            max_pushes: opts.max_pushes.saturating_sub(used),
+            ..opts.clone()
+        };
+        let tm = run_threaded_push(g, state, &topts);
+        cert = tracker.check_sharded(state);
+        if cert.certified(goal.order) {
+            pushes_to_cert = Some(state.total_pushes() - p0);
+        }
+        if tm.converged {
+            converged = true;
+            residual = tm.residual;
+            break;
+        }
+        if !tm.topk_stopped {
+            break; // timeout or budget, not a tentative stop: don't loop
+        }
+    }
+    if residual.is_nan() {
+        residual = state.residual_recompute();
+    }
+    CertifiedRunOutcome { cert, pushes_to_cert, converged, residual }
 }
 
 #[cfg(test)]
@@ -635,6 +768,34 @@ mod tests {
         assert!(tm.converged, "residual {}", tm.residual);
         assert_eq!(tm.shard_pushes.len(), 1);
         assert_eq!(tm.fragments_sent, vec![0]);
+    }
+
+    #[test]
+    fn threaded_push_topk_stop_is_sound_after_exact_recheck() {
+        let g = web(3_000, 74);
+        let goal = TopKGoal { k: 16, order: false };
+        let mut sp = ShardedPush::new(&g, 0.85, 4);
+        let mut tracker = TopKTracker::new(goal);
+        let opts = PushThreadOptions { tol: 1e-10, ..Default::default() };
+        // the monitor's stop is tentative (asynchronous snapshots); the
+        // helper owns the run -> exact check -> resume protocol
+        let out = run_threaded_push_certified(&g, &mut sp, &mut tracker, &opts);
+        assert!(
+            out.cert.set_certified,
+            "power-law web must certify k=16 (converged: {})",
+            out.converged
+        );
+        assert!((sp.mass() - 1.0).abs() < 1e-9, "mass {}", sp.mass());
+        // soundness: the certified set is the true top-16
+        let (xref, _) = crate::stream::power_method_f64(&g, 0.85, 1e-12, 10_000);
+        let mut want = crate::pagerank::top_k_ids(&xref, 16);
+        let mut got = out.cert.head.clone();
+        want.sort_unstable();
+        got.sort_unstable();
+        assert_eq!(got, want, "certified head != converged reference top-16");
+        // and the state remains a working solver after the early cut
+        let st = sp.solve(&g, 1e-10, u64::MAX);
+        assert!(st.converged);
     }
 
     #[test]

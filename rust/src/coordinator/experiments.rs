@@ -6,14 +6,18 @@
 use std::sync::Arc;
 
 use crate::asynciter::{
-    run_threaded_push, Mode, PushThreadOptions, RunMetrics, RunSpec, SimEngine,
+    run_threaded_push, run_threaded_push_certified, Mode, PushThreadOptions, RunMetrics,
+    RunSpec, SimEngine,
 };
 use crate::config::RunConfig;
 use crate::graph::generators::{churn_batch, ChurnParams};
-use crate::metrics::{StreamEpochRow, Table1Row};
+use crate::metrics::{StreamEpochRow, Table1Row, TopKEpochStats};
 use crate::pagerank::PagerankProblem;
 use crate::simnet::Topology;
-use crate::stream::{power_method_f64, DeltaGraph, PushState, ShardedPush};
+use crate::stream::{
+    power_method_f64, solve_certified_sharded, solve_certified_state, DeltaGraph, PushState,
+    ShardedPush, TopKCertificate, TopKGoal, TopKTracker,
+};
 use crate::termination::GlobalOracle;
 use crate::util::Rng;
 use crate::Result;
@@ -226,6 +230,18 @@ pub struct StreamOptions {
     ///
     /// [`ShardedPush::rebalance`]: crate::stream::ShardedPush::rebalance
     pub rebalance_factor: Option<f64>,
+    /// Serving path: track and certify the top-k head of the ranking
+    /// each epoch ([`TopKTracker`]); the report gains head-churn and
+    /// pushes-to-certification columns.
+    pub topk: Option<usize>,
+    /// Require the *order* within the head to certify too, not just
+    /// the set.
+    pub topk_order: bool,
+    /// `stop_when_topk_certified`: end each epoch's solve as soon as
+    /// the head certifies instead of running to `tol` — the serving
+    /// early-exit. Epochs whose head cannot certify (ties at the
+    /// boundary) still run to full convergence.
+    pub topk_stop: bool,
 }
 
 impl Default for StreamOptions {
@@ -244,6 +260,9 @@ impl Default for StreamOptions {
             threads: 1,
             resident: false,
             rebalance_factor: None,
+            topk: None,
+            topk_order: false,
+            topk_stop: false,
         }
     }
 }
@@ -273,7 +292,9 @@ pub struct StreamReport {
 
 /// From-scratch push baseline + fresh power-method check on the current
 /// snapshot — the per-epoch yardstick shared by the roundtrip and
-/// resident drivers. Returns `(scratch_pushes, L1 of ranks vs power)`.
+/// resident drivers. Returns `(scratch_pushes, L1 of ranks vs power,
+/// the power reference itself)` — the reference doubles as the top-k
+/// audit oracle.
 fn epoch_baseline(
     g: &DeltaGraph,
     alpha: f64,
@@ -282,14 +303,97 @@ fn epoch_baseline(
     max_pushes: u64,
     epoch: usize,
     ranks: &[f64],
-) -> Result<(u64, f64)> {
+) -> Result<(u64, f64, Vec<f64>)> {
     let mut cold = PushState::new(g.n(), alpha);
     cold.begin_epoch();
     let cold_stats = cold.solve(g, tol, max_pushes);
     anyhow::ensure!(cold_stats.converged, "epoch {epoch}: baseline hit the push budget");
     let (xref, _) = power_method_f64(g, alpha, power_tol, 100_000);
     let l1: f64 = ranks.iter().zip(&xref).map(|(a, b)| (a - b).abs()).sum();
-    Ok((cold_stats.pushes, l1))
+    Ok((cold_stats.pushes, l1, xref))
+}
+
+/// Resident path: drain the live shards to `tol` on real threads, with
+/// the deterministic sequential finish when the monitor cuts early
+/// (timeout / quiet race) — the budget is whatever the epoch has left
+/// of `max_pushes` after the `p0` baseline. Returns
+/// `(residual, converged)`.
+fn finish_threaded_resident(
+    g: &DeltaGraph,
+    sharded: &mut ShardedPush,
+    tol: f64,
+    max_pushes: u64,
+    p0: u64,
+) -> (f64, bool) {
+    let used = sharded.total_pushes() - p0;
+    let topts = PushThreadOptions {
+        tol,
+        max_pushes: max_pushes.saturating_sub(used),
+        ..Default::default()
+    };
+    let tm = run_threaded_push(g, sharded, &topts);
+    if tm.converged {
+        (tm.residual, true)
+    } else {
+        let used = sharded.total_pushes() - p0;
+        let st = sharded.solve(g, tol, max_pushes.saturating_sub(used));
+        (st.residual, st.converged)
+    }
+}
+
+/// Fold one epoch's certificate into the serving-path columns: head
+/// churn vs. the previous epoch, audit overlap vs. the power
+/// reference, and — when the epoch *certified* with a margin the
+/// reference can resolve — a hard check that the certified set is
+/// exactly the reference's top-k.
+fn topk_epoch_stats(
+    cert: &TopKCertificate,
+    goal: TopKGoal,
+    pushes_to_cert: Option<u64>,
+    prev_head: &mut Vec<u32>,
+    epoch: usize,
+    xref: &[f64],
+    power_tol: f64,
+    alpha: f64,
+) -> Result<TopKEpochStats> {
+    use std::collections::HashSet;
+    let head: HashSet<u32> = cert.head.iter().copied().collect();
+    let (entries, exits) = if epoch == 0 {
+        (0, 0)
+    } else {
+        let prev: HashSet<u32> = prev_head.iter().copied().collect();
+        (head.difference(&prev).count(), prev.difference(&head).count())
+    };
+    let k_eff = goal.k.min(xref.len());
+    let overlap = if k_eff == 0 {
+        1.0
+    } else {
+        let ref_top: HashSet<u32> =
+            crate::pagerank::top_k_ids(xref, k_eff).into_iter().collect();
+        head.intersection(&ref_top).count() as f64 / k_eff as f64
+    };
+    // the reference itself carries error <= power_tol/(1-alpha) per
+    // node; only when the certificate's margin clears twice that can a
+    // disagreement be blamed on the certifier
+    if cert.set_certified && cert.margin() > 2.0 * power_tol / (1.0 - alpha) {
+        anyhow::ensure!(
+            overlap == 1.0,
+            "epoch {epoch}: certified top-{} disagrees with the power reference \
+             (overlap {overlap}, margin {:.2e})",
+            goal.k,
+            cert.margin()
+        );
+    }
+    *prev_head = cert.head.clone();
+    Ok(TopKEpochStats {
+        k: goal.k,
+        certified: cert.set_certified,
+        order_certified: cert.order_certified,
+        pushes_to_cert,
+        entries,
+        exits,
+        overlap_vs_power: overlap,
+    })
 }
 
 /// S1: the evolving-graph experiment. One initial build plus
@@ -326,6 +430,13 @@ pub fn stream_epochs(graph_spec: &str, opts: &StreamOptions) -> Result<StreamRep
              (the roundtrip path re-partitions every epoch by construction)"
         );
     }
+    let topk_goal = opts.topk.map(|k| TopKGoal { k, order: opts.topk_order });
+    anyhow::ensure!(
+        topk_goal.is_some() || (!opts.topk_order && !opts.topk_stop),
+        "--topk-order / --topk-stop need --topk K"
+    );
+    let mut tracker = topk_goal.map(TopKTracker::new);
+    let mut prev_head: Vec<u32> = Vec::new();
     let el = load_edgelist(graph_spec, opts.seed)?;
     let mut g = DeltaGraph::from_edgelist(&el);
     anyhow::ensure!(g.n() > 0, "graph {graph_spec} is empty");
@@ -375,29 +486,67 @@ pub fn stream_epochs(graph_spec: &str, opts: &StreamOptions) -> Result<StreamRep
                 (batch.new_nodes, delta.inserted, delta.removed, ms.dirty_rows)
             };
             let p0 = sharded.total_pushes();
-            let (residual, converged) = if opts.threads > 1 {
-                let topts = PushThreadOptions {
-                    tol: opts.tol,
-                    max_pushes: opts.max_pushes,
-                    ..Default::default()
-                };
-                let tm = run_threaded_push(&g, &mut sharded, &topts);
-                if tm.converged {
-                    (tm.residual, true)
-                } else {
-                    // monitor cut early (timeout / quiet race): finish
-                    // deterministically on whatever budget remains
-                    let used = sharded.total_pushes() - p0;
-                    let st =
-                        sharded.solve(&g, opts.tol, opts.max_pushes.saturating_sub(used));
-                    (st.residual, st.converged)
+            let (residual, converged, epoch_cert) = match tracker.as_mut() {
+                Some(tr) if opts.threads == 1 => {
+                    let st = solve_certified_sharded(
+                        &mut sharded,
+                        &g,
+                        tr,
+                        opts.tol,
+                        opts.max_pushes,
+                        opts.topk_stop,
+                    );
+                    (st.residual, st.converged, Some((st.cert, st.pushes_to_cert)))
                 }
-            } else {
-                let st = sharded.solve(&g, opts.tol, opts.max_pushes);
-                (st.residual, st.converged)
+                Some(tr) => {
+                    // threaded serving path: certified phase first (the
+                    // tentative-stop/exact-recheck protocol lives in
+                    // run_threaded_push_certified), then run to tol
+                    // unless stopping at certification
+                    let goal = tr.goal();
+                    let topts = PushThreadOptions {
+                        tol: opts.tol,
+                        max_pushes: opts.max_pushes,
+                        ..Default::default()
+                    };
+                    let out = run_threaded_push_certified(&g, &mut sharded, tr, &topts);
+                    let mut cert = out.cert;
+                    let mut pushes_to_cert = out.pushes_to_cert;
+                    let mut residual = out.residual;
+                    let mut converged = out.converged;
+                    if !converged && !(opts.topk_stop && pushes_to_cert.is_some()) {
+                        // finish to tol back on the threads (tracking no
+                        // longer needs to interrupt the run), with the
+                        // usual deterministic fallback
+                        let (r, c) = finish_threaded_resident(
+                            &g, &mut sharded, opts.tol, opts.max_pushes, p0,
+                        );
+                        residual = r;
+                        converged = c;
+                        if pushes_to_cert.is_none() {
+                            cert = tr.check_sharded(&mut sharded);
+                            if cert.certified(goal.order) {
+                                pushes_to_cert = Some(sharded.total_pushes() - p0);
+                            }
+                        }
+                    }
+                    (residual, converged, Some((cert, pushes_to_cert)))
+                }
+                None if opts.threads > 1 => {
+                    let (r, c) = finish_threaded_resident(
+                        &g, &mut sharded, opts.tol, opts.max_pushes, p0,
+                    );
+                    (r, c, None)
+                }
+                None => {
+                    let st = sharded.solve(&g, opts.tol, opts.max_pushes);
+                    (st.residual, st.converged, None)
+                }
             };
+            let cert_early_exit = opts.topk_stop
+                && epoch_cert.as_ref().map_or(false, |(_, at)| at.is_some());
             anyhow::ensure!(
-                converged,
+                converged || cert_early_exit,
                 "epoch {epoch}: resident solve hit the push budget at residual {residual:.2e}"
             );
             let mass = sharded.mass();
@@ -406,9 +555,22 @@ pub fn stream_epochs(graph_spec: &str, opts: &StreamOptions) -> Result<StreamRep
                 "epoch {epoch}: conserved mass drifted to {mass}"
             );
             let ranks = sharded.ranks();
-            let (scratch_pushes, l1) = epoch_baseline(
+            let (scratch_pushes, l1, xref) = epoch_baseline(
                 &g, opts.alpha, opts.tol, power_tol, opts.max_pushes, epoch, &ranks,
             )?;
+            let topk = match (&epoch_cert, topk_goal) {
+                (Some((cert, at)), Some(goal)) => Some(topk_epoch_stats(
+                    cert,
+                    goal,
+                    *at,
+                    &mut prev_head,
+                    epoch,
+                    &xref,
+                    power_tol,
+                    opts.alpha,
+                )?),
+                _ => None,
+            };
             rows.push(StreamEpochRow {
                 epoch,
                 n: g.n(),
@@ -422,6 +584,7 @@ pub fn stream_epochs(graph_spec: &str, opts: &StreamOptions) -> Result<StreamRep
                 scratch_pushes,
                 l1_vs_power: l1,
                 csr_dirty_rows: csr_dirty,
+                topk,
             });
         }
     } else {
@@ -442,36 +605,59 @@ pub fn stream_epochs(graph_spec: &str, opts: &StreamOptions) -> Result<StreamRep
             // need real drain work; a near-converged epoch (tiny churn)
             // solves sequentially in a handful of pushes either way
             let parallel_worthwhile = inc.residual_l1() > 1e3 * opts.tol;
-            let stats = if opts.threads > 1 && parallel_worthwhile {
+            let mut parallel_pushes = 0u64;
+            if opts.threads > 1 && parallel_worthwhile {
                 // scatter → parallel drain on real threads → gather; any
                 // residual the monitor left behind is polished sequentially
-                // so the epoch meets `tol` regardless of scheduling
+                // so the epoch meets `tol` (or certifies) regardless of
+                // scheduling. The monitor only gets the top-k goal in
+                // early-stop mode: cutting the threaded drain at a
+                // tentative certificate is the point there, but in
+                // tracking-only mode it would dump the rest of the
+                // epoch's convergence onto the sequential polish.
                 let mut sharded = ShardedPush::from_state(&inc, &g, opts.threads);
                 let topts = PushThreadOptions {
                     tol: opts.tol,
                     max_pushes: opts.max_pushes,
+                    topk: if opts.topk_stop { topk_goal } else { None },
                     ..Default::default()
                 };
                 let tm = run_threaded_push(&g, &mut sharded, &topts);
-                let parallel_pushes: u64 = tm.shard_pushes.iter().sum();
+                parallel_pushes = tm.shard_pushes.iter().sum();
                 sharded.gather_into(&mut inc);
-                // the polish only gets whatever the parallel phase left of
-                // the per-solve budget
-                let polish =
-                    inc.solve(&g, opts.tol, opts.max_pushes.saturating_sub(parallel_pushes));
-                crate::stream::SolveStats {
-                    pushes: parallel_pushes + polish.pushes,
-                    ..polish
+            }
+            // the sequential phase only gets whatever the parallel phase
+            // left of the per-solve budget
+            let seq_budget = opts.max_pushes.saturating_sub(parallel_pushes);
+            let (inc_pushes, inc_residual, converged, epoch_cert) = match tracker.as_mut() {
+                Some(tr) => {
+                    // certified sequential phase on the gathered state;
+                    // pushes-to-cert counts the parallel phase wholesale
+                    // (it ran before the first exact check could fire)
+                    let st = solve_certified_state(
+                        &mut inc,
+                        &g,
+                        tr,
+                        opts.tol,
+                        seq_budget,
+                        opts.topk_stop,
+                    );
+                    let at = st.pushes_to_cert.map(|p| parallel_pushes + p);
+                    (parallel_pushes + st.pushes, st.residual, st.converged, Some((st.cert, at)))
                 }
-            } else {
-                inc.solve(&g, opts.tol, opts.max_pushes)
+                None => {
+                    let st = inc.solve(&g, opts.tol, seq_budget);
+                    (parallel_pushes + st.pushes, st.residual, st.converged, None)
+                }
             };
+            let cert_early_exit = opts.topk_stop
+                && epoch_cert.as_ref().map_or(false, |(_, at)| at.is_some());
             anyhow::ensure!(
-                stats.converged,
-                "epoch {epoch}: incremental solve hit the push budget at residual {:.2e}",
-                stats.residual
+                converged || cert_early_exit,
+                "epoch {epoch}: incremental solve hit the push budget at \
+                 residual {inc_residual:.2e}"
             );
-            let (scratch_pushes, l1) = epoch_baseline(
+            let (scratch_pushes, l1, xref) = epoch_baseline(
                 &g,
                 opts.alpha,
                 opts.tol,
@@ -480,6 +666,19 @@ pub fn stream_epochs(graph_spec: &str, opts: &StreamOptions) -> Result<StreamRep
                 epoch,
                 inc.ranks(),
             )?;
+            let topk = match (&epoch_cert, topk_goal) {
+                (Some((cert, at)), Some(goal)) => Some(topk_epoch_stats(
+                    cert,
+                    goal,
+                    *at,
+                    &mut prev_head,
+                    epoch,
+                    &xref,
+                    power_tol,
+                    opts.alpha,
+                )?),
+                _ => None,
+            };
             rows.push(StreamEpochRow {
                 epoch,
                 n: g.n(),
@@ -487,12 +686,13 @@ pub fn stream_epochs(graph_spec: &str, opts: &StreamOptions) -> Result<StreamRep
                 new_nodes,
                 inserted,
                 removed,
-                inc_pushes: stats.pushes,
-                inc_touched: stats.touched,
-                inc_residual: stats.residual,
+                inc_pushes,
+                inc_touched: inc.touched(),
+                inc_residual,
                 scratch_pushes,
                 l1_vs_power: l1,
                 csr_dirty_rows: 0,
+                topk,
             });
         }
     }

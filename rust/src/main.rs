@@ -10,6 +10,7 @@
 //! repro experiment table1|table2|global|ablations [--graph G] [--out reports/X]
 //! repro stream [--graph G] [--epochs E] [--seed S] [--tol T] [--alpha A]
 //!              [--threads N] [--resident] [--rebalance-factor F]
+//!              [--topk K] [--topk-order] [--topk-stop]
 //!              [--arrivals K] [--links L] [--inserts I]
 //!              [--removes R] [--out reports/X]
 //! repro artifacts-check
@@ -22,7 +23,9 @@ use asyncpr::asynciter::Mode;
 use asyncpr::config::RunConfig;
 use asyncpr::coordinator::{self, experiments, Report};
 use asyncpr::graph::{io, Csr, GraphStats};
-use asyncpr::metrics::{run_summary, stream_markdown, table1_markdown, table2_markdown};
+use asyncpr::metrics::{
+    run_summary, stream_markdown, stream_topk_markdown, table1_markdown, table2_markdown,
+};
 use asyncpr::simnet::Topology;
 use asyncpr::util::Json;
 
@@ -78,6 +81,7 @@ USAGE:
   repro experiment <table1|table2|global|ablations> [--graph SPEC] [--out STEM]
   repro stream [--graph SPEC] [--epochs E] [--seed N] [--tol T] [--alpha A]
                [--threads N] [--resident] [--rebalance-factor F]
+               [--topk K] [--topk-order] [--topk-stop]
                [--arrivals K] [--links L] [--inserts I]
                [--removes R] [--out STEM]
   repro artifacts-check
@@ -95,6 +99,11 @@ injects directly into the live shards (no scatter/gather round-trip)
 and the CSR snapshot is spliced incrementally; `--rebalance-factor F`
 re-cuts the shard bounds between epochs once churn skews the per-shard
 nnz beyond F times the ideal share.
+`--topk K` tracks the top-K head of the ranking with certified error
+intervals (serving path): the report gains head-churn and
+pushes-to-certification columns; `--topk-order` also certifies the
+order within the head; `--topk-stop` ends each epoch's solve as soon
+as the head certifies instead of running to tol.
 `run --balanced` partitions rows by balanced nonzero count instead of
 the paper's consecutive ⌈n/p⌉ blocks.
 "#;
@@ -111,7 +120,7 @@ fn parse_flags(args: &[String]) -> anyhow::Result<HashMap<String, String>> {
         if matches!(
             key,
             "check" | "adaptive" | "artifact" | "push" | "balanced" | "global-threshold"
-                | "quick" | "resident"
+                | "quick" | "resident" | "topk-order" | "topk-stop"
         ) {
             map.insert(key.to_string(), "true".to_string());
             i += 1;
@@ -330,6 +339,15 @@ fn cmd_stream(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     if let Some(v) = flags.get("rebalance-factor") {
         opts.rebalance_factor = Some(v.parse()?);
     }
+    if let Some(v) = flags.get("topk") {
+        opts.topk = Some(v.parse()?);
+    }
+    if flags.contains_key("topk-order") {
+        opts.topk_order = true;
+    }
+    if flags.contains_key("topk-stop") {
+        opts.topk_stop = true;
+    }
     // churn overrides ride as options; the driver resolves them against
     // graph-scaled defaults once the graph is loaded (loading it here
     // just to size the defaults would build it twice)
@@ -357,6 +375,43 @@ fn cmd_stream(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let rep = experiments::stream_epochs(&graph, &opts)?;
     let md = stream_markdown(&rep.rows);
     println!("{md}");
+    if let Some(k) = opts.topk {
+        println!(
+            "\nserving path (top-{k}{}{}):",
+            if opts.topk_order { ", ordered" } else { "" },
+            if opts.topk_stop { ", early-stop" } else { "" },
+        );
+        println!("{}", stream_topk_markdown(&rep.rows));
+        let update = &rep.rows[1..];
+        let certified = update
+            .iter()
+            .filter(|r| r.topk.as_ref().map_or(false, |t| t.certified))
+            .count();
+        let cert_pushes: u64 = update
+            .iter()
+            .filter_map(|r| r.topk.as_ref().and_then(|t| t.pushes_to_cert))
+            .sum();
+        let conv_pushes: u64 = update
+            .iter()
+            .filter(|r| r.topk.as_ref().map_or(false, |t| t.pushes_to_cert.is_some()))
+            .map(|r| r.inc_pushes)
+            .sum();
+        if opts.topk_stop {
+            println!(
+                "update epochs: head certified in {certified}/{} epochs; \
+                 epochs end at certification, so `inc pushes` above IS the serving cost",
+                update.len()
+            );
+        } else {
+            println!(
+                "update epochs: head certified in {certified}/{} epochs; \
+                 pushes-to-cert {cert_pushes} vs pushes-to-convergence {conv_pushes} \
+                 ({:.1}x earlier)",
+                update.len(),
+                conv_pushes as f64 / cert_pushes.max(1) as f64
+            );
+        }
+    }
     if opts.resident {
         let dirty: usize = rep.rows.iter().map(|r| r.csr_dirty_rows).sum();
         let full: usize = rep.rows[1..].iter().map(|r| r.n).sum();
@@ -375,13 +430,23 @@ fn cmd_stream(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         if rep.all_updates_cheaper { "yes" } else { "NO" }
     );
     // the L1 bar scales with the requested tolerance (floored at the
-    // repo's 1e-8 acceptance threshold, which the default tol meets)
+    // repo's 1e-8 acceptance threshold, which the default tol meets);
+    // under --topk-stop epochs end at certification, so the certified
+    // head — not the full vector — is the acceptance surface
     let l1_bar = opts.l1_check_threshold();
-    println!(
-        "final-epoch ranks vs fresh power method: L1 = {:.2e} ({} {l1_bar:.0e})",
-        rep.final_l1_vs_power,
-        if rep.final_l1_vs_power < l1_bar { "within" } else { "OUTSIDE" }
-    );
+    if opts.topk_stop {
+        println!(
+            "final-epoch ranks vs fresh power method: L1 = {:.2e} \
+             (informational under --topk-stop; heads are certified instead)",
+            rep.final_l1_vs_power
+        );
+    } else {
+        println!(
+            "final-epoch ranks vs fresh power method: L1 = {:.2e} ({} {l1_bar:.0e})",
+            rep.final_l1_vs_power,
+            if rep.final_l1_vs_power < l1_bar { "within" } else { "OUTSIDE" }
+        );
+    }
 
     if let Some(stem) = flags.get("out") {
         let mut report = Report::new();
@@ -393,7 +458,14 @@ fn cmd_stream(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         report.write(stem)?;
         eprintln!("wrote {stem}.md / {stem}.json");
     }
-    if !rep.all_updates_cheaper || rep.final_l1_vs_power >= l1_bar {
+    // certified heads must audit clean against the power reference
+    // (the driver hard-fails margin-resolvable disagreements already;
+    // this catches the printed column drifting from 1.00 too)
+    let heads_exact = rep.rows.iter().all(|r| {
+        r.topk.as_ref().map_or(true, |t| !t.certified || t.overlap_vs_power == 1.0)
+    });
+    let l1_ok = opts.topk_stop || rep.final_l1_vs_power < l1_bar;
+    if !rep.all_updates_cheaper || !l1_ok || !heads_exact {
         anyhow::bail!("stream acceptance check failed (see report above)");
     }
     Ok(())

@@ -19,5 +19,5 @@ pub use extrapolation::aitken_extrapolate;
 pub use linsys::{gauss_seidel, jacobi, LinsysOptions};
 pub use operators::PagerankProblem;
 pub use power::{power_method, PowerOptions, PowerResult};
-pub use ranking::{kendall_tau, top_k_overlap, rank_of};
+pub use ranking::{kendall_tau, rank_of, top_k_ids, top_k_overlap};
 pub use residual::{l1_diff, l1_norm, linf_diff, normalize_l1};

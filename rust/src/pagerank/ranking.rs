@@ -8,8 +8,10 @@
 //! computed at a relaxed threshold and a tight reference.
 
 /// Indices of pages sorted by descending score (ties by index for
-/// determinism).
-pub fn rank_of(x: &[f32]) -> Vec<usize> {
+/// determinism). Generic over the score type: the static stack ranks
+/// f32 iterates, the stream subsystem f64 push states — both share one
+/// implementation instead of round-tripping through f32.
+pub fn rank_of<T: PartialOrd>(x: &[T]) -> Vec<usize> {
     let mut idx: Vec<usize> = (0..x.len()).collect();
     idx.sort_by(|&a, &b| {
         x[b].partial_cmp(&x[a]).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
@@ -17,8 +19,17 @@ pub fn rank_of(x: &[f32]) -> Vec<usize> {
     idx
 }
 
+/// Ids of the top-k entries of a score vector (descending score, ties
+/// by index), clamped to `x.len()` — the shared "what would we serve"
+/// idiom used by the stream subsystem's certified-head audits.
+pub fn top_k_ids<T: PartialOrd>(x: &[T], k: usize) -> Vec<u32> {
+    let mut ids = rank_of(x);
+    ids.truncate(k.min(x.len()));
+    ids.into_iter().map(|i| i as u32).collect()
+}
+
 /// Fraction of the top-k sets shared by two score vectors.
-pub fn top_k_overlap(a: &[f32], b: &[f32], k: usize) -> f64 {
+pub fn top_k_overlap<T: PartialOrd>(a: &[T], b: &[T], k: usize) -> f64 {
     assert_eq!(a.len(), b.len());
     let k = k.min(a.len());
     if k == 0 {
@@ -32,7 +43,7 @@ pub fn top_k_overlap(a: &[f32], b: &[f32], k: usize) -> f64 {
 /// Kendall rank correlation τ-a between two score vectors, computed in
 /// O(n log n) with a merge-sort inversion count over b's scores taken
 /// in a's rank order.
-pub fn kendall_tau(a: &[f32], b: &[f32]) -> f64 {
+pub fn kendall_tau<T: PartialOrd>(a: &[T], b: &[T]) -> f64 {
     assert_eq!(a.len(), b.len());
     let n = a.len();
     if n < 2 {
@@ -158,6 +169,27 @@ mod tests {
             let fast = kendall_tau(&a, &b);
             assert!((naive - fast).abs() < 1e-9, "n={n}: {naive} vs {fast}");
         }
+    }
+
+    #[test]
+    fn rank_metrics_are_float_width_generic() {
+        // the stream subsystem is f64 end to end; the rank metrics must
+        // not force a lossy round-trip through f32
+        let a = [0.4f64, 0.1, 0.3, 0.2];
+        assert_eq!(rank_of(&a), vec![0, 2, 3, 1]);
+        assert_eq!(top_k_ids(&a, 2), vec![0, 2]);
+        // k beyond the vector clamps instead of panicking
+        assert_eq!(top_k_ids(&a, 10), vec![0, 2, 3, 1]);
+        assert!((kendall_tau(&a, &a) - 1.0).abs() < 1e-12);
+        // two f64 scores that collide at f32 precision must still rank
+        // (and overlap) by their true order
+        let hi = 0.5f64;
+        let lo = hi - 1e-12;
+        assert_eq!(hi as f32, lo as f32, "gap must be sub-f32");
+        let x = [hi, lo, 0.1];
+        let y = [lo, hi, 0.1];
+        assert_eq!(top_k_overlap(&x, &y, 1), 0.0);
+        assert_eq!(top_k_overlap(&x, &y, 2), 1.0);
     }
 
     #[test]

@@ -146,15 +146,32 @@ pub struct SolveStats {
 pub struct PushState {
     alpha: f64,
     /// Rank estimate (converges to the PageRank vector, ‖·‖₁ = 1).
-    p: Vec<f64>,
+    pub(crate) p: Vec<f64>,
     /// Materialized residual.
-    r: Vec<f64>,
+    pub(crate) r: Vec<f64>,
     /// Pending uniform residual: stands for `rd/n` on every node.
-    rd: f64,
+    pub(crate) rd: f64,
     /// Maintained Σ|r| (re-verified exactly before declaring
     /// convergence, so incremental drift cannot cause early exit).
-    r_l1: f64,
+    pub(crate) r_l1: f64,
+    /// Maintained signed Σr — together with `r_l1` it splits the
+    /// residual into its positive/negative halves in O(1), which is
+    /// what the top-k certifier's one-sided error intervals read.
+    pub(crate) r_sum: f64,
     queue: BucketQueue,
+    /// Head-tracking hook: when `p[t] + r[t]` rises to (or above) this
+    /// floor inside `add_r`, `t` is appended to `head_hits`. `+INF`
+    /// disables collection (the default — no tracker attached).
+    pub(crate) head_floor: f64,
+    /// Nodes that crossed `head_floor` since the tracker last drained
+    /// the list (may hold duplicates; drained with sort+dedup).
+    pub(crate) head_hits: Vec<u32>,
+    /// Bumped on every wholesale state swap (`adopt_parts`) that
+    /// bypasses `add_r` — tells an attached [`TopKTracker`] its
+    /// incremental candidate pools are stale and a full rescan is due.
+    ///
+    /// [`TopKTracker`]: super::TopKTracker
+    pub(crate) head_gen: u64,
     /// Touched-node stamping (per epoch).
     stamp: Vec<u64>,
     cur_stamp: u64,
@@ -175,7 +192,11 @@ impl PushState {
             r: vec![0.0; n],
             rd: 1.0 - alpha,
             r_l1: 0.0,
+            r_sum: 0.0,
             queue: BucketQueue::new(n),
+            head_floor: f64::INFINITY,
+            head_hits: Vec::new(),
+            head_gen: super::next_head_gen(),
             stamp: vec![0; n],
             cur_stamp: 0,
             touched: 0,
@@ -204,6 +225,15 @@ impl PushState {
 
     pub fn total_pushes(&self) -> u64 {
         self.total_pushes
+    }
+
+    /// Distinct nodes whose state changed since [`begin_epoch`]
+    /// (mirrors [`ShardedPush::touched`]).
+    ///
+    /// [`begin_epoch`]: Self::begin_epoch
+    /// [`ShardedPush::touched`]: super::ShardedPush::touched
+    pub fn touched(&self) -> usize {
+        self.touched
     }
 
     /// Materialized residual vector (scatter hook for the sharded
@@ -244,6 +274,10 @@ impl PushState {
         let (queue, l1) = BucketQueue::seeded_from(&self.r);
         self.queue = queue;
         self.r_l1 = l1;
+        self.r_sum = self.r.iter().sum();
+        // wholesale swap bypassed add_r: any attached top-k tracker
+        // must rebuild its candidate pools from scratch
+        self.head_gen = super::next_head_gen();
     }
 
     /// Start a new epoch's touched-node accounting.
@@ -268,7 +302,11 @@ impl PushState {
         let old = self.r[t];
         let new = old + w;
         self.r_l1 += new.abs() - old.abs();
+        self.r_sum += w;
         self.r[t] = new;
+        if self.p[t] + new >= self.head_floor {
+            self.head_hits.push(t as u32);
+        }
         self.queue.update(t, new.abs());
         self.touch(t);
     }
@@ -286,9 +324,17 @@ impl PushState {
         }
     }
 
-    /// Exact recomputation of Σ|r| (guards the incremental tally).
-    fn recompute_r_l1(&mut self) {
-        self.r_l1 = self.r.iter().map(|v| v.abs()).sum();
+    /// Exact recomputation of Σ|r| and Σr (guards the incremental
+    /// tallies; the signed sum re-tallies in the same pass so the
+    /// certifier's residual split stays honest too).
+    pub(crate) fn recompute_r_l1(&mut self) {
+        let (mut l1, mut s) = (0.0f64, 0.0f64);
+        for &v in &self.r {
+            l1 += v.abs();
+            s += v;
+        }
+        self.r_l1 = l1;
+        self.r_sum = s;
     }
 
     /// One push at `u`: settle `r[u]` into the estimate and re-emit
@@ -299,7 +345,10 @@ impl PushState {
             return;
         }
         self.r_l1 -= m.abs();
+        self.r_sum -= m;
         self.r[u] = 0.0;
+        // p + r is invariant under the settle, so no head-hit check:
+        // the node's certified center does not move here
         self.p[u] += m;
         self.touch(u);
         let d = g.outdeg(u);

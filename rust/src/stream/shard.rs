@@ -74,22 +74,31 @@ pub struct ShardSolveStats {
 #[derive(Debug, Clone)]
 pub struct PushShard {
     id: usize,
-    lo: usize,
-    hi: usize,
+    pub(crate) lo: usize,
+    pub(crate) hi: usize,
     /// Global node count (uniform terms divide by this, not by `bs`).
-    n: usize,
+    pub(crate) n: usize,
     alpha: f64,
-    part: Partitioner,
+    pub(crate) part: Partitioner,
     /// Rank estimate over the local rows.
-    p: Vec<f64>,
+    pub(crate) p: Vec<f64>,
     /// Materialized residual over the local rows.
-    r: Vec<f64>,
+    pub(crate) r: Vec<f64>,
     /// Incrementally maintained Σ|r| (re-verified before convergence).
-    r_l1: f64,
+    pub(crate) r_l1: f64,
     /// Pending uniform residual, local-share semantics: stands for
     /// `uni/n` on each *local* row (peers hold their own copies).
-    uni: f64,
+    pub(crate) uni: f64,
     queue: BucketQueue,
+    /// Head-tracking hook (see [`PushState`]'s twin): local rows whose
+    /// `p + r` rises to `head_floor` inside `add_r` are appended to
+    /// `head_hits`; `+INF` disables collection. `p + r` is invariant
+    /// under a settle and the per-shard uniform share is constant
+    /// across local rows, so every center movement that could promote
+    /// a row into the head passes through `add_r` — a fragment apply,
+    /// a uniform flush, and a delta injection all land here.
+    pub(crate) head_floor: f64,
+    pub(crate) head_hits: Vec<u32>,
     /// Per-peer dense outbox accumulators (`acc[j]` is indexed by peer
     /// `j`'s local rows), allocated lazily on first use — worst case
     /// O(shards·n) f64 across a shard set, so keep shard counts near
@@ -101,18 +110,18 @@ pub struct PushShard {
     /// must tolerate zeros and repeats.
     dirty: Vec<Vec<u32>>,
     /// Σ|acc| across all outboxes (incremental).
-    acc_mass: f64,
+    pub(crate) acc_mass: f64,
     /// Per-peer pending uniform broadcast (dangling emissions waiting
     /// to ship; `out_uni[id]` is the self-share, absorbed locally).
-    out_uni: Vec<f64>,
+    pub(crate) out_uni: Vec<f64>,
     pushes: u64,
     /// Signed Σp over the local rows (incremental — lets
     /// [`ShardedPush::mass`] stay O(shards) instead of O(n)).
     p_sum: f64,
     /// Signed Σr over the local rows (incremental).
-    r_sum: f64,
+    pub(crate) r_sum: f64,
     /// Signed Σacc over all outboxes (incremental).
-    acc_sum: f64,
+    pub(crate) acc_sum: f64,
     /// Epoch stamp per local row + the shard's current epoch — the
     /// touched-node accounting that used to live only in the global
     /// [`PushState`], needed here once the state is epoch-resident.
@@ -138,6 +147,8 @@ impl PushShard {
             r_l1: 0.0,
             uni: 0.0,
             queue: BucketQueue::new(bs),
+            head_floor: f64::INFINITY,
+            head_hits: Vec::new(),
             // outbox accumulators materialize on first use (warm epochs
             // rarely touch every peer, and eager allocation would cost
             // O(shards * n) memory up front)
@@ -183,6 +194,9 @@ impl PushShard {
         self.r_l1 += new.abs() - old.abs();
         self.r_sum += w;
         self.r[k] = new;
+        if self.p[k] + new >= self.head_floor {
+            self.head_hits.push(k as u32);
+        }
         self.queue.update(k, new.abs());
         self.touch(k);
     }
@@ -462,6 +476,12 @@ pub struct ShardedPush {
     ///
     /// [`begin_epoch`]: Self::begin_epoch
     cur_stamp: u64,
+    /// Bumped whenever row state moves without passing through `add_r`
+    /// (bounds migration, node arrivals, a threaded run that consumed
+    /// the shards' `head_hits`) — tells an attached
+    /// [`TopKTracker`](super::TopKTracker) to rebuild its per-shard
+    /// candidate pools instead of trusting the hit stream.
+    head_gen: u64,
 }
 
 impl ShardedPush {
@@ -484,6 +504,7 @@ impl ShardedPush {
             requested_shards: requested,
             carried_pushes: 0,
             cur_stamp: 0,
+            head_gen: super::next_head_gen(),
         }
     }
 
@@ -563,6 +584,32 @@ impl ShardedPush {
     /// [`begin_epoch`]: Self::begin_epoch
     pub fn touched(&self) -> usize {
         self.shards.iter().map(|sh| sh.touched).sum()
+    }
+
+    /// Candidate-pool staleness stamp for attached top-k trackers (see
+    /// the field doc).
+    pub(crate) fn head_gen(&self) -> u64 {
+        self.head_gen
+    }
+
+    /// Mark every attached tracker's candidate pools stale (state moved
+    /// without `add_r`, or a threaded run drained the hit lists).
+    pub(crate) fn bump_head_gen(&mut self) {
+        self.head_gen = super::next_head_gen();
+    }
+
+    /// Detach head tracking entirely: disarm every shard's entry floor,
+    /// drop pending hits, and invalidate attached trackers. The three
+    /// steps belong together — disarming without the gen bump would
+    /// starve a tracker of hits; bumping without disarming would leave
+    /// floors armed, growing the hit lists unboundedly under later
+    /// untracked solves.
+    pub(crate) fn detach_head_tracking(&mut self) {
+        self.bump_head_gen();
+        for sh in self.shards.iter_mut() {
+            sh.head_floor = f64::INFINITY;
+            sh.head_hits.clear();
+        }
     }
 
     /// Rank estimate at global row `u` (reads the owning shard).
@@ -691,6 +738,10 @@ impl ShardedPush {
     /// settled outboxes (the `apply_batch` exchange guarantees it).
     fn grow_to(&mut self, n1: usize) {
         debug_assert!(n1 > self.n);
+        // n changes every uniform share's meaning and arrivals extend
+        // the last shard's rows without an add_r — tracker pools are
+        // stale either way
+        self.head_gen = super::next_head_gen();
         let mut bounds = self.part.bounds().to_vec();
         *bounds.last_mut().unwrap() = n1;
         let part = Partitioner::from_bounds(bounds);
@@ -748,6 +799,7 @@ impl ShardedPush {
     /// crossing a bounds line carries the same pending mass on both
     /// sides.
     fn adopt_partition(&mut self, part: Partitioner) {
+        self.head_gen = super::next_head_gen(); // rows migrated: pools are stale
         let nf = self.n as f64;
         let u_common = self.shards[0].uni;
         for sh in self.shards.iter_mut() {

@@ -1,0 +1,850 @@
+//! Certified top-k rank maintenance — the serving-path workload.
+//!
+//! The paper's motivating use-case is *serving*: PageRank orders the
+//! result set a search engine returns (§1), so what the asynchronous
+//! iteration owes the caller is a **correct head of the ranking**, not
+//! a fully converged vector. This module maintains that head
+//! incrementally over the push solvers and — the part that makes it a
+//! serving primitive rather than a heuristic — *certifies* it: using
+//! the push invariant `x* = p + (I−αS)^{-1}ρ` (ρ = materialized
+//! residual + pending uniform shares), every node's true rank is
+//! enclosed in an interval around its **center** `c_i = p_i + ρ_i`:
+//!
+//! ```text
+//!     x*_i ∈ [ c_i − α·R⁻/(1−α) − U⁻/(1−α),  c_i + α·R⁺/(1−α) + U⁺/(1−α) ]
+//! ```
+//!
+//! where `R± = Σ ρ±` splits the *located* residual (we know which node
+//! it sits on — its own t=0 term enters the center exactly, only the
+//! diffused `t ≥ 1` tail is bounded through `α/(1−α)`) and `U±` is
+//! residual whose destination is unknown at check time (outbox /
+//! in-flight mass, bounded at full `1/(1−α)` weight). `S` is
+//! column-stochastic, so `‖S^t ρ±‖₁ = ‖ρ±‖₁` and the enclosure is
+//! sound at **every** superstep, converged or not — the D-Iteration
+//! error-certificate idea (Hong et al.) applied per node. When the
+//! k-th head member's lower bound strictly exceeds every outsider's
+//! upper bound, the top-k *set* is provably final; pairwise gaps
+//! certify the *order*. Early epochs certify long before
+//! `residual < τ`, which is what `stop_when_topk_certified`-style
+//! early termination ([`solve_certified_sharded`]) cashes in.
+//!
+//! Tracking is incremental, not a per-check O(n) rescan: each shard
+//! keeps a candidate pool ([`HeadList`]) plus an **entry floor**; the
+//! push hot path (`add_r`) appends a hit whenever a row's `p + r`
+//! crosses the floor (a settle leaves `p + r` unchanged and the
+//! per-shard uniform share is row-constant, so no promotion can sneak
+//! past). A check drains hits, re-reads pool centers, and runs a
+//! tournament merge across shards — O(pool + hits + shards). Rows that
+//! never crossed the floor are bounded wholesale by `floor + uniform
+//! share`, so their upper bounds need no per-row work. Wholesale state
+//! moves (bounds migration, gather, node arrivals) bump a generation
+//! stamp and force one full rescan.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::delta::DeltaGraph;
+use super::push::PushState;
+use super::shard::{PushShard, ShardedPush};
+
+/// Process-unique head-generation stamps: every solver instance and
+/// every wholesale state move draws a fresh value, so a tracker can
+/// never mistake one solver's candidate pools for another solver of
+/// the same shape (e.g. the roundtrip path's per-epoch `from_state`
+/// rebuilds).
+static HEAD_GEN: AtomicU64 = AtomicU64::new(1);
+
+pub(crate) fn next_head_gen() -> u64 {
+    HEAD_GEN.fetch_add(1, Ordering::Relaxed)
+}
+
+/// What the caller wants certified: the head size, and whether the
+/// order *within* the head must be proven too (set-only is cheaper to
+/// certify — order needs every consecutive gap to clear the slack).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TopKGoal {
+    pub k: usize,
+    pub order: bool,
+}
+
+impl TopKGoal {
+    /// Candidate-pool size per shard: `k` plus head-room so the entry
+    /// floor sits below the k-boundary and near-boundary churn stays
+    /// tracked instead of forcing rescans.
+    pub(crate) fn pool_cap(&self) -> usize {
+        self.k + (self.k / 2).max(8)
+    }
+}
+
+/// Outcome of one certification check.
+#[derive(Debug, Clone)]
+pub struct TopKCertificate {
+    pub k: usize,
+    /// Current head: node ids by descending center (ties id-ascending),
+    /// `min(k, n)` entries. Valid whether or not certification fired —
+    /// it is the best current estimate of the top-k set.
+    pub head: Vec<u32>,
+    /// The head *set* is provably the true top-k set.
+    pub set_certified: bool,
+    /// Additionally, the order within the head is provably final.
+    pub order_certified: bool,
+    /// Worst lower bound inside the head.
+    pub kth_lower: f64,
+    /// Best upper bound outside the head (`-inf` when nothing is
+    /// outside, e.g. `k >= n`).
+    pub rest_upper: f64,
+    /// One-sided interval half-widths shared by every node.
+    pub slack_plus: f64,
+    pub slack_minus: f64,
+}
+
+impl TopKCertificate {
+    /// Did this check satisfy `goal` (set, plus order when asked)?
+    pub fn certified(&self, order: bool) -> bool {
+        self.set_certified && (!order || self.order_certified)
+    }
+
+    /// Certification margin `kth_lower − rest_upper`: how much true
+    /// ranks could still move without changing the certified set.
+    pub fn margin(&self) -> f64 {
+        self.kth_lower - self.rest_upper
+    }
+}
+
+/// One shard's contribution to a certification check. The threaded
+/// backend publishes these to its monitor; the sequential tracker
+/// builds them in place.
+#[derive(Debug, Clone)]
+pub(crate) struct ShardHeadFrame {
+    /// (global node id, center `p + r + uni/n`) for every pool member.
+    pub entries: Vec<(u32, f64)>,
+    /// Center upper bound for every row *not* in `entries`
+    /// (`-inf` when the pool covers the whole shard).
+    pub rest_bound: f64,
+    /// Located-residual split (materialized r plus the shard's uniform
+    /// share), α/(1−α)-weighted in the slack.
+    pub r_plus: f64,
+    pub r_minus: f64,
+    /// Unlocated residual split (outboxes, pending uniform broadcasts),
+    /// 1/(1−α)-weighted — its t=0 landing spot is unknown.
+    pub unk_plus: f64,
+    pub unk_minus: f64,
+}
+
+/// Tournament merge + interval test over per-shard frames.
+pub(crate) fn certify_frames(frames: &[ShardHeadFrame], k: usize, alpha: f64) -> TopKCertificate {
+    let (mut rp, mut rm, mut up, mut um) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+    for f in frames {
+        rp += f.r_plus;
+        rm += f.r_minus;
+        up += f.unk_plus;
+        um += f.unk_minus;
+    }
+    // the threaded monitor feeds incremental tallies (the exact checks
+    // recompute first), so tolerate float-accumulation drift here
+    debug_assert!(rp >= -1e-6 && rm >= -1e-6 && up >= -1e-6 && um >= -1e-6);
+    let w = 1.0 / (1.0 - alpha);
+    let slack_plus = alpha * w * rp.max(0.0) + w * up.max(0.0);
+    let slack_minus = alpha * w * rm.max(0.0) + w * um.max(0.0);
+
+    if k == 0 {
+        // the empty set is exactly the top-0 set of anything
+        return TopKCertificate {
+            k,
+            head: Vec::new(),
+            set_certified: true,
+            order_certified: true,
+            kth_lower: f64::INFINITY,
+            rest_upper: f64::NEG_INFINITY,
+            slack_plus,
+            slack_minus,
+        };
+    }
+
+    let mut all: Vec<(u32, f64)> = frames.iter().flat_map(|f| f.entries.iter().copied()).collect();
+    all.sort_by(|a, b| {
+        b.1.partial_cmp(&a.1).unwrap_or(std::cmp::Ordering::Equal).then(a.0.cmp(&b.0))
+    });
+    let head_len = k.min(all.len());
+    let head: Vec<u32> = all[..head_len].iter().map(|&(id, _)| id).collect();
+
+    let mut rest_center = f64::NEG_INFINITY;
+    for &(_, c) in &all[head_len..] {
+        rest_center = rest_center.max(c);
+    }
+    for f in frames {
+        rest_center = rest_center.max(f.rest_bound);
+    }
+    let rest_upper = if rest_center == f64::NEG_INFINITY {
+        f64::NEG_INFINITY
+    } else {
+        rest_center + slack_plus
+    };
+    let kth_lower = if head_len == 0 {
+        f64::INFINITY // no live rows at all: vacuously above the (empty) rest
+    } else {
+        all[head_len - 1].1 - slack_minus
+    };
+    // a short head is only the true top-k when nothing exists outside
+    // it (fewer than k live rows); pools sized >= k guarantee a full
+    // head otherwise
+    let set_certified = if head_len < k {
+        rest_upper == f64::NEG_INFINITY
+    } else {
+        kth_lower > rest_upper
+    };
+    let mut order_certified = set_certified;
+    for pair in all[..head_len].windows(2) {
+        if pair[0].1 - slack_minus <= pair[1].1 + slack_plus {
+            order_certified = false;
+            break;
+        }
+    }
+    TopKCertificate {
+        k,
+        head,
+        set_certified,
+        order_certified,
+        kth_lower,
+        rest_upper,
+        slack_plus,
+        slack_minus,
+    }
+}
+
+/// One shard's (or the global state's) candidate pool: the locally hot
+/// rows by `p + r`, refreshed from the solver's hit stream.
+#[derive(Debug, Clone)]
+pub(crate) struct HeadList {
+    /// Tracked local rows, id-ascending.
+    pool: Vec<u32>,
+    /// `p + r` floor in effect since the last refresh. `+inf` = never
+    /// attached (full scan due); `-inf` = the pool covers every row.
+    floor: f64,
+    cap: usize,
+}
+
+impl HeadList {
+    pub(crate) fn new(cap: usize) -> HeadList {
+        HeadList { pool: Vec::new(), floor: f64::INFINITY, cap: cap.max(1) }
+    }
+
+    /// Refresh the pool against the current `(p, r)` slices, draining
+    /// `hits` and re-arming `head_floor` for the next interval.
+    /// Returns `(pool members with their p+r scores, p+r upper bound
+    /// for rows outside the pool)` — the bound is what keeps untracked
+    /// rows sound: they never crossed the floor that was armed while
+    /// the hits accumulated.
+    fn refresh(
+        &mut self,
+        p: &[f64],
+        r: &[f64],
+        hits: &mut Vec<u32>,
+        head_floor: &mut f64,
+    ) -> (Vec<(u32, f64)>, f64) {
+        let bs = p.len();
+        let full = self.floor == f64::INFINITY;
+        if full {
+            hits.clear();
+            self.pool = (0..bs as u32).collect();
+        } else if !hits.is_empty() {
+            hits.sort_unstable();
+            hits.dedup();
+            let mut merged = Vec::with_capacity(self.pool.len() + hits.len());
+            let (mut i, mut j) = (0usize, 0usize);
+            while i < self.pool.len() || j < hits.len() {
+                let a = self.pool.get(i).copied().unwrap_or(u32::MAX);
+                let b = hits.get(j).copied().unwrap_or(u32::MAX);
+                merged.push(a.min(b));
+                i += (a <= b) as usize;
+                j += (b <= a) as usize;
+            }
+            hits.clear();
+            self.pool = merged;
+        }
+        debug_assert!(self.pool.iter().all(|&t| (t as usize) < bs));
+
+        let mut scored: Vec<(u32, f64)> =
+            self.pool.iter().map(|&t| (t, p[t as usize] + r[t as usize])).collect();
+        let floor_used = self.floor;
+        let mut dropped_bound = f64::NEG_INFINITY;
+        if scored.len() > self.cap {
+            scored.select_nth_unstable_by(self.cap - 1, |a, b| {
+                b.1.partial_cmp(&a.1).unwrap_or(std::cmp::Ordering::Equal).then(a.0.cmp(&b.0))
+            });
+            for &(_, s) in &scored[self.cap..] {
+                dropped_bound = dropped_bound.max(s);
+            }
+            scored.truncate(self.cap);
+        }
+        let covers_all = scored.len() == bs;
+        let new_floor = if covers_all {
+            f64::NEG_INFINITY
+        } else {
+            scored.iter().map(|&(_, s)| s).fold(f64::INFINITY, f64::min)
+        };
+        // rows outside the pool: dropped ones sit at or below the kept
+        // minimum *now*; never-tracked ones stayed under the armed
+        // floor the whole interval (a first attach scanned everything,
+        // so only the dropped bound applies there)
+        let rest_pr = if covers_all {
+            f64::NEG_INFINITY
+        } else if full {
+            dropped_bound.max(new_floor)
+        } else {
+            floor_used.max(dropped_bound)
+        };
+        self.floor = new_floor;
+        *head_floor = if covers_all { f64::INFINITY } else { new_floor };
+        self.pool = scored.iter().map(|&(t, _)| t).collect();
+        self.pool.sort_unstable();
+        (scored, rest_pr)
+    }
+}
+
+/// Split an (Σ|x|, Σx) tally pair into its (positive, negative)
+/// halves — the one place the `(l1 ± sum)/2` identity lives.
+#[inline]
+fn split_tally(l1: f64, sum: f64) -> (f64, f64) {
+    ((l1 + sum) * 0.5, (l1 - sum) * 0.5)
+}
+
+/// Fold a signed mass into a (plus, minus) split.
+#[inline]
+fn fold_signed(plus: &mut f64, minus: &mut f64, m: f64) {
+    if m >= 0.0 {
+        *plus += m;
+    } else {
+        *minus -= m;
+    }
+}
+
+/// Located-residual split for one shard (materialized r plus the
+/// shard's replicated uniform share) — shared by [`shard_frame`] and
+/// [`interval_bounds_sharded`], so the tracker's slack and its dense
+/// test mirror can never de-synchronize.
+fn shard_located_split(sh: &PushShard) -> (f64, f64) {
+    let (mut plus, mut minus) = split_tally(sh.r_l1, sh.r_sum);
+    fold_signed(&mut plus, &mut minus, sh.uni * (sh.hi - sh.lo) as f64 / sh.n as f64);
+    (plus, minus)
+}
+
+/// [`shard_located_split`]'s twin for the global state (the pending
+/// uniform `rd` covers every row, so it folds in whole).
+fn state_located_split(st: &PushState) -> (f64, f64) {
+    let (mut plus, mut minus) = split_tally(st.r_l1, st.r_sum);
+    fold_signed(&mut plus, &mut minus, st.rd);
+    (plus, minus)
+}
+
+/// Build a shard's frame: refresh its pool, then convert the p+r
+/// domain to centers with the shard's uniform share and split its
+/// residual tallies into the located / unlocated halves.
+pub(crate) fn shard_frame(head: &mut HeadList, sh: &mut PushShard) -> ShardHeadFrame {
+    let nf = sh.n as f64;
+    let us = sh.uni / nf;
+    let (scored, rest_pr) = head.refresh(&sh.p, &sh.r, &mut sh.head_hits, &mut sh.head_floor);
+    let entries =
+        scored.into_iter().map(|(t, s)| ((sh.lo + t as usize) as u32, s + us)).collect();
+    let rest_bound =
+        if rest_pr == f64::NEG_INFINITY { f64::NEG_INFINITY } else { rest_pr + us };
+    let (r_plus, r_minus) = shard_located_split(sh);
+    let (mut unk_plus, mut unk_minus) = split_tally(sh.acc_mass, sh.acc_sum);
+    for (j, &u) in sh.out_uni.iter().enumerate() {
+        let rows = sh.part.bounds()[j + 1] - sh.part.bounds()[j];
+        fold_signed(&mut unk_plus, &mut unk_minus, u * rows as f64 / nf);
+    }
+    ShardHeadFrame { entries, rest_bound, r_plus, r_minus, unk_plus, unk_minus }
+}
+
+/// [`shard_frame`]'s twin for the single-queue global state.
+pub(crate) fn state_frame(head: &mut HeadList, st: &mut PushState) -> ShardHeadFrame {
+    let us = st.rd / st.n() as f64;
+    let (scored, rest_pr) = head.refresh(&st.p, &st.r, &mut st.head_hits, &mut st.head_floor);
+    let entries = scored.into_iter().map(|(t, s)| (t, s + us)).collect();
+    let rest_bound =
+        if rest_pr == f64::NEG_INFINITY { f64::NEG_INFINITY } else { rest_pr + us };
+    let (r_plus, r_minus) = state_located_split(st);
+    ShardHeadFrame { entries, rest_bound, r_plus, r_minus, unk_plus: 0.0, unk_minus: 0.0 }
+}
+
+/// Incremental certified-head tracker. Bind one tracker to one solver
+/// instance (state or sharded) — its candidate pools mirror that
+/// solver's hit streams; the generation stamps catch wholesale state
+/// moves, not solver swaps.
+#[derive(Debug, Clone)]
+pub struct TopKTracker {
+    goal: TopKGoal,
+    cap: usize,
+    heads: Vec<HeadList>,
+    /// (head generation, parts, n) the pools were built against.
+    seen: Option<(u64, usize, usize)>,
+}
+
+impl TopKTracker {
+    pub fn new(goal: TopKGoal) -> TopKTracker {
+        TopKTracker { goal, cap: goal.pool_cap(), heads: Vec::new(), seen: None }
+    }
+
+    pub fn goal(&self) -> TopKGoal {
+        self.goal
+    }
+
+    /// Certification check against a sharded solver. Settles outboxes
+    /// (exchange) and re-tallies the residual sums exactly first, so
+    /// the interval slacks carry no incremental float drift.
+    pub fn check_sharded(&mut self, sp: &mut ShardedPush) -> TopKCertificate {
+        sp.exchange();
+        sp.residual_recompute();
+        let key = (sp.head_gen(), sp.shard_count(), sp.n());
+        if self.seen != Some(key) {
+            self.heads = (0..sp.shard_count()).map(|_| HeadList::new(self.cap)).collect();
+            self.seen = Some(key);
+        }
+        let alpha = sp.alpha();
+        let frames: Vec<ShardHeadFrame> = self
+            .heads
+            .iter_mut()
+            .zip(sp.shards.iter_mut())
+            .map(|(h, sh)| shard_frame(h, sh))
+            .collect();
+        certify_frames(&frames, self.goal.k, alpha)
+    }
+
+    /// Certification check against the global single-queue state.
+    pub fn check_state(&mut self, st: &mut PushState) -> TopKCertificate {
+        st.recompute_r_l1();
+        let key = (st.head_gen, 1usize, st.n());
+        if self.seen != Some(key) {
+            self.heads = vec![HeadList::new(self.cap)];
+            self.seen = Some(key);
+        }
+        let alpha = st.alpha();
+        let frame = state_frame(&mut self.heads[0], st);
+        certify_frames(&[frame], self.goal.k, alpha)
+    }
+}
+
+/// Outcome of a certified solve ([`solve_certified_state`] /
+/// [`solve_certified_sharded`]).
+#[derive(Debug, Clone)]
+pub struct TopKSolveStats {
+    /// Pushes spent by this call.
+    pub pushes: u64,
+    /// Pushes spent when certification first held (`Some(0)` = the
+    /// warm-started head was already certified; `None` = never
+    /// certified, e.g. a tie at the boundary).
+    pub pushes_to_cert: Option<u64>,
+    /// Whether the full `residual < tol` convergence was reached (false
+    /// under `stop_at_cert` early exit or budget exhaustion).
+    pub converged: bool,
+    pub residual: f64,
+    /// The final certificate (head reflects the exit state).
+    pub cert: TopKCertificate,
+}
+
+/// Floor on pushes between certification checks; the effective chunk
+/// scales with the node count ([`cert_chunk`]) because each check pays
+/// an O(n) exact re-tally — a fixed chunk would drown a large graph's
+/// solve in measurement overhead.
+const CERT_CHUNK: u64 = 4096;
+
+/// Pushes between certification checks for an `n`-node solver: large
+/// enough that the O(n) check amortizes, small enough that early
+/// certification is caught early.
+fn cert_chunk(n: usize) -> u64 {
+    CERT_CHUNK.max(n as u64 / 8)
+}
+
+/// Drive [`PushState::solve`] in chunks with certification checks
+/// between them; with `stop_at_cert` the solve ends as soon as the
+/// goal is certified (`stop_when_topk_certified` semantics), otherwise
+/// it runs to `tol` and reports where certification first held.
+pub fn solve_certified_state(
+    st: &mut PushState,
+    g: &DeltaGraph,
+    tracker: &mut TopKTracker,
+    tol: f64,
+    max_pushes: u64,
+    stop_at_cert: bool,
+) -> TopKSolveStats {
+    let order = tracker.goal().order;
+    let chunk = cert_chunk(st.n());
+    let mut pushes = 0u64;
+    let mut cert = tracker.check_state(st);
+    let mut pushes_to_cert = if cert.certified(order) { Some(0) } else { None };
+    let (converged, residual) = loop {
+        if stop_at_cert && pushes_to_cert.is_some() {
+            break (st.residual_l1() < tol, st.residual_l1());
+        }
+        let remaining = max_pushes.saturating_sub(pushes);
+        if remaining == 0 {
+            break (false, st.residual_l1());
+        }
+        let stats = st.solve(g, tol, chunk.min(remaining));
+        pushes += stats.pushes;
+        if pushes_to_cert.is_none() || stats.converged {
+            cert = tracker.check_state(st);
+            if pushes_to_cert.is_none() && cert.certified(order) {
+                pushes_to_cert = Some(pushes);
+            }
+        }
+        if stats.converged {
+            break (true, stats.residual);
+        }
+        if stats.pushes == 0 {
+            // no progress and not converged: bail rather than spin
+            break (false, stats.residual);
+        }
+    };
+    TopKSolveStats { pushes, pushes_to_cert, converged, residual, cert }
+}
+
+/// [`solve_certified_state`]'s twin over the deterministic sharded
+/// superstep solver.
+pub fn solve_certified_sharded(
+    sp: &mut ShardedPush,
+    g: &DeltaGraph,
+    tracker: &mut TopKTracker,
+    tol: f64,
+    max_pushes: u64,
+    stop_at_cert: bool,
+) -> TopKSolveStats {
+    let order = tracker.goal().order;
+    let chunk = cert_chunk(sp.n());
+    let mut pushes = 0u64;
+    let mut cert = tracker.check_sharded(sp);
+    let mut pushes_to_cert = if cert.certified(order) { Some(0) } else { None };
+    let (converged, residual) = loop {
+        if stop_at_cert && pushes_to_cert.is_some() {
+            let r = sp.residual_exact();
+            break (r < tol, r);
+        }
+        let remaining = max_pushes.saturating_sub(pushes);
+        if remaining == 0 {
+            break (false, sp.residual_exact());
+        }
+        let stats = sp.solve(g, tol, chunk.min(remaining));
+        pushes += stats.pushes;
+        if pushes_to_cert.is_none() || stats.converged {
+            cert = tracker.check_sharded(sp);
+            if pushes_to_cert.is_none() && cert.certified(order) {
+                pushes_to_cert = Some(pushes);
+            }
+        }
+        if stats.converged {
+            break (true, stats.residual);
+        }
+        if stats.pushes == 0 {
+            break (false, stats.residual);
+        }
+    };
+    TopKSolveStats { pushes, pushes_to_cert, converged, residual, cert }
+}
+
+/// Per-node certified enclosures `[lo_i, hi_i] ∋ x*_i` over a sharded
+/// solver — O(n), the dense mirror of what [`TopKTracker`] evaluates
+/// lazily. Test suites cross-check these against a converged reference
+/// at every superstep; they are also the right tool for ad-hoc "how
+/// wrong can this rank still be" queries.
+pub fn interval_bounds_sharded(sp: &mut ShardedPush) -> Vec<(f64, f64)> {
+    sp.exchange();
+    sp.residual_recompute();
+    let alpha = sp.alpha();
+    let w = 1.0 / (1.0 - alpha);
+    let (mut rp, mut rm) = (0.0f64, 0.0f64);
+    for sh in &sp.shards {
+        let (plus, minus) = shard_located_split(sh);
+        rp += plus;
+        rm += minus;
+    }
+    let (sp_up, sp_dn) = (alpha * w * rp, alpha * w * rm);
+    let mut out = vec![(0.0, 0.0); sp.n()];
+    for sh in &sp.shards {
+        let us = sh.uni / sh.n as f64;
+        for k in 0..sh.hi - sh.lo {
+            let c = sh.p[k] + sh.r[k] + us;
+            out[sh.lo + k] = (c - sp_dn, c + sp_up);
+        }
+    }
+    out
+}
+
+/// [`interval_bounds_sharded`]'s twin for the global state.
+pub fn interval_bounds_state(st: &mut PushState) -> Vec<(f64, f64)> {
+    st.recompute_r_l1();
+    let alpha = st.alpha();
+    let w = 1.0 / (1.0 - alpha);
+    let (rp, rm) = state_located_split(st);
+    let (up, dn) = (alpha * w * rp, alpha * w * rm);
+    let us = st.rd / st.n() as f64;
+    (0..st.n())
+        .map(|i| {
+            let c = st.p[i] + st.r[i] + us;
+            (c - dn, c + up)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{generators, EdgeList};
+    use crate::stream::{power_method_f64, UpdateBatch};
+    use crate::util::Rng;
+
+    fn web(n: usize, seed: u64) -> DeltaGraph {
+        let el = generators::power_law_web(&generators::WebParams::scaled(n), seed);
+        DeltaGraph::from_edgelist(&el)
+    }
+
+    fn exact_topk(x: &[f64], k: usize) -> Vec<u32> {
+        crate::pagerank::top_k_ids(x, k)
+    }
+
+    fn set_eq(a: &[u32], b: &[u32]) -> bool {
+        let mut a = a.to_vec();
+        let mut b = b.to_vec();
+        a.sort_unstable();
+        b.sort_unstable();
+        a == b
+    }
+
+    #[test]
+    fn intervals_enclose_truth_at_every_superstep() {
+        // the debug-assert-style cross-check, as a test: the certified
+        // enclosure must contain the converged reference at EVERY chunk
+        // boundary of a cold solve — not just at the end
+        let g = web(800, 101);
+        let (xref, _) = power_method_f64(&g, 0.85, 1e-13, 100_000);
+        for shards in [1usize, 3] {
+            let mut sp = ShardedPush::new(&g, 0.85, shards);
+            loop {
+                let bounds = interval_bounds_sharded(&mut sp);
+                for (i, &(lo, hi)) in bounds.iter().enumerate() {
+                    assert!(
+                        lo - 1e-11 <= xref[i] && xref[i] <= hi + 1e-11,
+                        "shards {shards}: x*[{i}] = {} outside [{lo}, {hi}]",
+                        xref[i]
+                    );
+                }
+                let st = sp.solve(&g, 1e-11, 512);
+                if st.converged {
+                    break;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn intervals_enclose_truth_after_batches_and_dangling_flips() {
+        // post-apply_batch states (the injected residual is signed) and
+        // dangling transitions must keep the enclosure sound
+        let el = EdgeList::from_edges(6, vec![(0, 1), (0, 2), (1, 2), (2, 0), (4, 5)]).unwrap();
+        let mut g = DeltaGraph::from_edgelist(&el);
+        let mut st = PushState::new(g.n(), 0.85);
+        st.begin_epoch();
+        st.solve(&g, 1e-13, u64::MAX);
+        // node 1 goes dangling, node 3 stops being dangling, +1 arrival
+        let delta = g
+            .apply(&UpdateBatch {
+                new_nodes: 1,
+                insert: vec![(3, 0), (6, 2)],
+                remove: vec![(1, 2)],
+            })
+            .unwrap();
+        st.begin_epoch();
+        st.apply_batch(&g, &delta);
+        let (xref, _) = power_method_f64(&g, 0.85, 1e-14, 100_000);
+        loop {
+            let bounds = interval_bounds_state(&mut st);
+            for (i, &(lo, hi)) in bounds.iter().enumerate() {
+                assert!(
+                    lo - 1e-12 <= xref[i] && xref[i] <= hi + 1e-12,
+                    "x*[{i}] = {} outside [{lo}, {hi}]",
+                    xref[i]
+                );
+            }
+            if st.solve(&g, 1e-13, 64).converged {
+                break;
+            }
+        }
+    }
+
+    #[test]
+    fn certified_set_is_sound_when_it_fires() {
+        let g = web(1_500, 102);
+        let (xref, _) = power_method_f64(&g, 0.85, 1e-13, 100_000);
+        for shards in [1usize, 4] {
+            let mut sp = ShardedPush::new(&g, 0.85, shards);
+            let mut tr = TopKTracker::new(TopKGoal { k: 20, order: false });
+            let st = solve_certified_sharded(&mut sp, &g, &mut tr, 1e-10, u64::MAX, true);
+            let fired = st.pushes_to_cert.expect("power-law web must certify k=20");
+            assert!(
+                st.cert.set_certified,
+                "shards {shards}: exit cert must hold under stop_at_cert"
+            );
+            assert!(
+                set_eq(&st.cert.head, &exact_topk(&xref, 20)),
+                "shards {shards}: certified set != true top-20"
+            );
+            // and it certified strictly before full convergence
+            let mut full = ShardedPush::new(&g, 0.85, shards);
+            let fs = full.solve(&g, 1e-10, u64::MAX);
+            assert!(fs.converged);
+            assert!(
+                fired < fs.pushes,
+                "shards {shards}: cert at {fired} pushes vs convergence {}",
+                fs.pushes
+            );
+        }
+    }
+
+    #[test]
+    fn ordered_certification_needs_more_work_than_set() {
+        let g = web(1_200, 103);
+        let run = |order: bool| {
+            let mut sp = ShardedPush::new(&g, 0.85, 2);
+            let mut tr = TopKTracker::new(TopKGoal { k: 10, order });
+            solve_certified_sharded(&mut sp, &g, &mut tr, 1e-11, u64::MAX, true)
+        };
+        let set_only = run(false);
+        let ordered = run(true);
+        let (a, b) = (set_only.pushes_to_cert.unwrap(), ordered.pushes_to_cert.unwrap());
+        assert!(a <= b, "set cert {a} must not cost more than order cert {b}");
+        assert!(ordered.cert.order_certified);
+        // the ordered head must match the reference ORDER, not just set
+        let (xref, _) = power_method_f64(&g, 0.85, 1e-13, 100_000);
+        assert_eq!(ordered.cert.head, exact_topk(&xref, 10));
+    }
+
+    #[test]
+    fn tie_at_the_boundary_degrades_gracefully() {
+        // a directed ring: every rank is exactly 1/n — no k in (0, n)
+        // can ever certify, and nothing may panic or loop forever
+        let n = 24usize;
+        let el = EdgeList::from_edges(
+            n,
+            (0..n).map(|i| (i as u32, ((i + 1) % n) as u32)).collect(),
+        )
+        .unwrap();
+        let g = DeltaGraph::from_edgelist(&el);
+        let mut sp = ShardedPush::new(&g, 0.85, 3);
+        let mut tr = TopKTracker::new(TopKGoal { k: 5, order: false });
+        let st = solve_certified_sharded(&mut sp, &g, &mut tr, 1e-12, u64::MAX, false);
+        assert!(st.converged, "ties must not block convergence");
+        assert_eq!(st.pushes_to_cert, None, "a perfect tie must never certify");
+        assert!(!st.cert.set_certified);
+        assert_eq!(st.cert.head.len(), 5, "head estimate still reported");
+    }
+
+    #[test]
+    fn k_zero_and_k_beyond_n_are_trivially_certified() {
+        let g = web(60, 104);
+        let mut sp = ShardedPush::new(&g, 0.85, 2);
+        let mut t0 = TopKTracker::new(TopKGoal { k: 0, order: true });
+        let c0 = t0.check_sharded(&mut sp);
+        assert!(c0.set_certified && c0.order_certified && c0.head.is_empty());
+
+        // k >= n: the head is "everything", certified as a set the
+        // moment the pool covers all live rows
+        let mut tall = TopKTracker::new(TopKGoal { k: g.n() + 10, order: false });
+        let call = tall.check_sharded(&mut sp);
+        assert_eq!(call.head.len(), g.n());
+        assert!(call.set_certified, "rest is empty: {}", call.rest_upper);
+        assert_eq!(call.rest_upper, f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn mass_deletion_empties_the_head_without_panic() {
+        // delete every edge: all ranks collapse to uniform; the tracker
+        // must survive the epoch and report an uncertifiable head
+        let mut g = web(120, 105);
+        let mut sp = ShardedPush::new(&g, 0.85, 4);
+        let mut tr = TopKTracker::new(TopKGoal { k: 8, order: false });
+        let first = solve_certified_sharded(&mut sp, &g, &mut tr, 1e-11, u64::MAX, false);
+        assert!(first.converged);
+        let mut batch = UpdateBatch::default();
+        g.for_each_edge(|s, d| batch.remove.push((s, d)));
+        let delta = g.apply(&batch).unwrap();
+        sp.begin_epoch();
+        sp.apply_batch(&g, &delta);
+        let st = solve_certified_sharded(&mut sp, &g, &mut tr, 1e-11, u64::MAX, false);
+        assert!(st.converged);
+        assert_eq!(st.pushes_to_cert, None, "uniform ranks cannot certify k=8");
+        let ranks = sp.ranks();
+        let spread = ranks.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+            - ranks.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(spread < 1e-9, "all-dangling graph must rank uniformly, spread {spread}");
+    }
+
+    #[test]
+    fn tracker_follows_churn_across_epochs_incrementally() {
+        // the tracker is attached once and fed only hits + gen bumps;
+        // after N churn epochs its head must equal a from-scratch sort
+        let mut g = web(900, 106);
+        let mut sp = ShardedPush::new(&g, 0.85, 3);
+        let mut tr = TopKTracker::new(TopKGoal { k: 12, order: false });
+        solve_certified_sharded(&mut sp, &g, &mut tr, 1e-11, u64::MAX, false);
+        let mut rng = Rng::new(107);
+        for epoch in 0..5 {
+            let n = g.n();
+            let mut batch = UpdateBatch { new_nodes: 2, ..Default::default() };
+            for _ in 0..30 {
+                batch.insert.push((rng.range(0, n + 2) as u32, rng.range(0, n) as u32));
+            }
+            let mut edges = Vec::new();
+            g.for_each_edge(|s, d| edges.push((s, d)));
+            for _ in 0..15 {
+                batch.remove.push(edges[rng.range(0, edges.len())]);
+            }
+            let delta = g.apply(&batch).unwrap();
+            sp.begin_epoch();
+            sp.apply_batch(&g, &delta);
+            let st = solve_certified_sharded(&mut sp, &g, &mut tr, 1e-11, u64::MAX, false);
+            assert!(st.converged, "epoch {epoch}");
+            let from_scratch = exact_topk(&sp.ranks(), 12);
+            assert!(
+                set_eq(&st.cert.head, &from_scratch),
+                "epoch {epoch}: tracker head diverged from a fresh sort"
+            );
+            if let Some(at) = st.pushes_to_cert {
+                let (xref, _) = power_method_f64(&g, 0.85, 1e-13, 100_000);
+                assert!(
+                    set_eq(&st.cert.head, &exact_topk(&xref, 12)),
+                    "epoch {epoch}: certified at {at} pushes but set is wrong"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn warm_epoch_certifies_in_a_fraction_of_convergence_pushes() {
+        // the serving-path claim at unit scale: after one small churn
+        // batch, certifying the head is much cheaper than re-converging
+        let mut g = web(3_000, 108);
+        let mut sp = ShardedPush::new(&g, 0.85, 2);
+        let mut tr = TopKTracker::new(TopKGoal { k: 16, order: false });
+        solve_certified_sharded(&mut sp, &g, &mut tr, 1e-10, u64::MAX, false);
+        let mut cert_total = 0u64;
+        let mut conv_total = 0u64;
+        let mut rng = Rng::new(109);
+        for _ in 0..3 {
+            let n = g.n();
+            let mut batch = UpdateBatch::default();
+            for _ in 0..10 {
+                batch.insert.push((rng.range(0, n) as u32, rng.range(0, n) as u32));
+            }
+            let delta = g.apply(&batch).unwrap();
+            sp.begin_epoch();
+            sp.apply_batch(&g, &delta);
+            let st = solve_certified_sharded(&mut sp, &g, &mut tr, 1e-10, u64::MAX, false);
+            assert!(st.converged);
+            cert_total += st.pushes_to_cert.expect("warm epoch must certify");
+            conv_total += st.pushes;
+        }
+        assert!(
+            cert_total <= conv_total / 2,
+            "certification ({cert_total} pushes) should beat convergence ({conv_total})"
+        );
+    }
+}
