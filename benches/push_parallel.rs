@@ -18,7 +18,7 @@ use std::time::Instant;
 use asyncpr::asynciter::{run_threaded_push, PushThreadOptions};
 use asyncpr::graph::generators::{churn_batch, ChurnParams};
 use asyncpr::metrics::{parallel_push_markdown, ShardScaleRow};
-use asyncpr::stream::{power_method_f64, DeltaGraph, PushState, ShardedPush};
+use asyncpr::stream::{power_method_f64, DeltaGraph, PushState, ShardedPush, UpdateBatch};
 use asyncpr::util::{Bench, Rng};
 
 fn main() -> anyhow::Result<()> {
@@ -177,6 +177,89 @@ fn main() -> anyhow::Result<()> {
     );
     if res_work >= round_work {
         anyhow::bail!("resident epoch path did not beat the scatter/gather roundtrip");
+    }
+
+    // ---- steal vs static on a hub-heavy hot spot --------------------
+    // Converge, then confine a dense churn burst to the LAST shard's
+    // row range: the residual — hence ALL remaining push work — lands
+    // on one shard. Statically, its three peers idle-spin their quiet
+    // windows while it drains alone (makespan = the hot shard's push
+    // count). With --steal the idle workers adopt its hottest rows
+    // mid-drain. Metrics compared over identical warm states:
+    //   * makespan proxy: max per-shard pushes (scheduler-independent),
+    //   * quiet-window stalls: rounds a worker spent idle,
+    //   * wall clock (informational: 2-core CI makes it noisy).
+    // The bench BAILS if stealing loses — nothing stolen, or a steal
+    // makespan no better than static.
+    println!("\n== steal vs static (hot spot confined to one shard, {shards} shards) ==\n");
+    let steal_race = {
+        let mut g2 = g.clone();
+        let mut warm = ShardedPush::new(&g2, 0.85, shards);
+        warm.solve(&g2, tol, u64::MAX);
+        let bounds = warm.partitioner().bounds().to_vec();
+        let (blo, bhi) = (bounds[bounds.len() - 2], bounds[bounds.len() - 1]);
+        let mut rng = Rng::new(99);
+        let mut batch = UpdateBatch::default();
+        let burst = if quick { 1_500 } else { 4_000 };
+        for _ in 0..burst {
+            batch
+                .insert
+                .push((rng.range(blo, bhi) as u32, rng.range(blo, bhi) as u32));
+        }
+        let delta = g2.apply(&batch)?;
+        warm.begin_epoch();
+        warm.apply_batch(&g2, &delta);
+        (g2, warm)
+    };
+    let (g2, warm) = steal_race;
+    let run_race = |steal: bool| {
+        let mut sp = warm.clone();
+        let ropts = PushThreadOptions { steal, steal_batch: 64, ..opts.clone() };
+        let t0 = Instant::now();
+        let tm = run_threaded_push(&g2, &mut sp, &ropts);
+        let wall = t0.elapsed().as_secs_f64() * 1e3;
+        let makespan = tm.shard_pushes.iter().copied().max().unwrap_or(0);
+        let stalls: u64 = tm.idle_rounds.iter().sum();
+        let stolen: u64 = tm.stolen_rows.iter().sum();
+        (sp, tm, wall, makespan, stalls, stolen)
+    };
+    let (mut sp_static, tm_static, wall_s, make_s, stalls_s, _) = run_race(false);
+    let (mut sp_steal, tm_steal, wall_t, make_t, stalls_t, stolen) = run_race(true);
+    println!(
+        "static: makespan {make_s} pushes (per-shard {:?}), {stalls_s} idle rounds, {wall_s:.1} ms",
+        tm_static.shard_pushes
+    );
+    println!(
+        "steal:  makespan {make_t} pushes (per-shard {:?}), {stalls_t} idle rounds, {wall_t:.1} ms, \
+         {stolen} rows stolen ({} grants)",
+        tm_steal.shard_pushes,
+        tm_steal.steal_grants.iter().sum::<u64>()
+    );
+    // correctness before speed: both races land on the reference
+    let (xref2, _) = power_method_f64(&g2, 0.85, 1e-10, 10_000);
+    for (name, sp, tm) in
+        [("static", &mut sp_static, &tm_static), ("steal", &mut sp_steal, &tm_steal)]
+    {
+        if !tm.converged {
+            sp.solve(&g2, tol, u64::MAX);
+        }
+        let l1: f64 = sp.ranks().iter().zip(&xref2).map(|(a, b)| (a - b).abs()).sum();
+        if l1 > 1e-7 {
+            anyhow::bail!("{name} race drifted from the power reference: {l1:.1e}");
+        }
+    }
+    println!(
+        "stealing spreads the hot shard's work: {}",
+        if stolen > 0 && make_t < make_s { "yes" } else { "NO" }
+    );
+    if stolen == 0 {
+        anyhow::bail!("steal race moved no rows — no idle worker ever found the hot shard");
+    }
+    if make_t >= make_s {
+        anyhow::bail!(
+            "stealing lost: steal makespan {make_t} >= static {make_s} \
+             (stalls {stalls_t} vs {stalls_s})"
+        );
     }
     Ok(())
 }

@@ -78,7 +78,7 @@ pub struct RunMetrics {
     pub finish_times: Vec<f64>,
     /// Virtual time at which the whole run ended.
     pub total_time: f64,
-    /// imports[receiver][sender]: fragments actually imported;
+    /// `imports[receiver][sender]`: fragments actually imported;
     /// diagonal = locally computed fragments (Table 2).
     pub imports: Vec<Vec<u64>>,
     /// Fragment sends attempted / cancelled (per sender).

@@ -28,7 +28,7 @@ pub trait BlockOperator {
 
     /// Apply one block update given the full (stale) snapshot `x`;
     /// write the new block into `out` (len hi-lo) and return the local
-    /// L1 residual ‖out − x[lo..hi]‖₁.
+    /// L1 residual `‖out − x[lo..hi]‖₁`.
     fn update(&mut self, x: &[f32], out: &mut [f32]) -> f32;
 
     /// Nonzeros in this block (drives simulated compute time).

@@ -18,6 +18,16 @@
 //!   artifact path stays on the simulator / main thread);
 //! * the monitor thread runs the same `MonitorTermination` state
 //!   machine used by the simulator.
+//!
+//! The second backend in this module, [`run_threaded_push`], runs the
+//! residual-push solver ([`crate::stream::ShardedPush`]) on the same
+//! thread/channel fabric but with the opposite loss discipline:
+//! residual fragments are additive, so a full channel *defers* instead
+//! of dropping, and the gathered state is exact whatever the schedule.
+//! Its channels also carry the intra-epoch work-stealing protocol
+//! ([`PushThreadOptions::steal`]): steal requests, and grants that
+//! transfer row ownership with the same never-lost in-flight
+//! accounting as the fragments.
 
 use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
@@ -27,7 +37,7 @@ use std::time::Instant;
 use crate::pagerank::PagerankProblem;
 use crate::stream::{
     certify_frames, shard_frame, DeltaGraph, HeadList, ResidualFragment, ShardHeadFrame,
-    ShardedPush, TopKCertificate, TopKGoal, TopKTracker,
+    ShardedPush, StealGrant, TopKCertificate, TopKGoal, TopKTracker,
 };
 use crate::termination::{MonitorTermination, TermMsg, WorkerTermination};
 
@@ -240,6 +250,22 @@ pub struct PushThreadOptions {
     /// ideal share ([`ShardedPush::rebalance`]) — the epoch-resident
     /// path's answer to hubs arriving in one shard's row range.
     pub rebalance_factor: Option<f64>,
+    /// Intra-epoch work stealing: an idle worker (empty bucket queue,
+    /// drained inbox) asks the most-loaded peer — by the published
+    /// pressure signal: local queued residual, weighted up by the
+    /// top-k hit backlog when a serving goal is armed — for a slice of
+    /// its hottest rows, and the victim transfers ownership over the
+    /// same bounded channels the residual fragments ride. Grants are
+    /// counted in the in-flight accounting (the monitor neither
+    /// quiet-stops nor certifies while rows are mid-migration) and a
+    /// grant that meets a full channel is restored to the victim —
+    /// like fragments, never lost. Complements the *between-epoch*
+    /// re-balancer ([`ShardedPush::rebalance`]): rebalancing fixes
+    /// durable nnz skew, stealing fixes transient residual skew inside
+    /// one solve.
+    pub steal: bool,
+    /// Rows per steal grant (only with [`steal`](Self::steal)).
+    pub steal_batch: usize,
     /// Serving-path early stop: workers stream per-shard head-candidate
     /// frames to the monitor alongside their residual estimates, and
     /// the run winds down as soon as the merged frames *tentatively*
@@ -264,6 +290,8 @@ impl Default for PushThreadOptions {
             max_pushes: u64::MAX,
             quiet_checks: 3,
             rebalance_factor: None,
+            steal: false,
+            steal_batch: 64,
             topk: None,
         }
     }
@@ -280,6 +308,15 @@ pub struct PushThreadMetrics {
     pub fragments_sent: Vec<u64>,
     /// Fragments deferred on a full channel (retried later) per shard.
     pub fragments_deferred: Vec<u64>,
+    /// Rows each shard adopted through steal grants (all zero unless
+    /// [`PushThreadOptions::steal`]).
+    pub stolen_rows: Vec<u64>,
+    /// Steal grants each shard issued as a victim.
+    pub steal_grants: Vec<u64>,
+    /// Rounds each worker spent idle (nothing pushed, nothing
+    /// received) — the quiet-window stalls work stealing exists to
+    /// eliminate; the steal-vs-static bench reads this.
+    pub idle_rounds: Vec<u64>,
     pub wall: std::time::Duration,
     /// Exact residual mass after the run (re-tallied, outboxes
     /// delivered).
@@ -295,6 +332,51 @@ pub struct PushThreadMetrics {
     /// certification (only with [`PushThreadOptions::topk`]; the caller
     /// re-checks exactly on the settled state).
     pub topk_stopped: bool,
+}
+
+/// What travels on a push worker's inbox channel: residual mass, a
+/// steal request (no mass — just the thief's id), or a steal grant
+/// (rows mid-migration; counted in flight like fragments).
+enum PushMsg {
+    Frag(ResidualFragment),
+    StealRequest { thief: usize },
+    Grant(StealGrant),
+}
+
+/// The steal-policy pressure signal a worker publishes (and a victim
+/// re-evaluates before granting): *grantable* queued residual — home
+/// rows only, since adopted rows are never re-stolen — weighted up by
+/// the top-k hit backlog when a serving goal is armed (a shard
+/// churning the head is the one whose rows the certificate waits on).
+/// Thief selection and victim defense MUST use this same quantity, or
+/// a thief could keep targeting a peer that is guaranteed to refuse
+/// and stall out its patience window for nothing.
+#[inline]
+fn steal_pressure(stealable_r_l1: f64, hit_backlog: usize, round_budget: u64, topk: bool) -> f64 {
+    if topk {
+        stealable_r_l1 * (1.0 + hit_backlog as f64 / round_budget as f64)
+    } else {
+        stealable_r_l1
+    }
+}
+
+/// Invalidate a worker's serving-path head state around an ownership
+/// move (rows granted away, or a grant adopted): the published frame
+/// is cleared *before* the rows can appear in another shard's frame —
+/// so the monitor never merges a node twice — and the local pool
+/// restarts with a full rescan. One place, because the grant-issue and
+/// grant-receipt paths must never drift apart.
+fn reset_head_tracking(
+    frame: &Mutex<Option<ShardHeadFrame>>,
+    head_list: &mut Option<HeadList>,
+    frame_due: &mut bool,
+    goal: Option<TopKGoal>,
+) {
+    if head_list.is_some() {
+        *frame.lock().unwrap() = None;
+        *head_list = goal.map(|gl| HeadList::new(gl.pool_cap()));
+        *frame_due = true;
+    }
 }
 
 /// Run the sharded residual-push solver on real OS threads — the
@@ -359,6 +441,9 @@ pub fn run_threaded_push(
             rounds: vec![rounds],
             fragments_sent: vec![0],
             fragments_deferred: vec![0],
+            stolen_rows: vec![0],
+            steal_grants: vec![0],
+            idle_rounds: vec![0],
             wall: t0.elapsed(),
             residual,
             converged,
@@ -370,7 +455,13 @@ pub fn run_threaded_push(
     let tol = opts.tol;
     let alpha = state.alpha();
     let goal = opts.topk;
+    let steal = opts.steal && s >= 2;
+    let steal_batch = opts.steal_batch.max(1);
     let local_target = 0.5 * tol / s as f64;
+    // a peer is worth robbing (and worth defending its own work) only
+    // while its queued residual comfortably exceeds its drain target —
+    // migrating rows in the convergence tail would be pure overhead
+    let steal_floor = 16.0 * local_target;
     let round_budget = opts.round_pushes.max(1);
     // per-worker slice of the global push budget; s * floor never
     // exceeds the requested total (a budget below the shard count
@@ -383,25 +474,38 @@ pub fn run_threaded_push(
     let in_flight = Arc::new(AtomicI64::new(0));
     let published: Arc<Vec<AtomicU64>> =
         Arc::new((0..s).map(|_| AtomicU64::new(f64::MAX.to_bits())).collect());
+    // per-shard queue-pressure board for the steal policy: local queued
+    // residual, weighted up by the top-k hit backlog when a serving
+    // goal is armed (a shard churning the head is the one whose rows
+    // the certificate is waiting on)
+    let pressure: Arc<Vec<AtomicU64>> =
+        Arc::new((0..s).map(|_| AtomicU64::new(0f64.to_bits())).collect());
     // per-shard head-candidate frames for the serving-path monitor
     // (None until the owning worker's first publish)
     let head_frames: Arc<Vec<Mutex<Option<ShardHeadFrame>>>> =
         Arc::new((0..s).map(|_| Mutex::new(None)).collect());
+    // bumped on every grant issue AND adoption: the monitor's frame
+    // collection is not atomic across the per-shard mutexes, so a row
+    // migrating mid-collection could appear in a stale victim snapshot
+    // AND the thief's fresh one — the generation check discards any
+    // sample a migration raced, keeping tentative certificates free of
+    // duplicated nodes
+    let steal_gen = Arc::new(AtomicU64::new(0));
     let topk_stop = Arc::new(AtomicBool::new(false));
     // all senders stop before this barrier; inboxes are drained after
     // it, so no fragment can be stranded in a dead channel
     let drained = Arc::new(Barrier::new(s));
 
     // one inbox per shard, every peer holds a sender to it
-    let mut txs: Vec<SyncSender<ResidualFragment>> = Vec::with_capacity(s);
-    let mut rxs: Vec<Option<Receiver<ResidualFragment>>> = Vec::with_capacity(s);
+    let mut txs: Vec<SyncSender<PushMsg>> = Vec::with_capacity(s);
+    let mut rxs: Vec<Option<Receiver<PushMsg>>> = Vec::with_capacity(s);
     for _ in 0..s {
-        let (tx, rx) = sync_channel::<ResidualFragment>(opts.channel_depth.max(1) * s);
+        let (tx, rx) = sync_channel::<PushMsg>(opts.channel_depth.max(1) * s);
         txs.push(tx);
         rxs.push(Some(rx));
     }
 
-    let results: Vec<(u64, u64, u64, u64)> = std::thread::scope(|scope| {
+    let results: Vec<(u64, u64, u64, u64, u64, u64, u64)> = std::thread::scope(|scope| {
         let mut handles = Vec::with_capacity(s);
         for (id, shard) in state.shards.iter_mut().enumerate() {
             let rx = rxs[id].take().unwrap();
@@ -409,25 +513,56 @@ pub fn run_threaded_push(
             let stop = Arc::clone(&stop);
             let in_flight = Arc::clone(&in_flight);
             let published = Arc::clone(&published);
+            let pressure = Arc::clone(&pressure);
             let head_frames = Arc::clone(&head_frames);
+            let steal_gen = Arc::clone(&steal_gen);
             let drained = Arc::clone(&drained);
             handles.push(scope.spawn(move || {
                 let p0 = shard.pushes();
                 let mut rounds = 0u64;
                 let mut sent = 0u64;
                 let mut deferred = 0u64;
+                let mut stolen_in = 0u64;
+                let mut grants_out = 0u64;
+                let mut idle = 0u64;
+                // steal bookkeeping: peers that asked us for rows this
+                // round, and our own outstanding request (one at a
+                // time, dropped after a patience window so a victim
+                // that went quiet cannot wedge us)
+                let mut thieves: Vec<usize> = Vec::new();
+                let mut outstanding: Option<(usize, u64)> = None;
                 // serving path: this worker's head-candidate pool, fed
                 // by the shard's hit stream (first refresh scans the
                 // shard, later ones are O(hits))
                 let mut head_list = goal.map(|gl| HeadList::new(gl.pool_cap()));
                 let mut frame_due = true;
                 loop {
-                    // import residual fragments queued by the peers
+                    // import everything queued by the peers
                     let mut received = false;
-                    while let Ok(frag) = rx.try_recv() {
-                        shard.apply_fragment(&frag);
-                        in_flight.fetch_sub(1, Ordering::AcqRel);
-                        received = true;
+                    while let Ok(msg) = rx.try_recv() {
+                        match msg {
+                            PushMsg::Frag(frag) => {
+                                shard.apply_fragment(&frag);
+                                in_flight.fetch_sub(1, Ordering::AcqRel);
+                                received = true;
+                            }
+                            PushMsg::StealRequest { thief } => thieves.push(thief),
+                            PushMsg::Grant(grant) => {
+                                in_flight.fetch_sub(1, Ordering::AcqRel);
+                                steal_gen.fetch_add(1, Ordering::AcqRel);
+                                outstanding = None;
+                                // our pool predates the adoption; start
+                                // clean so the stolen rows are scanned in
+                                reset_head_tracking(
+                                    &head_frames[id],
+                                    &mut head_list,
+                                    &mut frame_due,
+                                    goal,
+                                );
+                                stolen_in += shard.adopt_rows(grant) as u64;
+                                received = true;
+                            }
+                        }
                     }
                     if stop.load(Ordering::Acquire) || Instant::now() >= deadline {
                         break;
@@ -449,43 +584,133 @@ pub fn run_threaded_push(
                         }
                         if let Some(frag) = shard.take_fragment(j) {
                             in_flight.fetch_add(1, Ordering::AcqRel);
-                            match tx.try_send(frag) {
+                            match tx.try_send(PushMsg::Frag(frag)) {
                                 Ok(()) => sent += 1,
-                                Err(TrySendError::Full(frag)) => {
+                                Err(TrySendError::Full(PushMsg::Frag(frag))) => {
                                     in_flight.fetch_sub(1, Ordering::AcqRel);
                                     shard.restore_fragment(j, frag);
                                     deferred += 1;
                                 }
-                                Err(TrySendError::Disconnected(frag)) => {
+                                Err(TrySendError::Disconnected(PushMsg::Frag(frag))) => {
                                     in_flight.fetch_sub(1, Ordering::AcqRel);
                                     shard.restore_fragment(j, frag);
                                 }
+                                Err(_) => unreachable!("send returns the sent message"),
+                            }
+                        }
+                    }
+                    // serve steal requests with our hottest queued rows;
+                    // the grant rides the same bounded channel and is
+                    // restored on a full one — ownership, like residual,
+                    // is never lost in flight
+                    if steal && !thieves.is_empty() {
+                        for thief in std::mem::take(&mut thieves) {
+                            // defend with the SAME pressure formula the
+                            // board publishes: a peer that picked us off
+                            // the board only sees a refusal when we
+                            // genuinely drained in the meantime
+                            let pressure_now = steal_pressure(
+                                shard.stealable_r_l1(),
+                                shard.head_hits.len(),
+                                round_budget,
+                                goal.is_some(),
+                            );
+                            if thief == id || pressure_now <= steal_floor {
+                                continue;
+                            }
+                            let grant = match shard.steal_out(thief, steal_batch) {
+                                Some(g) => g,
+                                None => continue,
+                            };
+                            reset_head_tracking(
+                                &head_frames[id],
+                                &mut head_list,
+                                &mut frame_due,
+                                goal,
+                            );
+                            in_flight.fetch_add(1, Ordering::AcqRel);
+                            steal_gen.fetch_add(1, Ordering::AcqRel);
+                            match txs[thief].try_send(PushMsg::Grant(grant)) {
+                                Ok(()) => grants_out += 1,
+                                Err(TrySendError::Full(PushMsg::Grant(g)))
+                                | Err(TrySendError::Disconnected(PushMsg::Grant(g))) => {
+                                    in_flight.fetch_sub(1, Ordering::AcqRel);
+                                    shard.restore_grant(g);
+                                }
+                                Err(_) => unreachable!("send returns the sent message"),
                             }
                         }
                     }
                     if let Some(hl) = head_list.as_mut() {
                         if frame_due || pushed > 0 || received {
-                            *head_frames[id].lock().unwrap() = Some(shard_frame(hl, shard));
+                            *head_frames[id].lock().unwrap() =
+                                Some(shard_frame(hl, shard, None));
                             frame_due = false;
                         }
                     }
                     published[id]
                         .store(shard.residual_estimate().to_bits(), Ordering::Release);
+                    let p_now = steal_pressure(
+                        shard.stealable_r_l1(),
+                        shard.head_hits.len(),
+                        round_budget,
+                        goal.is_some(),
+                    );
+                    pressure[id].store(p_now.to_bits(), Ordering::Release);
                     rounds += 1;
+                    if let Some((_, due)) = outstanding {
+                        if rounds >= due {
+                            outstanding = None;
+                        }
+                    }
                     if pushed == 0 && !received {
-                        // locally quiet: let the peers have the cores
+                        idle += 1;
+                        // locally quiet: ask the deepest peer for work
+                        // (one outstanding request at a time), then let
+                        // the peers have the cores
+                        if steal && outstanding.is_none() {
+                            let mut best: Option<usize> = None;
+                            let mut best_p = steal_floor;
+                            for j in 0..s {
+                                if j == id {
+                                    continue;
+                                }
+                                let pj = f64::from_bits(pressure[j].load(Ordering::Acquire));
+                                if pj > best_p {
+                                    best_p = pj;
+                                    best = Some(j);
+                                }
+                            }
+                            if let Some(victim) = best {
+                                if txs[victim]
+                                    .try_send(PushMsg::StealRequest { thief: id })
+                                    .is_ok()
+                                {
+                                    outstanding = Some((victim, rounds + 64));
+                                }
+                            }
+                        }
                         std::thread::sleep(std::time::Duration::from_micros(50));
                     }
                 }
                 // every worker reaches this barrier before anyone's
                 // final drain, and nobody sends after it — so the drain
-                // below observes every fragment ever sent
+                // below observes every fragment and grant ever sent
                 drained.wait();
-                while let Ok(frag) = rx.try_recv() {
-                    shard.apply_fragment(&frag);
-                    in_flight.fetch_sub(1, Ordering::AcqRel);
+                while let Ok(msg) = rx.try_recv() {
+                    match msg {
+                        PushMsg::Frag(frag) => {
+                            shard.apply_fragment(&frag);
+                            in_flight.fetch_sub(1, Ordering::AcqRel);
+                        }
+                        PushMsg::StealRequest { .. } => {}
+                        PushMsg::Grant(grant) => {
+                            in_flight.fetch_sub(1, Ordering::AcqRel);
+                            stolen_in += shard.adopt_rows(grant) as u64;
+                        }
+                    }
                 }
-                (shard.pushes() - p0, rounds, sent, deferred)
+                (shard.pushes() - p0, rounds, sent, deferred, stolen_in, grants_out, idle)
             }));
         }
 
@@ -500,11 +725,17 @@ pub fn run_threaded_push(
             std::thread::sleep(std::time::Duration::from_micros(300));
             if let Some(gl) = goal {
                 if in_flight.load(Ordering::Acquire) == 0 {
+                    let gen0 = steal_gen.load(Ordering::Acquire);
                     let frames: Vec<ShardHeadFrame> = head_frames
                         .iter()
                         .filter_map(|m| m.lock().unwrap().clone())
                         .collect();
+                    // a migration that raced the (non-atomic) collection
+                    // could put one row in a stale victim snapshot AND
+                    // the thief's fresh frame — discard such samples
                     if frames.len() == s
+                        && in_flight.load(Ordering::Acquire) == 0
+                        && steal_gen.load(Ordering::Acquire) == gen0
                         && certify_frames(&frames, gl.k, alpha).certified(gl.order)
                     {
                         topk_stop.store(true, Ordering::Release);
@@ -533,9 +764,32 @@ pub fn run_threaded_push(
             .collect()
     });
 
-    // anything still parked in outboxes (deferred at the cut-off) is
-    // delivered deterministically before the exact re-tally (dense:
-    // the converged flag must not ride on drifted increments)
+    let mut shard_pushes = Vec::with_capacity(s);
+    let mut rounds = Vec::with_capacity(s);
+    let mut fragments_sent = Vec::with_capacity(s);
+    let mut fragments_deferred = Vec::with_capacity(s);
+    let mut stolen_rows = Vec::with_capacity(s);
+    let mut steal_grants = Vec::with_capacity(s);
+    let mut idle_rounds = Vec::with_capacity(s);
+    for (p, r, f, d, si, go, idl) in results {
+        shard_pushes.push(p);
+        rounds.push(r);
+        fragments_sent.push(f);
+        fragments_deferred.push(d);
+        stolen_rows.push(si);
+        steal_grants.push(go);
+        idle_rounds.push(idl);
+    }
+    // reconcile ownership bookkeeping with what the workers actually
+    // migrated (each worker only saw its own side of each grant)
+    let total_stolen: u64 = stolen_rows.iter().sum();
+    if total_stolen > 0 {
+        state.note_steals(total_stolen, steal_grants.iter().sum());
+    }
+    // anything still parked in outboxes (deferred at the cut-off, or
+    // forwards for rows that moved mid-run) is delivered
+    // deterministically before the exact re-tally (dense: the
+    // converged flag must not ride on drifted increments)
     state.exchange();
     if goal.is_some() {
         // the workers' head lists consumed the shards' hit streams and
@@ -545,21 +799,14 @@ pub fn run_threaded_push(
         state.detach_head_tracking();
     }
     let residual = state.residual_recompute();
-    let mut shard_pushes = Vec::with_capacity(s);
-    let mut rounds = Vec::with_capacity(s);
-    let mut fragments_sent = Vec::with_capacity(s);
-    let mut fragments_deferred = Vec::with_capacity(s);
-    for (p, r, f, d) in results {
-        shard_pushes.push(p);
-        rounds.push(r);
-        fragments_sent.push(f);
-        fragments_deferred.push(d);
-    }
     PushThreadMetrics {
         shard_pushes,
         rounds,
         fragments_sent,
         fragments_deferred,
+        stolen_rows,
+        steal_grants,
+        idle_rounds,
         wall: t0.elapsed(),
         residual,
         converged: residual < opts.tol,
@@ -796,6 +1043,75 @@ mod tests {
         // and the state remains a working solver after the early cut
         let st = sp.solve(&g, 1e-10, u64::MAX);
         assert!(st.converged);
+    }
+
+    /// Converge, then inject churn confined to the LAST shard's row
+    /// range — the transient single-shard hot spot intra-epoch work
+    /// stealing exists for.
+    fn skewed_epoch(g: &mut DeltaGraph, sp: &mut ShardedPush) {
+        let bounds = sp.partitioner().bounds().to_vec();
+        let (lo, hi) = (bounds[bounds.len() - 2], bounds[bounds.len() - 1]);
+        let mut rng = crate::util::Rng::new(75);
+        let mut batch = crate::stream::UpdateBatch::default();
+        for _ in 0..600 {
+            let u = rng.range(lo, hi) as u32;
+            let v = rng.range(lo, hi) as u32;
+            batch.insert.push((u, v));
+        }
+        let delta = g.apply(&batch).unwrap();
+        sp.begin_epoch();
+        sp.apply_batch(g, &delta);
+    }
+
+    #[test]
+    fn threaded_push_steal_conserves_mass_and_tracks_power() {
+        let mut g = web(3_000, 76);
+        let mut sp = ShardedPush::new(&g, 0.85, 4);
+        let st = sp.solve(&g, 1e-10, u64::MAX);
+        assert!(st.converged);
+        skewed_epoch(&mut g, &mut sp);
+        let opts =
+            PushThreadOptions { tol: 1e-10, steal: true, steal_batch: 32, ..Default::default() };
+        let tm = run_threaded_push(&g, &mut sp, &opts);
+        // whether or not the scheduler produced a steal window, the
+        // state must be exact and land on the reference
+        assert!((sp.mass() - 1.0).abs() < 1e-9, "mass {}", sp.mass());
+        assert_eq!(
+            tm.stolen_rows.iter().sum::<u64>(),
+            sp.steal_totals().0,
+            "metrics vs state steal accounting"
+        );
+        if !tm.converged {
+            let st = sp.solve(&g, 1e-10, u64::MAX);
+            assert!(st.converged);
+        }
+        let (xref, _) = crate::stream::power_method_f64(&g, 0.85, 1e-12, 10_000);
+        let d: f64 = sp.ranks().iter().zip(&xref).map(|(a, b)| (a - b).abs()).sum();
+        assert!(d < 1e-8, "threaded steal drifted {d:.3e}");
+    }
+
+    #[test]
+    fn threaded_push_steal_with_topk_stays_sound() {
+        // stealing moves head candidates between shards mid-run; the
+        // certified set must still be the true top-k
+        let mut g = web(3_000, 77);
+        let goal = TopKGoal { k: 16, order: false };
+        let mut sp = ShardedPush::new(&g, 0.85, 4);
+        let st = sp.solve(&g, 1e-10, u64::MAX);
+        assert!(st.converged);
+        skewed_epoch(&mut g, &mut sp);
+        let mut tracker = TopKTracker::new(goal);
+        let opts =
+            PushThreadOptions { tol: 1e-10, steal: true, steal_batch: 32, ..Default::default() };
+        let out = run_threaded_push_certified(&g, &mut sp, &mut tracker, &opts);
+        assert!(out.cert.set_certified, "power-law web must certify k=16");
+        assert!((sp.mass() - 1.0).abs() < 1e-9, "mass {}", sp.mass());
+        let (xref, _) = crate::stream::power_method_f64(&g, 0.85, 1e-12, 10_000);
+        let mut want = crate::pagerank::top_k_ids(&xref, 16);
+        let mut got = out.cert.head.clone();
+        want.sort_unstable();
+        got.sort_unstable();
+        assert_eq!(got, want, "certified head != reference top-16 under stealing");
     }
 
     #[test]

@@ -230,6 +230,16 @@ pub struct StreamOptions {
     ///
     /// [`ShardedPush::rebalance`]: crate::stream::ShardedPush::rebalance
     pub rebalance_factor: Option<f64>,
+    /// Intra-epoch work stealing on the threaded drains (`--steal`,
+    /// needs `threads >= 2`): an idle worker adopts the hottest rows of
+    /// the most-loaded peer mid-solve; the report gains per-epoch
+    /// `stolen` / `grants` columns. Complements the between-epoch
+    /// re-balancer: `--rebalance-factor` fixes durable nnz skew at the
+    /// epoch boundary, `--steal` fixes transient residual skew inside
+    /// the epoch's drain.
+    pub steal: bool,
+    /// Rows per steal grant (`--steal-batch B`, default 64).
+    pub steal_batch: usize,
     /// Serving path: track and certify the top-k head of the ranking
     /// each epoch ([`TopKTracker`]); the report gains head-churn and
     /// pushes-to-certification columns.
@@ -260,6 +270,8 @@ impl Default for StreamOptions {
             threads: 1,
             resident: false,
             rebalance_factor: None,
+            steal: false,
+            steal_batch: 64,
             topk: None,
             topk_order: false,
             topk_stop: false,
@@ -313,6 +325,19 @@ fn epoch_baseline(
     Ok((cold_stats.pushes, l1, xref))
 }
 
+/// The threaded [`PushThreadOptions`] a [`StreamOptions`] implies
+/// (tolerance, budget, and the steal knobs — the rebalance entry hook
+/// is driven separately by the resident loop).
+fn thread_opts(opts: &StreamOptions, max_pushes: u64) -> PushThreadOptions {
+    PushThreadOptions {
+        tol: opts.tol,
+        max_pushes,
+        steal: opts.steal,
+        steal_batch: opts.steal_batch,
+        ..Default::default()
+    }
+}
+
 /// Resident path: drain the live shards to `tol` on real threads, with
 /// the deterministic sequential finish when the monitor cuts early
 /// (timeout / quiet race) — the budget is whatever the epoch has left
@@ -321,22 +346,17 @@ fn epoch_baseline(
 fn finish_threaded_resident(
     g: &DeltaGraph,
     sharded: &mut ShardedPush,
-    tol: f64,
-    max_pushes: u64,
+    opts: &StreamOptions,
     p0: u64,
 ) -> (f64, bool) {
     let used = sharded.total_pushes() - p0;
-    let topts = PushThreadOptions {
-        tol,
-        max_pushes: max_pushes.saturating_sub(used),
-        ..Default::default()
-    };
+    let topts = thread_opts(opts, opts.max_pushes.saturating_sub(used));
     let tm = run_threaded_push(g, sharded, &topts);
     if tm.converged {
         (tm.residual, true)
     } else {
         let used = sharded.total_pushes() - p0;
-        let st = sharded.solve(g, tol, max_pushes.saturating_sub(used));
+        let st = sharded.solve(g, opts.tol, opts.max_pushes.saturating_sub(used));
         (st.residual, st.converged)
     }
 }
@@ -430,6 +450,11 @@ pub fn stream_epochs(graph_spec: &str, opts: &StreamOptions) -> Result<StreamRep
              (the roundtrip path re-partitions every epoch by construction)"
         );
     }
+    anyhow::ensure!(
+        !opts.steal || opts.threads >= 2,
+        "--steal needs --threads N with N >= 2 (a single shard has no peer to rob)"
+    );
+    anyhow::ensure!(opts.steal_batch >= 1, "--steal-batch must be >= 1");
     let topk_goal = opts.topk.map(|k| TopKGoal { k, order: opts.topk_order });
     anyhow::ensure!(
         topk_goal.is_some() || (!opts.topk_order && !opts.topk_stop),
@@ -486,6 +511,7 @@ pub fn stream_epochs(graph_spec: &str, opts: &StreamOptions) -> Result<StreamRep
                 (batch.new_nodes, delta.inserted, delta.removed, ms.dirty_rows)
             };
             let p0 = sharded.total_pushes();
+            let (steal0_rows, steal0_grants) = sharded.steal_totals();
             let (residual, converged, epoch_cert) = match tracker.as_mut() {
                 Some(tr) if opts.threads == 1 => {
                     let st = solve_certified_sharded(
@@ -504,11 +530,7 @@ pub fn stream_epochs(graph_spec: &str, opts: &StreamOptions) -> Result<StreamRep
                     // run_threaded_push_certified), then run to tol
                     // unless stopping at certification
                     let goal = tr.goal();
-                    let topts = PushThreadOptions {
-                        tol: opts.tol,
-                        max_pushes: opts.max_pushes,
-                        ..Default::default()
-                    };
+                    let topts = thread_opts(opts, opts.max_pushes);
                     let out = run_threaded_push_certified(&g, &mut sharded, tr, &topts);
                     let mut cert = out.cert;
                     let mut pushes_to_cert = out.pushes_to_cert;
@@ -518,9 +540,7 @@ pub fn stream_epochs(graph_spec: &str, opts: &StreamOptions) -> Result<StreamRep
                         // finish to tol back on the threads (tracking no
                         // longer needs to interrupt the run), with the
                         // usual deterministic fallback
-                        let (r, c) = finish_threaded_resident(
-                            &g, &mut sharded, opts.tol, opts.max_pushes, p0,
-                        );
+                        let (r, c) = finish_threaded_resident(&g, &mut sharded, opts, p0);
                         residual = r;
                         converged = c;
                         if pushes_to_cert.is_none() {
@@ -533,9 +553,7 @@ pub fn stream_epochs(graph_spec: &str, opts: &StreamOptions) -> Result<StreamRep
                     (residual, converged, Some((cert, pushes_to_cert)))
                 }
                 None if opts.threads > 1 => {
-                    let (r, c) = finish_threaded_resident(
-                        &g, &mut sharded, opts.tol, opts.max_pushes, p0,
-                    );
+                    let (r, c) = finish_threaded_resident(&g, &mut sharded, opts, p0);
                     (r, c, None)
                 }
                 None => {
@@ -571,6 +589,7 @@ pub fn stream_epochs(graph_spec: &str, opts: &StreamOptions) -> Result<StreamRep
                 )?),
                 _ => None,
             };
+            let (steal1_rows, steal1_grants) = sharded.steal_totals();
             rows.push(StreamEpochRow {
                 epoch,
                 n: g.n(),
@@ -584,6 +603,8 @@ pub fn stream_epochs(graph_spec: &str, opts: &StreamOptions) -> Result<StreamRep
                 scratch_pushes,
                 l1_vs_power: l1,
                 csr_dirty_rows: csr_dirty,
+                stolen_rows: steal1_rows - steal0_rows,
+                steal_grants: steal1_grants - steal0_grants,
                 topk,
             });
         }
@@ -606,6 +627,8 @@ pub fn stream_epochs(graph_spec: &str, opts: &StreamOptions) -> Result<StreamRep
             // solves sequentially in a handful of pushes either way
             let parallel_worthwhile = inc.residual_l1() > 1e3 * opts.tol;
             let mut parallel_pushes = 0u64;
+            let mut epoch_stolen = 0u64;
+            let mut epoch_grants = 0u64;
             if opts.threads > 1 && parallel_worthwhile {
                 // scatter → parallel drain on real threads → gather; any
                 // residual the monitor left behind is polished sequentially
@@ -617,13 +640,13 @@ pub fn stream_epochs(graph_spec: &str, opts: &StreamOptions) -> Result<StreamRep
                 // epoch's convergence onto the sequential polish.
                 let mut sharded = ShardedPush::from_state(&inc, &g, opts.threads);
                 let topts = PushThreadOptions {
-                    tol: opts.tol,
-                    max_pushes: opts.max_pushes,
                     topk: if opts.topk_stop { topk_goal } else { None },
-                    ..Default::default()
+                    ..thread_opts(opts, opts.max_pushes)
                 };
                 let tm = run_threaded_push(&g, &mut sharded, &topts);
                 parallel_pushes = tm.shard_pushes.iter().sum();
+                epoch_stolen = tm.stolen_rows.iter().sum();
+                epoch_grants = tm.steal_grants.iter().sum();
                 sharded.gather_into(&mut inc);
             }
             // the sequential phase only gets whatever the parallel phase
@@ -692,6 +715,8 @@ pub fn stream_epochs(graph_spec: &str, opts: &StreamOptions) -> Result<StreamRep
                 scratch_pushes,
                 l1_vs_power: l1,
                 csr_dirty_rows: 0,
+                stolen_rows: epoch_stolen,
+                steal_grants: epoch_grants,
                 topk,
             });
         }

@@ -11,7 +11,7 @@ mod partition;
 pub mod experiments;
 mod report;
 
-pub use partition::Partitioner;
+pub use partition::{OwnerMap, Partitioner};
 pub use report::Report;
 
 use std::sync::Arc;

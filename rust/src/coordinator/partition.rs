@@ -173,6 +173,112 @@ impl Partitioner {
     }
 }
 
+/// Row-ownership map: which shard currently *owns* each row — the
+/// generalization of a contiguous [`Partitioner`] that intra-epoch work
+/// stealing needs.
+///
+/// A fresh map is just a partition: every row is owned by the shard
+/// whose contiguous **home** block contains it, and `owner_of` runs on
+/// the partitioner's binary search (the contiguous fast path — no
+/// per-row array exists at all). The first ownership move materializes
+/// a dense `u16` shard-id array; from then on `owner_of` is a single
+/// indexed load. [`fold_contiguous`](Self::fold_contiguous) drops the
+/// dense array again once every row is back home — which is exactly
+/// what `ShardedPush::rebalance` does before re-cutting bounds, so the
+/// re-balancer only ever reasons about contiguous blocks.
+///
+/// Terminology used throughout the steal machinery:
+/// * a row's **home** is the shard whose contiguous block contains it
+///   (never changes between re-partitions);
+/// * a row's **owner** is the shard currently holding its rank mass and
+///   queued residual (changes on steal grants and repatriation).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct OwnerMap {
+    part: Partitioner,
+    /// Dense per-row owner; `None` while ownership matches the home
+    /// partition (the common case — allocated lazily on the first
+    /// steal, dropped again by `fold_contiguous`).
+    dense: Option<Vec<u16>>,
+}
+
+impl OwnerMap {
+    /// A map where every row is owned by its home shard.
+    pub fn contiguous(part: Partitioner) -> OwnerMap {
+        assert!(
+            part.p() <= u16::MAX as usize,
+            "owner ids are u16 ({} shards requested)",
+            part.p()
+        );
+        OwnerMap { part, dense: None }
+    }
+
+    /// The home partition underneath the ownership overlay.
+    pub fn partitioner(&self) -> &Partitioner {
+        &self.part
+    }
+
+    /// Shard that currently owns `row`.
+    #[inline]
+    pub fn owner_of(&self, row: usize) -> usize {
+        match &self.dense {
+            Some(d) => d[row] as usize,
+            None => self.part.owner_of(row),
+        }
+    }
+
+    /// Shard whose contiguous home block contains `row` (ignores
+    /// steals).
+    #[inline]
+    pub fn home_of(&self, row: usize) -> usize {
+        self.part.owner_of(row)
+    }
+
+    /// Whether ownership currently coincides with the home partition
+    /// (no dense overlay in use).
+    pub fn is_contiguous(&self) -> bool {
+        self.dense.is_none()
+    }
+
+    /// Move ownership of `row` to `shard`, materializing the dense
+    /// overlay on first use.
+    pub fn set_owner(&mut self, row: usize, shard: usize) {
+        debug_assert!(row < *self.part.bounds().last().unwrap());
+        debug_assert!(shard < self.part.p());
+        let dense = self.dense.get_or_insert_with(|| {
+            let mut d = Vec::with_capacity(*self.part.bounds().last().unwrap());
+            for (id, (lo, hi)) in self.part.blocks().into_iter().enumerate() {
+                d.extend(std::iter::repeat(id as u16).take(hi - lo));
+            }
+            d
+        });
+        dense[row] = shard as u16;
+    }
+
+    /// Rows currently owned away from their home shard.
+    pub fn displaced(&self) -> usize {
+        match &self.dense {
+            None => 0,
+            Some(d) => d
+                .iter()
+                .enumerate()
+                .filter(|&(row, &o)| o as usize != self.part.owner_of(row))
+                .count(),
+        }
+    }
+
+    /// Drop the dense overlay if (and only if) every row is owned by
+    /// its home shard again. Returns whether the map is contiguous
+    /// afterwards — `ShardedPush::rebalance` calls this after
+    /// repatriating stolen rows, folding the map back to plain bounds
+    /// before any re-cut.
+    pub fn fold_contiguous(&mut self) -> bool {
+        if self.displaced() == 0 {
+            self.dense = None;
+        }
+        self.dense.is_none()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -356,6 +462,34 @@ mod tests {
         assert!(part.weight_imbalance(&skewed) > 3.0);
         // all-zero weights: nothing to balance
         assert_eq!(part.weight_imbalance(&[0; 8]), 1.0);
+    }
+
+    #[test]
+    fn owner_map_contiguous_fast_path_and_overlay_agree() {
+        let part = Partitioner::balanced_nnz_lens(&[3, 1, 4, 1, 5, 9, 2, 6], 3);
+        let mut owners = OwnerMap::contiguous(part.clone());
+        assert!(owners.is_contiguous());
+        for row in 0..8 {
+            assert_eq!(owners.owner_of(row), part.owner_of(row));
+            assert_eq!(owners.home_of(row), part.owner_of(row));
+        }
+        // move one row: dense overlay materializes, only that row moves
+        let moved = part.blocks()[0].0; // first row of shard 0
+        owners.set_owner(moved, 2);
+        assert!(!owners.is_contiguous());
+        assert_eq!(owners.displaced(), 1);
+        assert_eq!(owners.owner_of(moved), 2);
+        assert_eq!(owners.home_of(moved), 0);
+        for row in 0..8 {
+            if row != moved {
+                assert_eq!(owners.owner_of(row), part.owner_of(row));
+            }
+        }
+        // folding refuses while displaced, succeeds after return home
+        assert!(!owners.fold_contiguous());
+        owners.set_owner(moved, 0);
+        assert!(owners.fold_contiguous());
+        assert!(owners.is_contiguous());
     }
 
     #[test]

@@ -107,7 +107,7 @@ impl Ell {
     }
 
     /// Fold virtual-row results `vy` (len = virtual_rows) into logical
-    /// rows: out[owner[v]] += vy[v]. `out` must be zeroed by the caller.
+    /// rows: `out[owner[v]] += vy[v]`. `out` must be zeroed by the caller.
     pub fn fold_virtual(&self, vy: &[f32], out: &mut [f32]) {
         debug_assert_eq!(vy.len(), self.virtual_rows());
         debug_assert_eq!(out.len(), self.logical_rows);

@@ -16,13 +16,18 @@
 //!   the PJRT artifacts ([`runtime`]) or the native SpMV
 //!   ([`pagerank`]); Python never runs at request time.
 //!
-//! ## Module map (see DESIGN.md §4)
+//! ## Module map
+//!
+//! The layered tour — data-flow diagram, the ownership/migration story
+//! behind intra-epoch work stealing, and the invariants to know before
+//! editing — lives in `ARCHITECTURE.md` at the repo root (see also
+//! DESIGN.md §4); the short version:
 //!
 //! | module | role |
 //! |---|---|
 //! | [`graph`] | web-graph structures (CSR/ELL), generators, update streams, IO |
 //! | [`pagerank`] | PageRank operators, sync baselines, residuals, ranking metrics |
-//! | [`stream`] | evolving-graph workload: `DeltaGraph` epochs + push-based incremental PageRank (single-queue + sharded parallel) |
+//! | [`stream`] | evolving-graph workload: `DeltaGraph` epochs + push-based incremental PageRank (single-queue + sharded parallel, with intra-epoch work stealing) |
 //! | [`simnet`] | virtual-time discrete-event cluster/network simulator |
 //! | [`asynciter`] | generic asynchronous fixed-point engine (eq. 5) |
 //! | [`termination`] | Figure-1 centralized protocol + global oracle + tree detector |

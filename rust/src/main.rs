@@ -10,6 +10,7 @@
 //! repro experiment table1|table2|global|ablations [--graph G] [--out reports/X]
 //! repro stream [--graph G] [--epochs E] [--seed S] [--tol T] [--alpha A]
 //!              [--threads N] [--resident] [--rebalance-factor F]
+//!              [--steal] [--steal-batch B]
 //!              [--topk K] [--topk-order] [--topk-stop]
 //!              [--arrivals K] [--links L] [--inserts I]
 //!              [--removes R] [--out reports/X]
@@ -81,6 +82,7 @@ USAGE:
   repro experiment <table1|table2|global|ablations> [--graph SPEC] [--out STEM]
   repro stream [--graph SPEC] [--epochs E] [--seed N] [--tol T] [--alpha A]
                [--threads N] [--resident] [--rebalance-factor F]
+               [--steal] [--steal-batch B]
                [--topk K] [--topk-order] [--topk-stop]
                [--arrivals K] [--links L] [--inserts I]
                [--removes R] [--out STEM]
@@ -99,6 +101,10 @@ injects directly into the live shards (no scatter/gather round-trip)
 and the CSR snapshot is spliced incrementally; `--rebalance-factor F`
 re-cuts the shard bounds between epochs once churn skews the per-shard
 nnz beyond F times the ideal share.
+`--steal` (needs --threads >= 2) turns on intra-epoch work stealing:
+an idle worker adopts the hottest queued rows of the most-loaded peer
+mid-drain, `--steal-batch B` rows per grant (default 64); the report
+gains per-epoch `stolen (grants)` columns.
 `--topk K` tracks the top-K head of the ranking with certified error
 intervals (serving path): the report gains head-churn and
 pushes-to-certification columns; `--topk-order` also certifies the
@@ -120,7 +126,7 @@ fn parse_flags(args: &[String]) -> anyhow::Result<HashMap<String, String>> {
         if matches!(
             key,
             "check" | "adaptive" | "artifact" | "push" | "balanced" | "global-threshold"
-                | "quick" | "resident" | "topk-order" | "topk-stop"
+                | "quick" | "resident" | "steal" | "topk-order" | "topk-stop"
         ) {
             map.insert(key.to_string(), "true".to_string());
             i += 1;
@@ -339,6 +345,12 @@ fn cmd_stream(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     if let Some(v) = flags.get("rebalance-factor") {
         opts.rebalance_factor = Some(v.parse()?);
     }
+    if flags.contains_key("steal") {
+        opts.steal = true;
+    }
+    if let Some(v) = flags.get("steal-batch") {
+        opts.steal_batch = v.parse()?;
+    }
     if let Some(v) = flags.get("topk") {
         opts.topk = Some(v.parse()?);
     }
@@ -365,12 +377,13 @@ fn cmd_stream(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     }
 
     eprintln!(
-        "streaming {graph}: {} update epochs, tol {:.0e}, alpha {}, threads {}{} ...",
+        "streaming {graph}: {} update epochs, tol {:.0e}, alpha {}, threads {}{}{} ...",
         opts.epochs,
         opts.tol,
         opts.alpha,
         opts.threads,
-        if opts.resident { " (epoch-resident shards)" } else { "" }
+        if opts.resident { " (epoch-resident shards)" } else { "" },
+        if opts.steal { " (work stealing)" } else { "" }
     );
     let rep = experiments::stream_epochs(&graph, &opts)?;
     let md = stream_markdown(&rep.rows);
@@ -411,6 +424,14 @@ fn cmd_stream(flags: &HashMap<String, String>) -> anyhow::Result<()> {
                 conv_pushes as f64 / cert_pushes.max(1) as f64
             );
         }
+    }
+    if opts.steal {
+        let stolen: u64 = rep.rows.iter().map(|r| r.stolen_rows).sum();
+        let grants: u64 = rep.rows.iter().map(|r| r.steal_grants).sum();
+        println!(
+            "work stealing: {stolen} rows changed owner across {grants} grants \
+             (opportunistic — 0 just means no idle/loaded window opened)"
+        );
     }
     if opts.resident {
         let dirty: usize = rep.rows.iter().map(|r| r.csr_dirty_rows).sum();

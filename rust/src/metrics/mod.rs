@@ -117,6 +117,12 @@ pub struct StreamEpochRow {
     /// would have paid for all `n`. 0 on the roundtrip path (no
     /// per-epoch CSR is maintained there).
     pub csr_dirty_rows: usize,
+    /// Rows that changed owner through intra-epoch work stealing this
+    /// epoch (`repro stream --steal`); 0 when stealing is off or no
+    /// idle/loaded window opened.
+    pub stolen_rows: u64,
+    /// Steal grants delivered between shards this epoch.
+    pub steal_grants: u64,
     /// Serving-path columns (`repro stream --topk K`); `None` when no
     /// top-k goal was tracked.
     pub topk: Option<TopKEpochStats>,
@@ -178,6 +184,11 @@ impl StreamEpochRow {
             } else {
                 "-".into()
             },
+            if self.steal_grants > 0 {
+                format!("{} ({})", self.stolen_rows, self.steal_grants)
+            } else {
+                "-".into()
+            },
             format!("{:.1e}", self.l1_vs_power),
         ]
     }
@@ -196,6 +207,8 @@ impl StreamEpochRow {
         o.insert("scratch_pushes".into(), Json::Num(self.scratch_pushes as f64));
         o.insert("l1_vs_power".into(), Json::Num(self.l1_vs_power));
         o.insert("csr_dirty_rows".into(), Json::Num(self.csr_dirty_rows as f64));
+        o.insert("stolen_rows".into(), Json::Num(self.stolen_rows as f64));
+        o.insert("steal_grants".into(), Json::Num(self.steal_grants as f64));
         if let Some(t) = &self.topk {
             o.insert("topk".into(), t.to_json());
         }
@@ -304,7 +317,9 @@ pub fn parallel_push_markdown(rows: &[ShardScaleRow]) -> String {
     t.to_markdown()
 }
 
-/// Render the per-epoch stream table.
+/// Render the per-epoch stream table. The `stolen (grants)` column
+/// reads `-` on epochs without a steal — stealing is opportunistic
+/// (an idle/loaded window has to open), so sparse entries are normal.
 pub fn stream_markdown(rows: &[StreamEpochRow]) -> String {
     let mut t = Table::new(&[
         "epoch",
@@ -315,6 +330,7 @@ pub fn stream_markdown(rows: &[StreamEpochRow]) -> String {
         "touched",
         "scratch pushes",
         "saving",
+        "stolen (grants)",
         "L1 vs power",
     ]);
     for r in rows {
@@ -418,25 +434,38 @@ mod tests {
             scratch_pushes: 50_000,
             l1_vs_power: 3.0e-10,
             csr_dirty_rows: 25,
+            stolen_rows: 0,
+            steal_grants: 0,
             topk: None,
         }
     }
 
     #[test]
     fn stream_table_layout_and_saving_ratio() {
-        let md = stream_markdown(&[fake_stream_row(0), fake_stream_row(1)]);
+        let mut with_steal = fake_stream_row(1);
+        with_steal.stolen_rows = 96;
+        with_steal.steal_grants = 3;
+        let md = stream_markdown(&[fake_stream_row(0), with_steal]);
         assert!(md.contains("inc pushes"));
         assert!(md.contains("100.0x"), "{md}");
         assert!(md.contains("+1n +20e -10e"));
+        assert!(md.contains("stolen (grants)"));
+        assert!(md.contains("96 (3)"), "{md}");
+        assert!(md.contains("| -"), "no-steal epochs render a dash: {md}");
         assert_eq!(md.trim().lines().count(), 4);
     }
 
     #[test]
     fn stream_row_json() {
-        let j = fake_stream_row(3).to_json();
+        let mut row = fake_stream_row(3);
+        row.stolen_rows = 12;
+        row.steal_grants = 1;
+        let j = row.to_json();
         assert_eq!(j.get("epoch").unwrap().as_usize(), Some(3));
         assert_eq!(j.get("scratch_pushes").unwrap().as_usize(), Some(50_000));
         assert_eq!(j.get("csr_dirty_rows").unwrap().as_usize(), Some(25));
+        assert_eq!(j.get("stolen_rows").unwrap().as_usize(), Some(12));
+        assert_eq!(j.get("steal_grants").unwrap().as_usize(), Some(1));
         assert!(Json::parse(&j.to_string_compact()).is_ok());
     }
 

@@ -8,7 +8,7 @@
 //! The real engine requires the external `xla` bindings, which the
 //! offline build environment does not carry; it is compiled only with
 //! `--features xla` (after adding the `xla` dependency to Cargo.toml).
-//! The default build substitutes [`engine_stub`], an API-identical stub
+//! The default build substitutes `engine_stub.rs`, an API-identical stub
 //! whose `Engine::new` fails with a readable error, so every artifact
 //! code path type-checks and errors cleanly at runtime instead of at
 //! link time.

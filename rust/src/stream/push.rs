@@ -142,6 +142,23 @@ pub struct SolveStats {
 
 /// Persistent push-solver state: survives across epochs so each solve
 /// warm-starts from the previous fixed point.
+///
+/// Two contracts every consumer leans on:
+///
+/// * **Mass conservation** — with `R = Σr + rd` the signed residual,
+///   `Σp + R/(1−α) = 1` holds after every push, flush, and
+///   [`apply_batch`](Self::apply_batch) (each push at mass `m` settles
+///   `m` and re-emits exactly `α·m`). [`residual_l1`](Self::residual_l1)
+///   upper-bounds the rank error by `residual/(1−α)` in L1, which is
+///   what makes any intermediate state servable.
+/// * **Head-generation invalidation** — an attached
+///   [`TopKTracker`](super::TopKTracker) follows this state through
+///   the `add_r` hit stream alone. Any *wholesale* state move that
+///   bypasses `add_r` (the sharded gather's `adopt_parts`, growth on
+///   node arrivals) bumps an internal generation stamp, which forces
+///   the tracker's next check to rebuild its candidate pools instead
+///   of trusting stale hits. If you add a new way to move state, bump
+///   the stamp or the serving path will certify against fiction.
 #[derive(Debug, Clone)]
 pub struct PushState {
     alpha: f64,

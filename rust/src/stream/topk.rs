@@ -337,16 +337,54 @@ fn state_located_split(st: &PushState) -> (f64, f64) {
 }
 
 /// Build a shard's frame: refresh its pool, then convert the p+r
-/// domain to centers with the shard's uniform share and split its
+/// domain to centers with the per-row uniform share and split the
 /// residual tallies into the located / unlocated halves.
-pub(crate) fn shard_frame(head: &mut HeadList, sh: &mut PushShard) -> ShardHeadFrame {
+///
+/// Ownership-awareness (work stealing): **lent** home rows are
+/// excluded — their state lives at (and is reported by) the thief, and
+/// a zero-score ghost here could otherwise duplicate a node across
+/// frames. **Adopted** rows report under their *home* shard's uniform
+/// share (the home's flush forwards it here): exact when `home_unis`
+/// carries every shard's scalar (the [`TopKTracker::check_sharded`]
+/// path), approximated by the local scalar on the tentative threaded
+/// worker path (`None`) — which is fine, because the monitor's stop is
+/// always re-checked exactly on the settled state.
+pub(crate) fn shard_frame(
+    head: &mut HeadList,
+    sh: &mut PushShard,
+    home_unis: Option<&[f64]>,
+) -> ShardHeadFrame {
     let nf = sh.n as f64;
     let us = sh.uni / nf;
+    let bs = sh.home_size();
+    // upper bound on any local row's uniform share: untracked adopted
+    // rows sit under rest_bound, whose share is their home's scalar
+    let mut us_max = us;
+    if let Some(unis) = home_unis {
+        for &node in &sh.adopted {
+            us_max = us_max.max(unis[sh.part.owner_of(node as usize)] / nf);
+        }
+    }
     let (scored, rest_pr) = head.refresh(&sh.p, &sh.r, &mut sh.head_hits, &mut sh.head_floor);
-    let entries =
-        scored.into_iter().map(|(t, s)| ((sh.lo + t as usize) as u32, s + us)).collect();
+    let entries = scored
+        .into_iter()
+        .filter(|&(t, _)| (t as usize) >= bs || sh.lent_owner(t as usize).is_none())
+        .map(|(t, s)| {
+            let k = t as usize;
+            if k < bs {
+                ((sh.lo + k) as u32, s + us)
+            } else {
+                let node = sh.adopted[k - bs];
+                let share = match home_unis {
+                    Some(unis) => unis[sh.part.owner_of(node as usize)] / nf,
+                    None => us,
+                };
+                (node, s + share)
+            }
+        })
+        .collect();
     let rest_bound =
-        if rest_pr == f64::NEG_INFINITY { f64::NEG_INFINITY } else { rest_pr + us };
+        if rest_pr == f64::NEG_INFINITY { f64::NEG_INFINITY } else { rest_pr + us_max };
     let (r_plus, r_minus) = shard_located_split(sh);
     let (mut unk_plus, mut unk_minus) = split_tally(sh.acc_mass, sh.acc_sum);
     for (j, &u) in sh.out_uni.iter().enumerate() {
@@ -401,11 +439,14 @@ impl TopKTracker {
             self.seen = Some(key);
         }
         let alpha = sp.alpha();
+        // every shard's uniform scalar, so adopted (stolen) rows report
+        // under their home share exactly
+        let unis: Vec<f64> = sp.shards.iter().map(|sh| sh.uni).collect();
         let frames: Vec<ShardHeadFrame> = self
             .heads
             .iter_mut()
             .zip(sp.shards.iter_mut())
-            .map(|(h, sh)| shard_frame(h, sh))
+            .map(|(h, sh)| shard_frame(h, sh, Some(&unis)))
             .collect();
         certify_frames(&frames, self.goal.k, alpha)
     }
@@ -558,12 +599,27 @@ pub fn interval_bounds_sharded(sp: &mut ShardedPush) -> Vec<(f64, f64)> {
         rm += minus;
     }
     let (sp_up, sp_dn) = (alpha * w * rp, alpha * w * rm);
+    let unis: Vec<f64> = sp.shards.iter().map(|sh| sh.uni).collect();
     let mut out = vec![(0.0, 0.0); sp.n()];
     for sh in &sp.shards {
-        let us = sh.uni / sh.n as f64;
-        for k in 0..sh.hi - sh.lo {
+        let nf = sh.n as f64;
+        let us = sh.uni / nf;
+        let bs = sh.home_size();
+        for k in 0..bs {
+            if sh.lent_owner(k).is_some() {
+                continue; // the owner's overflow slot is authoritative
+            }
             let c = sh.p[k] + sh.r[k] + us;
             out[sh.lo + k] = (c - sp_dn, c + sp_up);
+        }
+        // stolen rows: state lives here, uniform share still accrues at
+        // the home shard (its flush forwards it) — center with the
+        // home's scalar
+        for (slot, &node) in sh.adopted.iter().enumerate() {
+            let node = node as usize;
+            let share = unis[sh.part.owner_of(node)] / nf;
+            let c = sh.p[bs + slot] + sh.r[bs + slot] + share;
+            out[node] = (c - sp_dn, c + sp_up);
         }
     }
     out
@@ -715,6 +771,56 @@ mod tests {
         // the ordered head must match the reference ORDER, not just set
         let (xref, _) = power_method_f64(&g, 0.85, 1e-13, 100_000);
         assert_eq!(ordered.cert.head, exact_topk(&xref, 10));
+    }
+
+    #[test]
+    fn intervals_and_certificates_stay_sound_across_steals() {
+        // move ownership mid-solve, including head candidates: the
+        // per-node enclosures must still contain the truth and a fired
+        // certificate must still name the true top-k
+        let g = web(1_000, 110);
+        let (xref, _) = power_method_f64(&g, 0.85, 1e-13, 100_000);
+        let mut sp = ShardedPush::new(&g, 0.85, 4);
+        let mut tr = TopKTracker::new(TopKGoal { k: 12, order: false });
+        let mut round = 0usize;
+        loop {
+            let bounds = interval_bounds_sharded(&mut sp);
+            for (i, &(lo, hi)) in bounds.iter().enumerate() {
+                assert!(
+                    lo - 1e-11 <= xref[i] && xref[i] <= hi + 1e-11,
+                    "round {round}: x*[{i}] = {} outside [{lo}, {hi}]",
+                    xref[i]
+                );
+            }
+            let cert = tr.check_sharded(&mut sp);
+            // the head must never contain a node twice (a stolen row
+            // reported by both its home and its owner would)
+            let mut ids = cert.head.clone();
+            ids.sort_unstable();
+            ids.dedup();
+            assert_eq!(ids.len(), cert.head.len(), "round {round}: duplicate in head");
+            if cert.set_certified {
+                let mut want = exact_topk(&xref, 12);
+                want.sort_unstable();
+                assert_eq!(ids, want, "round {round}: certified set wrong mid-steal");
+            }
+            let st = sp.solve(&g, 1e-11, 600);
+            if st.converged {
+                break;
+            }
+            // steal between every chunk, rotating pairs
+            let v = round % 4;
+            let t = (round + 1) % 4;
+            sp.steal_rows(v, t, 8);
+            round += 1;
+        }
+        let cert = tr.check_sharded(&mut sp);
+        assert!(cert.set_certified, "converged power-law web must certify k=12");
+        let mut got = cert.head.clone();
+        let mut want = exact_topk(&xref, 12);
+        got.sort_unstable();
+        want.sort_unstable();
+        assert_eq!(got, want);
     }
 
     #[test]

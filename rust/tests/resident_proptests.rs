@@ -240,3 +240,170 @@ fn resident_stream_driver_deterministic_single_thread() {
         assert_eq!(ra.l1_vs_power, rb.l1_vs_power);
     }
 }
+
+// ---------------------------------------------------------------------
+// Intra-epoch work stealing (PR 5): ownership may move mid-solve and
+// nothing is allowed to notice — mass conserves to 1e-9 after every
+// steal, the steal-interleaved sharded solve equals power to 1e-9 L1
+// at every shard count in 1..8, and rebalance folds the OwnerMap back
+// to contiguous bounds afterwards.
+// ---------------------------------------------------------------------
+
+#[test]
+fn resident_steal_interleaved_solve_matches_power_at_shards_1_to_8() {
+    let mut rng = Rng::new(1201);
+    for shards in 1..=8usize {
+        let g = web(700, 1_100 + shards as u64);
+        let (xref, _) = power_method_f64(&g, 0.85, 1e-12, 10_000);
+        let mut sp = ShardedPush::new(&g, 0.85, shards);
+        sp.round_pushes = 512;
+        // interleave budgeted solve chunks with scripted random steals:
+        // arbitrary interleavings of who pushes what must not move the
+        // fixed point (the D-Iteration license)
+        for round in 0..60 {
+            let st = sp.solve(&g, 1e-11, 1_500);
+            if st.converged {
+                break;
+            }
+            if shards >= 2 {
+                for _ in 0..3 {
+                    let victim = rng.range(0, shards);
+                    let mut thief = rng.range(0, shards);
+                    if thief == victim {
+                        thief = (thief + 1) % shards;
+                    }
+                    sp.steal_rows(victim, thief, 1 + rng.range(0, 24));
+                }
+            }
+            let mass = sp.mass();
+            assert!(
+                (mass - 1.0).abs() < 1e-9,
+                "shards {shards} round {round}: mass {mass} mid-steal"
+            );
+        }
+        let st = sp.solve(&g, 1e-11, u64::MAX);
+        assert!(st.converged, "shards {shards}: never converged");
+        assert!((sp.mass() - 1.0).abs() < 1e-9, "shards {shards}: final mass");
+        let d = l1_64(&sp.ranks(), &xref);
+        assert!(d < 1e-9, "shards {shards}: steal-interleaved drift {d}");
+        if shards >= 2 {
+            assert!(sp.steal_totals().0 > 0, "shards {shards}: script never stole");
+            // the epoch boundary folds ownership back to plain bounds
+            sp.repatriate();
+            assert!(sp.owner_map().is_contiguous());
+            let d = l1_64(&sp.ranks(), &xref);
+            assert!(d < 1e-9, "shards {shards}: repatriation moved ranks ({d})");
+        }
+    }
+}
+
+#[test]
+fn resident_steal_epochs_with_rebalance_match_power() {
+    // churn epochs with BOTH balance mechanisms active: scripted steals
+    // inside the epoch, the bounds re-balancer between epochs (which
+    // must fold the stolen ownership back before re-cutting)
+    let mut g = web(900, 1_301);
+    let churn = ChurnParams::scaled_to(g.n(), g.m());
+    let mut rng = Rng::new(1_302);
+    let shards = 5usize;
+    let mut sp = ShardedPush::new(&g, 0.85, shards);
+    assert!(sp.solve(&g, 1e-11, u64::MAX).converged);
+    for epoch in 0..6 {
+        let batch = churn_batch(&g, &churn, &mut rng);
+        let delta = g.apply(&batch).unwrap();
+        sp.begin_epoch();
+        sp.apply_batch(&g, &delta);
+        // steal mid-epoch...
+        sp.round_pushes = 256;
+        let st = sp.solve(&g, 1e-11, 800);
+        if !st.converged {
+            let victim = rng.range(0, shards);
+            let thief = (victim + 1 + rng.range(0, shards - 1)) % shards;
+            sp.steal_rows(victim, thief, 16);
+        }
+        sp.round_pushes = 4096;
+        assert!(sp.solve(&g, 1e-11, u64::MAX).converged, "epoch {epoch}");
+        let mass = sp.mass();
+        assert!((mass - 1.0).abs() < 1e-9, "epoch {epoch}: mass {mass}");
+        // ...then rebalance at the boundary: always leaves contiguous
+        // ownership, whether or not the bounds moved
+        sp.rebalance(&g, 1.3);
+        assert!(sp.owner_map().is_contiguous(), "epoch {epoch}: rebalance left overlay");
+        let (xref, _) = power_method_f64(&g, 0.85, 1e-12, 10_000);
+        let d = l1_64(&sp.ranks(), &xref);
+        assert!(d < 1e-9, "epoch {epoch}: drift {d}");
+    }
+}
+
+#[test]
+fn resident_steal_threaded_hot_spot_stays_exact() {
+    // the workload stealing exists for: a churn burst confined to one
+    // shard's rows, drained on real threads with stealing enabled —
+    // whatever the scheduler does, the state must stay exact
+    let tol = 1e-10;
+    let mut g = web(3_000, 1_401);
+    let mut sp = ShardedPush::new(&g, 0.85, 4);
+    assert!(sp.solve(&g, tol, u64::MAX).converged);
+    let bounds = sp.partitioner().bounds().to_vec();
+    let (blo, bhi) = (bounds[bounds.len() - 2], bounds[bounds.len() - 1]);
+    let mut rng = Rng::new(1_402);
+    for epoch in 0..3 {
+        let mut batch = UpdateBatch::default();
+        for _ in 0..400 {
+            batch
+                .insert
+                .push((rng.range(blo, bhi) as u32, rng.range(blo, bhi) as u32));
+        }
+        let delta = g.apply(&batch).unwrap();
+        sp.begin_epoch();
+        sp.apply_batch(&g, &delta);
+        let topts = PushThreadOptions { tol, steal: true, steal_batch: 32, ..Default::default() };
+        let tm = run_threaded_push(&g, &mut sp, &topts);
+        if !tm.converged {
+            assert!(sp.solve(&g, tol, u64::MAX).converged, "epoch {epoch}");
+        }
+        let mass = sp.mass();
+        assert!((mass - 1.0).abs() < 1e-9, "epoch {epoch}: mass {mass}");
+        let (xref, _) = power_method_f64(&g, 0.85, 1e-12, 10_000);
+        let d = l1_64(&sp.ranks(), &xref);
+        assert!(d < 1e-8, "epoch {epoch}: threaded steal drift {d}");
+    }
+}
+
+#[test]
+fn resident_steal_stream_driver_meets_acceptance_shape() {
+    let opts = StreamOptions {
+        epochs: 3,
+        seed: 13,
+        threads: 4,
+        resident: true,
+        rebalance_factor: Some(1.5),
+        steal: true,
+        steal_batch: 32,
+        ..Default::default()
+    };
+    let rep = experiments::stream_epochs("scaled:3000", &opts).unwrap();
+    assert_eq!(rep.rows.len(), 4);
+    for r in &rep.rows {
+        assert!(r.l1_vs_power < 1e-8, "epoch {}: L1 {}", r.epoch, r.l1_vs_power);
+    }
+    // stealing is opportunistic — the driver must ACCEPT both a quiet
+    // run (no idle window opened) and an active one; the columns just
+    // have to be consistent
+    for r in &rep.rows {
+        assert!(
+            (r.stolen_rows == 0) == (r.steal_grants == 0),
+            "epoch {}: {} rows across {} grants",
+            r.epoch,
+            r.stolen_rows,
+            r.steal_grants
+        );
+    }
+}
+
+#[test]
+fn resident_steal_requires_at_least_two_threads() {
+    let opts = StreamOptions { steal: true, threads: 1, ..Default::default() };
+    let err = experiments::stream_epochs("scaled:500", &opts).unwrap_err();
+    assert!(err.to_string().contains("--steal"), "unhelpful error: {err}");
+}
