@@ -19,7 +19,25 @@ use asyncpr::asynciter::{run_threaded_push, PushThreadOptions};
 use asyncpr::graph::generators::{churn_batch, ChurnParams};
 use asyncpr::metrics::{parallel_push_markdown, ShardScaleRow};
 use asyncpr::stream::{power_method_f64, DeltaGraph, PushState, ShardedPush, UpdateBatch};
-use asyncpr::util::{Bench, Rng};
+use asyncpr::util::{Bench, Json, Rng};
+
+fn jobj(pairs: &[(&str, Json)]) -> Json {
+    Json::Obj(pairs.iter().map(|(k, v)| (k.to_string(), v.clone())).collect())
+}
+
+/// Machine-readable bench output: set `ASYNCPR_BENCH_JSON_DIR=benches`
+/// to refresh the committed `benches/BENCH_push_parallel.json`
+/// trajectory file (see benches/README.md). No-op otherwise.
+fn write_bench_json(doc: &Json) -> anyhow::Result<()> {
+    if let Ok(dir) = std::env::var("ASYNCPR_BENCH_JSON_DIR") {
+        if !dir.is_empty() {
+            let path = format!("{dir}/BENCH_push_parallel.json");
+            std::fs::write(&path, doc.to_string_compact())?;
+            eprintln!("wrote {path}");
+        }
+    }
+    Ok(())
+}
 
 fn main() -> anyhow::Result<()> {
     let quick = std::env::args().any(|a| a == "--quick")
@@ -261,5 +279,62 @@ fn main() -> anyhow::Result<()> {
              (stalls {stalls_t} vs {stalls_s})"
         );
     }
+
+    write_bench_json(&jobj(&[
+        ("schema", Json::Num(1.0)),
+        ("bench", Json::Str("push_parallel".to_string())),
+        ("graph", Json::Str(graph.to_string())),
+        ("quick", Json::Bool(quick)),
+        ("scaling", Json::Arr(rows.iter().map(|r| r.to_json()).collect())),
+        (
+            "resident_race",
+            jobj(&[
+                (
+                    "roundtrip",
+                    jobj(&[
+                        ("pushes", Json::Num(round_pushes as f64)),
+                        ("csr_rows", Json::Num(round_rows as f64)),
+                        ("work", Json::Num(round_work as f64)),
+                        ("wall_ms", Json::Num(round_wall)),
+                    ]),
+                ),
+                (
+                    "resident",
+                    jobj(&[
+                        ("pushes", Json::Num(res_pushes as f64)),
+                        ("csr_rows", Json::Num(res_rows as f64)),
+                        ("work", Json::Num(res_work as f64)),
+                        ("wall_ms", Json::Num(res_wall)),
+                    ]),
+                ),
+            ]),
+        ),
+        (
+            "steal_race",
+            jobj(&[
+                (
+                    "static",
+                    jobj(&[
+                        ("makespan", Json::Num(make_s as f64)),
+                        ("idle_rounds", Json::Num(stalls_s as f64)),
+                        ("wall_ms", Json::Num(wall_s)),
+                    ]),
+                ),
+                (
+                    "steal",
+                    jobj(&[
+                        ("makespan", Json::Num(make_t as f64)),
+                        ("idle_rounds", Json::Num(stalls_t as f64)),
+                        ("wall_ms", Json::Num(wall_t)),
+                        ("stolen_rows", Json::Num(stolen as f64)),
+                        (
+                            "grants",
+                            Json::Num(tm_steal.steal_grants.iter().sum::<u64>() as f64),
+                        ),
+                    ]),
+                ),
+            ]),
+        ),
+    ]))?;
     Ok(())
 }

@@ -21,7 +21,25 @@ use asyncpr::graph::generators::{churn_batch, ChurnParams};
 use asyncpr::stream::{
     power_method_f64, solve_certified_sharded, DeltaGraph, ShardedPush, TopKGoal, TopKTracker,
 };
-use asyncpr::util::Rng;
+use asyncpr::util::{Json, Rng};
+
+fn jobj(pairs: &[(&str, Json)]) -> Json {
+    Json::Obj(pairs.iter().map(|(k, v)| (k.to_string(), v.clone())).collect())
+}
+
+/// Machine-readable bench output: set `ASYNCPR_BENCH_JSON_DIR=benches`
+/// to refresh the committed `benches/BENCH_topk_stream.json` trajectory
+/// file (see benches/README.md). No-op otherwise.
+fn write_bench_json(doc: &Json) -> anyhow::Result<()> {
+    if let Ok(dir) = std::env::var("ASYNCPR_BENCH_JSON_DIR") {
+        if !dir.is_empty() {
+            let path = format!("{dir}/BENCH_topk_stream.json");
+            std::fs::write(&path, doc.to_string_compact())?;
+            eprintln!("wrote {path}");
+        }
+    }
+    Ok(())
+}
 
 fn main() -> anyhow::Result<()> {
     let quick = std::env::args().any(|a| a == "--quick")
@@ -132,5 +150,33 @@ fn main() -> anyhow::Result<()> {
         "certified early stop must need strictly fewer pushes \
          ({cert_pushes} vs {full_pushes})"
     );
+
+    write_bench_json(&jobj(&[
+        ("schema", Json::Num(1.0)),
+        ("bench", Json::Str("topk_stream".to_string())),
+        ("graph", Json::Str(graph.to_string())),
+        ("quick", Json::Bool(quick)),
+        ("epochs", Json::Num((epochs + 1) as f64)),
+        ("k", Json::Num(k as f64)),
+        (
+            "certified",
+            jobj(&[
+                ("pushes", Json::Num(cert_pushes as f64)),
+                ("epochs_certified", Json::Num(cert_epochs as f64)),
+                ("wall_ms", Json::Num(cert_wall)),
+            ]),
+        ),
+        (
+            "full",
+            jobj(&[
+                ("pushes", Json::Num(full_pushes as f64)),
+                ("wall_ms", Json::Num(full_wall)),
+            ]),
+        ),
+        (
+            "push_saving",
+            Json::Num(full_pushes as f64 / cert_pushes.max(1) as f64),
+        ),
+    ]))?;
     Ok(())
 }

@@ -34,6 +34,7 @@ use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
 use std::sync::{Arc, Barrier, Mutex};
 use std::time::Instant;
 
+use crate::obs::{Event, EventKind, EventTotals, Sample, TraceCollector, MONITOR_TRACK};
 use crate::pagerank::PagerankProblem;
 use crate::stream::{
     certify_frames, shard_frame, DeltaGraph, HeadList, ResidualFragment, ShardHeadFrame,
@@ -278,6 +279,16 @@ pub struct PushThreadOptions {
     ///
     /// [`TopKTracker::check_sharded`]: crate::stream::TopKTracker::check_sharded
     pub topk: Option<TopKGoal>,
+    /// Observability sink ([`crate::obs`]): when set, each worker
+    /// records typed events into its own lock-free ring (one track per
+    /// shard, relaxed-atomic cursor) and the monitor samples the
+    /// published residual / queued-mass / in-flight / pressure boards
+    /// into the residual-decay time series. `None` (the default) keeps
+    /// the per-push hot path untouched — nothing records from inside
+    /// `drain`, so the disabled cost is structurally zero. Falls back
+    /// to the collector attached to the state
+    /// ([`ShardedPush::attach_trace`]) when unset.
+    pub trace: Option<Arc<TraceCollector>>,
 }
 
 impl Default for PushThreadOptions {
@@ -293,6 +304,7 @@ impl Default for PushThreadOptions {
             steal: false,
             steal_batch: 64,
             topk: None,
+            trace: None,
         }
     }
 }
@@ -332,6 +344,11 @@ pub struct PushThreadMetrics {
     /// certification (only with [`PushThreadOptions::topk`]; the caller
     /// re-checks exactly on the settled state).
     pub topk_stopped: bool,
+    /// Per-shard drained event totals (indexed like `shard_pushes`),
+    /// populated when a trace collector was attached
+    /// ([`PushThreadOptions::trace`]); `None` otherwise. Totals are
+    /// lifetime counters, exact even when a ring overflowed.
+    pub events: Option<Vec<EventTotals>>,
 }
 
 /// What travels on a push worker's inbox channel: residual mass, a
@@ -416,6 +433,9 @@ pub fn run_threaded_push(
         Some(f) => state.rebalance(g, f),
         None => false,
     };
+    // observability: explicit option wins, else whatever collector the
+    // caller attached to the state; None = record nothing anywhere
+    let trace = opts.trace.clone().or_else(|| state.trace_handle());
     let s = state.shard_count();
     let deadline = t0 + opts.timeout;
     if s == 1 {
@@ -436,6 +456,19 @@ pub fn run_threaded_push(
                 break (st.residual, st.converged);
             }
         };
+        // close the residual-decay series with the exact final value
+        // (matches the returned `residual` by construction)
+        let events = trace.as_ref().map(|tr| {
+            tr.push_sample(Sample {
+                t_us: tr.now_us(),
+                shard: 0,
+                residual,
+                queued: state.shards[0].r_l1,
+                in_flight: 0,
+                pressure: 0.0,
+            });
+            vec![tr.totals_for(0)]
+        });
         return PushThreadMetrics {
             shard_pushes: vec![pushes],
             rounds: vec![rounds],
@@ -449,6 +482,7 @@ pub fn run_threaded_push(
             converged,
             rebalanced,
             topk_stopped: false,
+            events,
         };
     }
 
@@ -480,6 +514,12 @@ pub fn run_threaded_push(
     // the certificate is waiting on)
     let pressure: Arc<Vec<AtomicU64>> =
         Arc::new((0..s).map(|_| AtomicU64::new(0f64.to_bits())).collect());
+    // queued-mass board for the residual-decay sampler (materialized
+    // local ‖r‖₁ per shard) — only maintained while a trace collector
+    // is attached, so the untraced path publishes nothing extra
+    let queued_board: Option<Arc<Vec<AtomicU64>>> = trace
+        .as_ref()
+        .map(|_| Arc::new((0..s).map(|_| AtomicU64::new(0f64.to_bits())).collect()));
     // per-shard head-candidate frames for the serving-path monitor
     // (None until the owning worker's first publish)
     let head_frames: Arc<Vec<Mutex<Option<ShardHeadFrame>>>> =
@@ -517,6 +557,11 @@ pub fn run_threaded_push(
             let head_frames = Arc::clone(&head_frames);
             let steal_gen = Arc::clone(&steal_gen);
             let drained = Arc::clone(&drained);
+            // this worker's event ring: track id == shard id, and the
+            // worker is the ring's single producer (cached Arc — the
+            // loop never takes the collector's mutex)
+            let tw = trace.as_ref().map(|tr| (Arc::clone(tr), tr.ring(id)));
+            let queued_board = queued_board.clone();
             handles.push(scope.spawn(move || {
                 let p0 = shard.pushes();
                 let mut rounds = 0u64;
@@ -576,6 +621,16 @@ pub fn run_threaded_push(
                         // budget exhausted: wind the whole run down
                         stop.store(true, Ordering::Release);
                     }
+                    if pushed > 0 {
+                        if let Some((tr, ring)) = &tw {
+                            ring.record(Event {
+                                t_us: tr.now_us(),
+                                kind: EventKind::PushBatch,
+                                a: pushed,
+                                v: shard.r_l1,
+                            });
+                        }
+                    }
                     // ship the outboxes; a full channel defers, never drops
                     for (j, tx) in txs.iter().enumerate() {
                         if j == id {
@@ -583,13 +638,32 @@ pub fn run_threaded_push(
                             continue;
                         }
                         if let Some(frag) = shard.take_fragment(j) {
+                            let frag_len = frag.entries.len() as f64;
                             in_flight.fetch_add(1, Ordering::AcqRel);
                             match tx.try_send(PushMsg::Frag(frag)) {
-                                Ok(()) => sent += 1,
+                                Ok(()) => {
+                                    sent += 1;
+                                    if let Some((tr, ring)) = &tw {
+                                        ring.record(Event {
+                                            t_us: tr.now_us(),
+                                            kind: EventKind::FragSend,
+                                            a: j as u64,
+                                            v: frag_len,
+                                        });
+                                    }
+                                }
                                 Err(TrySendError::Full(PushMsg::Frag(frag))) => {
                                     in_flight.fetch_sub(1, Ordering::AcqRel);
                                     shard.restore_fragment(j, frag);
                                     deferred += 1;
+                                    if let Some((tr, ring)) = &tw {
+                                        ring.record(Event {
+                                            t_us: tr.now_us(),
+                                            kind: EventKind::FragDefer,
+                                            a: j as u64,
+                                            v: frag_len,
+                                        });
+                                    }
                                 }
                                 Err(TrySendError::Disconnected(PushMsg::Frag(frag))) => {
                                     in_flight.fetch_sub(1, Ordering::AcqRel);
@@ -622,6 +696,7 @@ pub fn run_threaded_push(
                                 Some(g) => g,
                                 None => continue,
                             };
+                            let grant_rows = grant.rows.len() as f64;
                             reset_head_tracking(
                                 &head_frames[id],
                                 &mut head_list,
@@ -631,7 +706,17 @@ pub fn run_threaded_push(
                             in_flight.fetch_add(1, Ordering::AcqRel);
                             steal_gen.fetch_add(1, Ordering::AcqRel);
                             match txs[thief].try_send(PushMsg::Grant(grant)) {
-                                Ok(()) => grants_out += 1,
+                                Ok(()) => {
+                                    grants_out += 1;
+                                    if let Some((tr, ring)) = &tw {
+                                        ring.record(Event {
+                                            t_us: tr.now_us(),
+                                            kind: EventKind::StealGrant,
+                                            a: thief as u64,
+                                            v: grant_rows,
+                                        });
+                                    }
+                                }
                                 Err(TrySendError::Full(PushMsg::Grant(g)))
                                 | Err(TrySendError::Disconnected(PushMsg::Grant(g))) => {
                                     in_flight.fetch_sub(1, Ordering::AcqRel);
@@ -650,6 +735,9 @@ pub fn run_threaded_push(
                     }
                     published[id]
                         .store(shard.residual_estimate().to_bits(), Ordering::Release);
+                    if let Some(qb) = &queued_board {
+                        qb[id].store(shard.r_l1.to_bits(), Ordering::Release);
+                    }
                     let p_now = steal_pressure(
                         shard.stealable_r_l1(),
                         shard.head_hits.len(),
@@ -665,6 +753,14 @@ pub fn run_threaded_push(
                     }
                     if pushed == 0 && !received {
                         idle += 1;
+                        if let Some((tr, ring)) = &tw {
+                            ring.record(Event {
+                                t_us: tr.now_us(),
+                                kind: EventKind::IdleRound,
+                                a: idle,
+                                v: shard.r_l1,
+                            });
+                        }
                         // locally quiet: ask the deepest peer for work
                         // (one outstanding request at a time), then let
                         // the peers have the cores
@@ -682,6 +778,20 @@ pub fn run_threaded_push(
                                 }
                             }
                             if let Some(victim) = best {
+                                // recorded BEFORE the send so the
+                                // thief's request timestamp strictly
+                                // precedes the victim's grant (the
+                                // pairing invariant the proptests
+                                // check); an undelivered request
+                                // leaves a harmless unmatched event
+                                if let Some((tr, ring)) = &tw {
+                                    ring.record(Event {
+                                        t_us: tr.now_us(),
+                                        kind: EventKind::StealRequest,
+                                        a: victim as u64,
+                                        v: 0.0,
+                                    });
+                                }
                                 if txs[victim]
                                     .try_send(PushMsg::StealRequest { thief: id })
                                     .is_ok()
@@ -721,8 +831,38 @@ pub fn run_threaded_push(
         // the frames are asynchronous snapshots; the caller re-checks
         // exactly on the settled state.
         let mut quiet = 0u32;
+        // monitor-side observability: its own event track, plus the
+        // periodic residual-decay sweep over the published boards
+        let mon = trace.as_ref().map(|tr| (Arc::clone(tr), tr.ring(MONITOR_TRACK)));
+        let sample_every =
+            trace.as_ref().map(|tr| tr.sample_interval_us()).unwrap_or(u64::MAX);
+        let mut last_sample = 0u64;
         while !stop.load(Ordering::Acquire) && Instant::now() < deadline {
             std::thread::sleep(std::time::Duration::from_micros(300));
+            if let Some((tr, _)) = &mon {
+                let now = tr.now_us();
+                if now.saturating_sub(last_sample) >= sample_every {
+                    last_sample = now;
+                    let infl = in_flight.load(Ordering::Acquire);
+                    for i in 0..s {
+                        let resid = f64::from_bits(published[i].load(Ordering::Acquire));
+                        if resid == f64::MAX {
+                            continue; // worker hasn't published yet
+                        }
+                        tr.push_sample(Sample {
+                            t_us: now,
+                            shard: i as u32,
+                            residual: resid,
+                            queued: queued_board
+                                .as_ref()
+                                .map(|qb| f64::from_bits(qb[i].load(Ordering::Acquire)))
+                                .unwrap_or(0.0),
+                            in_flight: infl,
+                            pressure: f64::from_bits(pressure[i].load(Ordering::Acquire)),
+                        });
+                    }
+                }
+            }
             if let Some(gl) = goal {
                 if in_flight.load(Ordering::Acquire) == 0 {
                     let gen0 = steal_gen.load(Ordering::Acquire);
@@ -736,11 +876,22 @@ pub fn run_threaded_push(
                     if frames.len() == s
                         && in_flight.load(Ordering::Acquire) == 0
                         && steal_gen.load(Ordering::Acquire) == gen0
-                        && certify_frames(&frames, gl.k, alpha).certified(gl.order)
                     {
-                        topk_stop.store(true, Ordering::Release);
-                        stop.store(true, Ordering::Release);
-                        continue;
+                        let certified =
+                            certify_frames(&frames, gl.k, alpha).certified(gl.order);
+                        if let Some((tr, ring)) = &mon {
+                            ring.record(Event {
+                                t_us: tr.now_us(),
+                                kind: EventKind::CertCheck,
+                                a: certified as u64,
+                                v: frames.len() as f64,
+                            });
+                        }
+                        if certified {
+                            topk_stop.store(true, Ordering::Release);
+                            stop.store(true, Ordering::Release);
+                            continue;
+                        }
                     }
                 }
             }
@@ -750,6 +901,14 @@ pub fn run_threaded_push(
                 .sum();
             if total < tol && in_flight.load(Ordering::Acquire) == 0 {
                 quiet += 1;
+                if let Some((tr, ring)) = &mon {
+                    ring.record(Event {
+                        t_us: tr.now_us(),
+                        kind: EventKind::QuietWindow,
+                        a: quiet as u64,
+                        v: total,
+                    });
+                }
                 if quiet >= opts.quiet_checks.max(1) {
                     stop.store(true, Ordering::Release);
                 }
@@ -799,6 +958,24 @@ pub fn run_threaded_push(
         state.detach_head_tracking();
     }
     let residual = state.residual_recompute();
+    // close the residual-decay series with one exact sample per shard:
+    // recorded right after the re-tally, so the per-shard finals sum
+    // to the returned `residual` bit-for-bit (the acceptance contract
+    // the obs proptests pin down)
+    let events = trace.as_ref().map(|tr| {
+        let t = tr.now_us();
+        for (i, sh) in state.shards.iter().enumerate() {
+            tr.push_sample(Sample {
+                t_us: t,
+                shard: i as u32,
+                residual: sh.residual_estimate(),
+                queued: sh.r_l1,
+                in_flight: 0,
+                pressure: 0.0,
+            });
+        }
+        (0..s).map(|i| tr.totals_for(i)).collect()
+    });
     PushThreadMetrics {
         shard_pushes,
         rounds,
@@ -812,6 +989,7 @@ pub fn run_threaded_push(
         converged: residual < opts.tol,
         rebalanced,
         topk_stopped: topk_stop.load(Ordering::Acquire),
+        events,
     }
 }
 
@@ -929,10 +1107,12 @@ mod tests {
             if m.final_global_residual < 1e-2 && tau > tau_floor() {
                 return;
             }
-            eprintln!(
+            // diagnostic only (ASYNCPR_DIAG=1): retries are expected
+            // scheduler luck, so the suite stays silent by default
+            crate::obs::diag(&format!(
                 "attempt {attempt}: tau {tau}, resid {} — retrying (scheduler luck)",
                 m.final_global_residual
-            );
+            ));
         }
         panic!("3 attempts failed: tau {}, resid {}", last.0, last.1);
     }

@@ -252,6 +252,13 @@ pub struct StreamOptions {
     /// early-exit. Epochs whose head cannot certify (ties at the
     /// boundary) still run to full convergence.
     pub topk_stop: bool,
+    /// Progress-telemetry collector (`--trace`): attached to the
+    /// sharded solver and passed to the threaded drains, so per-shard
+    /// events and the residual-decay series accumulate across every
+    /// epoch. `None` (the default) keeps the solvers untraced — the
+    /// recording sites are all behind `Option` checks, so the disabled
+    /// path costs nothing.
+    pub trace: Option<Arc<crate::obs::TraceCollector>>,
 }
 
 impl Default for StreamOptions {
@@ -275,6 +282,7 @@ impl Default for StreamOptions {
             topk: None,
             topk_order: false,
             topk_stop: false,
+            trace: None,
         }
     }
 }
@@ -334,6 +342,7 @@ fn thread_opts(opts: &StreamOptions, max_pushes: u64) -> PushThreadOptions {
         max_pushes,
         steal: opts.steal,
         steal_batch: opts.steal_batch,
+        trace: opts.trace.clone(),
         ..Default::default()
     }
 }
@@ -489,6 +498,9 @@ pub fn stream_epochs(graph_spec: &str, opts: &StreamOptions) -> Result<StreamRep
         // ---- epoch-resident path: ONE ShardedPush lives across every
         // epoch; churn injects in place, the CSR snapshot is spliced ----
         let mut sharded = ShardedPush::new(&g, opts.alpha, opts.threads);
+        if let Some(tr) = &opts.trace {
+            sharded.attach_trace(Arc::clone(tr));
+        }
         let mut csr = g.to_csr()?; // the splice chain's baseline
         for epoch in 0..=opts.epochs {
             let (new_nodes, inserted, removed, csr_dirty) = if epoch == 0 {
@@ -639,6 +651,9 @@ pub fn stream_epochs(graph_spec: &str, opts: &StreamOptions) -> Result<StreamRep
                 // tracking-only mode it would dump the rest of the
                 // epoch's convergence onto the sequential polish.
                 let mut sharded = ShardedPush::from_state(&inc, &g, opts.threads);
+                if let Some(tr) = &opts.trace {
+                    sharded.attach_trace(Arc::clone(tr));
+                }
                 let topts = PushThreadOptions {
                     topk: if opts.topk_stop { topk_goal } else { None },
                     ..thread_opts(opts, opts.max_pushes)

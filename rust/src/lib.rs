@@ -34,6 +34,7 @@
 //! | [`coordinator`] | partitioning, run orchestration, adaptive comms, reports |
 //! | [`runtime`] | PJRT engine executing the AOT artifacts (stubbed without `--features xla`) |
 //! | [`metrics`] | Table-1/Table-2 collectors, stream epoch reports, traces, emitters |
+//! | [`obs`] | async progress telemetry: per-shard event rings, residual-decay sampling, Chrome-trace export |
 //! | [`config`] | TOML experiment configs and presets |
 
 pub mod asynciter;
@@ -41,6 +42,7 @@ pub mod config;
 pub mod coordinator;
 pub mod graph;
 pub mod metrics;
+pub mod obs;
 pub mod pagerank;
 pub mod runtime;
 pub mod simnet;

@@ -7,6 +7,7 @@
 //! repro run [--config run.toml] [--graph G] [--procs P] [--mode sync|async]
 //!           [--tol T] [--topology clique|star|tree] [--adaptive]
 //!           [--artifact] [--push] [--balanced] [--global-threshold] [--seed S]
+//!           [--trace FILE]
 //! repro experiment table1|table2|global|ablations [--graph G] [--out reports/X]
 //! repro stream [--graph G] [--epochs E] [--seed S] [--tol T] [--alpha A]
 //!              [--threads N] [--resident] [--rebalance-factor F]
@@ -14,11 +15,13 @@
 //!              [--topk K] [--topk-order] [--topk-stop]
 //!              [--arrivals K] [--links L] [--inserts I]
 //!              [--removes R] [--out reports/X]
+//!              [--trace FILE] [--trace-sample-us N]
 //! repro artifacts-check
 //! repro help
 //! ```
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 use asyncpr::asynciter::Mode;
 use asyncpr::config::RunConfig;
@@ -26,7 +29,9 @@ use asyncpr::coordinator::{self, experiments, Report};
 use asyncpr::graph::{io, Csr, GraphStats};
 use asyncpr::metrics::{
     run_summary, stream_markdown, stream_topk_markdown, table1_markdown, table2_markdown,
+    trace_summary_markdown,
 };
+use asyncpr::obs::{self, EventTotals, TraceCollector};
 use asyncpr::simnet::Topology;
 use asyncpr::util::Json;
 
@@ -79,6 +84,7 @@ USAGE:
   repro run [--config FILE] [--graph SPEC] [--procs P] [--mode sync|async]
             [--tol T] [--topology clique|star|tree] [--adaptive]
             [--artifact] [--push] [--balanced] [--global-threshold] [--seed N]
+            [--trace FILE]
   repro experiment <table1|table2|global|ablations> [--graph SPEC] [--out STEM]
   repro stream [--graph SPEC] [--epochs E] [--seed N] [--tol T] [--alpha A]
                [--threads N] [--resident] [--rebalance-factor F]
@@ -86,6 +92,7 @@ USAGE:
                [--topk K] [--topk-order] [--topk-stop]
                [--arrivals K] [--links L] [--inserts I]
                [--removes R] [--out STEM]
+               [--trace FILE] [--trace-sample-us N]
   repro artifacts-check
   repro help
 
@@ -110,6 +117,14 @@ intervals (serving path): the report gains head-churn and
 pushes-to-certification columns; `--topk-order` also certifies the
 order within the head; `--topk-stop` ends each epoch's solve as soon
 as the head certifies instead of running to tol.
+`--trace FILE` writes a Chrome trace-event JSON (open in Perfetto or
+chrome://tracing). For `stream` it carries one instant-event track per
+shard (push batches, fragment sends/defers, steal requests/grants,
+idle rounds) plus a monitor track (epoch begins, cert checks, quiet
+windows) and a per-shard residual-decay counter series;
+`--trace-sample-us N` sets the monitor sampling period (default 500).
+For `run` it carries one span per UE over virtual time. The CLI
+re-parses the written file and fails on any invalid or empty trace.
 `run --balanced` partitions rows by balanced nonzero count instead of
 the paper's consecutive ⌈n/p⌉ blocks.
 "#;
@@ -139,6 +154,24 @@ fn parse_flags(args: &[String]) -> anyhow::Result<HashMap<String, String>> {
         i += 2;
     }
     Ok(map)
+}
+
+/// Serialize a trace document, write it, and re-parse the written
+/// bytes — a malformed exporter fails the run here, not later in the
+/// viewer. Returns the re-parsed document for further validation.
+fn write_trace_file(path: &str, doc: &Json) -> anyhow::Result<Json> {
+    let text = doc.to_string_compact();
+    std::fs::write(path, &text)?;
+    let parsed = Json::parse(&text)
+        .map_err(|e| anyhow::anyhow!("trace exporter produced invalid JSON: {e}"))?;
+    anyhow::ensure!(
+        parsed
+            .get("traceEvents")
+            .and_then(Json::as_arr)
+            .map_or(false, |evs| !evs.is_empty()),
+        "trace file {path} has no traceEvents"
+    );
+    Ok(parsed)
 }
 
 fn config_from_flags(flags: &HashMap<String, String>) -> anyhow::Result<RunConfig> {
@@ -231,6 +264,10 @@ fn cmd_run(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let (tmin, tmax) = m.time_range();
     println!("iters [{imin}, {imax}]  t [{tmin:.1}, {tmax:.1}] s");
     println!("\nimports matrix:\n{}", table2_markdown(&m));
+    if let Some(path) = flags.get("trace") {
+        write_trace_file(path, &obs::run_trace_json(&m.iters, &m.finish_times, m.total_time))?;
+        eprintln!("wrote trace {path} ({} UE spans over virtual time)", m.iters.len());
+    }
     Ok(())
 }
 
@@ -375,6 +412,18 @@ fn cmd_stream(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     if let Some(v) = flags.get("removes") {
         opts.churn_removes = Some(v.parse()?);
     }
+    let trace_sample_us: u64 = flags
+        .get("trace-sample-us")
+        .map(|v| v.parse())
+        .transpose()?
+        .unwrap_or(obs::DEFAULT_SAMPLE_US);
+    anyhow::ensure!(
+        flags.get("trace").is_some() || !flags.contains_key("trace-sample-us"),
+        "--trace-sample-us needs --trace FILE"
+    );
+    opts.trace = flags
+        .get("trace")
+        .map(|_| Arc::new(TraceCollector::new(obs::DEFAULT_RING_CAP, trace_sample_us)));
 
     eprintln!(
         "streaming {graph}: {} update epochs, tol {:.0e}, alpha {}, threads {}{}{} ...",
@@ -478,6 +527,28 @@ fn cmd_stream(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         );
         report.write(stem)?;
         eprintln!("wrote {stem}.md / {stem}.json");
+    }
+    if let (Some(path), Some(tr)) = (flags.get("trace"), opts.trace.as_ref()) {
+        let parsed = write_trace_file(path, &tr.to_chrome_json())?;
+        // every shard track that exists must have recorded something —
+        // an all-silent track means an instrumentation hook fell off
+        let shards = tr.shard_tracks();
+        for i in 0..shards {
+            anyhow::ensure!(
+                tr.totals_for(i).total() > 0,
+                "trace validation: shard track {i} recorded no events"
+            );
+        }
+        let mut tracks: Vec<(String, EventTotals)> =
+            (0..shards).map(|i| (format!("shard {i}"), tr.totals_for(i))).collect();
+        tracks.push(("monitor".to_string(), tr.monitor_totals()));
+        println!("\ntrace summary:\n{}", trace_summary_markdown(&tracks));
+        let n_events = parsed.get("traceEvents").and_then(Json::as_arr).map_or(0, |a| a.len());
+        eprintln!(
+            "wrote trace {path}: {n_events} trace events, {} series samples ({} dropped)",
+            tr.samples().len(),
+            tr.samples_dropped()
+        );
     }
     // certified heads must audit clean against the power reference
     // (the driver hard-fails margin-resolvable disagreements already;

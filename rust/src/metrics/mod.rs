@@ -2,6 +2,7 @@
 //! plus emitters (markdown / JSON) for `repro report`.
 
 use crate::asynciter::RunMetrics;
+use crate::obs::{EventKind, EventTotals};
 use crate::util::{Json, Table};
 
 /// One row of Table 1.
@@ -339,6 +340,22 @@ pub fn stream_markdown(rows: &[StreamEpochRow]) -> String {
     t.to_markdown()
 }
 
+/// Render per-track event totals from a trace run (`--trace`): one row
+/// per track, one column per [`EventKind`], plus ring-overflow drops.
+pub fn trace_summary_markdown(tracks: &[(String, EventTotals)]) -> String {
+    let mut header: Vec<&str> = vec!["track"];
+    header.extend(EventKind::ALL.iter().map(|k| k.name()));
+    header.push("dropped");
+    let mut t = Table::new(&header);
+    for (name, totals) in tracks {
+        let mut cells = vec![name.clone()];
+        cells.extend(EventKind::ALL.iter().map(|&k| totals.get(k).to_string()));
+        cells.push(totals.dropped.to_string());
+        t.row(&cells);
+    }
+    t.to_markdown()
+}
+
 /// Run-level summary (global residual, wire stats) for EXPERIMENTS.md.
 pub fn run_summary(m: &RunMetrics) -> String {
     format!(
@@ -544,5 +561,24 @@ mod tests {
         let s = run_summary(&fake_metrics(2));
         assert!(s.contains("4.2e-5") || s.contains("4.20e-5"));
         assert!(s.contains("cancelled=45"));
+    }
+
+    #[test]
+    fn trace_summary_has_one_column_per_kind() {
+        let mut totals = EventTotals::default();
+        totals.counts[EventKind::PushBatch as usize] = 17;
+        totals.counts[EventKind::StealGrant as usize] = 3;
+        totals.dropped = 2;
+        let md = trace_summary_markdown(&[
+            ("shard 0".to_string(), totals),
+            ("monitor".to_string(), EventTotals::default()),
+        ]);
+        // header + separator + two track rows
+        assert_eq!(md.trim().lines().count(), 4, "{md}");
+        for kind in EventKind::ALL {
+            assert!(md.contains(kind.name()), "missing column {}", kind.name());
+        }
+        assert!(md.contains("17"), "{md}");
+        assert!(md.contains("dropped"), "{md}");
     }
 }

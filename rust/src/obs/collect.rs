@@ -1,0 +1,215 @@
+//! The trace collector: owns the per-track event rings, the shared
+//! microsecond clock, and the residual-decay sample series.
+//!
+//! One [`TraceCollector`] spans a whole CLI run (all epochs). Tracks
+//! are addressed by shard index; the monitor/coordinator writes to the
+//! dedicated [`MONITOR_TRACK`]. Rings are created lazily the first
+//! time a track is requested, so the collector does not need to know
+//! the shard count up front (it can even change across rebalances —
+//! shard `i` always maps to track `i`).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use super::event::{Event, EventKind, EventRing, EventTotals};
+
+/// Track index reserved for the monitor/coordinator thread.
+pub const MONITOR_TRACK: usize = usize::MAX;
+
+/// Default per-track ring capacity (events retained per shard).
+pub const DEFAULT_RING_CAP: usize = 8192;
+
+/// Default sampling interval for the residual-decay series, in
+/// microseconds.
+pub const DEFAULT_SAMPLE_US: u64 = 500;
+
+/// Hard cap on retained samples — the series is bounded even if a
+/// caller leaves a collector attached across an enormous run. Excess
+/// samples are counted, not stored.
+const MAX_SAMPLES: usize = 1 << 20;
+
+/// One residual-decay observation for one shard.
+///
+/// `queued` is the shard's materialized local ‖r‖₁ — the mass sitting
+/// in its bucket queue, which is the meaningful "queue depth" for a
+/// residual solver. `in_flight` is the global fragment count at sample
+/// time (same value stamped on every shard's row of that sweep);
+/// `pressure` is the shard's steal-pressure board reading.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Sample {
+    pub t_us: u64,
+    pub shard: u32,
+    pub residual: f64,
+    pub queued: f64,
+    pub in_flight: i64,
+    pub pressure: f64,
+}
+
+/// Shared observability sink for one run: per-shard event rings, a
+/// monitor ring, and the sample series. Cheap to clone behind an
+/// `Arc`; all methods take `&self`.
+pub struct TraceCollector {
+    t0: Instant,
+    ring_cap: usize,
+    sample_us: u64,
+    rings: Mutex<Vec<Arc<EventRing>>>,
+    monitor: Arc<EventRing>,
+    samples: Mutex<Vec<Sample>>,
+    samples_dropped: AtomicU64,
+}
+
+impl TraceCollector {
+    pub fn new(ring_cap: usize, sample_us: u64) -> TraceCollector {
+        TraceCollector {
+            t0: Instant::now(),
+            ring_cap,
+            sample_us: sample_us.max(1),
+            rings: Mutex::new(Vec::new()),
+            monitor: Arc::new(EventRing::new(ring_cap)),
+            samples: Mutex::new(Vec::new()),
+            samples_dropped: AtomicU64::new(0),
+        }
+    }
+
+    /// Microseconds since the collector was created (the trace epoch).
+    #[inline]
+    pub fn now_us(&self) -> u64 {
+        self.t0.elapsed().as_micros() as u64
+    }
+
+    /// Sampling interval requested for the residual-decay series.
+    pub fn sample_interval_us(&self) -> u64 {
+        self.sample_us
+    }
+
+    /// The ring for a track, creating it (and any lower-indexed shard
+    /// tracks) on first use. Hot loops should call this once and cache
+    /// the `Arc` — the lookup takes a mutex.
+    pub fn ring(&self, track: usize) -> Arc<EventRing> {
+        if track == MONITOR_TRACK {
+            return Arc::clone(&self.monitor);
+        }
+        let mut rings = self.rings.lock().unwrap();
+        while rings.len() <= track {
+            rings.push(Arc::new(EventRing::new(self.ring_cap)));
+        }
+        Arc::clone(&rings[track])
+    }
+
+    /// Convenience recorder for epoch/superstep-granularity call sites
+    /// (takes the ring mutex; worker loops cache the ring instead).
+    pub fn record(&self, track: usize, kind: EventKind, a: u64, v: f64) {
+        let ev = Event { t_us: self.now_us(), kind, a, v };
+        self.ring(track).record(ev);
+    }
+
+    /// Number of shard tracks created so far (monitor excluded).
+    pub fn shard_tracks(&self) -> usize {
+        self.rings.lock().unwrap().len()
+    }
+
+    /// Retained events for one shard track, oldest first.
+    pub fn events_for(&self, track: usize) -> Vec<Event> {
+        self.ring(track).snapshot()
+    }
+
+    /// Lifetime event totals for one shard track.
+    pub fn totals_for(&self, track: usize) -> EventTotals {
+        self.ring(track).totals()
+    }
+
+    /// Retained monitor-track events, oldest first.
+    pub fn monitor_events(&self) -> Vec<Event> {
+        self.monitor.snapshot()
+    }
+
+    /// Lifetime monitor-track event totals.
+    pub fn monitor_totals(&self) -> EventTotals {
+        self.monitor.totals()
+    }
+
+    /// Append one observation to the residual-decay series.
+    pub fn push_sample(&self, s: Sample) {
+        let mut samples = self.samples.lock().unwrap();
+        if samples.len() < MAX_SAMPLES {
+            samples.push(s);
+        } else {
+            self.samples_dropped.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// The full sample series in arrival order.
+    pub fn samples(&self) -> Vec<Sample> {
+        self.samples.lock().unwrap().clone()
+    }
+
+    /// Samples discarded after the `MAX_SAMPLES` cap was hit.
+    pub fn samples_dropped(&self) -> u64 {
+        self.samples_dropped.load(Ordering::Relaxed)
+    }
+
+    /// Last recorded sample per shard (by arrival order), indexed by
+    /// shard. Shards that never sampled are absent (`None`).
+    pub fn final_samples(&self) -> Vec<Option<Sample>> {
+        let samples = self.samples.lock().unwrap();
+        let tracks = samples.iter().map(|s| s.shard as usize + 1).max().unwrap_or(0);
+        let mut last: Vec<Option<Sample>> = vec![None; tracks];
+        for s in samples.iter() {
+            last[s.shard as usize] = Some(*s);
+        }
+        last
+    }
+}
+
+impl std::fmt::Debug for TraceCollector {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("TraceCollector")
+            .field("shard_tracks", &self.shard_tracks())
+            .field("ring_cap", &self.ring_cap)
+            .field("sample_us", &self.sample_us)
+            .finish()
+    }
+}
+
+impl Default for TraceCollector {
+    fn default() -> TraceCollector {
+        TraceCollector::new(DEFAULT_RING_CAP, DEFAULT_SAMPLE_US)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tracks_grow_lazily_and_monitor_is_separate() {
+        let tr = TraceCollector::default();
+        tr.record(2, EventKind::PushBatch, 7, 0.5);
+        assert_eq!(tr.shard_tracks(), 3);
+        assert_eq!(tr.events_for(2).len(), 1);
+        assert_eq!(tr.events_for(0).len(), 0);
+        tr.record(MONITOR_TRACK, EventKind::QuietWindow, 1, 0.0);
+        assert_eq!(tr.shard_tracks(), 3, "monitor track must not claim a shard slot");
+        assert_eq!(tr.monitor_events().len(), 1);
+    }
+
+    #[test]
+    fn final_samples_keep_last_per_shard() {
+        let tr = TraceCollector::default();
+        for (t, shard, r) in [(10u64, 0u32, 0.5), (20, 1, 0.4), (30, 0, 0.1), (40, 1, 0.05)] {
+            tr.push_sample(Sample {
+                t_us: t,
+                shard,
+                residual: r,
+                queued: r,
+                in_flight: 0,
+                pressure: 0.0,
+            });
+        }
+        let last = tr.final_samples();
+        assert_eq!(last.len(), 2);
+        assert_eq!(last[0].unwrap().residual, 0.1);
+        assert_eq!(last[1].unwrap().residual, 0.05);
+    }
+}

@@ -1,0 +1,259 @@
+//! Typed progress events and the per-shard lock-free ring they land in.
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Zero cost when disabled.** Nothing in this module is called
+//!    from `push_row`/`drain` — instrumentation lives at round/batch
+//!    granularity in the drivers, behind an `Option` check, so the
+//!    per-push hot path carries no tracing code at all.
+//! 2. **No locks on the recording path.** Each shard worker owns one
+//!    [`EventRing`] and is its only writer (single-producer contract);
+//!    the cursor is a relaxed-loaded / release-stored atomic, so a
+//!    record is one slot write plus two uncontended atomic ops.
+//! 3. **Overflow drops oldest, never blocks.** The ring keeps the most
+//!    recent `cap` events; lifetime per-kind counters survive the
+//!    overwrites, so drained totals stay exact even when the window
+//!    does not.
+
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Number of event kinds (array sizes below key off this).
+pub const KIND_COUNT: usize = 10;
+
+/// The event taxonomy — one variant per observable step of the
+/// asynchronous push protocol. Payload conventions (the `a`/`v` fields
+/// of [`Event`]) are documented per variant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum EventKind {
+    /// One drain round that performed work. `a` = pushes spent,
+    /// `v` = the shard's materialized ‖r‖₁ after the batch.
+    PushBatch = 0,
+    /// A residual fragment was delivered (or handed to a channel).
+    /// `a` = destination shard, `v` = entry count.
+    FragSend = 1,
+    /// A fragment met a full channel and was re-accumulated locally.
+    /// `a` = destination shard, `v` = entry count.
+    FragDefer = 2,
+    /// A steal request left this (thief) shard. `a` = victim.
+    StealRequest = 3,
+    /// A steal grant left this (victim) shard. `a` = thief,
+    /// `v` = rows granted.
+    StealGrant = 4,
+    /// Stolen rows returned home (epoch boundary). `a` = rows moved.
+    Repatriate = 5,
+    /// A worker round that neither pushed nor received.
+    IdleRound = 6,
+    /// A churn batch was injected into the live shards. `a` = epoch
+    /// stamp, `v` = edges inserted + removed.
+    EpochBegin = 7,
+    /// A top-k certification check ran. `a` = 1 if it certified,
+    /// `v` = the certificate margin (exact checks) or the merged
+    /// frame count (tentative monitor checks).
+    CertCheck = 8,
+    /// The monitor observed a quiet sample (published residual under
+    /// tol, nothing in flight). `a` = consecutive quiet count,
+    /// `v` = the published residual total.
+    QuietWindow = 9,
+}
+
+impl EventKind {
+    /// All kinds, index-aligned with the counter arrays.
+    pub const ALL: [EventKind; KIND_COUNT] = [
+        EventKind::PushBatch,
+        EventKind::FragSend,
+        EventKind::FragDefer,
+        EventKind::StealRequest,
+        EventKind::StealGrant,
+        EventKind::Repatriate,
+        EventKind::IdleRound,
+        EventKind::EpochBegin,
+        EventKind::CertCheck,
+        EventKind::QuietWindow,
+    ];
+
+    /// Stable display name (Chrome-trace event name, summary column).
+    pub fn name(self) -> &'static str {
+        match self {
+            EventKind::PushBatch => "PushBatch",
+            EventKind::FragSend => "FragSend",
+            EventKind::FragDefer => "FragDefer",
+            EventKind::StealRequest => "StealRequest",
+            EventKind::StealGrant => "StealGrant",
+            EventKind::Repatriate => "Repatriate",
+            EventKind::IdleRound => "IdleRound",
+            EventKind::EpochBegin => "EpochBegin",
+            EventKind::CertCheck => "CertCheck",
+            EventKind::QuietWindow => "QuietWindow",
+        }
+    }
+}
+
+/// One timestamped typed event. `t_us` is microseconds since the
+/// owning collector's epoch; `a` and `v` are kind-specific payloads
+/// (see [`EventKind`]).
+#[derive(Debug, Clone, Copy)]
+pub struct Event {
+    pub t_us: u64,
+    pub kind: EventKind,
+    pub a: u64,
+    pub v: f64,
+}
+
+impl Default for Event {
+    fn default() -> Event {
+        Event { t_us: 0, kind: EventKind::PushBatch, a: 0, v: 0.0 }
+    }
+}
+
+/// Lifetime per-kind event totals for one track — exact even after the
+/// ring window overwrote old records.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct EventTotals {
+    /// Events recorded per kind, indexed by `EventKind as usize`.
+    pub counts: [u64; KIND_COUNT],
+    /// Records overwritten by ring overflow (recorded − retained).
+    pub dropped: u64,
+}
+
+impl EventTotals {
+    pub fn get(&self, kind: EventKind) -> u64 {
+        self.counts[kind as usize]
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+}
+
+/// Single-producer ring buffer of [`Event`]s with a relaxed-atomic
+/// cursor and drop-oldest overflow.
+///
+/// # Safety contract
+///
+/// Exactly ONE thread records into a given ring at a time (the worker
+/// that owns the shard, or the monitor for its track). Readers
+/// ([`snapshot`](Self::snapshot)) must not race a recording thread —
+/// in practice every drain happens after the threaded run joined (or
+/// from the recording thread itself). The per-kind counters are plain
+/// atomics and safe to read at any time.
+pub struct EventRing {
+    cap: usize,
+    /// Total events ever recorded (the write cursor is `head % cap`).
+    head: AtomicU64,
+    slots: Box<[UnsafeCell<Event>]>,
+    counts: [AtomicU64; KIND_COUNT],
+}
+
+// SAFETY: the UnsafeCell slots are only written by the single producer
+// (contract above) and only read when no producer is active; the
+// cursor and counters are atomics.
+unsafe impl Sync for EventRing {}
+unsafe impl Send for EventRing {}
+
+impl EventRing {
+    pub fn new(cap: usize) -> EventRing {
+        let cap = cap.max(1);
+        EventRing {
+            cap,
+            head: AtomicU64::new(0),
+            slots: (0..cap).map(|_| UnsafeCell::new(Event::default())).collect(),
+            counts: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Record one event (producer thread only — see the safety
+    /// contract). Overflow overwrites the oldest slot.
+    #[inline]
+    pub fn record(&self, ev: Event) {
+        let h = self.head.load(Ordering::Relaxed);
+        // SAFETY: single producer; readers don't race (contract).
+        unsafe {
+            *self.slots[(h % self.cap as u64) as usize].get() = ev;
+        }
+        self.head.store(h + 1, Ordering::Release);
+        self.counts[ev.kind as usize].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Events recorded over the ring's lifetime (≥ retained).
+    pub fn recorded(&self) -> u64 {
+        self.head.load(Ordering::Acquire)
+    }
+
+    /// The retained window, oldest first (at most `cap` events). Must
+    /// not race an active producer (see the safety contract).
+    pub fn snapshot(&self) -> Vec<Event> {
+        let h = self.head.load(Ordering::Acquire);
+        let len = h.min(self.cap as u64);
+        (h - len..h)
+            .map(|i| {
+                // SAFETY: no producer is active during a snapshot.
+                unsafe { *self.slots[(i % self.cap as u64) as usize].get() }
+            })
+            .collect()
+    }
+
+    /// Exact lifetime totals (readable at any time).
+    pub fn totals(&self) -> EventTotals {
+        let mut counts = [0u64; KIND_COUNT];
+        for (i, c) in self.counts.iter().enumerate() {
+            counts[i] = c.load(Ordering::Acquire);
+        }
+        let h = self.head.load(Ordering::Acquire);
+        EventTotals { counts, dropped: h.saturating_sub(self.cap as u64) }
+    }
+}
+
+impl std::fmt::Debug for EventRing {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("EventRing")
+            .field("cap", &self.cap)
+            .field("recorded", &self.recorded())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_keeps_most_recent_window_in_order() {
+        let ring = EventRing::new(8);
+        for i in 0..20u64 {
+            ring.record(Event {
+                t_us: i,
+                kind: EventKind::ALL[(i % KIND_COUNT as u64) as usize],
+                a: i,
+                v: i as f64,
+            });
+        }
+        let evs = ring.snapshot();
+        assert_eq!(evs.len(), 8);
+        for (j, ev) in evs.iter().enumerate() {
+            let i = 12 + j as u64; // events 12..20 survive
+            assert_eq!(ev.t_us, i);
+            assert_eq!(ev.a, i);
+            assert_eq!(ev.kind, EventKind::ALL[(i % KIND_COUNT as u64) as usize]);
+        }
+        let t = ring.totals();
+        assert_eq!(t.total(), 20);
+        assert_eq!(t.dropped, 12);
+    }
+
+    #[test]
+    fn ring_under_capacity_snapshots_everything() {
+        let ring = EventRing::new(64);
+        for i in 0..5u64 {
+            ring.record(Event { t_us: i, kind: EventKind::IdleRound, a: 0, v: 0.0 });
+        }
+        assert_eq!(ring.snapshot().len(), 5);
+        assert_eq!(ring.totals().get(EventKind::IdleRound), 5);
+        assert_eq!(ring.totals().dropped, 0);
+    }
+}

@@ -1,0 +1,199 @@
+//! Exporters: Chrome trace-event JSON (loadable in `chrome://tracing`
+//! and Perfetto) and a compact residual-decay series.
+//!
+//! The Chrome format is the object form `{"traceEvents": [...]}` —
+//! viewers ignore unknown top-level keys, so the sample series and
+//! collector metadata ride in the same file under `"series"` /
+//! `"sampleIntervalUs"` without breaking loadability. Tracks map to
+//! Chrome thread ids: shard `i` → `tid i`, monitor → `tid = shard
+//! count`. Events are emitted as instants (`"ph": "i"`) on their
+//! track; samples double as counter events (`"ph": "C"`) so the
+//! residual decay renders as per-shard counter graphs.
+
+use std::collections::BTreeMap;
+
+use super::collect::{Sample, TraceCollector};
+use super::event::Event;
+use crate::util::Json;
+
+fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    let mut m = BTreeMap::new();
+    for (k, v) in pairs {
+        m.insert(k.to_string(), v);
+    }
+    Json::Obj(m)
+}
+
+fn thread_meta(tid: usize, name: &str) -> Json {
+    obj(vec![
+        ("name", Json::Str("thread_name".into())),
+        ("ph", Json::Str("M".into())),
+        ("pid", Json::Num(0.0)),
+        ("tid", Json::Num(tid as f64)),
+        ("args", obj(vec![("name", Json::Str(name.into()))])),
+    ])
+}
+
+fn instant(tid: usize, ev: &Event) -> Json {
+    obj(vec![
+        ("name", Json::Str(ev.kind.name().into())),
+        ("ph", Json::Str("i".into())),
+        ("s", Json::Str("t".into())),
+        ("pid", Json::Num(0.0)),
+        ("tid", Json::Num(tid as f64)),
+        ("ts", Json::Num(ev.t_us as f64)),
+        ("args", obj(vec![("a", Json::Num(ev.a as f64)), ("v", Json::Num(ev.v))])),
+    ])
+}
+
+fn counter(s: &Sample) -> Json {
+    obj(vec![
+        ("name", Json::Str(format!("shard{}", s.shard))),
+        ("ph", Json::Str("C".into())),
+        ("pid", Json::Num(0.0)),
+        ("ts", Json::Num(s.t_us as f64)),
+        (
+            "args",
+            obj(vec![
+                ("residual", Json::Num(s.residual)),
+                ("queued", Json::Num(s.queued)),
+                ("pressure", Json::Num(s.pressure)),
+            ]),
+        ),
+    ])
+}
+
+fn sample_row(s: &Sample) -> Json {
+    obj(vec![
+        ("t_us", Json::Num(s.t_us as f64)),
+        ("shard", Json::Num(s.shard as f64)),
+        ("residual", Json::Num(s.residual)),
+        ("queued", Json::Num(s.queued)),
+        ("in_flight", Json::Num(s.in_flight as f64)),
+        ("pressure", Json::Num(s.pressure)),
+    ])
+}
+
+impl TraceCollector {
+    /// Render everything the collector holds as one Chrome-trace JSON
+    /// document: per-track thread names, instant events, per-shard
+    /// residual counters, and the raw sample series.
+    pub fn to_chrome_json(&self) -> Json {
+        let shards = self.shard_tracks();
+        let mut events: Vec<Json> = Vec::new();
+        for i in 0..shards {
+            events.push(thread_meta(i, &format!("shard {i}")));
+        }
+        events.push(thread_meta(shards, "monitor"));
+        for i in 0..shards {
+            for ev in self.events_for(i) {
+                events.push(instant(i, &ev));
+            }
+        }
+        for ev in self.monitor_events() {
+            events.push(instant(shards, &ev));
+        }
+        let samples = self.samples();
+        for s in &samples {
+            events.push(counter(s));
+        }
+        obj(vec![
+            ("traceEvents", Json::Arr(events)),
+            ("displayTimeUnit", Json::Str("ms".into())),
+            ("sampleIntervalUs", Json::Num(self.sample_interval_us() as f64)),
+            ("samplesDropped", Json::Num(self.samples_dropped() as f64)),
+            ("series", Json::Arr(samples.iter().map(sample_row).collect())),
+        ])
+    }
+
+    /// Just the residual-decay series (the `"series"` key above), for
+    /// callers that want the time series without the event tracks.
+    pub fn series_json(&self) -> Json {
+        Json::Arr(self.samples().iter().map(sample_row).collect())
+    }
+}
+
+/// Coarse Chrome trace for the simulator path (`repro run --trace`):
+/// one complete event per UE spanning virtual time 0 → its finish
+/// time, plus a run-level span. Virtual seconds map to trace
+/// microseconds 1:1e6 so relative UE skew is visible.
+pub fn run_trace_json(iters: &[u64], finish_times: &[f64], total_time: f64) -> Json {
+    let mut events: Vec<Json> = Vec::new();
+    for (i, (&it, &ft)) in iters.iter().zip(finish_times.iter()).enumerate() {
+        events.push(thread_meta(i, &format!("UE {i}")));
+        events.push(obj(vec![
+            ("name", Json::Str(format!("UE {i} ({it} iters)"))),
+            ("ph", Json::Str("X".into())),
+            ("pid", Json::Num(0.0)),
+            ("tid", Json::Num(i as f64)),
+            ("ts", Json::Num(0.0)),
+            ("dur", Json::Num(ft * 1e6)),
+            ("args", obj(vec![("iters", Json::Num(it as f64))])),
+        ]));
+    }
+    let mon = iters.len();
+    events.push(thread_meta(mon, "run"));
+    events.push(obj(vec![
+        ("name", Json::Str("run".into())),
+        ("ph", Json::Str("X".into())),
+        ("pid", Json::Num(0.0)),
+        ("tid", Json::Num(mon as f64)),
+        ("ts", Json::Num(0.0)),
+        ("dur", Json::Num(total_time * 1e6)),
+        ("args", obj(vec![])),
+    ]));
+    obj(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", Json::Str("ms".into())),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::{EventKind, MONITOR_TRACK};
+
+    #[test]
+    fn chrome_export_roundtrips_and_carries_tracks() {
+        let tr = TraceCollector::default();
+        tr.record(0, EventKind::PushBatch, 128, 0.25);
+        tr.record(1, EventKind::FragSend, 0, 3.0);
+        tr.record(MONITOR_TRACK, EventKind::QuietWindow, 2, 1e-11);
+        tr.push_sample(Sample {
+            t_us: 42,
+            shard: 0,
+            residual: 0.5,
+            queued: 0.5,
+            in_flight: 1,
+            pressure: 0.1,
+        });
+        let text = tr.to_chrome_json().to_string_compact();
+        let parsed = Json::parse(&text).expect("exporter must emit valid JSON");
+        let evs = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        // 3 thread metas (shard 0, shard 1, monitor) + 3 instants + 1 counter
+        assert_eq!(evs.len(), 7);
+        let metas: Vec<&str> = evs
+            .iter()
+            .filter(|e| e.get("ph").and_then(Json::as_str) == Some("M"))
+            .map(|e| e.get("args").unwrap().get("name").unwrap().as_str().unwrap())
+            .collect();
+        assert_eq!(metas, ["shard 0", "shard 1", "monitor"]);
+        let series = parsed.get("series").unwrap().as_arr().unwrap();
+        assert_eq!(series.len(), 1);
+        assert_eq!(series[0].get("residual").unwrap().as_f64(), Some(0.5));
+    }
+
+    #[test]
+    fn run_trace_emits_one_span_per_ue() {
+        let j = run_trace_json(&[10, 20], &[0.5, 1.0], 1.0);
+        let text = j.to_string_compact();
+        let parsed = Json::parse(&text).unwrap();
+        let evs = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        let spans: Vec<f64> = evs
+            .iter()
+            .filter(|e| e.get("ph").and_then(Json::as_str) == Some("X"))
+            .map(|e| e.get("dur").unwrap().as_f64().unwrap())
+            .collect();
+        assert_eq!(spans, [0.5e6, 1.0e6, 1.0e6]);
+    }
+}

@@ -1,0 +1,52 @@
+//! `obs` — async progress telemetry for the push solver.
+//!
+//! The paper's thesis is that asynchronous shards make *unequal*
+//! progress without barriers; this module makes that visible. Three
+//! layers, zero external dependencies (the build is offline — same
+//! policy as the vendored `anyhow`):
+//!
+//! - **events** ([`event`]): per-shard lock-free ring buffers of
+//!   timestamped typed events ([`EventKind`]) recorded from the
+//!   threaded workers, the deterministic superstep driver, the epoch
+//!   pipeline, and the top-k monitor. Nothing records from inside
+//!   `push_row`/`drain`, so the disabled path adds literally zero
+//!   per-push cost.
+//! - **sampling** ([`collect`]): the monitor thread (and the
+//!   deterministic driver, per superstep) snapshots per-shard
+//!   residual / queued mass / in-flight count / steal-pressure
+//!   readings into a residual-decay time series ([`Sample`]).
+//! - **export** ([`export`]): Chrome trace-event JSON (one track per
+//!   shard plus a monitor track, Perfetto-loadable) and a compact
+//!   series JSON, surfaced as `repro stream --trace out.json` and
+//!   `repro run --trace out.json`.
+//!
+//! Everything hangs off a shared [`TraceCollector`]; attach one to a
+//! `ShardedPush` (`attach_trace`) or pass it in `PushThreadOptions` /
+//! `StreamOptions` and the drivers record into it.
+
+pub mod collect;
+pub mod event;
+pub mod export;
+
+pub use collect::{Sample, TraceCollector, DEFAULT_RING_CAP, DEFAULT_SAMPLE_US, MONITOR_TRACK};
+pub use event::{Event, EventKind, EventRing, EventTotals, KIND_COUNT};
+pub use export::run_trace_json;
+
+/// Diagnostic stderr, off by default: prints only when the
+/// `ASYNCPR_DIAG` environment variable is set to a non-empty value
+/// other than `0`. Routes occasional "scheduler luck" style notes
+/// (e.g. threaded-test retries) so worker stderr stays silent in
+/// normal runs.
+pub fn diag(msg: &str) {
+    if diag_enabled() {
+        eprintln!("[asyncpr] {msg}");
+    }
+}
+
+/// Whether [`diag`] output is enabled (`ASYNCPR_DIAG=1`).
+pub fn diag_enabled() -> bool {
+    static ENABLED: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+    *ENABLED.get_or_init(|| {
+        std::env::var("ASYNCPR_DIAG").map(|v| !v.is_empty() && v != "0").unwrap_or(false)
+    })
+}

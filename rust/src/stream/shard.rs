@@ -70,10 +70,12 @@
 //! property tests pin it to 1e-9.
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 use super::delta::DeltaGraph;
 use super::push::{BucketQueue, PushState};
 use crate::coordinator::{OwnerMap, Partitioner};
+use crate::obs::{EventKind, Sample, TraceCollector, MONITOR_TRACK};
 
 /// One batch of residual mass in flight between shards.
 ///
@@ -852,6 +854,13 @@ pub struct ShardedPush {
     /// [`TopKTracker`](super::TopKTracker) to rebuild its per-shard
     /// candidate pools instead of trusting the hit stream.
     head_gen: u64,
+    /// Observability sink ([`crate::obs`]): when attached, the
+    /// deterministic drivers (`solve`, `exchange`, `apply_batch`,
+    /// `steal_rows`, `repatriate`) record typed events and
+    /// per-superstep residual samples into it, and
+    /// [`run_threaded_push`] picks it up when its options carry no
+    /// explicit collector. `None` (the default) records nothing.
+    trace: Option<Arc<TraceCollector>>,
 }
 
 impl ShardedPush {
@@ -878,6 +887,7 @@ impl ShardedPush {
             steal_grants: 0,
             cur_stamp: 0,
             head_gen: super::next_head_gen(),
+            trace: None,
         }
     }
 
@@ -946,6 +956,25 @@ impl ShardedPush {
     /// of these.
     pub fn steal_totals(&self) -> (u64, u64) {
         (self.stolen_rows, self.steal_grants)
+    }
+
+    /// Attach an observability collector ([`crate::obs`]): from here on
+    /// the deterministic drivers record typed events (shard `i` →
+    /// track `i`, epoch-level events → the monitor track) and
+    /// per-superstep residual samples, and threaded runs over this
+    /// state inherit the collector unless their options carry one.
+    pub fn attach_trace(&mut self, tr: Arc<TraceCollector>) {
+        self.trace = Some(tr);
+    }
+
+    /// Detach the collector (returns it so callers can export).
+    pub fn detach_trace(&mut self) -> Option<Arc<TraceCollector>> {
+        self.trace.take()
+    }
+
+    /// The attached collector, if any (cloned handle).
+    pub fn trace_handle(&self) -> Option<Arc<TraceCollector>> {
+        self.trace.clone()
     }
 
     /// Pushes across all shards so far (shard generations retired by
@@ -1030,6 +1059,12 @@ impl ShardedPush {
         if batch == 0 {
             return 0;
         }
+        // the request precedes the grant even on this synchronous path
+        // (the ordering invariant the threaded protocol guarantees and
+        // the obs proptests check: thief's track asks, victim's grants)
+        if let Some(tr) = &self.trace {
+            tr.record(thief, EventKind::StealRequest, victim as u64, 0.0);
+        }
         let grant = match self.shards[victim].steal_out(thief, batch) {
             Some(g) => g,
             None => return 0,
@@ -1038,6 +1073,9 @@ impl ShardedPush {
             self.owners.set_owner(row.node as usize, thief);
         }
         let moved = self.shards[thief].adopt_rows(grant);
+        if let Some(tr) = &self.trace {
+            tr.record(victim, EventKind::StealGrant, thief as u64, moved as f64);
+        }
         self.stolen_rows += moved as u64;
         self.steal_grants += 1;
         self.bump_head_gen();
@@ -1079,6 +1117,9 @@ impl ShardedPush {
         }
         self.owners = OwnerMap::contiguous(self.part.clone());
         self.bump_head_gen();
+        if let Some(tr) = &self.trace {
+            tr.record(MONITOR_TRACK, EventKind::Repatriate, moved as u64, 0.0);
+        }
         moved
     }
 
@@ -1116,6 +1157,14 @@ impl ShardedPush {
     pub fn apply_batch(&mut self, g: &DeltaGraph, delta: &super::AppliedDelta) {
         assert_eq!(self.n, delta.old_n, "sharded state vs delta old_n");
         assert_eq!(g.n(), delta.new_n, "graph vs delta new_n");
+        if let Some(tr) = &self.trace {
+            tr.record(
+                MONITOR_TRACK,
+                EventKind::EpochBegin,
+                self.cur_stamp,
+                (delta.inserted + delta.removed) as f64,
+            );
+        }
         // stolen rows go home first: arrivals may extend the last
         // shard's rows and the column-swap routing below addresses
         // owners by home bounds
@@ -1392,6 +1441,9 @@ impl ShardedPush {
                         continue;
                     }
                     if let Some(f) = self.shards[i].take_fragment(j) {
+                        if let Some(tr) = &self.trace {
+                            tr.record(i, EventKind::FragSend, j as u64, f.entries.len() as f64);
+                        }
                         frags.push((j, f));
                     }
                 }
@@ -1494,16 +1546,40 @@ impl ShardedPush {
         let mut pushes = 0u64;
         let mut rounds = 0u64;
         let mut fragments = 0u64;
+        // cloned handle so recording never contends with the shard
+        // iteration borrows (an Arc clone per solve, not per round)
+        let trace = self.trace.clone();
         let converged = loop {
             let mut round_pushes = 0u64;
             let budget = self.round_pushes;
             for sh in self.shards.iter_mut() {
-                round_pushes += sh.drain(g, target, budget);
+                let drained = sh.drain(g, target, budget);
+                if drained > 0 {
+                    if let Some(tr) = &trace {
+                        tr.record(sh.id, EventKind::PushBatch, drained, sh.r_l1);
+                    }
+                }
+                round_pushes += drained;
             }
             pushes += round_pushes;
             let delivered = self.exchange();
             fragments += delivered;
             rounds += 1;
+            // per-superstep residual-decay samples — the deterministic
+            // counterpart of the threaded monitor's periodic sweep
+            if let Some(tr) = &trace {
+                let t = tr.now_us();
+                for sh in &self.shards {
+                    tr.push_sample(Sample {
+                        t_us: t,
+                        shard: sh.id as u32,
+                        residual: sh.residual_estimate(),
+                        queued: sh.r_l1,
+                        in_flight: 0,
+                        pressure: sh.stealable_r_l1(),
+                    });
+                }
+            }
             let est: f64 = self.shards.iter().map(|sh| sh.residual_estimate()).sum();
             if est < tol {
                 // confirm against a dense re-tally before declaring

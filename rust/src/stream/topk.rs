@@ -45,6 +45,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use super::delta::DeltaGraph;
 use super::push::PushState;
 use super::shard::{PushShard, ShardedPush};
+use crate::obs::{EventKind, MONITOR_TRACK};
 
 /// Process-unique head-generation stamps: every solver instance and
 /// every wholesale state move draws a fresh value, so a tracker can
@@ -448,7 +449,16 @@ impl TopKTracker {
             .zip(sp.shards.iter_mut())
             .map(|(h, sh)| shard_frame(h, sh, Some(&unis)))
             .collect();
-        certify_frames(&frames, self.goal.k, alpha)
+        let cert = certify_frames(&frames, self.goal.k, alpha);
+        if let Some(tr) = sp.trace_handle() {
+            tr.record(
+                MONITOR_TRACK,
+                EventKind::CertCheck,
+                cert.certified(self.goal.order) as u64,
+                cert.margin(),
+            );
+        }
+        cert
     }
 
     /// Certification check against the global single-queue state.

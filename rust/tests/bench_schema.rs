@@ -1,0 +1,82 @@
+//! Schema tests for the committed machine-readable bench trajectory
+//! files (`benches/BENCH_*.json`, written by the `push_parallel` and
+//! `topk_stream` benches when `ASYNCPR_BENCH_JSON_DIR` is set).
+//!
+//! The committed files may be the pending placeholders (all-null
+//! metric slots, a `note` explaining how to regenerate) or a real
+//! measured run — the schema admits both, so the tests check shape and
+//! key presence, with every metric slot number-or-null.
+
+use asyncpr::util::Json;
+
+fn load(name: &str) -> Json {
+    let path = format!("{}/../benches/{name}", env!("CARGO_MANIFEST_DIR"));
+    let text = std::fs::read_to_string(&path).unwrap_or_else(|e| panic!("read {path}: {e}"));
+    Json::parse(&text).unwrap_or_else(|e| panic!("parse {path}: {e}"))
+}
+
+fn lookup<'a>(doc: &'a Json, path: &[&str]) -> &'a Json {
+    let mut cur = doc;
+    for k in path {
+        cur = cur.get(k).unwrap_or_else(|| panic!("missing key {path:?}"));
+    }
+    cur
+}
+
+/// A metric slot holds a number once measured, null while pending.
+fn num_or_null(doc: &Json, path: &[&str]) {
+    let v = lookup(doc, path);
+    assert!(
+        matches!(v, Json::Num(_) | Json::Null),
+        "{path:?} must be number or null, got {v:?}"
+    );
+}
+
+fn common_header(doc: &Json, bench: &str) {
+    assert_eq!(lookup(doc, &["schema"]).as_usize(), Some(1), "schema version");
+    assert_eq!(lookup(doc, &["bench"]).as_str(), Some(bench), "bench name");
+    let graph = lookup(doc, &["graph"]);
+    assert!(matches!(graph, Json::Str(_) | Json::Null), "graph must be string or null");
+    let quick = lookup(doc, &["quick"]);
+    assert!(matches!(quick, Json::Bool(_) | Json::Null), "quick must be bool or null");
+}
+
+#[test]
+fn push_parallel_trajectory_schema() {
+    let doc = load("BENCH_push_parallel.json");
+    common_header(&doc, "push_parallel");
+    let scaling = lookup(&doc, &["scaling"]).as_arr().expect("scaling must be an array");
+    for row in scaling {
+        for key in ["shards", "wall_ms", "pushes", "fragments", "speedup", "residual"] {
+            assert!(
+                matches!(row.get(key), Some(Json::Num(_))),
+                "scaling rows are always measured; missing/non-number {key}"
+            );
+        }
+    }
+    for side in ["roundtrip", "resident"] {
+        for key in ["pushes", "csr_rows", "work", "wall_ms"] {
+            num_or_null(&doc, &["resident_race", side, key]);
+        }
+    }
+    for key in ["makespan", "idle_rounds", "wall_ms"] {
+        num_or_null(&doc, &["steal_race", "static", key]);
+        num_or_null(&doc, &["steal_race", "steal", key]);
+    }
+    num_or_null(&doc, &["steal_race", "steal", "stolen_rows"]);
+    num_or_null(&doc, &["steal_race", "steal", "grants"]);
+}
+
+#[test]
+fn topk_stream_trajectory_schema() {
+    let doc = load("BENCH_topk_stream.json");
+    common_header(&doc, "topk_stream");
+    num_or_null(&doc, &["epochs"]);
+    num_or_null(&doc, &["k"]);
+    for key in ["pushes", "epochs_certified", "wall_ms"] {
+        num_or_null(&doc, &["certified", key]);
+    }
+    num_or_null(&doc, &["full", "pushes"]);
+    num_or_null(&doc, &["full", "wall_ms"]);
+    num_or_null(&doc, &["push_saving"]);
+}
