@@ -15,7 +15,9 @@
 
 use std::time::Instant;
 
-use asyncpr::asynciter::{run_threaded_push, PushThreadOptions};
+use asyncpr::asynciter::{
+    run_threaded_push, PushThreadOptions, StallInjection, StopCause, TermMode,
+};
 use asyncpr::graph::generators::{churn_batch, ChurnParams};
 use asyncpr::metrics::{parallel_push_markdown, ShardScaleRow};
 use asyncpr::stream::{power_method_f64, DeltaGraph, PushState, ShardedPush, UpdateBatch};
@@ -280,6 +282,53 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
+    // ---- termination race: quiet window vs §4.2 protocol ------------
+    // Identical warm hot-spot states, the hot shard's worker stalled
+    // mid-solve. Both termination modes race the same scenario: the
+    // protocol's stop must be sound (exact gather-time residual under
+    // tol — the bench bails otherwise), while the quiet window's stop
+    // cause and residual are reported for the trajectory file; whether
+    // it fires prematurely here depends on in-flight fragments, which
+    // is exactly why it lost the default to the protocol.
+    println!("\n== termination race: --term quiet vs protocol (stalled hot-shard worker) ==\n");
+    let run_term = |term: TermMode| {
+        let mut sp = warm.clone();
+        let topts = PushThreadOptions {
+            term,
+            inject_stall: Some(StallInjection { worker: shards - 1, after_rounds: 0, ms: 150 }),
+            ..opts.clone()
+        };
+        let t0 = Instant::now();
+        let tm = run_threaded_push(&g2, &mut sp, &topts);
+        let wall = t0.elapsed().as_secs_f64() * 1e3;
+        (tm, wall)
+    };
+    let (tm_q, wall_q) = run_term(TermMode::Quiet);
+    let (tm_p, wall_p) = run_term(TermMode::Protocol);
+    println!(
+        "quiet:    stop {} after {wall_q:.1} ms, {} pushes, residual {:.1e} (converged: {})",
+        tm_q.stop_cause.name(),
+        tm_q.shard_pushes.iter().sum::<u64>(),
+        tm_q.residual,
+        tm_q.converged
+    );
+    println!(
+        "protocol: stop {} after {wall_p:.1} ms, {} pushes, residual {:.1e} (converged: {}), \
+         {} CONVERGE / {} DIVERGE",
+        tm_p.stop_cause.name(),
+        tm_p.shard_pushes.iter().sum::<u64>(),
+        tm_p.residual,
+        tm_p.converged,
+        tm_p.term_converge,
+        tm_p.term_diverge
+    );
+    if tm_p.stop_cause == StopCause::Protocol && !tm_p.converged {
+        anyhow::bail!("protocol stop was unsound: residual {:.3e} >= tol {tol:.0e}", tm_p.residual);
+    }
+    if !tm_p.converged {
+        anyhow::bail!("protocol run failed to converge (stop: {})", tm_p.stop_cause.name());
+    }
+
     write_bench_json(&jobj(&[
         ("schema", Json::Num(1.0)),
         ("bench", Json::Str("push_parallel".to_string())),
@@ -331,6 +380,33 @@ fn main() -> anyhow::Result<()> {
                             "grants",
                             Json::Num(tm_steal.steal_grants.iter().sum::<u64>() as f64),
                         ),
+                    ]),
+                ),
+            ]),
+        ),
+        (
+            "term_race",
+            jobj(&[
+                (
+                    "quiet",
+                    jobj(&[
+                        ("stop", Json::Str(tm_q.stop_cause.name().to_string())),
+                        ("wall_ms", Json::Num(wall_q)),
+                        ("pushes", Json::Num(tm_q.shard_pushes.iter().sum::<u64>() as f64)),
+                        ("residual", Json::Num(tm_q.residual)),
+                        ("converged", Json::Bool(tm_q.converged)),
+                    ]),
+                ),
+                (
+                    "protocol",
+                    jobj(&[
+                        ("stop", Json::Str(tm_p.stop_cause.name().to_string())),
+                        ("wall_ms", Json::Num(wall_p)),
+                        ("pushes", Json::Num(tm_p.shard_pushes.iter().sum::<u64>() as f64)),
+                        ("residual", Json::Num(tm_p.residual)),
+                        ("converged", Json::Bool(tm_p.converged)),
+                        ("converge_msgs", Json::Num(tm_p.term_converge as f64)),
+                        ("diverge_msgs", Json::Num(tm_p.term_diverge as f64)),
                     ]),
                 ),
             ]),

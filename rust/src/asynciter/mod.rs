@@ -24,5 +24,6 @@ pub use engine::{Mode, RunMetrics, RunSpec, SimEngine, StopRule};
 pub use operator::{ArtifactBlockOp, BlockOperator, NativeBlockOp};
 pub use threads::{
     run_threaded, run_threaded_push, run_threaded_push_certified, CertifiedRunOutcome,
-    PushThreadMetrics, PushThreadOptions, ThreadRunMetrics, ThreadRunOptions,
+    PushThreadMetrics, PushThreadOptions, StallInjection, StopCause, TermMode, ThreadRunMetrics,
+    ThreadRunOptions,
 };

@@ -29,18 +29,20 @@
 //! transfer row ownership with the same never-lost in-flight
 //! accounting as the fragments.
 
-use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, AtomicU8, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
 use std::sync::{Arc, Barrier, Mutex};
 use std::time::Instant;
 
-use crate::obs::{Event, EventKind, EventTotals, Sample, TraceCollector, MONITOR_TRACK};
+use crate::obs::{Event, EventKind, EventRing, EventTotals, Sample, TraceCollector, MONITOR_TRACK};
 use crate::pagerank::PagerankProblem;
 use crate::stream::{
     certify_frames, shard_frame, DeltaGraph, HeadList, ResidualFragment, ShardHeadFrame,
     ShardedPush, StealGrant, TopKCertificate, TopKGoal, TopKTracker,
 };
-use crate::termination::{MonitorTermination, TermMsg, WorkerTermination};
+use crate::termination::{
+    term_channel, MonitorPort, MonitorTermination, TermMsg, TermPort, WorkerTermination,
+};
 
 /// Options for a threaded run.
 #[derive(Debug, Clone)]
@@ -225,6 +227,119 @@ pub fn run_threaded(
 // Residual-push backend: true distributed D-Iteration on threads.
 // ---------------------------------------------------------------------
 
+/// How the multi-shard monitor of [`run_threaded_push`] decides the
+/// run is globally done.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TermMode {
+    /// The paper's §4.2 persistence-counter protocol (Figure 1):
+    /// workers announce CONVERGE after [`PushThreadOptions::pc_max`]
+    /// persistent locally-converged rounds, retract with DIVERGE the
+    /// moment residual mass arrives, and the monitor STOPs only when
+    /// every worker's last word was CONVERGE. Sound: a protocol STOP
+    /// implies the exact gathered residual is under `tol` (see the
+    /// "Termination" section of ARCHITECTURE.md for the argument).
+    Protocol,
+    /// The legacy quiet-window heuristic: stop after
+    /// [`PushThreadOptions::quiet_checks`] consecutive monitor samples
+    /// saw the published residual sum under `tol` with nothing in
+    /// flight. Unsound under worker stalls — a descheduled worker's
+    /// *stale* published estimate hides mass it has applied but not
+    /// yet re-published — and kept only as a raceable baseline.
+    Quiet,
+}
+
+impl TermMode {
+    /// Stable display name (CLI value, stream-table cell).
+    pub fn name(self) -> &'static str {
+        match self {
+            TermMode::Protocol => "protocol",
+            TermMode::Quiet => "quiet",
+        }
+    }
+}
+
+/// Why a [`run_threaded_push`] run stopped. Exactly one cause wins per
+/// run (first writer), reported in [`PushThreadMetrics::stop_cause`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum StopCause {
+    /// The §4.2 monitor issued STOP: every worker announced CONVERGE
+    /// and none retracted. Implies exact residual < tol.
+    Protocol = 0,
+    /// The quiet-window heuristic fired ([`TermMode::Quiet`] only).
+    /// Does NOT imply convergence — check the exact residual.
+    QuietWindow = 1,
+    /// The monitor stopped on a tentative top-k certificate
+    /// ([`PushThreadOptions::topk`]).
+    TopK = 2,
+    /// A worker exhausted its slice of
+    /// [`PushThreadOptions::max_pushes`].
+    Budget = 3,
+    /// The wall-clock [`PushThreadOptions::timeout`] fired.
+    Timeout = 4,
+    /// The single-shard fast path's deterministic drain ran itself dry
+    /// (no monitor involved).
+    Converged = 5,
+}
+
+impl StopCause {
+    /// Stable display name (stream-table cell, bench JSON).
+    pub fn name(self) -> &'static str {
+        match self {
+            StopCause::Protocol => "protocol",
+            StopCause::QuietWindow => "quiet",
+            StopCause::TopK => "topk",
+            StopCause::Budget => "budget",
+            StopCause::Timeout => "timeout",
+            StopCause::Converged => "converged",
+        }
+    }
+
+    fn from_u8(v: u8) -> Option<StopCause> {
+        match v {
+            0 => Some(StopCause::Protocol),
+            1 => Some(StopCause::QuietWindow),
+            2 => Some(StopCause::TopK),
+            3 => Some(StopCause::Budget),
+            4 => Some(StopCause::Timeout),
+            5 => Some(StopCause::Converged),
+            _ => None,
+        }
+    }
+}
+
+/// Sentinel for "no stop cause recorded yet" in the shared cell.
+const CAUSE_UNSET: u8 = u8::MAX;
+
+/// Record `cause` if no cause won yet — the first stop decision of a
+/// run is the one reported, later racers are ignored. MUST be called
+/// *before* the corresponding `stop.store(true)`: the soundness claim
+/// for [`StopCause::Protocol`] leans on "no worker exited the round
+/// loop before the protocol's deciding CONVERGE was processed", which
+/// holds exactly because every stop is preceded by its cause.
+fn record_stop_cause(cell: &AtomicU8, cause: StopCause) {
+    let _ = cell.compare_exchange(CAUSE_UNSET, cause as u8, Ordering::AcqRel, Ordering::Acquire);
+}
+
+/// Fault injection for termination experiments
+/// ([`PushThreadOptions::inject_stall`]): the chosen worker sleeps once,
+/// mid-solve — after importing its inbox, before draining/publishing.
+/// That window is exactly where the quiet-window heuristic is unsound
+/// (the worker holds freshly-applied residual its *published* estimate
+/// does not show), and where the §4.2 protocol provably is not (the
+/// stalled worker simply never announces).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StallInjection {
+    /// Worker (shard index) to stall. Out-of-range indices stall
+    /// nobody.
+    pub worker: usize,
+    /// Round at which the sleep happens (0 = before the worker's first
+    /// drain, i.e. before it ever publishes an estimate).
+    pub after_rounds: u64,
+    /// Sleep length in milliseconds.
+    pub ms: u64,
+}
+
 /// Options for a threaded residual-push run.
 #[derive(Debug, Clone)]
 pub struct PushThreadOptions {
@@ -243,9 +358,25 @@ pub struct PushThreadOptions {
     /// per worker; the first worker to exhaust its slice stops the
     /// run). The state stays exact when it fires.
     pub max_pushes: u64,
+    /// How the monitor decides the run converged: the §4.2
+    /// persistence-counter protocol (default) or the legacy
+    /// quiet-window heuristic. Orthogonal stop reasons — budget,
+    /// timeout, tentative top-k certificates — fire under either mode.
+    pub term: TermMode,
+    /// Worker-side persistence counter for [`TermMode::Protocol`]: a
+    /// worker announces CONVERGE only after this many *consecutive*
+    /// rounds with its conservative local estimate under `tol/s` and
+    /// none of its own sends still in flight. The monitor's own
+    /// counter is pinned at 1 (see [`MonitorPort`]).
+    pub pc_max: u32,
     /// Consecutive quiet monitor samples required before stopping
-    /// (guards against the publish/apply race around fragment hand-off).
+    /// ([`TermMode::Quiet`] only; guards against the publish/apply
+    /// race around fragment hand-off — but not against stalled
+    /// workers, which is why the protocol is the default).
     pub quiet_checks: u32,
+    /// Fault injection: stall one worker mid-solve (termination tests
+    /// and the `--term` race; `None` in production use).
+    pub inject_stall: Option<StallInjection>,
     /// When set, re-balance the shard bounds before spawning workers if
     /// churn has skewed the per-shard out-nnz beyond this factor of the
     /// ideal share ([`ShardedPush::rebalance`]) — the epoch-resident
@@ -299,7 +430,10 @@ impl Default for PushThreadOptions {
             channel_depth: 4,
             timeout: std::time::Duration::from_secs(30),
             max_pushes: u64::MAX,
+            term: TermMode::Protocol,
+            pc_max: 3,
             quiet_checks: 3,
+            inject_stall: None,
             rebalance_factor: None,
             steal: false,
             steal_batch: 64,
@@ -344,6 +478,16 @@ pub struct PushThreadMetrics {
     /// certification (only with [`PushThreadOptions::topk`]; the caller
     /// re-checks exactly on the settled state).
     pub topk_stopped: bool,
+    /// Why the run stopped — exactly one cause per run, the first stop
+    /// decision made. [`StopCause::Protocol`] implies `converged`.
+    pub stop_cause: StopCause,
+    /// CONVERGE announcements the workers shipped to the §4.2 monitor
+    /// (zero under [`TermMode::Quiet`] and on the single-shard path).
+    pub term_converge: u64,
+    /// DIVERGE retractions the workers shipped — each one is a
+    /// premature stop the protocol prevented and the quiet window
+    /// could have taken.
+    pub term_diverge: u64,
     /// Per-shard drained event totals (indexed like `shard_pushes`),
     /// populated when a trace collector was attached
     /// ([`PushThreadOptions::trace`]); `None` otherwise. Totals are
@@ -353,11 +497,28 @@ pub struct PushThreadMetrics {
 
 /// What travels on a push worker's inbox channel: residual mass, a
 /// steal request (no mass — just the thief's id), or a steal grant
-/// (rows mid-migration; counted in flight like fragments).
+/// (rows mid-migration; counted in flight like fragments). Mass-bearing
+/// messages carry their origin so the receiver can release the
+/// *sender's* per-origin in-flight slot — the counter the §4.2
+/// announce predicate reads ("none of MY sends still unapplied").
 enum PushMsg {
-    Frag(ResidualFragment),
+    Frag { src: usize, frag: ResidualFragment },
     StealRequest { thief: usize },
-    Grant(StealGrant),
+    Grant { src: usize, grant: StealGrant },
+}
+
+/// What one push worker hands back when it joins.
+struct PushWorkerStats {
+    pushes: u64,
+    rounds: u64,
+    sent: u64,
+    deferred: u64,
+    stolen_in: u64,
+    grants_out: u64,
+    idle: u64,
+    /// CONVERGE / DIVERGE messages this worker shipped (protocol mode).
+    term_converge: u64,
+    term_diverge: u64,
 }
 
 /// The steal-policy pressure signal a worker publishes (and a victim
@@ -396,6 +557,25 @@ fn reset_head_tracking(
     }
 }
 
+/// Receiver-side half of the protocol's safety discipline: residual
+/// mass was just applied, so a previously-announced CONVERGE must be
+/// retracted NOW — before the sender's per-origin in-flight slot is
+/// released (callers decrement the counters right after this returns).
+/// No-op without a port (quiet mode) or when nothing was announced.
+fn retract_on_mass(
+    port: &mut Option<TermPort>,
+    tw: &Option<(Arc<TraceCollector>, Arc<EventRing>)>,
+) {
+    if let Some(p) = port.as_mut() {
+        if p.on_mass_received().is_some() {
+            if let Some((tr, ring)) = tw {
+                let ev = Event { t_us: tr.now_us(), kind: EventKind::TermDiverge, a: 1, v: 0.0 };
+                ring.record(ev);
+            }
+        }
+    }
+}
+
 /// Run the sharded residual-push solver on real OS threads — the
 /// distributed D-Iteration counterpart of [`run_threaded`].
 ///
@@ -410,14 +590,23 @@ fn reset_head_tracking(
 /// no matter how the OS interleaves the workers — only the *schedule*
 /// is nondeterministic, never the invariant.
 ///
-/// Termination: each worker publishes a conservative residual estimate
-/// (local + everything parked in its outboxes) after every round; an
-/// inline monitor stops the run once the published sum stays below
-/// `tol` with zero fragments in flight for
-/// [`quiet_checks`](PushThreadOptions::quiet_checks) consecutive
-/// samples. A publish/apply race can still stop the run a hair early —
-/// the returned `converged` flag reports the *exact* post-gather
-/// residual, and callers polish sequentially when it is false.
+/// Termination ([`PushThreadOptions::term`]): by default the run stops
+/// through the paper's §4.2 persistence-counter protocol — each worker
+/// feeds a [`TermPort`] with `local estimate < tol/s ∧ inbox drained ∧
+/// none of its own sends in flight`, announces CONVERGE after
+/// [`pc_max`](PushThreadOptions::pc_max) persistent rounds, retracts
+/// with DIVERGE *before* acknowledging any received mass, and an
+/// inline [`MonitorPort`] issues STOP once every worker's last word
+/// was CONVERGE. That ordering makes a protocol STOP imply the exact
+/// gathered residual is under `tol`. [`TermMode::Quiet`] keeps the old
+/// quiet-window heuristic (published sums under `tol`,
+/// [`quiet_checks`](PushThreadOptions::quiet_checks) samples in a row)
+/// for stop-time/wasted-push races — it can stop early under a stalled
+/// worker, which [`PushThreadOptions::inject_stall`] demonstrates on
+/// demand. Either way the returned `converged` flag reports the
+/// *exact* post-gather residual, and [`PushThreadMetrics::stop_cause`]
+/// says which rule fired; callers polish sequentially when `converged`
+/// is false.
 pub fn run_threaded_push(
     g: &DeltaGraph,
     state: &mut ShardedPush,
@@ -444,16 +633,21 @@ pub fn run_threaded_push(
         let step = opts.round_pushes.max(1);
         let mut pushes = 0u64;
         let mut rounds = 0u64;
-        let (residual, converged) = loop {
+        let (residual, converged, stop_cause) = loop {
             let remaining = opts.max_pushes.saturating_sub(pushes);
             if remaining == 0 {
-                break (state.residual_exact(), false);
+                break (state.residual_exact(), false, StopCause::Budget);
             }
             let st = state.solve(g, opts.tol, step.min(remaining));
             pushes += st.pushes;
             rounds += st.rounds;
-            if st.converged || st.pushes == 0 || Instant::now() >= deadline {
-                break (st.residual, st.converged);
+            if st.converged || st.pushes == 0 {
+                // pushes == 0 without the flag means the deterministic
+                // drain ran dry at drift level — still a natural finish
+                break (st.residual, st.converged, StopCause::Converged);
+            }
+            if Instant::now() >= deadline {
+                break (st.residual, st.converged, StopCause::Timeout);
             }
         };
         // close the residual-decay series with the exact final value
@@ -482,6 +676,9 @@ pub fn run_threaded_push(
             converged,
             rebalanced,
             topk_stopped: false,
+            stop_cause,
+            term_converge: 0,
+            term_diverge: 0,
             events,
         };
     }
@@ -502,10 +699,27 @@ pub fn run_threaded_push(
     // rounds down to zero work, it does not overshoot)
     let worker_budget = opts.max_pushes / s as u64;
     let stop = Arc::new(AtomicBool::new(false));
+    // first stop decision wins; read back into the metrics after join
+    let stop_cause = Arc::new(AtomicU8::new(CAUSE_UNSET));
     // fragments handed to a channel but not yet applied by the
     // receiver — counted so the monitor never declares quiet while
     // mass is in flight
     let in_flight = Arc::new(AtomicI64::new(0));
+    // the same accounting, split by ORIGIN: slot `w` counts sends
+    // worker `w` handed to a channel that no receiver has applied yet.
+    // The §4.2 announce predicate reads its own slot — a worker may
+    // only claim convergence once every fragment/grant it shipped has
+    // landed, so shipped mass is always covered by somebody's
+    // termination state (sender until applied, receiver after).
+    let origin_inflight: Arc<Vec<AtomicI64>> =
+        Arc::new((0..s).map(|_| AtomicI64::new(0)).collect());
+    // §4.2 control channel: unbounded on purpose (a lost or delayed
+    // DIVERGE would break the protocol's soundness — see
+    // `termination::channel`); created in both modes, used in Protocol
+    let (ctl_tx, ctl_rx) = term_channel();
+    let protocol = opts.term == TermMode::Protocol;
+    let pc_max = opts.pc_max.max(1);
+    let stall = opts.inject_stall;
     let published: Arc<Vec<AtomicU64>> =
         Arc::new((0..s).map(|_| AtomicU64::new(f64::MAX.to_bits())).collect());
     // per-shard queue-pressure board for the steal policy: local queued
@@ -545,13 +759,16 @@ pub fn run_threaded_push(
         rxs.push(Some(rx));
     }
 
-    let results: Vec<(u64, u64, u64, u64, u64, u64, u64)> = std::thread::scope(|scope| {
+    let results: Vec<PushWorkerStats> = std::thread::scope(|scope| {
         let mut handles = Vec::with_capacity(s);
         for (id, shard) in state.shards.iter_mut().enumerate() {
             let rx = rxs[id].take().unwrap();
             let txs = txs.clone();
             let stop = Arc::clone(&stop);
+            let stop_cause = Arc::clone(&stop_cause);
             let in_flight = Arc::clone(&in_flight);
+            let origin_inflight = Arc::clone(&origin_inflight);
+            let ctl_tx = ctl_tx.clone();
             let published = Arc::clone(&published);
             let pressure = Arc::clone(&pressure);
             let head_frames = Arc::clone(&head_frames);
@@ -581,19 +798,28 @@ pub fn run_threaded_push(
                 // shard, later ones are O(hits))
                 let mut head_list = goal.map(|gl| HeadList::new(gl.pool_cap()));
                 let mut frame_due = true;
+                // §4.2 port: created only in protocol mode, fed every
+                // round and on every mass receipt
+                let mut port = protocol.then(|| TermPort::new(id, pc_max, ctl_tx.clone()));
                 loop {
                     // import everything queued by the peers
                     let mut received = false;
                     while let Ok(msg) = rx.try_recv() {
                         match msg {
-                            PushMsg::Frag(frag) => {
+                            PushMsg::Frag { src, frag } => {
                                 shard.apply_fragment(&frag);
+                                // retract BEFORE releasing the sender's
+                                // in-flight slot: the channel preserves
+                                // our enqueue order, so the monitor
+                                // sees this DIVERGE before any CONVERGE
+                                // the sender bases on the release
+                                retract_on_mass(&mut port, &tw);
+                                origin_inflight[src].fetch_sub(1, Ordering::AcqRel);
                                 in_flight.fetch_sub(1, Ordering::AcqRel);
                                 received = true;
                             }
                             PushMsg::StealRequest { thief } => thieves.push(thief),
-                            PushMsg::Grant(grant) => {
-                                in_flight.fetch_sub(1, Ordering::AcqRel);
+                            PushMsg::Grant { src, grant } => {
                                 steal_gen.fetch_add(1, Ordering::AcqRel);
                                 outstanding = None;
                                 // our pool predates the adoption; start
@@ -605,8 +831,20 @@ pub fn run_threaded_push(
                                     goal,
                                 );
                                 stolen_in += shard.adopt_rows(grant) as u64;
+                                // same DIVERGE-before-release discipline
+                                // as fragments: adopted rows carry mass
+                                retract_on_mass(&mut port, &tw);
+                                origin_inflight[src].fetch_sub(1, Ordering::AcqRel);
+                                in_flight.fetch_sub(1, Ordering::AcqRel);
                                 received = true;
                             }
+                        }
+                    }
+                    // fault injection: sleep in exactly the window where
+                    // a stale published estimate hides applied mass
+                    if let Some(st) = stall {
+                        if st.worker == id && rounds == st.after_rounds {
+                            std::thread::sleep(std::time::Duration::from_millis(st.ms));
                         }
                     }
                     if stop.load(Ordering::Acquire) || Instant::now() >= deadline {
@@ -614,11 +852,15 @@ pub fn run_threaded_push(
                     }
                     // drain the local bucket queue, honoring this
                     // worker's slice of the global push budget
+                    // (saturating: steal-adopted rows migrate push
+                    // credit, so `spent` can legitimately exceed the
+                    // per-worker slice)
                     let spent = shard.pushes() - p0;
-                    let pushed =
-                        shard.drain(g, local_target, round_budget.min(worker_budget - spent));
+                    let budget = round_budget.min(worker_budget.saturating_sub(spent));
+                    let pushed = shard.drain(g, local_target, budget);
                     if shard.pushes() - p0 >= worker_budget {
                         // budget exhausted: wind the whole run down
+                        record_stop_cause(&stop_cause, StopCause::Budget);
                         stop.store(true, Ordering::Release);
                     }
                     if pushed > 0 {
@@ -640,7 +882,8 @@ pub fn run_threaded_push(
                         if let Some(frag) = shard.take_fragment(j) {
                             let frag_len = frag.entries.len() as f64;
                             in_flight.fetch_add(1, Ordering::AcqRel);
-                            match tx.try_send(PushMsg::Frag(frag)) {
+                            origin_inflight[id].fetch_add(1, Ordering::AcqRel);
+                            match tx.try_send(PushMsg::Frag { src: id, frag }) {
                                 Ok(()) => {
                                     sent += 1;
                                     if let Some((tr, ring)) = &tw {
@@ -652,7 +895,8 @@ pub fn run_threaded_push(
                                         });
                                     }
                                 }
-                                Err(TrySendError::Full(PushMsg::Frag(frag))) => {
+                                Err(TrySendError::Full(PushMsg::Frag { frag, .. })) => {
+                                    origin_inflight[id].fetch_sub(1, Ordering::AcqRel);
                                     in_flight.fetch_sub(1, Ordering::AcqRel);
                                     shard.restore_fragment(j, frag);
                                     deferred += 1;
@@ -665,7 +909,8 @@ pub fn run_threaded_push(
                                         });
                                     }
                                 }
-                                Err(TrySendError::Disconnected(PushMsg::Frag(frag))) => {
+                                Err(TrySendError::Disconnected(PushMsg::Frag { frag, .. })) => {
+                                    origin_inflight[id].fetch_sub(1, Ordering::AcqRel);
                                     in_flight.fetch_sub(1, Ordering::AcqRel);
                                     shard.restore_fragment(j, frag);
                                 }
@@ -704,8 +949,9 @@ pub fn run_threaded_push(
                                 goal,
                             );
                             in_flight.fetch_add(1, Ordering::AcqRel);
+                            origin_inflight[id].fetch_add(1, Ordering::AcqRel);
                             steal_gen.fetch_add(1, Ordering::AcqRel);
-                            match txs[thief].try_send(PushMsg::Grant(grant)) {
+                            match txs[thief].try_send(PushMsg::Grant { src: id, grant }) {
                                 Ok(()) => {
                                     grants_out += 1;
                                     if let Some((tr, ring)) = &tw {
@@ -717,10 +963,26 @@ pub fn run_threaded_push(
                                         });
                                     }
                                 }
-                                Err(TrySendError::Full(PushMsg::Grant(g)))
-                                | Err(TrySendError::Disconnected(PushMsg::Grant(g))) => {
+                                Err(TrySendError::Full(PushMsg::Grant { grant, .. }))
+                                | Err(TrySendError::Disconnected(PushMsg::Grant {
+                                    grant, ..
+                                })) => {
+                                    origin_inflight[id].fetch_sub(1, Ordering::AcqRel);
                                     in_flight.fetch_sub(1, Ordering::AcqRel);
-                                    shard.restore_grant(g);
+                                    shard.restore_grant(grant);
+                                    // the pre-send reset cleared our
+                                    // frame and pool; re-arm them again
+                                    // now the rows are back home, so the
+                                    // next published frame is rebuilt
+                                    // WITH the restored rows — the
+                                    // serving monitor must never merge a
+                                    // frame that predates the restore
+                                    reset_head_tracking(
+                                        &head_frames[id],
+                                        &mut head_list,
+                                        &mut frame_due,
+                                        goal,
+                                    );
                                 }
                                 Err(_) => unreachable!("send returns the sent message"),
                             }
@@ -733,8 +995,40 @@ pub fn run_threaded_push(
                             frame_due = false;
                         }
                     }
-                    published[id]
-                        .store(shard.residual_estimate().to_bits(), Ordering::Release);
+                    let estimate = shard.residual_estimate();
+                    published[id].store(estimate.to_bits(), Ordering::Release);
+                    if let Some(p) = port.as_mut() {
+                        // §4.2 local convergence check: conservative
+                        // estimate (materialized + outbox mass) under
+                        // this worker's tol share, the inbox drained at
+                        // the top of this round, and nothing WE sent
+                        // still unapplied — shipped mass stays covered
+                        // by the receiver's state machine, not ours
+                        let own = origin_inflight[id].load(Ordering::Acquire);
+                        match p.on_round(estimate < tol / s as f64 && own == 0) {
+                            Some(TermMsg::Converge) => {
+                                if let Some((tr, ring)) = &tw {
+                                    ring.record(Event {
+                                        t_us: tr.now_us(),
+                                        kind: EventKind::TermConverge,
+                                        a: pc_max as u64,
+                                        v: estimate,
+                                    });
+                                }
+                            }
+                            Some(TermMsg::Diverge) => {
+                                if let Some((tr, ring)) = &tw {
+                                    ring.record(Event {
+                                        t_us: tr.now_us(),
+                                        kind: EventKind::TermDiverge,
+                                        a: 0,
+                                        v: estimate,
+                                    });
+                                }
+                            }
+                            _ => {}
+                        }
+                    }
                     if let Some(qb) = &queued_board {
                         qb[id].store(shard.r_l1.to_bits(), Ordering::Release);
                     }
@@ -809,28 +1103,43 @@ pub fn run_threaded_push(
                 drained.wait();
                 while let Ok(msg) = rx.try_recv() {
                     match msg {
-                        PushMsg::Frag(frag) => {
+                        PushMsg::Frag { src, frag } => {
                             shard.apply_fragment(&frag);
+                            origin_inflight[src].fetch_sub(1, Ordering::AcqRel);
                             in_flight.fetch_sub(1, Ordering::AcqRel);
                         }
                         PushMsg::StealRequest { .. } => {}
-                        PushMsg::Grant(grant) => {
-                            in_flight.fetch_sub(1, Ordering::AcqRel);
+                        PushMsg::Grant { src, grant } => {
                             stolen_in += shard.adopt_rows(grant) as u64;
+                            origin_inflight[src].fetch_sub(1, Ordering::AcqRel);
+                            in_flight.fetch_sub(1, Ordering::AcqRel);
                         }
                     }
                 }
-                (shard.pushes() - p0, rounds, sent, deferred, stolen_in, grants_out, idle)
+                PushWorkerStats {
+                    pushes: shard.pushes() - p0,
+                    rounds,
+                    sent,
+                    deferred,
+                    stolen_in,
+                    grants_out,
+                    idle,
+                    term_converge: port.as_ref().map_or(0, |p| p.converge_sent()),
+                    term_diverge: port.as_ref().map_or(0, |p| p.diverge_sent()),
+                }
             }));
         }
 
-        // inline monitor: quiet = published residual under tol with no
-        // fragments in flight, persisted across consecutive samples.
-        // With a top-k goal it additionally merges the workers' head
-        // frames and stops the moment they certify — tentatively, since
-        // the frames are asynchronous snapshots; the caller re-checks
-        // exactly on the settled state.
+        // inline monitor. Protocol mode: drain the §4.2 control
+        // channel and STOP when every worker's last word was CONVERGE.
+        // Quiet mode: published residual under tol with no fragments
+        // in flight, persisted across consecutive samples. With a
+        // top-k goal either mode additionally merges the workers' head
+        // frames and stops the moment they certify — tentatively,
+        // since the frames are asynchronous snapshots; the caller
+        // re-checks exactly on the settled state.
         let mut quiet = 0u32;
+        let mut mport = protocol.then(|| MonitorPort::new(s, ctl_rx));
         // monitor-side observability: its own event track, plus the
         // periodic residual-decay sweep over the published boards
         let mon = trace.as_ref().map(|tr| (Arc::clone(tr), tr.ring(MONITOR_TRACK)));
@@ -888,6 +1197,7 @@ pub fn run_threaded_push(
                             });
                         }
                         if certified {
+                            record_stop_cause(&stop_cause, StopCause::TopK);
                             topk_stop.store(true, Ordering::Release);
                             stop.store(true, Ordering::Release);
                             continue;
@@ -895,11 +1205,38 @@ pub fn run_threaded_push(
                     }
                 }
             }
-            let total: f64 = published
-                .iter()
-                .map(|a| f64::from_bits(a.load(Ordering::Acquire)))
-                .sum();
-            if total < tol && in_flight.load(Ordering::Acquire) == 0 {
+            if let Some(mp) = mport.as_mut() {
+                if mp.poll() {
+                    record_stop_cause(&stop_cause, StopCause::Protocol);
+                    if let Some((tr, ring)) = &mon {
+                        ring.record(Event {
+                            t_us: tr.now_us(),
+                            kind: EventKind::TermStop,
+                            a: mp.messages_seen(),
+                            v: 0.0,
+                        });
+                    }
+                    stop.store(true, Ordering::Release);
+                }
+                continue;
+            }
+            // quiet-window heuristic (TermMode::Quiet). The f64::MAX
+            // never-published sentinels are skipped explicitly: a
+            // worker that exits before its first publish (zero budget
+            // slice, instant deadline) must not wedge the detector
+            // until the full timeout — and an all-sentinel board is
+            // not quiet, it is silent
+            let mut total = 0.0f64;
+            let mut published_shards = 0usize;
+            for slot in published.iter() {
+                let v = f64::from_bits(slot.load(Ordering::Acquire));
+                if v == f64::MAX {
+                    continue;
+                }
+                published_shards += 1;
+                total += v;
+            }
+            if published_shards > 0 && total < tol && in_flight.load(Ordering::Acquire) == 0 {
                 quiet += 1;
                 if let Some((tr, ring)) = &mon {
                     ring.record(Event {
@@ -910,12 +1247,16 @@ pub fn run_threaded_push(
                     });
                 }
                 if quiet >= opts.quiet_checks.max(1) {
+                    record_stop_cause(&stop_cause, StopCause::QuietWindow);
                     stop.store(true, Ordering::Release);
                 }
             } else {
                 quiet = 0;
             }
         }
+        // falling out of the loop without a recorded cause means the
+        // wall clock cut the run
+        record_stop_cause(&stop_cause, StopCause::Timeout);
         stop.store(true, Ordering::Release);
         handles
             .into_iter()
@@ -930,14 +1271,18 @@ pub fn run_threaded_push(
     let mut stolen_rows = Vec::with_capacity(s);
     let mut steal_grants = Vec::with_capacity(s);
     let mut idle_rounds = Vec::with_capacity(s);
-    for (p, r, f, d, si, go, idl) in results {
-        shard_pushes.push(p);
-        rounds.push(r);
-        fragments_sent.push(f);
-        fragments_deferred.push(d);
-        stolen_rows.push(si);
-        steal_grants.push(go);
-        idle_rounds.push(idl);
+    let mut term_converge = 0u64;
+    let mut term_diverge = 0u64;
+    for w in results {
+        shard_pushes.push(w.pushes);
+        rounds.push(w.rounds);
+        fragments_sent.push(w.sent);
+        fragments_deferred.push(w.deferred);
+        stolen_rows.push(w.stolen_in);
+        steal_grants.push(w.grants_out);
+        idle_rounds.push(w.idle);
+        term_converge += w.term_converge;
+        term_diverge += w.term_diverge;
     }
     // reconcile ownership bookkeeping with what the workers actually
     // migrated (each worker only saw its own side of each grant)
@@ -989,6 +1334,10 @@ pub fn run_threaded_push(
         converged: residual < opts.tol,
         rebalanced,
         topk_stopped: topk_stop.load(Ordering::Acquire),
+        stop_cause: StopCause::from_u8(stop_cause.load(Ordering::Acquire))
+            .unwrap_or(StopCause::Timeout),
+        term_converge,
+        term_diverge,
         events,
     }
 }
@@ -1007,6 +1356,13 @@ pub struct CertifiedRunOutcome {
     pub converged: bool,
     /// Exact residual at exit.
     pub residual: f64,
+    /// Stop cause of the last inner run (`None` when the goal was
+    /// already certified at entry and no run happened).
+    pub last_stop: Option<StopCause>,
+    /// CONVERGE announcements summed over every inner run.
+    pub term_converge: u64,
+    /// DIVERGE retractions summed over every inner run.
+    pub term_diverge: u64,
 }
 
 /// The tentative-certify / exact-recheck / resume protocol around
@@ -1029,6 +1385,9 @@ pub fn run_threaded_push_certified(
     let mut pushes_to_cert = if cert.certified(goal.order) { Some(0) } else { None };
     let mut converged = false;
     let mut residual = f64::NAN;
+    let mut last_stop = None;
+    let mut term_converge = 0u64;
+    let mut term_diverge = 0u64;
     for _attempt in 0..8 {
         if pushes_to_cert.is_some() {
             break;
@@ -1040,6 +1399,9 @@ pub fn run_threaded_push_certified(
             ..opts.clone()
         };
         let tm = run_threaded_push(g, state, &topts);
+        last_stop = Some(tm.stop_cause);
+        term_converge += tm.term_converge;
+        term_diverge += tm.term_diverge;
         cert = tracker.check_sharded(state);
         if cert.certified(goal.order) {
             pushes_to_cert = Some(state.total_pushes() - p0);
@@ -1056,7 +1418,15 @@ pub fn run_threaded_push_certified(
     if residual.is_nan() {
         residual = state.residual_recompute();
     }
-    CertifiedRunOutcome { cert, pushes_to_cert, converged, residual }
+    CertifiedRunOutcome {
+        cert,
+        pushes_to_cert,
+        converged,
+        residual,
+        last_stop,
+        term_converge,
+        term_diverge,
+    }
 }
 
 #[cfg(test)]
@@ -1311,5 +1681,172 @@ mod tests {
         let st = sp.solve(&g, 1e-10, u64::MAX);
         assert!(st.converged);
         let _ = tm;
+    }
+
+    // --- termination protocol & stop-cause regressions ---
+
+    #[test]
+    fn threaded_push_budget_below_shard_count_stops_fast() {
+        // 3 pushes across 4 workers rounds down to zero-push slices:
+        // every worker must exit on its budget before its first
+        // publish. Regression for the monitor's sentinel handling — a
+        // board of f64::MAX "never published" slots used to read as a
+        // huge residual sum, wedging quiet detection until the full
+        // timeout instead of letting the run wind down
+        let g = web(2_000, 79);
+        let mut sp = ShardedPush::new(&g, 0.85, 4);
+        let opts = PushThreadOptions {
+            tol: 1e-10,
+            max_pushes: 3,
+            term: TermMode::Quiet,
+            timeout: std::time::Duration::from_secs(20),
+            ..Default::default()
+        };
+        let t0 = Instant::now();
+        let tm = run_threaded_push(&g, &mut sp, &opts);
+        assert!(t0.elapsed() < std::time::Duration::from_secs(5), "run wedged on the timeout");
+        assert_eq!(tm.stop_cause, StopCause::Budget);
+        assert!(!tm.converged);
+        assert_eq!(tm.shard_pushes.iter().sum::<u64>(), 0, "zero slices must spend nothing");
+        assert!((sp.mass() - 1.0).abs() < 1e-9, "mass {}", sp.mass());
+        // the untouched state is still a working solver
+        let st = sp.solve(&g, 1e-10, u64::MAX);
+        assert!(st.converged);
+    }
+
+    #[test]
+    fn threaded_push_steal_low_budget_stays_exact() {
+        // steal-heavy run under a budget small enough that workers
+        // exhaust their slices mid-migration. Regression for the
+        // budget arithmetic: `worker_budget - spent` underflowed in
+        // debug builds when a worker overspent its slice by the
+        // in-progress drain batch; the saturating form must ride it out
+        let mut g = web(3_000, 78);
+        let mut sp = ShardedPush::new(&g, 0.85, 4);
+        let st = sp.solve(&g, 1e-10, u64::MAX);
+        assert!(st.converged);
+        skewed_epoch(&mut g, &mut sp);
+        let opts = PushThreadOptions {
+            tol: 1e-10,
+            steal: true,
+            steal_batch: 8,
+            max_pushes: 1_200,
+            ..Default::default()
+        };
+        let tm = run_threaded_push(&g, &mut sp, &opts);
+        assert!(
+            tm.shard_pushes.iter().sum::<u64>() <= 1_200,
+            "budget overshot: {:?}",
+            tm.shard_pushes
+        );
+        assert!(
+            tm.converged || tm.stop_cause == StopCause::Budget,
+            "unexpected stop: {:?}",
+            tm.stop_cause
+        );
+        assert!((sp.mass() - 1.0).abs() < 1e-9, "mass {}", sp.mass());
+        if !tm.converged {
+            let st = sp.solve(&g, 1e-10, u64::MAX);
+            assert!(st.converged);
+        }
+        let (xref, _) = crate::stream::power_method_f64(&g, 0.85, 1e-12, 10_000);
+        let d: f64 = sp.ranks().iter().zip(&xref).map(|(a, b)| (a - b).abs()).sum();
+        assert!(d < 1e-8, "budget-cut steal run drifted {d:.3e}");
+    }
+
+    /// The ISSUE's acceptance scenario, deterministically: one worker
+    /// stalls while holding ALL the residual mass, before it ever
+    /// publishes an estimate. The quiet window reads the three quiet
+    /// peers (the stalled slot is a skipped sentinel) and stops with
+    /// the global residual far above tol; the §4.2 protocol cannot —
+    /// the stalled worker never announced CONVERGE, so the monitor
+    /// waits it out and the run finishes to the fixed point.
+    ///
+    /// `unpush` (not churn) plants the residual: a real edit's deltas
+    /// scatter to out-neighbors across shards, and the awake shards
+    /// would ship fragments to the sleeper, parking `in_flight` above
+    /// zero and masking the quiet window's unsoundness.
+    #[test]
+    fn threaded_push_stalled_worker_quiet_premature_protocol_sound() {
+        let g = web(3_000, 81);
+        let tol = 1e-9;
+        let mut sp = ShardedPush::new(&g, 0.85, 4);
+        let st = sp.solve(&g, 1e-12, u64::MAX);
+        assert!(st.converged, "warm converge");
+        let dr = sp.shards[3].unpush(0.5);
+        assert!(dr > 1e3 * tol, "perturbation too small to discriminate: {dr:.3e}");
+        assert!((sp.mass() - 1.0).abs() < 1e-9, "unpush must conserve mass: {}", sp.mass());
+        let stall = StallInjection { worker: 3, after_rounds: 0, ms: 400 };
+        let quiet_opts = PushThreadOptions {
+            tol,
+            term: TermMode::Quiet,
+            inject_stall: Some(stall),
+            ..Default::default()
+        };
+        let tm = run_threaded_push(&g, &mut sp, &quiet_opts);
+        assert_eq!(tm.stop_cause, StopCause::QuietWindow, "quiet window must have fired");
+        assert!(!tm.converged, "the premature stop left residual {:.3e}", tm.residual);
+        assert!(tm.residual > tol, "residual {:.3e} vs tol {tol:.0e}", tm.residual);
+        assert_eq!(tm.term_converge, 0, "no §4.2 traffic in quiet mode");
+        assert!((sp.mass() - 1.0).abs() < 1e-9, "mass {}", sp.mass());
+
+        // same state (the residual survived untouched), same stall —
+        // under the protocol the stop is provably sound
+        let proto_opts = PushThreadOptions { term: TermMode::Protocol, ..quiet_opts };
+        let tm = run_threaded_push(&g, &mut sp, &proto_opts);
+        assert_eq!(tm.stop_cause, StopCause::Protocol, "residual {:.3e}", tm.residual);
+        assert!(tm.converged, "Protocol stop implies convergence; residual {:.3e}", tm.residual);
+        assert!(tm.residual < tol);
+        assert!(tm.term_converge >= 4, "every worker announces before STOP");
+        assert!((sp.mass() - 1.0).abs() < 1e-9, "mass {}", sp.mass());
+    }
+
+    #[test]
+    fn grant_restore_rearms_head_frame_tracking() {
+        // unit-level walk of the victim's grant-issue / failed-send /
+        // restore sequence. Regression: the restore path must re-arm
+        // the head tracking AGAIN after `restore_grant` — without it a
+        // frame published between the pre-send reset and the bounce
+        // (missing the granted rows) would stay current, and the
+        // serving monitor could certify a head that silently lost them
+        let g = web(2_000, 82);
+        let goal = TopKGoal { k: 32, order: false };
+        let mut sp = ShardedPush::new(&g, 0.85, 2);
+        let st = sp.solve(&g, 1e-10, u64::MAX);
+        assert!(st.converged);
+        let shard = &mut sp.shards[0];
+        // re-queue the hottest home row so the victim has work to grant
+        let dr = shard.unpush(0.5);
+        assert!(dr > 0.0);
+        let frame = Mutex::new(None);
+        let mut head_list = Some(HeadList::new(goal.pool_cap()));
+        *frame.lock().unwrap() = Some(shard_frame(head_list.as_mut().unwrap(), shard, None));
+        let mut frame_due = false; // the worker published its first frame
+        let grant = shard.steal_out(1, 4).expect("unpush queued a stealable row");
+        let hot = grant
+            .rows
+            .iter()
+            .max_by(|a, b| a.r.abs().partial_cmp(&b.r.abs()).unwrap())
+            .unwrap()
+            .node;
+        reset_head_tracking(&frame, &mut head_list, &mut frame_due, Some(goal));
+        assert!(frame.lock().unwrap().is_none(), "pre-send reset must clear the frame");
+        assert!(frame_due, "pre-send reset must schedule a rebuild");
+        // a frame built while the row is lent must exclude it (the
+        // thief reports it) — this is the snapshot that must NOT
+        // survive the restore
+        let mid = shard_frame(head_list.as_mut().unwrap(), shard, None);
+        assert!(mid.entries.iter().all(|&(id, _)| id != hot), "lent row leaked into a frame");
+        frame_due = false; // the worker published `mid`
+        // the channel was full: the grant bounces home
+        shard.restore_grant(grant);
+        reset_head_tracking(&frame, &mut head_list, &mut frame_due, Some(goal));
+        assert!(frame_due, "restore must re-arm the frame rebuild");
+        assert!(frame.lock().unwrap().is_none(), "stale pre-restore frame must not survive");
+        let rebuilt = shard_frame(head_list.as_mut().unwrap(), shard, None);
+        assert!(
+            rebuilt.entries.iter().any(|&(id, _)| id == hot),
+            "rebuilt frame must contain the restored hot row"
+        );
     }
 }

@@ -7,7 +7,7 @@ use std::sync::Arc;
 
 use crate::asynciter::{
     run_threaded_push, run_threaded_push_certified, Mode, PushThreadOptions, RunMetrics,
-    RunSpec, SimEngine,
+    RunSpec, SimEngine, StallInjection, StopCause, TermMode,
 };
 use crate::config::RunConfig;
 use crate::graph::generators::{churn_batch, ChurnParams};
@@ -247,6 +247,18 @@ pub struct StreamOptions {
     /// Require the *order* within the head to certify too, not just
     /// the set.
     pub topk_order: bool,
+    /// How the threaded drains decide to stop (`--term`): the §4.2
+    /// persistence-counter protocol (default) or the legacy
+    /// quiet-window heuristic, kept so the two can be raced.
+    pub term: TermMode,
+    /// Worker-side persistence counter threshold (`--pc-max`,
+    /// protocol mode only).
+    pub pc_max: u32,
+    /// Fault injection (`--inject-stall W:MS[:R]`): worker `W` sleeps
+    /// `MS` milliseconds once it reaches round `R` of each threaded
+    /// drain — the scenario that exposes the quiet-window's premature
+    /// stop and that the protocol must survive.
+    pub inject_stall: Option<StallInjection>,
     /// `stop_when_topk_certified`: end each epoch's solve as soon as
     /// the head certifies instead of running to `tol` — the serving
     /// early-exit. Epochs whose head cannot certify (ties at the
@@ -282,6 +294,9 @@ impl Default for StreamOptions {
             topk: None,
             topk_order: false,
             topk_stop: false,
+            term: TermMode::Protocol,
+            pc_max: 3,
+            inject_stall: None,
             trace: None,
         }
     }
@@ -342,8 +357,33 @@ fn thread_opts(opts: &StreamOptions, max_pushes: u64) -> PushThreadOptions {
         max_pushes,
         steal: opts.steal,
         steal_batch: opts.steal_batch,
+        term: opts.term,
+        pc_max: opts.pc_max,
+        inject_stall: opts.inject_stall,
         trace: opts.trace.clone(),
         ..Default::default()
+    }
+}
+
+/// Per-epoch termination bookkeeping folded into the stream rows: the
+/// stop cause of the last threaded drain plus the epoch's protocol
+/// message totals (zero on sequential or quiet-mode epochs).
+#[derive(Debug, Clone, Copy, Default)]
+struct EpochTerm {
+    cause: Option<StopCause>,
+    converge: u64,
+    diverge: u64,
+}
+
+impl EpochTerm {
+    /// Fold one threaded run's verdict in: counts accumulate, the
+    /// latest run's cause wins (it is what actually ended the epoch).
+    fn fold(&mut self, cause: Option<StopCause>, converge: u64, diverge: u64) {
+        if cause.is_some() {
+            self.cause = cause;
+        }
+        self.converge += converge;
+        self.diverge += diverge;
     }
 }
 
@@ -351,22 +391,24 @@ fn thread_opts(opts: &StreamOptions, max_pushes: u64) -> PushThreadOptions {
 /// the deterministic sequential finish when the monitor cuts early
 /// (timeout / quiet race) — the budget is whatever the epoch has left
 /// of `max_pushes` after the `p0` baseline. Returns
-/// `(residual, converged)`.
+/// `(residual, converged, termination bookkeeping)`.
 fn finish_threaded_resident(
     g: &DeltaGraph,
     sharded: &mut ShardedPush,
     opts: &StreamOptions,
     p0: u64,
-) -> (f64, bool) {
+) -> (f64, bool, EpochTerm) {
     let used = sharded.total_pushes() - p0;
     let topts = thread_opts(opts, opts.max_pushes.saturating_sub(used));
     let tm = run_threaded_push(g, sharded, &topts);
+    let mut term = EpochTerm::default();
+    term.fold(Some(tm.stop_cause), tm.term_converge, tm.term_diverge);
     if tm.converged {
-        (tm.residual, true)
+        (tm.residual, true, term)
     } else {
         let used = sharded.total_pushes() - p0;
         let st = sharded.solve(g, opts.tol, opts.max_pushes.saturating_sub(used));
-        (st.residual, st.converged)
+        (st.residual, st.converged, term)
     }
 }
 
@@ -464,6 +506,14 @@ pub fn stream_epochs(graph_spec: &str, opts: &StreamOptions) -> Result<StreamRep
         "--steal needs --threads N with N >= 2 (a single shard has no peer to rob)"
     );
     anyhow::ensure!(opts.steal_batch >= 1, "--steal-batch must be >= 1");
+    anyhow::ensure!(opts.pc_max >= 1, "--pc-max must be >= 1 (persistence needs a streak)");
+    if let Some(st) = opts.inject_stall {
+        anyhow::ensure!(
+            opts.threads >= 2 && st.worker < opts.threads,
+            "--inject-stall worker {} needs --threads N with N >= 2 and worker < N",
+            st.worker
+        );
+    }
     let topk_goal = opts.topk.map(|k| TopKGoal { k, order: opts.topk_order });
     anyhow::ensure!(
         topk_goal.is_some() || (!opts.topk_order && !opts.topk_stop),
@@ -524,6 +574,7 @@ pub fn stream_epochs(graph_spec: &str, opts: &StreamOptions) -> Result<StreamRep
             };
             let p0 = sharded.total_pushes();
             let (steal0_rows, steal0_grants) = sharded.steal_totals();
+            let mut term = EpochTerm::default();
             let (residual, converged, epoch_cert) = match tracker.as_mut() {
                 Some(tr) if opts.threads == 1 => {
                     let st = solve_certified_sharded(
@@ -544,6 +595,7 @@ pub fn stream_epochs(graph_spec: &str, opts: &StreamOptions) -> Result<StreamRep
                     let goal = tr.goal();
                     let topts = thread_opts(opts, opts.max_pushes);
                     let out = run_threaded_push_certified(&g, &mut sharded, tr, &topts);
+                    term.fold(out.last_stop, out.term_converge, out.term_diverge);
                     let mut cert = out.cert;
                     let mut pushes_to_cert = out.pushes_to_cert;
                     let mut residual = out.residual;
@@ -552,9 +604,10 @@ pub fn stream_epochs(graph_spec: &str, opts: &StreamOptions) -> Result<StreamRep
                         // finish to tol back on the threads (tracking no
                         // longer needs to interrupt the run), with the
                         // usual deterministic fallback
-                        let (r, c) = finish_threaded_resident(&g, &mut sharded, opts, p0);
+                        let (r, c, t) = finish_threaded_resident(&g, &mut sharded, opts, p0);
                         residual = r;
                         converged = c;
+                        term.fold(t.cause, t.converge, t.diverge);
                         if pushes_to_cert.is_none() {
                             cert = tr.check_sharded(&mut sharded);
                             if cert.certified(goal.order) {
@@ -565,7 +618,8 @@ pub fn stream_epochs(graph_spec: &str, opts: &StreamOptions) -> Result<StreamRep
                     (residual, converged, Some((cert, pushes_to_cert)))
                 }
                 None if opts.threads > 1 => {
-                    let (r, c) = finish_threaded_resident(&g, &mut sharded, opts, p0);
+                    let (r, c, t) = finish_threaded_resident(&g, &mut sharded, opts, p0);
+                    term = t;
                     (r, c, None)
                 }
                 None => {
@@ -617,6 +671,9 @@ pub fn stream_epochs(graph_spec: &str, opts: &StreamOptions) -> Result<StreamRep
                 csr_dirty_rows: csr_dirty,
                 stolen_rows: steal1_rows - steal0_rows,
                 steal_grants: steal1_grants - steal0_grants,
+                stop_cause: term.cause,
+                term_converge: term.converge,
+                term_diverge: term.diverge,
                 topk,
             });
         }
@@ -641,6 +698,7 @@ pub fn stream_epochs(graph_spec: &str, opts: &StreamOptions) -> Result<StreamRep
             let mut parallel_pushes = 0u64;
             let mut epoch_stolen = 0u64;
             let mut epoch_grants = 0u64;
+            let mut term = EpochTerm::default();
             if opts.threads > 1 && parallel_worthwhile {
                 // scatter → parallel drain on real threads → gather; any
                 // residual the monitor left behind is polished sequentially
@@ -662,6 +720,7 @@ pub fn stream_epochs(graph_spec: &str, opts: &StreamOptions) -> Result<StreamRep
                 parallel_pushes = tm.shard_pushes.iter().sum();
                 epoch_stolen = tm.stolen_rows.iter().sum();
                 epoch_grants = tm.steal_grants.iter().sum();
+                term.fold(Some(tm.stop_cause), tm.term_converge, tm.term_diverge);
                 sharded.gather_into(&mut inc);
             }
             // the sequential phase only gets whatever the parallel phase
@@ -732,6 +791,9 @@ pub fn stream_epochs(graph_spec: &str, opts: &StreamOptions) -> Result<StreamRep
                 csr_dirty_rows: 0,
                 stolen_rows: epoch_stolen,
                 steal_grants: epoch_grants,
+                stop_cause: term.cause,
+                term_converge: term.converge,
+                term_diverge: term.diverge,
                 topk,
             });
         }

@@ -13,6 +13,7 @@
 //!              [--threads N] [--resident] [--rebalance-factor F]
 //!              [--steal] [--steal-batch B]
 //!              [--topk K] [--topk-order] [--topk-stop]
+//!              [--term protocol|quiet] [--pc-max N] [--inject-stall W:MS[:R]]
 //!              [--arrivals K] [--links L] [--inserts I]
 //!              [--removes R] [--out reports/X]
 //!              [--trace FILE] [--trace-sample-us N]
@@ -23,7 +24,7 @@
 use std::collections::HashMap;
 use std::sync::Arc;
 
-use asyncpr::asynciter::Mode;
+use asyncpr::asynciter::{Mode, StallInjection, TermMode};
 use asyncpr::config::RunConfig;
 use asyncpr::coordinator::{self, experiments, Report};
 use asyncpr::graph::{io, Csr, GraphStats};
@@ -90,6 +91,8 @@ USAGE:
                [--threads N] [--resident] [--rebalance-factor F]
                [--steal] [--steal-batch B]
                [--topk K] [--topk-order] [--topk-stop]
+               [--term protocol|quiet] [--pc-max N]
+               [--inject-stall W:MS[:R]]
                [--arrivals K] [--links L] [--inserts I]
                [--removes R] [--out STEM]
                [--trace FILE] [--trace-sample-us N]
@@ -117,6 +120,18 @@ intervals (serving path): the report gains head-churn and
 pushes-to-certification columns; `--topk-order` also certifies the
 order within the head; `--topk-stop` ends each epoch's solve as soon
 as the head certifies instead of running to tol.
+`--term` picks how the threaded drains stop: `protocol` (default) is
+the paper's §4.2 persistence-counter protocol — workers announce
+CONVERGE after `--pc-max N` (default 3) consecutive locally-converged
+rounds with nothing in flight, retract with DIVERGE when mass arrives,
+and the monitor stops once every worker's last word was CONVERGE;
+`quiet` keeps the legacy quiet-window heuristic (three consecutive
+monitor samples with published residuals under tol), which can stop
+early when a stalled worker holds unpublished residual. The report's
+`stop` column shows each epoch's stop cause and protocol traffic.
+`--inject-stall W:MS[:R]` makes worker W sleep MS milliseconds at
+round R (default 0) of each threaded drain — fault injection for
+racing the two termination modes.
 `--trace FILE` writes a Chrome trace-event JSON (open in Perfetto or
 chrome://tracing). For `stream` it carries one instant-event track per
 shard (push batches, fragment sends/defers, steal requests/grants,
@@ -154,6 +169,21 @@ fn parse_flags(args: &[String]) -> anyhow::Result<HashMap<String, String>> {
         i += 2;
     }
     Ok(map)
+}
+
+/// Parse `--inject-stall WORKER:MS[:ROUND]` — worker index, sleep
+/// milliseconds, and the round the sleep triggers on (default 0).
+fn parse_stall(v: &str) -> anyhow::Result<StallInjection> {
+    let parts: Vec<&str> = v.split(':').collect();
+    anyhow::ensure!(
+        parts.len() == 2 || parts.len() == 3,
+        "--inject-stall wants WORKER:MS or WORKER:MS:ROUND, got {v:?}"
+    );
+    Ok(StallInjection {
+        worker: parts[0].parse()?,
+        ms: parts[1].parse()?,
+        after_rounds: parts.get(2).map(|r| r.parse()).transpose()?.unwrap_or(0),
+    })
 }
 
 /// Serialize a trace document, write it, and re-parse the written
@@ -396,6 +426,19 @@ fn cmd_stream(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     }
     if flags.contains_key("topk-stop") {
         opts.topk_stop = true;
+    }
+    if let Some(v) = flags.get("term") {
+        opts.term = match v.as_str() {
+            "protocol" => TermMode::Protocol,
+            "quiet" => TermMode::Quiet,
+            other => anyhow::bail!("--term must be protocol|quiet, got {other:?}"),
+        };
+    }
+    if let Some(v) = flags.get("pc-max") {
+        opts.pc_max = v.parse()?;
+    }
+    if let Some(v) = flags.get("inject-stall") {
+        opts.inject_stall = Some(parse_stall(v)?);
     }
     // churn overrides ride as options; the driver resolves them against
     // graph-scaled defaults once the graph is loaded (loading it here

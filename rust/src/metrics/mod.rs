@@ -1,7 +1,7 @@
 //! Experiment metrics: the exact rows/cells the paper's tables report,
 //! plus emitters (markdown / JSON) for `repro report`.
 
-use crate::asynciter::RunMetrics;
+use crate::asynciter::{RunMetrics, StopCause};
 use crate::obs::{EventKind, EventTotals};
 use crate::util::{Json, Table};
 
@@ -124,6 +124,16 @@ pub struct StreamEpochRow {
     pub stolen_rows: u64,
     /// Steal grants delivered between shards this epoch.
     pub steal_grants: u64,
+    /// What stopped the epoch's *threaded* drain (`--threads N`,
+    /// N ≥ 2); `None` on sequential epochs, which stop inline on the
+    /// exact residual and need no monitor verdict.
+    pub stop_cause: Option<StopCause>,
+    /// §4.2 CONVERGE announcements the epoch's threaded drains shipped
+    /// (0 under `--term quiet` or sequential solves).
+    pub term_converge: u64,
+    /// §4.2 DIVERGE retractions — each one is a premature stop the
+    /// protocol prevented.
+    pub term_diverge: u64,
     /// Serving-path columns (`repro stream --topk K`); `None` when no
     /// top-k goal was tracked.
     pub topk: Option<TopKEpochStats>,
@@ -190,6 +200,13 @@ impl StreamEpochRow {
             } else {
                 "-".into()
             },
+            match self.stop_cause {
+                Some(c) if self.term_converge + self.term_diverge > 0 => {
+                    format!("{} {}c/{}d", c.name(), self.term_converge, self.term_diverge)
+                }
+                Some(c) => c.name().to_string(),
+                None => "-".into(),
+            },
             format!("{:.1e}", self.l1_vs_power),
         ]
     }
@@ -210,6 +227,12 @@ impl StreamEpochRow {
         o.insert("csr_dirty_rows".into(), Json::Num(self.csr_dirty_rows as f64));
         o.insert("stolen_rows".into(), Json::Num(self.stolen_rows as f64));
         o.insert("steal_grants".into(), Json::Num(self.steal_grants as f64));
+        match self.stop_cause {
+            Some(c) => o.insert("stop_cause".into(), Json::Str(c.name().into())),
+            None => o.insert("stop_cause".into(), Json::Null),
+        };
+        o.insert("term_converge".into(), Json::Num(self.term_converge as f64));
+        o.insert("term_diverge".into(), Json::Num(self.term_diverge as f64));
         if let Some(t) = &self.topk {
             o.insert("topk".into(), t.to_json());
         }
@@ -332,6 +355,7 @@ pub fn stream_markdown(rows: &[StreamEpochRow]) -> String {
         "scratch pushes",
         "saving",
         "stolen (grants)",
+        "stop",
         "L1 vs power",
     ]);
     for r in rows {
@@ -453,6 +477,9 @@ mod tests {
             csr_dirty_rows: 25,
             stolen_rows: 0,
             steal_grants: 0,
+            stop_cause: None,
+            term_converge: 0,
+            term_diverge: 0,
             topk: None,
         }
     }
@@ -462,12 +489,17 @@ mod tests {
         let mut with_steal = fake_stream_row(1);
         with_steal.stolen_rows = 96;
         with_steal.steal_grants = 3;
+        with_steal.stop_cause = Some(StopCause::Protocol);
+        with_steal.term_converge = 5;
+        with_steal.term_diverge = 1;
         let md = stream_markdown(&[fake_stream_row(0), with_steal]);
         assert!(md.contains("inc pushes"));
         assert!(md.contains("100.0x"), "{md}");
         assert!(md.contains("+1n +20e -10e"));
         assert!(md.contains("stolen (grants)"));
         assert!(md.contains("96 (3)"), "{md}");
+        assert!(md.contains("| stop"), "{md}");
+        assert!(md.contains("protocol 5c/1d"), "{md}");
         assert!(md.contains("| -"), "no-steal epochs render a dash: {md}");
         assert_eq!(md.trim().lines().count(), 4);
     }
@@ -477,12 +509,18 @@ mod tests {
         let mut row = fake_stream_row(3);
         row.stolen_rows = 12;
         row.steal_grants = 1;
+        row.stop_cause = Some(StopCause::QuietWindow);
+        row.term_converge = 2;
         let j = row.to_json();
         assert_eq!(j.get("epoch").unwrap().as_usize(), Some(3));
         assert_eq!(j.get("scratch_pushes").unwrap().as_usize(), Some(50_000));
         assert_eq!(j.get("csr_dirty_rows").unwrap().as_usize(), Some(25));
         assert_eq!(j.get("stolen_rows").unwrap().as_usize(), Some(12));
         assert_eq!(j.get("steal_grants").unwrap().as_usize(), Some(1));
+        assert_eq!(j.get("stop_cause").unwrap().as_str(), Some("quiet"));
+        assert_eq!(j.get("term_converge").unwrap().as_usize(), Some(2));
+        assert_eq!(j.get("term_diverge").unwrap().as_usize(), Some(0));
+        assert_eq!(fake_stream_row(0).to_json().get("stop_cause"), Some(&Json::Null));
         assert!(Json::parse(&j.to_string_compact()).is_ok());
     }
 

@@ -19,7 +19,7 @@ use std::cell::UnsafeCell;
 use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Number of event kinds (array sizes below key off this).
-pub const KIND_COUNT: usize = 10;
+pub const KIND_COUNT: usize = 13;
 
 /// The event taxonomy — one variant per observable step of the
 /// asynchronous push protocol. Payload conventions (the `a`/`v` fields
@@ -56,6 +56,22 @@ pub enum EventKind {
     /// tol, nothing in flight). `a` = consecutive quiet count,
     /// `v` = the published residual total.
     QuietWindow = 9,
+    /// A worker announced CONVERGE to the §4.2 termination monitor
+    /// after `pc_max` persistent locally-converged rounds. `a` = the
+    /// worker's persistence counter at the announce, `v` = its
+    /// conservative local residual estimate.
+    TermConverge = 10,
+    /// A previously-announced worker left the converged state (fresh
+    /// residual arrived or its own estimate rose) and retracted with
+    /// DIVERGE. `a` = 1 when triggered by received mass, 0 when by the
+    /// worker's own round; `v` = the local residual estimate for
+    /// round-triggered retractions, 0 for mass-triggered ones (the
+    /// estimate is not re-tallied until the round's drain).
+    TermDiverge = 11,
+    /// The monitor's persistence counter fired STOP: every worker's
+    /// last protocol message was CONVERGE. `a` = protocol messages the
+    /// monitor processed over the run, `v` = 0.
+    TermStop = 12,
 }
 
 impl EventKind {
@@ -71,6 +87,9 @@ impl EventKind {
         EventKind::EpochBegin,
         EventKind::CertCheck,
         EventKind::QuietWindow,
+        EventKind::TermConverge,
+        EventKind::TermDiverge,
+        EventKind::TermStop,
     ];
 
     /// Stable display name (Chrome-trace event name, summary column).
@@ -86,6 +105,9 @@ impl EventKind {
             EventKind::EpochBegin => "EpochBegin",
             EventKind::CertCheck => "CertCheck",
             EventKind::QuietWindow => "QuietWindow",
+            EventKind::TermConverge => "TermConverge",
+            EventKind::TermDiverge => "TermDiverge",
+            EventKind::TermStop => "TermStop",
         }
     }
 }

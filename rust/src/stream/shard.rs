@@ -679,6 +679,39 @@ impl PushShard {
         }
     }
 
+    /// Move a fraction of the biggest-rank home row's mass back into
+    /// its residual, conserving the global invariant
+    /// (`Δp = -dp`, `Δr = +dp·(1-α)`, so `Σp + Σr/(1-α)` is
+    /// unchanged). Returns the residual injected (0 when the shard
+    /// holds no positive rank). Termination-test support: it plants
+    /// residual in exactly ONE shard — something real churn cannot do,
+    /// since a column swap scatters deltas to arbitrary out-neighbors
+    /// — which is what makes the stalled-worker premature-stop
+    /// scenarios deterministic.
+    pub(crate) fn unpush(&mut self, frac: f64) -> f64 {
+        debug_assert!((0.0..=1.0).contains(&frac));
+        let bs = self.home_size();
+        let mut k_best = None;
+        for k in 0..bs {
+            if self.lent_owner(k).is_some() || self.p[k] <= 0.0 {
+                continue;
+            }
+            if k_best.map_or(true, |b: usize| self.p[k] > self.p[b]) {
+                k_best = Some(k);
+            }
+        }
+        let Some(k) = k_best else { return 0.0 };
+        let dp = self.p[k] * frac;
+        if dp <= 0.0 {
+            return 0.0;
+        }
+        self.p[k] -= dp;
+        self.p_sum -= dp;
+        let dr = dp * (1.0 - self.alpha);
+        self.add_r(k, dr);
+        dr
+    }
+
     /// Release every adopted row for repatriation, truncating the
     /// overflow slots. The queue is rebuilt from the remaining home
     /// rows (stale bucket entries may still reference the truncated

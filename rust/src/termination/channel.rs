@@ -1,0 +1,209 @@
+//! Channel-message adapters that carry the Figure-1 protocol between
+//! real OS threads.
+//!
+//! [`WorkerTermination`]/[`MonitorTermination`] are pure state
+//! machines; this module is the transport glue the threaded push
+//! backend wires them through. Two pieces:
+//!
+//! * [`TermPort`] — the computing-UE side. Owns a worker's state
+//!   machine plus the sending half of the control channel, and turns
+//!   round outcomes into on-the-wire CONVERGE/DIVERGE messages.
+//! * [`MonitorPort`] — the monitor side. Owns the receiving half and
+//!   the central log, and drains whatever accumulated since the last
+//!   poll.
+//!
+//! # Why the control channel is unbounded
+//!
+//! The soundness of the protocol's STOP decision rests on one ordering
+//! guarantee: when a worker receives residual mass, its DIVERGE must be
+//! *enqueued before* the sender's in-flight accounting is released
+//! (see [`TermPort::on_mass_received`]). A bounded channel could block
+//! or drop that DIVERGE, silently breaking the guarantee, so the ports
+//! ride a dedicated unbounded [`std::sync::mpsc::channel`] instead of
+//! the bounded data channels. Message volume is intrinsically bounded:
+//! each worker's messages strictly alternate CONVERGE/DIVERGE (a
+//! property test in [`protocol`](super::protocol) pins this down), and
+//! a worker only diverges after real residual arrived, so the channel
+//! can never hold more than O(messages between polls) entries.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+
+use super::protocol::{MonitorTermination, TermMsg, WorkerTermination};
+
+/// A protocol message on the wire: which UE said what.
+pub type TermWire = (usize, TermMsg);
+
+/// Build the control channel the ports communicate over. Unbounded on
+/// purpose — see the module docs.
+pub fn term_channel() -> (Sender<TermWire>, Receiver<TermWire>) {
+    channel()
+}
+
+/// Computing-UE side of the protocol, bound to a control channel.
+#[derive(Debug)]
+pub struct TermPort {
+    ue: usize,
+    term: WorkerTermination,
+    tx: Sender<TermWire>,
+    converge_sent: u64,
+    diverge_sent: u64,
+}
+
+impl TermPort {
+    pub fn new(ue: usize, pc_max: u32, tx: Sender<TermWire>) -> TermPort {
+        TermPort { ue, term: WorkerTermination::new(pc_max), tx, converge_sent: 0, diverge_sent: 0 }
+    }
+
+    /// Feed one round's local convergence verdict; ships the resulting
+    /// protocol message (if any) and returns it for event recording.
+    ///
+    /// The verdict the threaded backend feeds here is `local residual
+    /// estimate < tol/s ∧ no in-flight sends this worker originated`:
+    /// the worker may only claim convergence once every fragment it
+    /// shipped has been applied by its receiver, so any mass it moved
+    /// is covered by the *receiver's* termination state, not lost
+    /// between the two.
+    pub fn on_round(&mut self, locally_converged: bool) -> Option<TermMsg> {
+        let msg = self.term.on_iteration(locally_converged)?;
+        match msg {
+            TermMsg::Converge => self.converge_sent += 1,
+            TermMsg::Diverge => self.diverge_sent += 1,
+            TermMsg::Stop => unreachable!("workers never send STOP"),
+        }
+        // a closed channel means the monitor is gone and the run is
+        // already stopping; nothing to do but keep draining
+        let _ = self.tx.send((self.ue, msg));
+        Some(msg)
+    }
+
+    /// Residual mass just arrived in this worker's shard. MUST be
+    /// called after applying the mass but BEFORE decrementing the
+    /// sender's in-flight counter: the sender cannot announce CONVERGE
+    /// until that counter hits zero, and `mpsc` preserves each
+    /// producer's enqueue order, so the monitor is guaranteed to
+    /// process this DIVERGE before any CONVERGE the sender could emit
+    /// as a consequence of the acknowledgement. That ordering is what
+    /// makes a protocol STOP imply global residual < tol.
+    pub fn on_mass_received(&mut self) -> Option<TermMsg> {
+        self.on_round(false)
+    }
+
+    /// CONVERGE messages shipped so far.
+    pub fn converge_sent(&self) -> u64 {
+        self.converge_sent
+    }
+
+    /// DIVERGE messages shipped so far.
+    pub fn diverge_sent(&self) -> u64 {
+        self.diverge_sent
+    }
+
+    /// The underlying state machine (inspection/tests).
+    pub fn state(&self) -> &WorkerTermination {
+        &self.term
+    }
+}
+
+/// Monitor side of the protocol, bound to the receiving half.
+///
+/// The monitor's persistence counter only advances when a message
+/// arrives, and no messages follow the final CONVERGE of a converged
+/// run — a monitor-side `pc_max > 1` would therefore wedge forever
+/// waiting for traffic that cannot come. The port pins the monitor's
+/// counter at 1 and leaves the protocol's hysteresis entirely to the
+/// worker-side `pc_max` (the `--pc-max` knob), which is fed every
+/// round whether or not anything is on the wire.
+#[derive(Debug)]
+pub struct MonitorPort {
+    monitor: MonitorTermination,
+    rx: Receiver<TermWire>,
+    messages_seen: u64,
+}
+
+impl MonitorPort {
+    pub fn new(p: usize, rx: Receiver<TermWire>) -> MonitorPort {
+        MonitorPort { monitor: MonitorTermination::new(p, 1), rx, messages_seen: 0 }
+    }
+
+    /// Drain everything queued since the last poll; returns true the
+    /// first time the central log justifies STOP. Messages queued
+    /// behind the deciding CONVERGE are left in the channel (the run
+    /// is stopping; they no longer matter).
+    pub fn poll(&mut self) -> bool {
+        while let Ok((ue, msg)) = self.rx.try_recv() {
+            self.messages_seen += 1;
+            if self.monitor.on_message(ue, msg) {
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Protocol messages processed so far.
+    pub fn messages_seen(&self) -> u64 {
+        self.messages_seen
+    }
+
+    /// The underlying state machine (inspection/tests).
+    pub fn state(&self) -> &MonitorTermination {
+        &self.monitor
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn port_round_trip_stops_only_after_all_announce() {
+        let (tx, rx) = term_channel();
+        let mut a = TermPort::new(0, 2, tx.clone());
+        let mut b = TermPort::new(1, 2, tx);
+        let mut mon = MonitorPort::new(2, rx);
+
+        assert_eq!(a.on_round(true), None); // pc=1
+        assert_eq!(a.on_round(true), Some(TermMsg::Converge));
+        assert!(!mon.poll(), "one of two announced");
+        assert_eq!(b.on_round(true), None);
+        assert_eq!(b.on_round(true), Some(TermMsg::Converge));
+        assert!(mon.poll(), "all announced -> STOP");
+        assert_eq!(mon.messages_seen(), 2);
+        assert_eq!(a.converge_sent(), 1);
+        assert_eq!(b.converge_sent(), 1);
+    }
+
+    #[test]
+    fn mass_received_retracts_only_after_announce() {
+        let (tx, rx) = term_channel();
+        let mut w = TermPort::new(0, 1, tx);
+        let mut mon = MonitorPort::new(1, rx);
+
+        // mass before any announce: nothing to retract, no wire traffic
+        assert_eq!(w.on_mass_received(), None);
+        assert!(!mon.poll());
+
+        assert_eq!(w.on_round(true), Some(TermMsg::Converge));
+        // DIVERGE lands before the monitor ever saw the CONVERGE as
+        // final: the next poll processes both, in enqueue order
+        assert_eq!(w.on_mass_received(), Some(TermMsg::Diverge));
+        assert!(!mon.poll(), "CONVERGE then DIVERGE must not stop");
+        assert_eq!(w.diverge_sent(), 1);
+
+        // re-converge re-announces and the monitor can now stop
+        assert_eq!(w.on_round(true), Some(TermMsg::Converge));
+        assert!(mon.poll());
+        assert_eq!(w.converge_sent(), 2);
+    }
+
+    #[test]
+    fn port_survives_disconnected_monitor() {
+        let (tx, rx) = term_channel();
+        let mut w = TermPort::new(0, 1, tx);
+        drop(rx);
+        // the send fails silently; the local state machine still runs
+        assert_eq!(w.on_round(true), Some(TermMsg::Converge));
+        assert_eq!(w.on_mass_received(), Some(TermMsg::Diverge));
+        assert_eq!(w.converge_sent(), 1);
+        assert_eq!(w.diverge_sent(), 1);
+    }
+}

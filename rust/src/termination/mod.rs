@@ -11,14 +11,19 @@
 //!
 //! [`WorkerTermination`] and [`MonitorTermination`] are pure state
 //! machines (no clock, no IO) driven by the simulation engine and unit/
-//! property tested in isolation. [`GlobalOracle`] is the omniscient
-//! checker used by tests and by experiment G1 (the paper's observation
-//! that local 1e-6 ⇔ global ≈5e-5). [`tree`] is the decentralized
-//! detector of the §6 outlook (cf. Bahi et al., paper ref [6]).
+//! property tested in isolation. [`TermPort`]/[`MonitorPort`] bind them
+//! to real channels for the threaded push backend (the DIVERGE-before-
+//! acknowledge discipline that makes a STOP imply global convergence
+//! lives there). [`GlobalOracle`] is the omniscient checker used by
+//! tests and by experiment G1 (the paper's observation that local 1e-6
+//! ⇔ global ≈5e-5). [`tree`] is the decentralized detector of the §6
+//! outlook (cf. Bahi et al., paper ref [6]).
 
+mod channel;
 mod protocol;
 pub mod tree;
 mod oracle;
 
+pub use channel::{term_channel, MonitorPort, TermPort, TermWire};
 pub use oracle::GlobalOracle;
 pub use protocol::{MonitorTermination, TermMsg, WorkerTermination};

@@ -65,6 +65,17 @@ fn push_parallel_trajectory_schema() {
     }
     num_or_null(&doc, &["steal_race", "steal", "stolen_rows"]);
     num_or_null(&doc, &["steal_race", "steal", "grants"]);
+    for side in ["quiet", "protocol"] {
+        let stop = lookup(&doc, &["term_race", side, "stop"]);
+        assert!(matches!(stop, Json::Str(_) | Json::Null), "stop must be string or null");
+        let conv = lookup(&doc, &["term_race", side, "converged"]);
+        assert!(matches!(conv, Json::Bool(_) | Json::Null), "converged must be bool or null");
+        for key in ["wall_ms", "pushes", "residual"] {
+            num_or_null(&doc, &["term_race", side, key]);
+        }
+    }
+    num_or_null(&doc, &["term_race", "protocol", "converge_msgs"]);
+    num_or_null(&doc, &["term_race", "protocol", "diverge_msgs"]);
 }
 
 #[test]

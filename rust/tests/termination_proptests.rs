@@ -1,0 +1,142 @@
+//! Property suite for the §4.2 termination protocol (seeded random
+//! campaigns, same style as proptests.rs — the offline build carries
+//! no proptest crate, so generators are explicit).
+//!
+//! Invariants covered:
+//!   * channel-driven ports under random streak schedules: a worker
+//!     that announced, diverged, and re-converged re-announces, and
+//!     the monitor's reset log means sustained global convergence
+//!     ALWAYS reaches STOP from any message history (liveness);
+//!   * the acceptance criterion of the termination issue: across
+//!     shard counts 1..8, with and without work stealing, and with a
+//!     worker stalled mid-solve, a [`StopCause::Protocol`] stop is a
+//!     sound stop — the gather-time exact residual is under tol and
+//!     rank mass is conserved.
+
+use asyncpr::asynciter::{
+    run_threaded_push, PushThreadOptions, StallInjection, StopCause, TermMode,
+};
+use asyncpr::stream::{DeltaGraph, ShardedPush, UpdateBatch};
+use asyncpr::termination::{term_channel, MonitorPort, TermPort};
+use asyncpr::util::Rng;
+
+#[test]
+fn termination_random_streaks_reannounce_and_always_reach_stop() {
+    let mut rng = Rng::new(4207);
+    for trial in 0..150 {
+        let p = rng.range(1, 6);
+        let pc_max = rng.range(1, 4) as u32;
+        let (tx, rx) = term_channel();
+        let mut ports: Vec<TermPort> =
+            (0..p).map(|ue| TermPort::new(ue, pc_max, tx.clone())).collect();
+        let mut mon = MonitorPort::new(p, rx);
+        // phase 1: random converge/diverge streaks with interleaved
+        // polls — the monitor must track announce/retract pairs
+        // without wedging or double-counting
+        let mut stopped = false;
+        for _ in 0..400 {
+            let ue = rng.range(0, p);
+            ports[ue].on_round(rng.chance(0.6));
+            if rng.chance(0.3) && mon.poll() {
+                stopped = true;
+                break;
+            }
+        }
+        for (ue, port) in ports.iter().enumerate() {
+            assert!(
+                port.diverge_sent() <= port.converge_sent(),
+                "trial {trial}: port {ue} retracted more than it announced"
+            );
+        }
+        // phase 2 (liveness + re-announce): however tangled the
+        // history, sustained local convergence everywhere must reach
+        // STOP. A worker that announced, diverged, and failed to
+        // re-announce — or a monitor whose log missed a retraction
+        // reset — would wedge this forever.
+        if !stopped {
+            for _ in 0..=pc_max {
+                for port in ports.iter_mut() {
+                    port.on_round(true);
+                }
+            }
+            assert!(
+                mon.poll(),
+                "trial {trial}: no STOP after global re-convergence (p={p}, pc_max={pc_max})"
+            );
+        }
+        assert!(mon.state().stopped(), "trial {trial}: poll returned true without stopping");
+        assert_eq!(
+            mon.state().converged_count(),
+            p,
+            "trial {trial}: STOP with an incomplete convergence log"
+        );
+    }
+}
+
+#[test]
+fn termination_protocol_stop_is_sound_across_shards_and_steal() {
+    let mut rng = Rng::new(99);
+    let tol = 1e-9;
+    for &shards in &[1usize, 2, 4, 8] {
+        for &steal in &[false, true] {
+            let el = asyncpr::coordinator::load_edgelist("scaled:3000", 42)
+                .expect("generator specs are infallible");
+            let mut g = DeltaGraph::from_edgelist(&el);
+            let mut sp = ShardedPush::new(&g, 0.85, shards);
+            let st = sp.solve(&g, 1e-11, u64::MAX);
+            assert!(st.converged, "warm converge (s={shards})");
+            // a random churn epoch leaves real residual spread over
+            // the shards, then one worker stalls mid-solve: the
+            // protocol must wait the sleeper out, not stop over it
+            let mut batch = UpdateBatch::default();
+            for _ in 0..200 {
+                let u = rng.range(0, g.n()) as u32;
+                let v = rng.range(0, g.n()) as u32;
+                batch.insert.push((u, v));
+            }
+            let delta = g.apply(&batch).unwrap();
+            sp.begin_epoch();
+            sp.apply_batch(&g, &delta);
+            let stall = (shards >= 2).then(|| StallInjection {
+                worker: shards - 1,
+                after_rounds: 0,
+                ms: 120,
+            });
+            let opts = PushThreadOptions {
+                tol,
+                term: TermMode::Protocol,
+                steal,
+                inject_stall: stall,
+                ..Default::default()
+            };
+            let tm = run_threaded_push(&g, &mut sp, &opts);
+            if shards == 1 {
+                // the single-shard fast path is deterministic — no
+                // monitor, no protocol traffic
+                assert_eq!(tm.stop_cause, StopCause::Converged, "s=1 fast path");
+                assert_eq!(tm.term_converge, 0);
+            } else {
+                assert_eq!(
+                    tm.stop_cause,
+                    StopCause::Protocol,
+                    "s={shards} steal={steal}: residual {:.3e}",
+                    tm.residual
+                );
+                assert!(
+                    tm.term_converge >= shards as u64,
+                    "s={shards}: every worker must announce before STOP, saw {}",
+                    tm.term_converge
+                );
+            }
+            // the acceptance invariant: the stop is sound — the exact
+            // gather-time residual is under tol, mass intact
+            assert!(
+                tm.converged && tm.residual < tol,
+                "s={shards} steal={steal}: unsound stop at residual {:.3e}",
+                tm.residual
+            );
+            let mass = sp.mass();
+            assert!((mass - 1.0).abs() < 1e-9, "s={shards} steal={steal}: mass {mass}");
+        }
+    }
+}
