@@ -1,0 +1,185 @@
+//! Bench: sustained PPR query serving under churn — warm LRU cache
+//! (incremental invalidation) vs cold per-query solves.
+//!
+//! Two identical runs (cloned graph, same churn and query streams)
+//! through [`ServeTier`]:
+//!
+//! * **warm**: normal tier — source states stay cached across queries
+//!   and absorb each churn delta incrementally, so a repeat query pays
+//!   only for the residual the churn actually injected;
+//! * **cold**: `cache_cap = 0` — every query builds and solves a fresh
+//!   personalized state, the no-cache baseline.
+//!
+//! The metric is pushes (the work unit the stream subsystem accounts
+//! in); the acceptance criterion is that the warm run needs STRICTLY
+//! fewer — the run bails otherwise. Per-query wall-clock latency is
+//! reported as p50/p99 alongside the cache hit rate: that triple is
+//! the serving-tier headline (sustained QPS under churn).
+
+use std::time::Instant;
+
+use asyncpr::graph::generators::{churn_batch, ChurnParams};
+use asyncpr::stream::{DeltaGraph, ServeOptions, ServeTier};
+use asyncpr::util::{Json, Rng};
+
+fn jobj(pairs: &[(&str, Json)]) -> Json {
+    Json::Obj(pairs.iter().map(|(k, v)| (k.to_string(), v.clone())).collect())
+}
+
+/// Machine-readable bench output: set `ASYNCPR_BENCH_JSON_DIR=benches`
+/// to refresh the committed `benches/BENCH_ppr_serve.json` trajectory
+/// file (see benches/README.md). No-op otherwise.
+fn write_bench_json(doc: &Json) -> anyhow::Result<()> {
+    if let Ok(dir) = std::env::var("ASYNCPR_BENCH_JSON_DIR") {
+        if !dir.is_empty() {
+            let path = format!("{dir}/BENCH_ppr_serve.json");
+            std::fs::write(&path, doc.to_string_compact())?;
+            eprintln!("wrote {path}");
+        }
+    }
+    Ok(())
+}
+
+fn pct(sorted_us: &[f64], p: f64) -> f64 {
+    let i = ((sorted_us.len() as f64 - 1.0) * p).round() as usize;
+    sorted_us[i]
+}
+
+/// One serving run over the churn trajectory. Both sides replay the
+/// exact same graph evolution and query sequence (cloned graph, fixed
+/// seeds); only the cache capacity differs.
+fn run_side(
+    g0: &DeltaGraph,
+    churn: &ChurnParams,
+    pool: &[Vec<u32>],
+    rounds: usize,
+    queries_per_round: usize,
+    cache_cap: usize,
+    tol: f64,
+) -> anyhow::Result<(u64, f64, Vec<f64>, f64)> {
+    let mut g = g0.clone();
+    let mut churn_rng = Rng::new(4242);
+    let mut query_rng = Rng::new(8484);
+    let mut tier = ServeTier::new(ServeOptions { tol, cache_cap, topk: 16, ..Default::default() });
+    let mut lat_us = Vec::with_capacity((rounds + 1) * queries_per_round);
+    let t0 = Instant::now();
+    for round in 0..=rounds {
+        if round > 0 {
+            let batch = churn_batch(&g, churn, &mut churn_rng);
+            let delta = g.apply(&batch)?;
+            tier.apply_batch(&g, &delta);
+        }
+        for _ in 0..queries_per_round {
+            let q = &pool[query_rng.range(0, pool.len())];
+            let tq = Instant::now();
+            let ans = tier.query(&g, q)?;
+            lat_us.push(tq.elapsed().as_secs_f64() * 1e6);
+            anyhow::ensure!(
+                ans.residual < tol,
+                "round {round}: answer returned unconverged at {:.2e}",
+                ans.residual
+            );
+        }
+    }
+    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+    lat_us.sort_by(f64::total_cmp);
+    let st = tier.stats();
+    Ok((st.pushes, st.hit_rate(), lat_us, wall_ms))
+}
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick")
+        || std::env::var("BENCH_FAST").ok().as_deref() == Some("1");
+    let graph = if quick { "scaled:6000" } else { "scaled:20000" };
+    let (rounds, queries_per_round) = if quick { (3usize, 24usize) } else { (6, 64) };
+    let (pool_size, sources_per_query, tol) = (16usize, 2usize, 1e-10f64);
+    println!(
+        "== bench ppr_serve (graph = {graph}, {rounds} churn rounds x \
+         {queries_per_round} queries, pool {pool_size} x {sources_per_query} sources, \
+         tol = {tol:.0e}) ==\n"
+    );
+
+    let el = asyncpr::coordinator::load_edgelist(graph, 42)?;
+    let g0 = DeltaGraph::from_edgelist(&el);
+    println!("n = {}, m = {}\n", g0.n(), g0.m());
+    let churn = ChurnParams::scaled_to(g0.n(), g0.m());
+    let mut pool_rng = Rng::new(1717);
+    let pool: Vec<Vec<u32>> = (0..pool_size)
+        .map(|_| {
+            pool_rng
+                .sample_distinct(g0.n(), sources_per_query)
+                .into_iter()
+                .map(|u| u as u32)
+                .collect()
+        })
+        .collect();
+
+    // ---- warm run (LRU cache, incremental invalidation) ----------
+    let (warm_pushes, hit_rate, warm_lat, warm_wall) =
+        run_side(&g0, &churn, &pool, rounds, queries_per_round, 64, tol)?;
+    // ---- cold run (cache disabled — per-query solves) ------------
+    let (cold_pushes, cold_hit, cold_lat, cold_wall) =
+        run_side(&g0, &churn, &pool, rounds, queries_per_round, 0, tol)?;
+    anyhow::ensure!(cold_hit == 0.0, "cache_cap = 0 must disable caching, hit rate {cold_hit}");
+
+    let queries = ((rounds + 1) * queries_per_round) as f64;
+    println!(
+        "warm (cached): {warm_pushes} pushes, hit rate {hit_rate:.2}, \
+         p50 {:.0} us, p99 {:.0} us, {:.0} q/s",
+        pct(&warm_lat, 0.50),
+        pct(&warm_lat, 0.99),
+        queries / (warm_wall / 1e3)
+    );
+    println!(
+        "cold (no cache): {cold_pushes} pushes, p50 {:.0} us, p99 {:.0} us, {:.0} q/s",
+        pct(&cold_lat, 0.50),
+        pct(&cold_lat, 0.99),
+        queries / (cold_wall / 1e3)
+    );
+    println!(
+        "push saving: {:.1}x fewer pushes with the warm cache",
+        cold_pushes as f64 / warm_pushes.max(1) as f64
+    );
+
+    anyhow::ensure!(
+        warm_pushes < cold_pushes,
+        "warm serving must need strictly fewer pushes ({warm_pushes} vs {cold_pushes})"
+    );
+    anyhow::ensure!(
+        hit_rate > 0.0,
+        "the query mix repeats source sets, so the cache must have fired"
+    );
+
+    write_bench_json(&jobj(&[
+        ("schema", Json::Num(1.0)),
+        ("bench", Json::Str("ppr_serve".to_string())),
+        ("graph", Json::Str(graph.to_string())),
+        ("quick", Json::Bool(quick)),
+        ("rounds", Json::Num((rounds + 1) as f64)),
+        ("queries", Json::Num(queries)),
+        (
+            "warm",
+            jobj(&[
+                ("pushes", Json::Num(warm_pushes as f64)),
+                ("hit_rate", Json::Num(hit_rate)),
+                ("p50_us", Json::Num(pct(&warm_lat, 0.50))),
+                ("p99_us", Json::Num(pct(&warm_lat, 0.99))),
+                ("wall_ms", Json::Num(warm_wall)),
+            ]),
+        ),
+        (
+            "cold",
+            jobj(&[
+                ("pushes", Json::Num(cold_pushes as f64)),
+                ("p50_us", Json::Num(pct(&cold_lat, 0.50))),
+                ("p99_us", Json::Num(pct(&cold_lat, 0.99))),
+                ("wall_ms", Json::Num(cold_wall)),
+            ]),
+        ),
+        (
+            "push_saving",
+            Json::Num(cold_pushes as f64 / warm_pushes.max(1) as f64),
+        ),
+    ]))?;
+    Ok(())
+}

@@ -343,7 +343,9 @@ pub struct StallInjection {
 /// Options for a threaded residual-push run.
 #[derive(Debug, Clone)]
 pub struct PushThreadOptions {
-    /// Global residual target `Σ_s (‖r_s‖₁ + |uni_s|·|B_s|/n) < tol`.
+    /// Global residual target
+    /// `Σ_s (‖r_s‖₁ + |uni_s|·|B_s|/n + |pv_s|·vshare_s/Σv) < tol`
+    /// (the `pv` term is zero on the uniform path).
     pub tol: f64,
     /// Local pushes each shard spends between channel services.
     pub round_pushes: u64,

@@ -13,10 +13,14 @@
 //!              [--threads N] [--resident] [--rebalance-factor F]
 //!              [--steal] [--steal-batch B]
 //!              [--topk K] [--topk-order] [--topk-stop]
+//!              [--ppr SRC[,SRC...]]
 //!              [--term protocol|quiet] [--pc-max N] [--inject-stall W:MS[:R]]
 //!              [--arrivals K] [--links L] [--inserts I]
 //!              [--removes R] [--out reports/X]
 //!              [--trace FILE] [--trace-sample-us N]
+//! repro serve [--graph G] [--epochs E] [--seed S] [--tol T] [--alpha A]
+//!             [--queries Q] [--distinct D] [--sources S]
+//!             [--cache-cap C] [--topk K] [--out reports/X]
 //! repro artifacts-check
 //! repro help
 //! ```
@@ -69,6 +73,10 @@ fn dispatch(args: &[String]) -> anyhow::Result<()> {
             let flags = parse_flags(&args[1..])?;
             cmd_stream(&flags)
         }
+        "serve" => {
+            let flags = parse_flags(&args[1..])?;
+            cmd_serve(&flags)
+        }
         "artifacts-check" => cmd_artifacts_check(),
         "help" | "--help" | "-h" => {
             print!("{HELP}");
@@ -91,11 +99,15 @@ USAGE:
                [--threads N] [--resident] [--rebalance-factor F]
                [--steal] [--steal-batch B]
                [--topk K] [--topk-order] [--topk-stop]
+               [--ppr SRC[,SRC...]]
                [--term protocol|quiet] [--pc-max N]
                [--inject-stall W:MS[:R]]
                [--arrivals K] [--links L] [--inserts I]
                [--removes R] [--out STEM]
                [--trace FILE] [--trace-sample-us N]
+  repro serve [--graph SPEC] [--epochs E] [--seed N] [--tol T] [--alpha A]
+              [--queries Q] [--distinct D] [--sources S]
+              [--cache-cap C] [--topk K] [--out STEM]
   repro artifacts-check
   repro help
 
@@ -120,6 +132,19 @@ intervals (serving path): the report gains head-churn and
 pushes-to-certification columns; `--topk-order` also certifies the
 order within the head; `--topk-stop` ends each epoch's solve as soon
 as the head certifies instead of running to tol.
+`--ppr SRC[,SRC...]` switches every backend to personalized PageRank:
+the teleport vector becomes uniform over the listed source nodes
+(dangling mass follows it), and the from-scratch baseline plus the
+power-method reference solve the same personalized fixed point, so
+all cross-checks hold verbatim.
+`serve` runs the PPR query tier: a recurring mix of multi-source
+queries over a churning graph, answered through an LRU cache of warm
+push states that graph deltas invalidate *incrementally* (the cached
+state absorbs exactly the residual the delta created — no cold
+re-solves). `--queries Q` per churn round, drawn from a pool of
+`--distinct D` source sets of `--sources S` nodes each; `--cache-cap
+C` warm entries; every answer carries a certified top-`--topk K`
+head. Reports hit rate, warm-vs-cold push split, and p50/p99 latency.
 `--term` picks how the threaded drains stop: `protocol` (default) is
 the paper's §4.2 persistence-counter protocol — workers announce
 CONVERGE after `--pc-max N` (default 3) consecutive locally-converged
@@ -184,6 +209,18 @@ fn parse_stall(v: &str) -> anyhow::Result<StallInjection> {
         ms: parts[1].parse()?,
         after_rounds: parts.get(2).map(|r| r.parse()).transpose()?.unwrap_or(0),
     })
+}
+
+/// Parse `SRC[,SRC..]` — the comma-separated node-id list behind
+/// `--ppr`.
+fn parse_sources(v: &str) -> anyhow::Result<Vec<u32>> {
+    v.split(',')
+        .map(|s| {
+            s.trim()
+                .parse::<u32>()
+                .map_err(|e| anyhow::anyhow!("source list wants node ids, got {s:?}: {e}"))
+        })
+        .collect()
 }
 
 /// Serialize a trace document, write it, and re-parse the written
@@ -427,6 +464,9 @@ fn cmd_stream(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     if flags.contains_key("topk-stop") {
         opts.topk_stop = true;
     }
+    if let Some(v) = flags.get("ppr") {
+        opts.ppr = Some(parse_sources(v)?);
+    }
     if let Some(v) = flags.get("term") {
         opts.term = match v.as_str() {
             "protocol" => TermMode::Protocol,
@@ -469,13 +509,17 @@ fn cmd_stream(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         .map(|_| Arc::new(TraceCollector::new(obs::DEFAULT_RING_CAP, trace_sample_us)));
 
     eprintln!(
-        "streaming {graph}: {} update epochs, tol {:.0e}, alpha {}, threads {}{}{} ...",
+        "streaming {graph}: {} update epochs, tol {:.0e}, alpha {}, threads {}{}{}{} ...",
         opts.epochs,
         opts.tol,
         opts.alpha,
         opts.threads,
         if opts.resident { " (epoch-resident shards)" } else { "" },
-        if opts.steal { " (work stealing)" } else { "" }
+        if opts.steal { " (work stealing)" } else { "" },
+        opts.ppr
+            .as_ref()
+            .map(|s| format!(" (PPR over {} sources)", s.len()))
+            .unwrap_or_default()
     );
     let rep = experiments::stream_epochs(&graph, &opts)?;
     let md = stream_markdown(&rep.rows);
@@ -602,6 +646,101 @@ fn cmd_stream(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let l1_ok = opts.topk_stop || rep.final_l1_vs_power < l1_bar;
     if !rep.all_updates_cheaper || !l1_ok || !heads_exact {
         anyhow::bail!("stream acceptance check failed (see report above)");
+    }
+    Ok(())
+}
+
+fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let graph = flags
+        .get("graph")
+        .cloned()
+        .unwrap_or_else(|| "scaled:20000".to_string());
+    let mut opts = experiments::ServeRunOptions::default();
+    if let Some(v) = flags.get("epochs") {
+        opts.epochs = v.parse()?;
+    }
+    if let Some(v) = flags.get("seed") {
+        opts.seed = v.parse()?;
+    }
+    if let Some(v) = flags.get("tol") {
+        opts.tol = v.parse()?;
+    }
+    if let Some(v) = flags.get("alpha") {
+        opts.alpha = v.parse()?;
+    }
+    if let Some(v) = flags.get("queries") {
+        opts.queries_per_epoch = v.parse()?;
+    }
+    if let Some(v) = flags.get("distinct") {
+        opts.distinct_queries = v.parse()?;
+    }
+    if let Some(v) = flags.get("sources") {
+        opts.sources_per_query = v.parse()?;
+    }
+    if let Some(v) = flags.get("cache-cap") {
+        opts.cache_cap = v.parse()?;
+    }
+    if let Some(v) = flags.get("topk") {
+        opts.topk = v.parse()?;
+    }
+    eprintln!(
+        "serving {graph}: {} churn rounds x {} queries, pool {} x {} sources, \
+         cache {} entries, top-{} ...",
+        opts.epochs,
+        opts.queries_per_epoch,
+        opts.distinct_queries,
+        opts.sources_per_query,
+        opts.cache_cap,
+        opts.topk
+    );
+    let rep = experiments::serve_queries(&graph, &opts)?;
+    println!(
+        "answered {} queries: hit rate {:.2}, {} evictions, {} certified heads",
+        rep.queries,
+        rep.hit_rate,
+        rep.evictions,
+        rep.certified
+    );
+    println!(
+        "pushes: {} warm (cache hits staying current under churn) vs {} cold",
+        rep.warm_pushes, rep.cold_pushes
+    );
+    println!("latency: p50 {:.0} us, p99 {:.0} us", rep.p50_us, rep.p99_us);
+    if let Some(stem) = flags.get("out") {
+        let mut report = Report::new();
+        report.add_section(
+            "PPR serving tier",
+            &format!(
+                "queries {} | hit rate {:.2} | warm pushes {} | cold pushes {} | \
+                 p50 {:.0}us | p99 {:.0}us",
+                rep.queries, rep.hit_rate, rep.warm_pushes, rep.cold_pushes, rep.p50_us,
+                rep.p99_us
+            ),
+        );
+        let mut obj = std::collections::BTreeMap::new();
+        obj.insert("queries".to_string(), Json::Num(rep.queries as f64));
+        obj.insert("hit_rate".to_string(), Json::Num(rep.hit_rate));
+        obj.insert("evictions".to_string(), Json::Num(rep.evictions as f64));
+        obj.insert("warm_pushes".to_string(), Json::Num(rep.warm_pushes as f64));
+        obj.insert("cold_pushes".to_string(), Json::Num(rep.cold_pushes as f64));
+        obj.insert("p50_us".to_string(), Json::Num(rep.p50_us));
+        obj.insert("p99_us".to_string(), Json::Num(rep.p99_us));
+        obj.insert("certified".to_string(), Json::Num(rep.certified as f64));
+        report.add_json("serve", Json::Obj(obj));
+        report.write(stem)?;
+        eprintln!("wrote {stem}.md / {stem}.json");
+    }
+    // a warm answer re-certifies on residual the churn actually
+    // injected; if the cache never pays off the tier is mis-wired
+    if rep.hit_rate > 0.0 {
+        let warm_per_hit = rep.warm_pushes as f64 / (rep.queries as f64 * rep.hit_rate).max(1.0);
+        let cold_per_miss =
+            rep.cold_pushes as f64 / (rep.queries as f64 * (1.0 - rep.hit_rate)).max(1.0);
+        anyhow::ensure!(
+            warm_per_hit < cold_per_miss,
+            "serve acceptance check failed: warm queries averaged {warm_per_hit:.0} pushes \
+             vs {cold_per_miss:.0} cold"
+        );
     }
     Ok(())
 }

@@ -20,4 +20,4 @@ pub use linsys::{gauss_seidel, jacobi, LinsysOptions};
 pub use operators::PagerankProblem;
 pub use power::{power_method, PowerOptions, PowerResult};
 pub use ranking::{kendall_tau, rank_of, top_k_ids, top_k_overlap};
-pub use residual::{l1_diff, l1_norm, linf_diff, normalize_l1};
+pub use residual::{l1_diff, l1_diff_f64, l1_norm, l1_norm_f64, linf_diff, normalize_l1};

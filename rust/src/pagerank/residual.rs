@@ -1,15 +1,27 @@
 //! Vector norms and residuals (the convergence signals of §5.2).
 
-/// ||x||_1 (f64 accumulation: at web scale an f32 sum of 3e5 terms
-/// loses the very digits the 1e-6 stopping rule needs).
-pub fn l1_norm(x: &[f32]) -> f32 {
-    x.iter().map(|v| v.abs() as f64).sum::<f64>() as f32
+/// ||x||_1 with the full f64 tally exposed (at web scale an f32 sum
+/// of 10⁶ terms carries rounding error the same order as the 1e-6
+/// thresholds being certified — keep storage f32, accumulate f64).
+pub fn l1_norm_f64(x: &[f32]) -> f64 {
+    x.iter().map(|v| v.abs() as f64).sum::<f64>()
 }
 
-/// ||a - b||_1 — the local/global convergence criterion of the paper.
-pub fn l1_diff(a: &[f32], b: &[f32]) -> f32 {
+/// ||x||_1, narrowed for f32 call sites.
+pub fn l1_norm(x: &[f32]) -> f32 {
+    l1_norm_f64(x) as f32
+}
+
+/// ||a - b||_1 — the local/global convergence criterion of the paper —
+/// with the full f64 tally exposed (see [`l1_norm_f64`]).
+pub fn l1_diff_f64(a: &[f32], b: &[f32]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
-    a.iter().zip(b).map(|(x, y)| (x - y).abs() as f64).sum::<f64>() as f32
+    a.iter().zip(b).map(|(x, y)| (x - y).abs() as f64).sum::<f64>()
+}
+
+/// ||a - b||_1, narrowed for f32 call sites.
+pub fn l1_diff(a: &[f32], b: &[f32]) -> f32 {
+    l1_diff_f64(a, b) as f32
 }
 
 /// ||a - b||_inf.

@@ -1,0 +1,189 @@
+//! Sparse personalization vectors — the `v` in `x = αSx + (1−α)v`.
+//!
+//! The classic (global) PageRank takes `v = e/n`; personalized PageRank
+//! (PPR) replaces it with an arbitrary nonnegative vector, usually
+//! supported on a handful of source nodes (Berkhin's survey lineage).
+//! The push machinery only ever needs `v` through three views, all
+//! cheap for a sparse vector:
+//!
+//! * its **entries** `(node, weight)` — the `O(nnz(v))` flush targets
+//!   of the pending-`v` scalar (see [`PushState`]'s `rv`);
+//! * its **total mass** `Σv` — the fixed point satisfies
+//!   `Σp + R/(1−α) = Σv`, so every mass-conservation check compares
+//!   against `total()` instead of `1`;
+//! * per-shard **`v`-mass shares** `Σ_{i∈shard} v_i` — how the sharded
+//!   engine weighs the replicated pending-`v` scalar, exactly like
+//!   `|B_s|/n` weighs the pending-uniform one.
+//!
+//! Dangling redistribution is a separate policy choice:
+//! [`dangling_to_v`](Personalization::dangling_to_v) routes dangling
+//! mass back through `v` (the standard PPR random surfer, and the
+//! choice that keeps a query's residual *localized* around its
+//! sources), while `false` keeps the global solver's uniform `e/n`
+//! redistribution. With a uniform `v` the two are identical.
+//!
+//! Weights must be finite and strictly positive — a NaN here is how a
+//! "degenerate personalization vector" would poison the bucket queue
+//! (see `BucketQueue::bucket_of`), so it is rejected at construction.
+//!
+//! [`PushState`]: super::PushState
+
+use crate::Result;
+
+/// A validated sparse personalization vector: entries sorted by node
+/// id, duplicate ids merged, every weight finite and `> 0`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Personalization {
+    /// `(node, weight)` sorted by node id, deduplicated.
+    entries: Vec<(u32, f64)>,
+    /// `Σ weights` — the target mass of the fixed point.
+    total: f64,
+    /// `max weight` — bounds any single row's `v`-share (the top-k
+    /// rest-bound needs it).
+    vmax: f64,
+    /// Route dangling mass through `v` instead of `e/n`.
+    dangling_to_v: bool,
+}
+
+impl Personalization {
+    /// Build from raw `(node, weight)` pairs. Duplicates are merged by
+    /// summing; non-finite or non-positive weights are rejected.
+    pub fn from_entries(entries: Vec<(u32, f64)>, dangling_to_v: bool) -> Result<Self> {
+        anyhow::ensure!(!entries.is_empty(), "personalization vector needs at least one entry");
+        let mut entries = entries;
+        entries.sort_unstable_by_key(|&(t, _)| t);
+        let mut merged: Vec<(u32, f64)> = Vec::with_capacity(entries.len());
+        for (t, w) in entries {
+            anyhow::ensure!(
+                w.is_finite() && w > 0.0,
+                "personalization weight for node {t} must be finite and > 0, got {w}"
+            );
+            match merged.last_mut() {
+                Some(last) if last.0 == t => last.1 += w,
+                _ => merged.push((t, w)),
+            }
+        }
+        let total: f64 = merged.iter().map(|&(_, w)| w).sum();
+        anyhow::ensure!(total.is_finite() && total > 0.0, "personalization mass must be finite");
+        let vmax = merged.iter().map(|&(_, w)| w).fold(0.0f64, f64::max);
+        Ok(Personalization { entries: merged, total, vmax, dangling_to_v })
+    }
+
+    /// The canonical single-source PPR query: all teleport mass on one
+    /// node, dangling mass following it.
+    pub fn single_source(u: u32) -> Self {
+        Personalization { entries: vec![(u, 1.0)], total: 1.0, vmax: 1.0, dangling_to_v: true }
+    }
+
+    /// Uniform over a set of source nodes (total mass 1), dangling mass
+    /// following the set.
+    pub fn sources(ids: &[u32]) -> Result<Self> {
+        anyhow::ensure!(!ids.is_empty(), "source set must be non-empty");
+        let w = 1.0 / ids.len() as f64;
+        Self::from_entries(ids.iter().map(|&u| (u, w)).collect(), true)
+    }
+
+    /// The explicit uniform vector over `n` nodes — only used by the
+    /// equivalence tests (the global path keeps its implicit `e/n`).
+    pub fn uniform(n: usize, dangling_to_v: bool) -> Self {
+        let w = 1.0 / n as f64;
+        Personalization {
+            entries: (0..n as u32).map(|t| (t, w)).collect(),
+            total: 1.0,
+            vmax: w,
+            dangling_to_v,
+        }
+    }
+
+    /// Sorted, deduplicated `(node, weight)` pairs.
+    pub fn entries(&self) -> &[(u32, f64)] {
+        &self.entries
+    }
+
+    /// `Σv` — what `Σp + R/(1−α)` conserves.
+    pub fn total(&self) -> f64 {
+        self.total
+    }
+
+    /// Largest single weight.
+    pub(crate) fn vmax(&self) -> f64 {
+        self.vmax
+    }
+
+    /// Whether dangling mass redistributes along `v` (vs. uniform).
+    pub fn dangling_to_v(&self) -> bool {
+        self.dangling_to_v
+    }
+
+    /// Largest node id carrying weight (the state must be at least this
+    /// big).
+    pub fn max_node(&self) -> u32 {
+        self.entries.last().map(|&(t, _)| t).unwrap_or(0)
+    }
+
+    /// `v_t` (0 for nodes outside the support). Binary search —
+    /// intended for small per-check lookups (top-k centers), not hot
+    /// loops.
+    pub(crate) fn weight_of(&self, t: u32) -> f64 {
+        match self.entries.binary_search_by_key(&t, |&(id, _)| id) {
+            Ok(i) => self.entries[i].1,
+            Err(_) => 0.0,
+        }
+    }
+
+    /// `Σ v_t` over `lo <= t < hi` — a shard's `v`-mass share.
+    pub(crate) fn share_of_range(&self, lo: usize, hi: usize) -> f64 {
+        let a = self.entries.partition_point(|&(t, _)| (t as usize) < lo);
+        let b = self.entries.partition_point(|&(t, _)| (t as usize) < hi);
+        self.entries[a..b].iter().map(|&(_, w)| w).sum()
+    }
+
+    /// The `(local-index, weight)` entries falling in `[lo, hi)` — a
+    /// shard's local flush targets.
+    pub(crate) fn entries_in_range(&self, lo: usize, hi: usize) -> Vec<(u32, f64)> {
+        let a = self.entries.partition_point(|&(t, _)| (t as usize) < lo);
+        let b = self.entries.partition_point(|&(t, _)| (t as usize) < hi);
+        self.entries[a..b].iter().map(|&(t, w)| (t - lo as u32, w)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merges_sorts_and_totals() {
+        let p = Personalization::from_entries(vec![(7, 0.5), (2, 1.0), (7, 0.25)], true).unwrap();
+        assert_eq!(p.entries(), &[(2, 1.0), (7, 0.75)]);
+        assert!((p.total() - 1.75).abs() < 1e-15);
+        assert_eq!(p.vmax(), 1.0);
+        assert_eq!(p.max_node(), 7);
+        assert_eq!(p.weight_of(7), 0.75);
+        assert_eq!(p.weight_of(3), 0.0);
+    }
+
+    #[test]
+    fn rejects_degenerate_weights() {
+        assert!(Personalization::from_entries(vec![], true).is_err());
+        assert!(Personalization::from_entries(vec![(0, f64::NAN)], true).is_err());
+        assert!(Personalization::from_entries(vec![(0, f64::INFINITY)], true).is_err());
+        assert!(Personalization::from_entries(vec![(0, 0.0)], true).is_err());
+        assert!(Personalization::from_entries(vec![(0, -1.0)], true).is_err());
+    }
+
+    #[test]
+    fn range_views_partition_the_mass() {
+        let p = Personalization::from_entries(
+            vec![(1, 0.1), (4, 0.2), (5, 0.3), (9, 0.4)],
+            false,
+        )
+        .unwrap();
+        let s: f64 = [(0usize, 5usize), (5, 8), (8, 12)]
+            .iter()
+            .map(|&(lo, hi)| p.share_of_range(lo, hi))
+            .sum();
+        assert!((s - p.total()).abs() < 1e-15);
+        assert_eq!(p.entries_in_range(5, 8), vec![(0, 0.3)]);
+        assert_eq!(p.entries_in_range(8, 12), vec![(1, 0.4)]);
+    }
+}

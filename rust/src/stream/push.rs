@@ -35,7 +35,10 @@
 //! f32's 24-bit mantissa, and the from-scratch equivalence tests pin
 //! incremental vs. cold solves to 1e-8 in L1.
 
+use std::sync::Arc;
+
 use super::delta::{AppliedDelta, DeltaGraph};
+use super::pers::Personalization;
 
 /// Approximate-max priority queue over residual magnitudes — shared by
 /// [`PushState`] (global solves) and `PushBlockOp` (block-local inner
@@ -69,7 +72,18 @@ impl BucketQueue {
 
     #[inline]
     fn bucket_of(vabs: f64) -> Option<usize> {
-        if vabs <= 0.0 {
+        // A NaN magnitude would slip past `<= 0.0`, land in bucket 0
+        // (`-NaN.log2() as usize` is 0) and loop forever: pushing a NaN
+        // residual re-emits NaN, so the queue never drains. Residuals
+        // can only go non-finite through a poisoned input (a degenerate
+        // personalization vector, an inf weight), so fail loudly in
+        // debug builds and refuse to queue the node in release — the
+        // exact recompute before convergence still surfaces the damage.
+        debug_assert!(
+            vabs.is_finite(),
+            "non-finite residual magnitude {vabs} reached the bucket queue"
+        );
+        if !vabs.is_finite() || vabs <= 0.0 {
             return None;
         }
         let e = -vabs.log2();
@@ -129,12 +143,13 @@ impl BucketQueue {
 pub struct SolveStats {
     /// Pushes performed by this solve.
     pub pushes: u64,
-    /// O(n) flushes of the pending-uniform scalar.
+    /// Flushes of the pending scalars (O(n) uniform, O(nnz(v))
+    /// personalized).
     pub flushes: u64,
     /// Distinct nodes whose state changed since `begin_epoch`
     /// (delta injection included).
     pub touched: usize,
-    /// Residual mass `‖r‖₁ + |rd|` at exit.
+    /// Residual mass `‖r‖₁ + |rd| + |rv|` at exit.
     pub residual: f64,
     /// Whether the tolerance was reached (vs. the push budget).
     pub converged: bool,
@@ -143,12 +158,22 @@ pub struct SolveStats {
 /// Persistent push-solver state: survives across epochs so each solve
 /// warm-starts from the previous fixed point.
 ///
+/// The right-hand side defaults to the uniform teleport `e/n`; a state
+/// built with [`new_personalized`](Self::new_personalized) solves the
+/// personalized system `x = αSx + (1−α)v` instead. The sparse `v` is
+/// materialized into `r` at construction, and a second pending scalar
+/// `rv` (standing for `rv·v_t/Σv` mass on each support node) absorbs
+/// dangling redistribution when the vector routes it through `v` —
+/// flushed in `O(nnz(v))`, the personalized analogue of the `O(n)`
+/// uniform flush.
+///
 /// Two contracts every consumer leans on:
 ///
-/// * **Mass conservation** — with `R = Σr + rd` the signed residual,
-///   `Σp + R/(1−α) = 1` holds after every push, flush, and
+/// * **Mass conservation** — with `R = Σr + rd + rv` the signed
+///   residual, `Σp + R/(1−α) = Σv` holds after every push, flush, and
 ///   [`apply_batch`](Self::apply_batch) (each push at mass `m` settles
-///   `m` and re-emits exactly `α·m`). [`residual_l1`](Self::residual_l1)
+///   `m` and re-emits exactly `α·m`); `Σv = 1` for the uniform default.
+///   [`residual_l1`](Self::residual_l1)
 ///   upper-bounds the rank error by `residual/(1−α)` in L1, which is
 ///   what makes any intermediate state servable.
 /// * **Head-generation invalidation** — an attached
@@ -168,6 +193,11 @@ pub struct PushState {
     pub(crate) r: Vec<f64>,
     /// Pending uniform residual: stands for `rd/n` on every node.
     pub(crate) rd: f64,
+    /// Pending personalization residual: stands for `rv·v_t/Σv` on
+    /// each support node of `pers` (always 0 on the uniform path).
+    pub(crate) rv: f64,
+    /// Personalization vector (`None` = the uniform teleport `e/n`).
+    pub(crate) pers: Option<Arc<Personalization>>,
     /// Maintained Σ|r| (re-verified exactly before declaring
     /// convergence, so incremental drift cannot cause early exit).
     pub(crate) r_l1: f64,
@@ -208,6 +238,8 @@ impl PushState {
             p: vec![0.0; n],
             r: vec![0.0; n],
             rd: 1.0 - alpha,
+            rv: 0.0,
+            pers: None,
             r_l1: 0.0,
             r_sum: 0.0,
             queue: BucketQueue::new(n),
@@ -219,6 +251,24 @@ impl PushState {
             touched: 0,
             total_pushes: 0,
         }
+    }
+
+    /// Cold personalized state: `p = 0`, the sparse right-hand side
+    /// `(1-α)·v` materialized directly into `r` (only `nnz(v)` rows —
+    /// a PPR query's cold start costs `O(nnz(v))`, not `O(n)`).
+    pub fn new_personalized(n: usize, alpha: f64, pers: Arc<Personalization>) -> Self {
+        let mut st = Self::new(n, alpha);
+        assert!(
+            (pers.max_node() as usize) < n,
+            "personalization entry {} out of bounds for n={n}",
+            pers.max_node()
+        );
+        st.rd = 0.0;
+        for &(t, w) in pers.entries() {
+            st.add_r(t as usize, (1.0 - alpha) * w);
+        }
+        st.pers = Some(pers);
+        st
     }
 
     pub fn n(&self) -> usize {
@@ -234,10 +284,21 @@ impl PushState {
         &self.p
     }
 
-    /// Residual mass `‖r‖₁ + |rd|` (upper-bounds the rank error by
-    /// `residual/(1-α)` in L1).
+    /// Residual mass `‖r‖₁ + |rd| + |rv|` (upper-bounds the rank error
+    /// by `residual/(1-α)` in L1).
     pub fn residual_l1(&self) -> f64 {
-        self.r_l1 + self.rd.abs()
+        self.r_l1 + self.rd.abs() + self.rv.abs()
+    }
+
+    /// The personalization vector this state solves against (`None` =
+    /// uniform teleport).
+    pub fn personalization(&self) -> Option<&Arc<Personalization>> {
+        self.pers.as_ref()
+    }
+
+    /// `Σv` — what `Σp + R/(1−α)` converges to (1 on the uniform path).
+    pub fn target_mass(&self) -> f64 {
+        self.pers.as_ref().map_or(1.0, |p| p.total())
     }
 
     pub fn total_pushes(&self) -> u64 {
@@ -264,6 +325,11 @@ impl PushState {
         self.rd
     }
 
+    /// Pending personalization residual scalar.
+    pub(crate) fn pending_v(&self) -> f64 {
+        self.rv
+    }
+
     /// Credit pushes performed outside this state (a sharded parallel
     /// drain) to the lifetime counter.
     pub(crate) fn add_pushes(&mut self, k: u64) {
@@ -275,7 +341,7 @@ impl PushState {
     /// counters; rebuilds the queue and the residual tally from `r`.
     /// The node count must be unchanged (deltas are applied on the
     /// global state *before* scattering).
-    pub(crate) fn adopt_parts(&mut self, p: Vec<f64>, r: Vec<f64>, rd: f64) {
+    pub(crate) fn adopt_parts(&mut self, p: Vec<f64>, r: Vec<f64>, rd: f64, rv: f64) {
         assert_eq!(p.len(), self.p.len(), "adopt_parts must not resize");
         assert_eq!(r.len(), self.p.len(), "adopt_parts must not resize");
         // stamp every node the sharded phase changed, so the epoch's
@@ -288,6 +354,7 @@ impl PushState {
         self.p = p;
         self.r = r;
         self.rd = rd;
+        self.rv = rv;
         let (queue, l1) = BucketQueue::seeded_from(&self.r);
         self.queue = queue;
         self.r_l1 = l1;
@@ -341,6 +408,22 @@ impl PushState {
         }
     }
 
+    /// Distribute the pending personalization scalar into `r` over the
+    /// support of `v` — `O(nnz(v))`, the cheap flush that keeps a PPR
+    /// query's work proportional to its locality.
+    fn flush_v(&mut self) {
+        let m = self.rv;
+        self.rv = 0.0;
+        if m == 0.0 {
+            return;
+        }
+        let pers = self.pers.clone().expect("rv is only fed on personalized states");
+        let scale = m / pers.total();
+        for &(t, w) in pers.entries() {
+            self.add_r(t as usize, scale * w);
+        }
+    }
+
     /// Exact recomputation of Σ|r| and Σr (guards the incremental
     /// tallies; the signed sum re-tallies in the same pass so the
     /// certifier's residual split stays honest too).
@@ -370,7 +453,13 @@ impl PushState {
         self.touch(u);
         let d = g.outdeg(u);
         if d == 0 {
-            self.rd += self.alpha * m;
+            // dangling mass follows the personalization vector when it
+            // asks for it, the uniform e/n otherwise
+            if self.pers.as_ref().is_some_and(|p| p.dangling_to_v()) {
+                self.rv += self.alpha * m;
+            } else {
+                self.rd += self.alpha * m;
+            }
         } else {
             let w = self.alpha * m / d as f64;
             for &t in g.out(u) {
@@ -392,23 +481,29 @@ impl PushState {
         let (n0, n1) = (delta.old_n, delta.new_n);
         let alpha = self.alpha;
 
+        let dangling_to_v = self.pers.as_ref().is_some_and(|p| p.dangling_to_v());
         if n1 != n0 {
             // The pending uniform stands for rd/n0 per old node; make it
-            // explicit before the node count changes its meaning.
+            // explicit before the node count changes its meaning. (The
+            // pending-v scalar's shape is the fixed support of v — it
+            // does not depend on n, so it needs no flush here.)
             self.flush();
             self.p.resize(n1, 0.0);
             self.r.resize(n1, 0.0);
             self.stamp.resize(n1, 0);
             self.queue.grow(n1);
 
-            // Teleport + dangling-redistribution columns are uniform
-            // e/n; growing n rescales them everywhere. Both scale with
-            // the same uniform shape: total mass (1-α) + α·Σ_{dangling} p.
-            // The OLD dangling set is what p was converged against:
-            // changed sources report their old lists, everyone else
-            // kept today's.
-            let mut old_dangling_mass = 0.0f64;
-            {
+            // Whatever part of the right-hand side is uniform e/n gets
+            // rescaled by the growth: the teleport column only on the
+            // uniform path (a personalized v is n-independent), and the
+            // dangling-redistribution columns only when dangling mass
+            // goes uniform. Both scale with the same uniform shape. The
+            // OLD dangling set is what p was converged against: changed
+            // sources report their old lists, everyone else kept
+            // today's.
+            let mut uniform_mass = if self.pers.is_none() { 1.0 - alpha } else { 0.0 };
+            if !dangling_to_v {
+                let mut old_dangling_mass = 0.0f64;
                 // changed_sources is sorted by source id (BTreeMap order)
                 let mut changed_iter = delta.changed_sources.iter().peekable();
                 for u in 0..n0 {
@@ -424,22 +519,24 @@ impl PushState {
                         old_dangling_mass += self.p[u];
                     }
                 }
+                uniform_mass += alpha * old_dangling_mass;
             }
-            let uniform_mass = (1.0 - alpha) + alpha * old_dangling_mass;
-            let shift_old = uniform_mass * (1.0 / n1 as f64 - 1.0 / n0 as f64);
-            let add_new = uniform_mass / n1 as f64;
-            for t in 0..n0 {
-                self.add_r(t, shift_old);
-            }
-            for t in n0..n1 {
-                self.add_r(t, add_new);
+            if uniform_mass != 0.0 {
+                let shift_old = uniform_mass * (1.0 / n1 as f64 - 1.0 / n0 as f64);
+                let add_new = uniform_mass / n1 as f64;
+                for t in 0..n0 {
+                    self.add_r(t, shift_old);
+                }
+                for t in n0..n1 {
+                    self.add_r(t, add_new);
+                }
             }
         }
 
         // Invariant now holds for the mid-graph (old edges, new size).
         // Swap each changed source's old column of αS for its new one:
-        // r += α(S' - S) p, column by column. Uniform (dangling)
-        // columns go through the pending scalar.
+        // r += α(S' - S) p, column by column. Dangling columns go
+        // through whichever pending scalar the redistribution uses.
         for (s, old_out) in &delta.changed_sources {
             let u = *s as usize;
             let q = alpha * self.p[u];
@@ -447,7 +544,11 @@ impl PushState {
                 continue;
             }
             if old_out.is_empty() {
-                self.rd -= q;
+                if dangling_to_v {
+                    self.rv -= q;
+                } else {
+                    self.rd -= q;
+                }
             } else {
                 let w = q / old_out.len() as f64;
                 for &t in old_out {
@@ -456,7 +557,11 @@ impl PushState {
             }
             let new_out = g.out(u);
             if new_out.is_empty() {
-                self.rd += q;
+                if dangling_to_v {
+                    self.rv += q;
+                } else {
+                    self.rd += q;
+                }
             } else {
                 let w = q / new_out.len() as f64;
                 for &t in new_out {
@@ -466,27 +571,33 @@ impl PushState {
         }
     }
 
-    /// Run Gauss–Southwell pushes until `‖r‖₁ + |rd| < tol` or the push
-    /// budget is exhausted.
+    /// Run Gauss–Southwell pushes until `‖r‖₁ + |rd| + |rv| < tol` or
+    /// the push budget is exhausted.
     pub fn solve(&mut self, g: &DeltaGraph, tol: f64, max_pushes: u64) -> SolveStats {
         assert_eq!(self.n(), g.n(), "state sized to a different graph");
         assert!(tol > 0.0, "tol must be positive");
         let mut pushes = 0u64;
         let mut flushes = 0u64;
         let converged = loop {
-            if self.r_l1 + self.rd.abs() < tol {
+            if self.residual_l1() < tol {
                 // confirm against an exact tally before declaring victory
                 self.recompute_r_l1();
-                if self.r_l1 + self.rd.abs() < tol {
+                if self.residual_l1() < tol {
                     break true;
                 }
             }
             if pushes >= max_pushes {
                 break false;
             }
-            // When the pending uniform dominates what is materialized,
+            // When a pending scalar dominates what is materialized,
             // spread it — otherwise we would grind through ever-smaller
-            // entries while the real mass hides in the scalar.
+            // entries while the real mass hides in the scalar. The
+            // personalized flush is O(nnz(v)), the uniform one O(n).
+            if self.rv.abs() >= self.r_l1.max(0.5 * tol) {
+                self.flush_v();
+                flushes += 1;
+                continue;
+            }
             if self.rd.abs() >= self.r_l1.max(0.5 * tol) {
                 self.flush();
                 flushes += 1;
@@ -498,13 +609,17 @@ impl PushState {
                     pushes += 1;
                 }
                 None => {
-                    // queue drained: all r[u] == 0, only rd (or drift) left
-                    if self.rd != 0.0 {
+                    // queue drained: all r[u] == 0, only the pending
+                    // scalars (or drift) left
+                    if self.rv != 0.0 {
+                        self.flush_v();
+                        flushes += 1;
+                    } else if self.rd != 0.0 {
                         self.flush();
                         flushes += 1;
                     } else {
                         self.recompute_r_l1();
-                        break self.r_l1 + self.rd.abs() < tol;
+                        break self.residual_l1() < tol;
                     }
                 }
             }
@@ -513,8 +628,36 @@ impl PushState {
             pushes,
             flushes,
             touched: self.touched,
-            residual: self.r_l1 + self.rd.abs(),
+            residual: self.residual_l1(),
             converged,
+        }
+    }
+
+    /// Pop the (approximately) hottest queued node — the batched serve
+    /// engine's scheduling hook. The popped node's residual stays in
+    /// `r` until [`push_at`](Self::push_at) settles it.
+    pub(crate) fn pop_hottest(&mut self) -> Option<usize> {
+        self.queue.pop()
+    }
+
+    /// Materialized residual at one node.
+    #[inline]
+    pub(crate) fn residual_at(&self, u: usize) -> f64 {
+        self.r[u]
+    }
+
+    /// Settle node `u` for this state, reusing a graph row the batch
+    /// engine already has hot. Safe to call whether or not `u` is
+    /// queued (a stale queue entry costs one no-op pop later).
+    pub(crate) fn push_at(&mut self, g: &DeltaGraph, u: usize) {
+        self.push_node(g, u);
+    }
+
+    /// Flush any pending scalar mass into `r` — the serve tier calls
+    /// this before certification so every row's center is exact.
+    pub(crate) fn settle_pending(&mut self) {
+        if self.rv != 0.0 {
+            self.flush_v();
         }
     }
 }
@@ -553,6 +696,66 @@ pub fn power_method_f64(
         for (yi, xi) in y.iter_mut().zip(&x) {
             *yi = alpha * *yi + base;
             resid += (*yi - *xi).abs();
+        }
+        std::mem::swap(&mut x, &mut y);
+        iters += 1;
+        if resid < tol {
+            break;
+        }
+    }
+    (x, iters)
+}
+
+/// Personalized reference iteration `x ← αP^T x + α·dang·w + (1−α)v`
+/// with `w` the dangling-redistribution vector (`v/Σv` or `e/n` per
+/// the vector's policy) — [`power_method_f64`]'s PPR twin, the gold
+/// standard the serve tier and the equivalence proptests compare
+/// against. Converges to the fixed point with `Σx = Σv`.
+pub fn power_method_pers(
+    g: &DeltaGraph,
+    alpha: f64,
+    pers: &Personalization,
+    tol: f64,
+    max_iters: usize,
+) -> (Vec<f64>, usize) {
+    let n = g.n();
+    assert!(n > 0, "empty graph");
+    assert!((pers.max_node() as usize) < n, "personalization out of bounds");
+    let total = pers.total();
+    let mut x = vec![0.0f64; n];
+    for &(t, w) in pers.entries() {
+        x[t as usize] = w;
+    }
+    let mut y = vec![0.0f64; n];
+    let mut iters = 0;
+    while iters < max_iters {
+        y.iter_mut().for_each(|v| *v = 0.0);
+        let mut dang = 0.0f64;
+        for u in 0..n {
+            let d = g.outdeg(u);
+            if d == 0 {
+                dang += x[u];
+            } else {
+                let w = x[u] / d as f64;
+                for &t in g.out(u) {
+                    y[t as usize] += w;
+                }
+            }
+        }
+        let base = if pers.dangling_to_v() { 0.0 } else { alpha * dang / n as f64 };
+        for yi in y.iter_mut() {
+            *yi = alpha * *yi + base;
+        }
+        for &(t, w) in pers.entries() {
+            let mut add = (1.0 - alpha) * w;
+            if pers.dangling_to_v() {
+                add += alpha * dang * w / total;
+            }
+            y[t as usize] += add;
+        }
+        let mut resid = 0.0f64;
+        for (yi, xi) in y.iter().zip(&x) {
+            resid += (yi - xi).abs();
         }
         std::mem::swap(&mut x, &mut y);
         iters += 1;
@@ -758,6 +961,139 @@ mod tests {
         // re-queue after pop works
         q.update(3, 0.25);
         assert_eq!(q.pop(), Some(3));
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "non-finite residual magnitude")]
+    fn bucket_queue_rejects_nan_magnitude() {
+        let mut q = BucketQueue::new(4);
+        q.update(1, f64::NAN);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "non-finite residual magnitude")]
+    fn bucket_queue_rejects_infinite_magnitude() {
+        let mut q = BucketQueue::new(4);
+        q.update(2, f64::INFINITY);
+    }
+
+    /// The release-mode contract behind the debug assert: a non-finite
+    /// magnitude must never enqueue (bucket 0 would loop forever).
+    #[test]
+    fn bucket_of_refuses_non_finite() {
+        assert_eq!(BucketQueue::bucket_of(f64::NAN), None);
+        assert_eq!(BucketQueue::bucket_of(f64::INFINITY), None);
+        assert_eq!(BucketQueue::bucket_of(f64::NEG_INFINITY), None);
+        assert_eq!(BucketQueue::bucket_of(0.0), None);
+        assert_eq!(BucketQueue::bucket_of(0.5), Some(0));
+    }
+
+    fn pers_mass(s: &PushState) -> f64 {
+        let r: f64 = s.r.iter().sum();
+        let p: f64 = s.p.iter().sum();
+        p + (r + s.rd + s.rv) / (1.0 - s.alpha())
+    }
+
+    #[test]
+    fn single_source_ppr_matches_personalized_power_method() {
+        let g = web(2_000, 21);
+        for dangling_to_v in [true, false] {
+            let pers = Personalization::from_entries(vec![(17, 1.0)], dangling_to_v).unwrap();
+            let pers = Arc::new(pers);
+            let mut s = PushState::new_personalized(g.n(), 0.85, Arc::clone(&pers));
+            s.begin_epoch();
+            let st = s.solve(&g, 1e-11, u64::MAX);
+            assert!(st.converged, "residual {}", st.residual);
+            let (xref, it) = power_method_pers(&g, 0.85, &pers, 1e-12, 10_000);
+            assert!(it < 10_000);
+            let d = l1(s.ranks(), &xref);
+            assert!(d < 1e-9, "dangling_to_v={dangling_to_v}: push vs power drift {d}");
+            assert!((pers_mass(&s) - 1.0).abs() < 1e-9, "mass {}", pers_mass(&s));
+        }
+    }
+
+    #[test]
+    fn weighted_multi_source_ppr_conserves_sigma_v() {
+        let g = web(1_200, 22);
+        let pers = Arc::new(
+            Personalization::from_entries(vec![(3, 0.5), (100, 1.25), (777, 0.25)], true)
+                .unwrap(),
+        );
+        let mut s = PushState::new_personalized(g.n(), 0.85, Arc::clone(&pers));
+        s.begin_epoch();
+        assert!((pers_mass(&s) - 2.0).abs() < 1e-12, "cold mass {}", pers_mass(&s));
+        let st = s.solve(&g, 1e-11, u64::MAX);
+        assert!(st.converged);
+        assert!((pers_mass(&s) - 2.0).abs() < 1e-9, "mass {}", pers_mass(&s));
+        let rank_mass: f64 = s.ranks().iter().sum();
+        assert!((rank_mass - 2.0).abs() < 1e-9, "Σp {rank_mass}");
+        let (xref, _) = power_method_pers(&g, 0.85, &pers, 1e-12, 10_000);
+        assert!(l1(s.ranks(), &xref) < 1e-9);
+    }
+
+    #[test]
+    fn ppr_warm_start_tracks_churn_in_both_dangling_modes() {
+        for dangling_to_v in [true, false] {
+            let mut g = web(1_200, 23);
+            let pers = Arc::new(
+                Personalization::from_entries(vec![(5, 0.7), (42, 0.3)], dangling_to_v).unwrap(),
+            );
+            let mut inc = PushState::new_personalized(g.n(), 0.85, Arc::clone(&pers));
+            inc.begin_epoch();
+            inc.solve(&g, 1e-11, u64::MAX);
+            let mut rng = Rng::new(91);
+            for round in 0..3 {
+                let n = g.n();
+                let mut batch = UpdateBatch { new_nodes: 2, ..Default::default() };
+                for _ in 0..30 {
+                    batch
+                        .insert
+                        .push((rng.range(0, n + 2) as u32, rng.range(0, n) as u32));
+                }
+                let mut edges = Vec::new();
+                g.for_each_edge(|s, d| edges.push((s, d)));
+                for _ in 0..20 {
+                    batch.remove.push(edges[rng.range(0, edges.len())]);
+                }
+                let delta = g.apply(&batch).unwrap();
+                inc.begin_epoch();
+                inc.apply_batch(&g, &delta);
+                let stats = inc.solve(&g, 1e-11, u64::MAX);
+                assert!(stats.converged, "round {round}");
+                let (xref, _) = power_method_pers(&g, 0.85, &pers, 1e-13, 100_000);
+                let d = l1(inc.ranks(), &xref);
+                assert!(
+                    d < 1e-8,
+                    "dangling_to_v={dangling_to_v} round {round}: warm vs power drift {d}"
+                );
+                assert!(
+                    (pers_mass(&inc) - 1.0).abs() < 1e-9,
+                    "round {round}: mass {}",
+                    pers_mass(&inc)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn ppr_cold_start_is_local_for_tight_sources() {
+        // a PPR query must not pay for the whole graph: solving from
+        // one source at a loose tol touches far fewer rows than n on a
+        // graph where most mass never leaves the source's neighborhood
+        let g = web(20_000, 24);
+        let pers = Arc::new(Personalization::single_source(123));
+        let mut s = PushState::new_personalized(g.n(), 0.85, pers);
+        s.begin_epoch();
+        let st = s.solve(&g, 1e-4, u64::MAX);
+        assert!(st.converged);
+        assert!(
+            st.touched < g.n() / 4,
+            "single-source push touched {} of {} rows",
+            st.touched,
+            g.n()
+        );
     }
 
     #[test]

@@ -1,0 +1,442 @@
+//! The PPR serving tier: batched multi-source push over an LRU cache
+//! of hot source states.
+//!
+//! The paper motivates PageRank as the ranking a search engine *serves*
+//! (§1); personalized PageRank turns that into a per-query workload —
+//! millions of users, each with their own teleport vector. This module
+//! is the query tier over the personalized push machinery
+//! ([`Personalization`] / [`PushState::new_personalized`]):
+//!
+//! * **Batched multi-source push** ([`ServeTier::query_batch`]): many
+//!   queries advance in lockstep rounds. Each round, every live query
+//!   proposes its hottest queued row; the other queries of the batch
+//!   *piggyback* on the same row whenever their own residual there is
+//!   non-negligible, so one graph-row fetch (cache-hot adjacency)
+//!   settles the row for the whole batch. Queries whose source sets
+//!   overlap — the realistic hot-query distribution — share most of
+//!   their frontier and amortize one pass over the graph.
+//! * **LRU source cache**: a solved query's [`PushState`] is kept warm,
+//!   keyed by its canonical (sorted, deduplicated) source set. A repeat
+//!   query re-certifies in O(head) instead of re-solving.
+//! * **Incremental invalidation** ([`ServeTier::apply_batch`]): graph
+//!   churn does *not* drop the cache. Each cached state absorbs the
+//!   delta through [`PushState::apply_batch`], which injects exactly
+//!   the residual `α(S'−S)p` the delta created — the next query on
+//!   that source set warm-starts from a nearly-converged vector and
+//!   spends pushes proportional to the *change*, never a cold solve.
+//! * **Certified answers**: every answer carries the top-k head with
+//!   the [`TopKTracker`] set-certificate evaluated on the settled
+//!   state, so a served ranking is provably final, not heuristic.
+//!
+//! The fixed point of each cached state satisfies
+//! `Σp + R/(1−α) = Σv`; everything the tier does — piggyback pushes,
+//! delta injection, certification — preserves that invariant because
+//! it only ever calls the push engine's own primitives.
+//!
+//! [`Personalization`]: super::Personalization
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use super::delta::{AppliedDelta, DeltaGraph};
+use super::pers::Personalization;
+use super::push::PushState;
+use super::topk::{TopKGoal, TopKTracker};
+use crate::Result;
+
+/// Tier configuration.
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    /// Damping factor shared by every query state.
+    pub alpha: f64,
+    /// Per-query residual target: an answer is returned once
+    /// `‖r‖₁ + |rd| + |rv| < tol` for its state.
+    pub tol: f64,
+    /// Distinct source sets kept warm (0 disables caching — every
+    /// query solves cold and is dropped after answering).
+    pub cache_cap: usize,
+    /// Head size certified per answer (0 skips head maintenance).
+    pub topk: usize,
+    /// Push budget per query per call (batch piggybacking counts
+    /// against the state it advances). The answer stays sound when it
+    /// fires — just possibly uncertified.
+    pub max_pushes: u64,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions { alpha: 0.85, tol: 1e-10, cache_cap: 64, topk: 16, max_pushes: u64::MAX }
+    }
+}
+
+/// Running tier counters (monotone across the tier's lifetime).
+#[derive(Debug, Clone, Default)]
+pub struct ServeStats {
+    /// Queries answered.
+    pub queries: u64,
+    /// Queries served from a warm cached state.
+    pub hits: u64,
+    /// Queries that built a cold state.
+    pub misses: u64,
+    /// Cache entries dropped by LRU pressure.
+    pub evictions: u64,
+    /// Total pushes spent (batch rounds + finisher solves).
+    pub pushes: u64,
+    /// Pushes spent advancing warm (cache-hit) states.
+    pub warm_pushes: u64,
+    /// Pushes spent on cold builds.
+    pub cold_pushes: u64,
+}
+
+impl ServeStats {
+    /// Fraction of queries served warm (0 when nothing was asked yet).
+    pub fn hit_rate(&self) -> f64 {
+        if self.queries == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.queries as f64
+        }
+    }
+}
+
+/// One served PPR answer.
+#[derive(Debug, Clone)]
+pub struct PprAnswer {
+    /// Canonical (sorted, deduplicated) source set.
+    pub sources: Vec<u32>,
+    /// Top-k head, descending rank (best current estimate even when
+    /// uncertified; empty when `topk == 0`).
+    pub head: Vec<u32>,
+    /// Settled rank estimate for each head node.
+    pub scores: Vec<f64>,
+    /// The head *set* is provably the true personalized top-k.
+    pub set_certified: bool,
+    /// Residual of the answering state at return time.
+    pub residual: f64,
+    /// Pushes this call spent on the answering state. Duplicate source
+    /// sets inside one batch share a state and report the same figure.
+    pub pushes: u64,
+    /// Whether the answering state came from the cache.
+    pub from_cache: bool,
+}
+
+/// A cached source state: the personalized push state plus the
+/// incremental head tracker bound to it (its candidate pools stay warm
+/// across queries too).
+struct CacheEntry {
+    st: PushState,
+    tracker: TopKTracker,
+    last_used: u64,
+}
+
+/// The serving tier. One tier owns one evolving graph's query cache;
+/// feed every epoch's delta through [`apply_batch`](Self::apply_batch)
+/// to keep the cached states aligned with the graph.
+pub struct ServeTier {
+    opts: ServeOptions,
+    cache: HashMap<Vec<u32>, CacheEntry>,
+    /// LRU clock (bumped once per `query_batch` call).
+    tick: u64,
+    stats: ServeStats,
+}
+
+/// In-flight work for one distinct source set of a batch.
+struct WorkItem {
+    key: Vec<u32>,
+    entry: CacheEntry,
+    from_cache: bool,
+    pushes: u64,
+}
+
+impl ServeTier {
+    pub fn new(opts: ServeOptions) -> ServeTier {
+        assert!(opts.tol > 0.0, "tol must be positive");
+        ServeTier { opts, cache: HashMap::new(), tick: 0, stats: ServeStats::default() }
+    }
+
+    pub fn stats(&self) -> &ServeStats {
+        &self.stats
+    }
+
+    /// Warm source sets currently cached.
+    pub fn cache_len(&self) -> usize {
+        self.cache.len()
+    }
+
+    /// Absorb one epoch's graph delta into every cached state — the
+    /// *incremental* invalidation contract: only the residual the delta
+    /// created is injected; no state is dropped or rebuilt.
+    pub fn apply_batch(&mut self, g: &DeltaGraph, delta: &AppliedDelta) {
+        for entry in self.cache.values_mut() {
+            entry.st.begin_epoch();
+            entry.st.apply_batch(g, delta);
+        }
+    }
+
+    /// Answer one query (see [`query_batch`](Self::query_batch)).
+    pub fn query(&mut self, g: &DeltaGraph, sources: &[u32]) -> Result<PprAnswer> {
+        let mut v = self.query_batch(g, &[sources.to_vec()])?;
+        Ok(v.pop().expect("one query in, one answer out"))
+    }
+
+    /// Answer a batch of PPR queries, amortizing graph-row fetches
+    /// across the batch (see the module docs for the round protocol).
+    /// Answers come back in query order; duplicate source sets share
+    /// one state. A degenerate query rejects the whole batch *before*
+    /// any state is touched.
+    pub fn query_batch(&mut self, g: &DeltaGraph, queries: &[Vec<u32>]) -> Result<Vec<PprAnswer>> {
+        // Validate and canonicalize everything up front: an error after
+        // `cache.remove` would leak warm states.
+        let mut keys: Vec<Vec<u32>> = Vec::with_capacity(queries.len());
+        for q in queries {
+            let mut key = q.clone();
+            key.sort_unstable();
+            key.dedup();
+            anyhow::ensure!(!key.is_empty(), "PPR query needs at least one source");
+            anyhow::ensure!(
+                (*key.last().unwrap() as usize) < g.n(),
+                "source {} out of range (n = {})",
+                key.last().unwrap(),
+                g.n()
+            );
+            keys.push(key);
+        }
+
+        let mut work: Vec<WorkItem> = Vec::new();
+        let mut slots: HashMap<Vec<u32>, usize> = HashMap::new();
+        let mut wis: Vec<usize> = Vec::with_capacity(queries.len());
+        for key in keys {
+            let wi = match slots.get(&key) {
+                Some(&wi) => {
+                    // duplicate inside the batch: shares the state, and
+                    // it is warm by construction for the second asker
+                    self.stats.hits += 1;
+                    wi
+                }
+                None => {
+                    let (entry, from_cache) = match self.cache.remove(&key) {
+                        Some(e) => {
+                            self.stats.hits += 1;
+                            (e, true)
+                        }
+                        None => {
+                            self.stats.misses += 1;
+                            let pers = Arc::new(Personalization::sources(&key)?);
+                            let mut st =
+                                PushState::new_personalized(g.n(), self.opts.alpha, pers);
+                            st.begin_epoch();
+                            let tracker = TopKTracker::new(TopKGoal {
+                                k: self.opts.topk,
+                                order: false,
+                            });
+                            (CacheEntry { st, tracker, last_used: 0 }, false)
+                        }
+                    };
+                    work.push(WorkItem { key: key.clone(), entry, from_cache, pushes: 0 });
+                    slots.insert(key, work.len() - 1);
+                    work.len() - 1
+                }
+            };
+            wis.push(wi);
+            self.stats.queries += 1;
+        }
+
+        // Batched push rounds: each live query proposes its hottest
+        // row; the rest of the batch piggybacks while the row is hot.
+        // Any positive piggyback threshold preserves correctness (each
+        // state's own proposals drive it to tol; piggybacking only
+        // front-loads work it would do anyway) — one uniform share of
+        // the tolerance keeps the no-op rate low.
+        let tol = self.opts.tol;
+        let thresh = tol / g.n().max(1) as f64;
+        let mut active: Vec<usize> = (0..work.len()).collect();
+        loop {
+            active.retain(|&qi| {
+                work[qi].pushes < self.opts.max_pushes && work[qi].entry.st.residual_l1() >= tol
+            });
+            let mut progressed = false;
+            for idx in 0..active.len() {
+                let qi = active[idx];
+                let Some(u) = work[qi].entry.st.pop_hottest() else { continue };
+                progressed = true; // even a stale pop drains the queue
+                for (qj, w) in work.iter_mut().enumerate() {
+                    if w.pushes >= self.opts.max_pushes {
+                        continue; // budget-exhausted states stop riding along
+                    }
+                    let r = w.entry.st.residual_at(u);
+                    // the proposer settles its row whenever it still
+                    // carries mass (a piggyback may have zeroed it);
+                    // everyone else piggybacks above the threshold
+                    if (qj == qi && r != 0.0) || (qj != qi && r.abs() >= thresh) {
+                        w.entry.st.push_at(g, u);
+                        w.pushes += 1;
+                    }
+                }
+            }
+            if !progressed {
+                break;
+            }
+        }
+
+        // Finisher: flush pending scalars, confirm convergence against
+        // an exact tally, and certify the head on the settled state.
+        let mut answers_by_wi: Vec<PprAnswer> = Vec::with_capacity(work.len());
+        for w in work.iter_mut() {
+            let remaining = self.opts.max_pushes.saturating_sub(w.pushes).max(1);
+            let solved = w.entry.st.solve(g, tol, remaining);
+            w.pushes += solved.pushes;
+            w.entry.st.settle_pending();
+            let cert = w.entry.tracker.check_state(&mut w.entry.st);
+            let scores: Vec<f64> =
+                cert.head.iter().map(|&t| w.entry.st.ranks()[t as usize]).collect();
+            self.stats.pushes += w.pushes;
+            if w.from_cache {
+                self.stats.warm_pushes += w.pushes;
+            } else {
+                self.stats.cold_pushes += w.pushes;
+            }
+            answers_by_wi.push(PprAnswer {
+                sources: w.key.clone(),
+                head: cert.head,
+                scores,
+                set_certified: cert.set_certified,
+                residual: w.entry.st.residual_l1(),
+                pushes: w.pushes,
+                from_cache: w.from_cache,
+            });
+        }
+
+        // Reinsert and trim to capacity (evict least-recently-used).
+        self.tick += 1;
+        for w in work {
+            let mut entry = w.entry;
+            entry.last_used = self.tick;
+            self.cache.insert(w.key, entry);
+        }
+        while self.cache.len() > self.opts.cache_cap {
+            let victim = self
+                .cache
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| k.clone())
+                .expect("cache over capacity implies non-empty");
+            self.cache.remove(&victim);
+            self.stats.evictions += 1;
+        }
+
+        Ok(wis.into_iter().map(|wi| answers_by_wi[wi].clone()).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::stream::{power_method_pers, UpdateBatch};
+    use crate::util::Rng;
+
+    fn web(n: usize, seed: u64) -> DeltaGraph {
+        let el = generators::power_law_web(&generators::WebParams::scaled(n), seed);
+        DeltaGraph::from_edgelist(&el)
+    }
+
+    fn opts(tol: f64, cap: usize, k: usize) -> ServeOptions {
+        ServeOptions { alpha: 0.85, tol, cache_cap: cap, topk: k, max_pushes: u64::MAX }
+    }
+
+    #[test]
+    fn repeat_query_is_a_hit_and_nearly_free() {
+        let g = web(600, 210);
+        let mut tier = ServeTier::new(opts(1e-10, 8, 10));
+        let a = tier.query(&g, &[5, 11]).unwrap();
+        assert!(!a.from_cache && a.pushes > 0);
+        let b = tier.query(&g, &[11, 5, 11]).unwrap(); // canonicalizes to the same key
+        assert!(b.from_cache, "second ask must hit the cache");
+        assert_eq!(b.pushes, 0, "a converged cached state re-certifies without pushing");
+        assert_eq!(a.head, b.head);
+        assert_eq!(tier.stats().hits, 1);
+        assert_eq!(tier.stats().misses, 1);
+        assert!((tier.stats().hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn answers_match_the_personalized_reference() {
+        let g = web(800, 211);
+        let mut tier = ServeTier::new(opts(1e-12, 8, 12));
+        let batch: Vec<Vec<u32>> = vec![vec![3], vec![40, 41], vec![3, 40]];
+        let answers = tier.query_batch(&g, &batch).unwrap();
+        for (q, a) in batch.iter().zip(&answers) {
+            let pers = Personalization::sources(q).unwrap();
+            let (xref, _) = power_method_pers(&g, 0.85, &pers, 1e-13, 100_000);
+            assert!(a.set_certified, "sources {q:?} must certify on a converged state");
+            let mut got = a.head.clone();
+            let mut want = crate::pagerank::top_k_ids(&xref, 12);
+            got.sort_unstable();
+            want.sort_unstable();
+            assert_eq!(got, want, "sources {q:?}: served head != reference top-12");
+            for (&t, &s) in a.head.iter().zip(&a.scores) {
+                assert!(
+                    (s - xref[t as usize]).abs() < 1e-9,
+                    "sources {q:?}: score for node {t} off: {s} vs {}",
+                    xref[t as usize]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn churn_invalidates_incrementally_and_stays_correct() {
+        let mut g = web(700, 212);
+        let mut tier = ServeTier::new(opts(1e-11, 8, 10));
+        let cold = tier.query(&g, &[7]).unwrap();
+        let mut rng = Rng::new(213);
+        for round in 0..5 {
+            let n = g.n();
+            let mut batch = UpdateBatch::default();
+            for _ in 0..12 {
+                batch.insert.push((rng.range(0, n) as u32, rng.range(0, n) as u32));
+            }
+            let delta = g.apply(&batch).unwrap();
+            tier.apply_batch(&g, &delta);
+            let warm = tier.query(&g, &[7]).unwrap();
+            assert!(warm.from_cache, "round {round}: churn must not drop the cache");
+            // warm re-solve costs a fraction of the cold build
+            assert!(
+                warm.pushes < cold.pushes / 2,
+                "round {round}: warm {} vs cold {} pushes",
+                warm.pushes,
+                cold.pushes
+            );
+            let pers = Personalization::single_source(7);
+            let (xref, _) = power_method_pers(&g, 0.85, &pers, 1e-13, 100_000);
+            let mut got = warm.head.clone();
+            let mut want = crate::pagerank::top_k_ids(&xref, 10);
+            got.sort_unstable();
+            want.sort_unstable();
+            assert_eq!(got, want, "round {round}: cached-then-churned head wrong");
+        }
+    }
+
+    #[test]
+    fn lru_evicts_the_coldest_source_set() {
+        let g = web(300, 214);
+        let mut tier = ServeTier::new(opts(1e-9, 2, 4));
+        tier.query(&g, &[1]).unwrap();
+        tier.query(&g, &[2]).unwrap();
+        tier.query(&g, &[1]).unwrap(); // refresh [1]
+        tier.query(&g, &[3]).unwrap(); // must evict [2]
+        assert_eq!(tier.cache_len(), 2);
+        assert_eq!(tier.stats().evictions, 1);
+        assert!(tier.query(&g, &[1]).unwrap().from_cache);
+        assert!(!tier.query(&g, &[2]).unwrap().from_cache, "[2] was the LRU victim");
+    }
+
+    #[test]
+    fn degenerate_queries_are_rejected() {
+        let g = web(50, 215);
+        let mut tier = ServeTier::new(opts(1e-9, 2, 4));
+        assert!(tier.query(&g, &[]).is_err(), "empty source set");
+        assert!(tier.query(&g, &[50]).is_err(), "source out of range");
+        assert_eq!(tier.stats().queries, 0, "rejected queries must not count");
+    }
+}

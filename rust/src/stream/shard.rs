@@ -62,17 +62,22 @@
 //! # The conserved mass invariant
 //!
 //! The conserved quantity that makes all of this testable: with
-//! `R = Σr + Σ_s uni_s·|B_s|/n + pending outboxes`, the invariant
-//! `Σp + R/(1-α) = 1` holds after every push, exchange, flush, steal,
-//! and repatriation (each push at mass `m` moves `m` into the estimate
+//! `R = Σr + Σ_s uni_s·|B_s|/n + Σ_s pv_s·vshare_s/Σv + pending
+//! outboxes`, the invariant `Σp + R/(1-α) = Σv` (`Σv = 1` on the
+//! uniform path) holds after every push, exchange, flush, steal, and
+//! repatriation (each push at mass `m` moves `m` into the estimate
 //! and re-emits exactly `α·m`; transfers between shards move mass
 //! without creating it). [`ShardedPush::mass`] computes it; the
-//! property tests pin it to 1e-9.
+//! property tests pin it to 1e-9. A personalized engine
+//! ([`ShardedPush::new_personalized`]) carries `pv` — the replicated
+//! pending-`v` scalar, `uni`'s twin weighed by per-shard `v`-mass
+//! shares instead of row counts — through the exact same machinery.
 
 use std::collections::HashMap;
 use std::sync::Arc;
 
 use super::delta::DeltaGraph;
+use super::pers::Personalization;
 use super::push::{BucketQueue, PushState};
 use crate::coordinator::{OwnerMap, Partitioner};
 use crate::obs::{EventKind, Sample, TraceCollector, MONITOR_TRACK};
@@ -83,11 +88,15 @@ use crate::obs::{EventKind, Sample, TraceCollector, MONITOR_TRACK};
 /// receiving shard's rows; `uni` is uniform mass to be spread as
 /// `uni/n` over each of the receiver's rows (the receiver's slice of a
 /// dangling emission — every shard gets its own copy of the scalar, so
-/// the copies jointly cover the whole graph).
+/// the copies jointly cover the whole graph). `pv` is the
+/// personalization twin: pending mass to be spread as `pv·v_t/Σv` over
+/// the receiver's home slice of the personalization support (always 0
+/// on the uniform path).
 #[derive(Debug, Clone)]
 pub struct ResidualFragment {
     pub entries: Vec<(u32, f64)>,
     pub uni: f64,
+    pub pv: f64,
 }
 
 /// One row mid-migration between shards: the full per-row solver state
@@ -149,6 +158,26 @@ pub struct PushShard {
     /// Pending uniform residual, local-share semantics: stands for
     /// `uni/n` on each *local* row (peers hold their own copies).
     pub(crate) uni: f64,
+    /// Pending personalization residual, local-share semantics: stands
+    /// for `pv·v_t/Σv` on each *home* row `t` carrying personalization
+    /// weight (peers hold their own copies; together the copies cover
+    /// the support exactly, just as the `uni` copies cover the graph).
+    /// Always 0 on the uniform path.
+    pub(crate) pv: f64,
+    /// Per-peer `Σ v_t` over each shard's home rows — how the
+    /// replicated `pv` scalar is weighed, exactly like `|B_s|/n`
+    /// weighs `uni`. All zeros on the uniform path.
+    pub(crate) vshares: Vec<f64>,
+    /// `(local index, weight)` flush targets of `pv`: the
+    /// personalization entries homed in `[lo, hi)`. A lent row's flush
+    /// share forwards to its owner through `add_r`, so v-mass
+    /// accounting stays home-based across steals.
+    vlocal: Vec<(u32, f64)>,
+    /// `Σv` across the whole vector (1.0 on the uniform path, so the
+    /// `pv`-share divisions are always safe).
+    pub(crate) vtotal: f64,
+    /// Route dangling emissions through `out_pv` instead of `out_uni`.
+    dangling_to_v: bool,
     queue: BucketQueue,
     /// Head-tracking hook (see [`PushState`]'s twin): local rows whose
     /// `p + r` rises to `head_floor` inside `add_r` are appended to
@@ -156,7 +185,10 @@ pub struct PushShard {
     /// under a settle and the per-shard uniform share is constant
     /// across local rows, so every center movement that could promote
     /// a row into the head passes through `add_r` — a fragment apply,
-    /// a uniform flush, and a delta injection all land here.
+    /// a uniform flush, a `pv` flush, and a delta injection all land
+    /// here. (The `pv` share itself is *not* row-constant, but the
+    /// tracker bounds untracked rows by the max share `pv⁺·vmax/Σv`,
+    /// and its landing on a row goes through `add_r` too.)
     pub(crate) head_floor: f64,
     pub(crate) head_hits: Vec<u32>,
     /// Per-peer dense outbox accumulators (`acc[j]` is indexed by peer
@@ -180,6 +212,10 @@ pub struct PushShard {
     /// Per-peer pending uniform broadcast (dangling emissions waiting
     /// to ship; `out_uni[id]` is the self-share, absorbed locally).
     pub(crate) out_uni: Vec<f64>,
+    /// Per-peer pending personalization broadcast — `out_uni`'s twin,
+    /// fed by dangling emissions when the vector routes them through
+    /// `v` (`out_pv[id]` is the self-share, absorbed locally).
+    pub(crate) out_pv: Vec<f64>,
     pushes: u64,
     /// Signed Σp over the local rows (incremental — lets
     /// [`ShardedPush::mass`] stay O(shards) instead of O(n)).
@@ -225,6 +261,11 @@ impl PushShard {
             r: vec![0.0; bs],
             r_l1: 0.0,
             uni: 0.0,
+            pv: 0.0,
+            vshares: vec![0.0; s],
+            vlocal: Vec::new(),
+            vtotal: 1.0,
+            dangling_to_v: false,
             queue: BucketQueue::new(bs),
             head_floor: f64::INFINITY,
             head_hits: Vec::new(),
@@ -236,6 +277,7 @@ impl PushShard {
             xacc: vec![Vec::new(); s],
             acc_mass: 0.0,
             out_uni: vec![0.0; s],
+            out_pv: vec![0.0; s],
             pushes: 0,
             p_sum: 0.0,
             r_sum: 0.0,
@@ -396,11 +438,66 @@ impl PushShard {
         }
     }
 
-    /// Move the self-addressed uniform share into the local pending
-    /// scalar (peers get theirs via fragments; we skip the channel).
+    /// Spread the local pending personalization scalar into the
+    /// materialized residual — `O(local nnz(v))`. `pv` zeroes even on
+    /// a shard homing no support: its slice of the scalar carries no
+    /// mass, so dropping it is exact (and keeps the drained-queue exit
+    /// check from spinning on a scalar that can never flush).
+    pub(crate) fn flush_v(&mut self) {
+        let m = self.pv;
+        self.pv = 0.0;
+        if m == 0.0 || self.vlocal.is_empty() {
+            return;
+        }
+        let scale = m / self.vtotal;
+        // the flush targets are stable while flushing; take the list so
+        // add_r can borrow self mutably, then put it back
+        let vlocal = std::mem::take(&mut self.vlocal);
+        for &(k, w) in &vlocal {
+            self.add_r(k as usize, scale * w);
+        }
+        self.vlocal = vlocal;
+    }
+
+    /// `Σ v_t` over this shard's home rows.
+    #[inline]
+    pub(crate) fn vshare(&self) -> f64 {
+        self.vshares[self.id]
+    }
+
+    /// `v`-weight of home-local row `k` (0 outside the support). Binary
+    /// search over the local support — meant for small per-check
+    /// lookups (top-k centers), not the push hot path.
+    pub(crate) fn vweight_local(&self, k: usize) -> f64 {
+        match self.vlocal.binary_search_by_key(&(k as u32), |&(i, _)| i) {
+            Ok(i) => self.vlocal[i].1,
+            Err(_) => 0.0,
+        }
+    }
+
+    /// Largest single `v` weight homed on this shard — bounds any one
+    /// home row's `pv` share (the top-k rest-bound needs it).
+    pub(crate) fn vmax_local(&self) -> f64 {
+        self.vlocal.iter().map(|&(_, w)| w).fold(0.0, f64::max)
+    }
+
+    /// |pending| scalar mass attributable to this shard's home rows:
+    /// the uniform slice `|uni|·|B|/n` plus the personalization slice
+    /// `|pv|·vshare/Σv`.
+    #[inline]
+    pub(crate) fn pending_abs(&self) -> f64 {
+        self.uni.abs() * (self.hi - self.lo) as f64 / self.n as f64
+            + self.pv.abs() * self.vshare() / self.vtotal
+    }
+
+    /// Move the self-addressed uniform and personalization shares into
+    /// the local pending scalars (peers get theirs via fragments; we
+    /// skip the channel).
     pub(crate) fn absorb_self_uniform(&mut self) {
         let u = std::mem::replace(&mut self.out_uni[self.id], 0.0);
         self.uni += u;
+        let q = std::mem::replace(&mut self.out_pv[self.id], 0.0);
+        self.pv += q;
     }
 
     /// One push at local slot `k` (home or adopted): settle `r[k]`,
@@ -424,8 +521,14 @@ impl PushShard {
         let d = g.outdeg(u);
         if d == 0 {
             let q = self.alpha * m;
-            for j in 0..self.out_uni.len() {
-                self.out_uni[j] += q;
+            if self.dangling_to_v {
+                for j in 0..self.out_pv.len() {
+                    self.out_pv[j] += q;
+                }
+            } else {
+                for j in 0..self.out_uni.len() {
+                    self.out_uni[j] += q;
+                }
             }
         } else {
             let w = self.alpha * m / d as f64;
@@ -448,16 +551,17 @@ impl PushShard {
     /// residual drops below `target` or `budget` pushes are spent.
     /// Returns the pushes performed.
     pub(crate) fn drain(&mut self, g: &DeltaGraph, target: f64, budget: u64) -> u64 {
-        let bs_over_n = (self.hi - self.lo) as f64 / self.n as f64;
         let mut spent = 0u64;
         while spent < budget {
-            if self.r_l1 + self.uni.abs() * bs_over_n < target {
+            let pending = self.pending_abs();
+            if self.r_l1 + pending < target {
                 break;
             }
-            // spread the pending uniform when it dominates what is
+            // spread the pending scalars when they dominate what is
             // materialized (same policy as PushState::solve)
-            if self.uni.abs() * bs_over_n >= self.r_l1.max(0.5 * target) {
+            if pending >= self.r_l1.max(0.5 * target) {
                 self.flush_uni();
+                self.flush_v();
                 continue;
             }
             match self.queue.pop() {
@@ -466,8 +570,9 @@ impl PushShard {
                     spent += 1;
                 }
                 None => {
-                    if self.uni != 0.0 {
+                    if self.uni != 0.0 || self.pv != 0.0 {
                         self.flush_uni();
+                        self.flush_v();
                     } else {
                         // queue drained: every r is exactly zero, the
                         // tally only holds accumulated drift
@@ -500,7 +605,8 @@ impl PushShard {
     pub(crate) fn take_fragment(&mut self, j: usize) -> Option<ResidualFragment> {
         debug_assert_ne!(j, self.id, "self mass is absorbed, not shipped");
         let uni = std::mem::replace(&mut self.out_uni[j], 0.0);
-        if self.dirty[j].is_empty() && self.xacc[j].is_empty() && uni == 0.0 {
+        let pv = std::mem::replace(&mut self.out_pv[j], 0.0);
+        if self.dirty[j].is_empty() && self.xacc[j].is_empty() && uni == 0.0 && pv == 0.0 {
             return None;
         }
         let base = self.part.bounds()[j];
@@ -521,7 +627,7 @@ impl PushShard {
             self.acc_mass -= w.abs();
             self.acc_sum -= w;
         }
-        Some(ResidualFragment { entries, uni })
+        Some(ResidualFragment { entries, uni, pv })
     }
 
     /// Re-accumulate a fragment that could not be delivered (bounded
@@ -529,6 +635,7 @@ impl PushShard {
     /// lossless — the next `take_fragment` ships the merged batch.
     pub(crate) fn restore_fragment(&mut self, j: usize, frag: ResidualFragment) {
         self.out_uni[j] += frag.uni;
+        self.out_pv[j] += frag.pv;
         for (t, w) in frag.entries {
             self.out_mass(j, t as usize, w);
         }
@@ -557,6 +664,7 @@ impl PushShard {
             }
         }
         self.uni += frag.uni;
+        self.pv += frag.pv;
     }
 
     /// Victim side of a steal: pop up to `batch` of the **hottest**
@@ -751,11 +859,13 @@ impl PushShard {
     /// share).
     pub(crate) fn residual_estimate(&self) -> f64 {
         let nf = self.n as f64;
-        let mut est =
-            self.r_l1 + self.uni.abs() * (self.hi - self.lo) as f64 / nf + self.acc_mass;
+        let mut est = self.r_l1 + self.pending_abs() + self.acc_mass;
         for (j, u) in self.out_uni.iter().enumerate() {
             let rows = self.part.bounds()[j + 1] - self.part.bounds()[j];
             est += u.abs() * rows as f64 / nf;
+        }
+        for (j, q) in self.out_pv.iter().enumerate() {
+            est += q.abs() * self.vshares[j] / self.vtotal;
         }
         est
     }
@@ -769,9 +879,13 @@ impl PushShard {
         let nf = self.n as f64;
         let mut s = self.r_sum + self.acc_sum;
         s += self.uni * (self.hi - self.lo) as f64 / nf;
+        s += self.pv * self.vshare() / self.vtotal;
         for (j, u) in self.out_uni.iter().enumerate() {
             let rows = self.part.bounds()[j + 1] - self.part.bounds()[j];
             s += u * rows as f64 / nf;
+        }
+        for (j, q) in self.out_pv.iter().enumerate() {
+            s += q * self.vshares[j] / self.vtotal;
         }
         debug_assert!(
             {
@@ -794,6 +908,7 @@ impl PushShard {
         let nf = self.n as f64;
         let mut s: f64 = self.r.iter().sum();
         s += self.uni * (self.hi - self.lo) as f64 / nf;
+        s += self.pv * self.vshare() / self.vtotal;
         for accj in &self.acc {
             for &w in accj {
                 s += w;
@@ -807,6 +922,9 @@ impl PushShard {
         for (j, u) in self.out_uni.iter().enumerate() {
             let rows = self.part.bounds()[j + 1] - self.part.bounds()[j];
             s += u * rows as f64 / nf;
+        }
+        for (j, q) in self.out_pv.iter().enumerate() {
+            s += q * self.vshares[j] / self.vtotal;
         }
         s
     }
@@ -848,13 +966,17 @@ impl PushShard {
 /// ([`owner_map`](Self::owner_map)); every epoch-boundary operation
 /// folds the overlay back ([`repatriate`](Self::repatriate)), so the
 /// two mechanisms never see each other's bookkeeping. The conserved
-/// mass `Σp + R/(1−α) = 1` ([`mass`](Self::mass)) holds across both.
+/// mass `Σp + R/(1−α) = Σv` ([`mass`](Self::mass)) holds across both.
 ///
 /// [`run_threaded_push`]: crate::asynciter::threads::run_threaded_push
 #[derive(Debug, Clone)]
 pub struct ShardedPush {
     alpha: f64,
     n: usize,
+    /// Personalization vector (`None` = the uniform teleport `e/n`).
+    /// Mirrored into every shard's `vshares`/`vlocal` views; the
+    /// conserved mass becomes `Σp + R/(1−α) = Σv`.
+    pers: Option<Arc<Personalization>>,
     part: Partitioner,
     /// Row ownership on top of the home partition — contiguous until
     /// intra-epoch work stealing moves rows; folded back by
@@ -897,7 +1019,12 @@ pub struct ShardedPush {
 }
 
 impl ShardedPush {
-    fn build(g: &DeltaGraph, alpha: f64, shards: usize) -> ShardedPush {
+    fn build(
+        g: &DeltaGraph,
+        alpha: f64,
+        shards: usize,
+        pers: Option<Arc<Personalization>>,
+    ) -> ShardedPush {
         assert!(g.n() > 0, "empty graph");
         assert!((0.0..1.0).contains(&alpha), "alpha must be in [0,1)");
         assert!(shards >= 1, "need at least one shard");
@@ -905,11 +1032,19 @@ impl ShardedPush {
         let lens: Vec<usize> = (0..g.n()).map(|u| g.outdeg(u)).collect();
         let part = Partitioner::balanced_nnz_lens(&lens, shards);
         let n = g.n();
+        if let Some(p) = &pers {
+            assert!(
+                (p.max_node() as usize) < n,
+                "personalization entry {} out of bounds for n={n}",
+                p.max_node()
+            );
+        }
         let shards: Vec<PushShard> =
             (0..part.p()).map(|id| PushShard::new(id, &part, n, alpha)).collect();
-        ShardedPush {
+        let mut sp = ShardedPush {
             alpha,
             n,
+            pers,
             owners: OwnerMap::contiguous(part.clone()),
             part,
             round_pushes: 4096,
@@ -921,6 +1056,25 @@ impl ShardedPush {
             cur_stamp: 0,
             head_gen: super::next_head_gen(),
             trace: None,
+        };
+        sp.configure_pers();
+        sp
+    }
+
+    /// (Re)derive every shard's view of the personalization vector —
+    /// per-peer `v`-mass shares, local flush targets, total, dangling
+    /// policy — from the current home bounds. Idempotent; called after
+    /// every bounds change (`build`, `grow_to`, `adopt_partition`).
+    /// Leaves the pending `pv` scalars untouched.
+    fn configure_pers(&mut self) {
+        let Some(p) = &self.pers else { return };
+        let vshares: Vec<f64> =
+            self.part.blocks().iter().map(|&(lo, hi)| p.share_of_range(lo, hi)).collect();
+        for sh in self.shards.iter_mut() {
+            sh.vshares = vshares.clone();
+            sh.vlocal = p.entries_in_range(sh.lo, sh.hi);
+            sh.vtotal = p.total();
+            sh.dangling_to_v = p.dangling_to_v();
         }
     }
 
@@ -928,23 +1082,60 @@ impl ShardedPush {
     /// `(1-α)` pending uniformly (each shard carries its own copy of
     /// the scalar — together they cover the graph exactly).
     pub fn new(g: &DeltaGraph, alpha: f64, shards: usize) -> ShardedPush {
-        let mut sp = ShardedPush::build(g, alpha, shards);
+        let mut sp = ShardedPush::build(g, alpha, shards, None);
         for sh in sp.shards.iter_mut() {
             sh.uni = 1.0 - alpha;
         }
         sp
     }
 
+    /// Cold personalized state: `p = 0`, the sparse right-hand side
+    /// `(1−α)·v` materialized directly into the owning shards'
+    /// residuals (nothing pending — mirrors
+    /// [`PushState::new_personalized`]).
+    pub fn new_personalized(
+        g: &DeltaGraph,
+        alpha: f64,
+        shards: usize,
+        pers: Arc<Personalization>,
+    ) -> ShardedPush {
+        let mut sp = ShardedPush::build(g, alpha, shards, Some(pers));
+        for sh in sp.shards.iter_mut() {
+            let targets = std::mem::take(&mut sh.vlocal);
+            for &(k, w) in &targets {
+                sh.add_r(k as usize, (1.0 - alpha) * w);
+            }
+            sh.vlocal = targets;
+        }
+        sp
+    }
+
+    /// The personalization vector this engine solves against (`None` =
+    /// uniform teleport).
+    pub fn personalization(&self) -> Option<&Arc<Personalization>> {
+        self.pers.as_ref()
+    }
+
+    /// `Σv` — what [`mass`](Self::mass) conserves (1 on the uniform
+    /// path).
+    pub fn target_mass(&self) -> f64 {
+        self.pers.as_ref().map_or(1.0, |p| p.total())
+    }
+
     /// Scatter a (possibly warm) [`PushState`] into shards: rank and
-    /// residual slices move to their owners, the pending-uniform scalar
-    /// is replicated (local-share semantics). `state` must be sized to
-    /// `g` — apply deltas on the global state *before* scattering.
+    /// residual slices move to their owners, the pending scalars (`rd`
+    /// uniform, `rv` personalization) are replicated with local-share
+    /// semantics, and the personalization vector rides along. `state`
+    /// must be sized to `g` — apply deltas on the global state *before*
+    /// scattering.
     pub fn from_state(state: &PushState, g: &DeltaGraph, shards: usize) -> ShardedPush {
         assert_eq!(state.n(), g.n(), "state sized to a different graph");
-        let mut sp = ShardedPush::build(g, state.alpha(), shards);
+        let mut sp =
+            ShardedPush::build(g, state.alpha(), shards, state.personalization().cloned());
         let ranks = state.ranks();
         let resid = state.residual();
         let rd = state.pending_uniform();
+        let rv = state.pending_v();
         for sh in sp.shards.iter_mut() {
             for k in 0..sh.hi - sh.lo {
                 sh.p[k] = ranks[sh.lo + k];
@@ -956,6 +1147,7 @@ impl ShardedPush {
                 sh.queue.update(k, v.abs());
             }
             sh.uni = rd;
+            sh.pv = rv;
         }
         sp
     }
@@ -1205,21 +1397,26 @@ impl ShardedPush {
         self.exchange();
         let alpha = self.alpha;
         let (n0, n1) = (delta.old_n, delta.new_n);
+        let dangling_to_v = self.pers.as_ref().map_or(false, |p| p.dangling_to_v());
 
         if n1 != n0 {
             // each shard's uni stands for uni/n per LOCAL row; make it
-            // explicit before n changes its meaning
+            // explicit before n changes its meaning (pv's shape is the
+            // fixed support of v — n-independent, so it stays pending)
             for sh in self.shards.iter_mut() {
                 sh.flush_uni();
             }
             self.grow_to(n1);
 
-            // Teleport + dangling columns are uniform e/n; growing n
-            // rescales them everywhere. The OLD dangling set is what p
-            // converged against: changed sources report their old
-            // lists, everyone else kept today's.
-            let mut old_dangling_mass = 0.0f64;
-            {
+            // Whatever part of the right-hand side is uniform e/n gets
+            // rescaled by the growth: the teleport column only on the
+            // uniform path, the dangling columns only when dangling
+            // mass redistributes uniformly. The OLD dangling set is
+            // what p converged against: changed sources report their
+            // old lists, everyone else kept today's.
+            let mut uniform_mass = if self.pers.is_none() { 1.0 - alpha } else { 0.0 };
+            if !dangling_to_v {
+                let mut old_dangling_mass = 0.0f64;
                 let mut changed_iter = delta.changed_sources.iter().peekable();
                 for sh in &self.shards {
                     let live = (sh.hi.min(n0)).saturating_sub(sh.lo);
@@ -1238,29 +1435,32 @@ impl ShardedPush {
                         }
                     }
                 }
+                uniform_mass += alpha * old_dangling_mass;
             }
-            let uniform_mass = (1.0 - alpha) + alpha * old_dangling_mass;
-            let shift_old = uniform_mass * (1.0 / n1 as f64 - 1.0 / n0 as f64);
-            let add_new = uniform_mass / n1 as f64;
-            for sh in self.shards.iter_mut() {
-                let bs = sh.hi - sh.lo;
-                let live = (sh.hi.min(n0)).saturating_sub(sh.lo);
-                for k in 0..live {
-                    sh.add_r(k, shift_old);
-                }
-                for k in live..bs {
-                    sh.add_r(k, add_new);
+            if uniform_mass != 0.0 {
+                let shift_old = uniform_mass * (1.0 / n1 as f64 - 1.0 / n0 as f64);
+                let add_new = uniform_mass / n1 as f64;
+                for sh in self.shards.iter_mut() {
+                    let bs = sh.hi - sh.lo;
+                    let live = (sh.hi.min(n0)).saturating_sub(sh.lo);
+                    for k in 0..live {
+                        sh.add_r(k, shift_old);
+                    }
+                    for k in live..bs {
+                        sh.add_r(k, add_new);
+                    }
                 }
             }
         }
 
         // Swap each changed source's old column of αS for its new one,
         // r += α(S'-S)p, batched into one fragment per owning shard.
-        // Uniform (dangling) columns move every shard's replicated
-        // scalar — exactly how a dangling push broadcasts at runtime.
+        // Dangling columns move every shard's replicated scalar —
+        // exactly how a dangling push broadcasts at runtime, through
+        // whichever pending scalar the redistribution policy uses.
         let s = self.shards.len();
         let mut frags: Vec<ResidualFragment> = (0..s)
-            .map(|_| ResidualFragment { entries: Vec::new(), uni: 0.0 })
+            .map(|_| ResidualFragment { entries: Vec::new(), uni: 0.0, pv: 0.0 })
             .collect();
         for (src, old_out) in &delta.changed_sources {
             let u = *src as usize;
@@ -1288,12 +1488,16 @@ impl ShardedPush {
             }
             if uni_dq != 0.0 {
                 for f in frags.iter_mut() {
-                    f.uni += uni_dq;
+                    if dangling_to_v {
+                        f.pv += uni_dq;
+                    } else {
+                        f.uni += uni_dq;
+                    }
                 }
             }
         }
         for (j, f) in frags.into_iter().enumerate() {
-            if !f.entries.is_empty() || f.uni != 0.0 {
+            if !f.entries.is_empty() || f.uni != 0.0 || f.pv != 0.0 {
                 self.shards[j].apply_fragment(&f);
             }
         }
@@ -1338,6 +1542,10 @@ impl ShardedPush {
         sh.r.resize(bs1, 0.0);
         sh.stamp.resize(bs1, 0);
         sh.queue.grow(bs1);
+        // arrivals carry no personalization weight, but the last
+        // shard's bounds moved — re-derive the (unchanged-in-value)
+        // support views so they always match the partition
+        self.configure_pers();
     }
 
     /// Re-balance the shard bounds when churn has skewed the per-shard
@@ -1386,6 +1594,7 @@ impl ShardedPush {
         self.head_gen = super::next_head_gen(); // rows migrated: pools are stale
         let nf = self.n as f64;
         let u_common = self.shards[0].uni;
+        let pv_common = self.shards[0].pv;
         for sh in self.shards.iter_mut() {
             debug_assert!(sh.acc_mass == 0.0 && sh.dirty.iter().all(Vec::is_empty));
             let d = (sh.uni - u_common) / nf;
@@ -1400,6 +1609,17 @@ impl ShardedPush {
                 }
             }
             sh.uni = u_common;
+            // same unification for the personalization scalar: the
+            // difference folds into the residual over the local support
+            // (exact — a shard's pv slice lives only on those rows)
+            let d_pv = sh.pv - pv_common;
+            if d_pv != 0.0 {
+                let scale = d_pv / sh.vtotal;
+                for &(k, w) in &sh.vlocal {
+                    sh.r[k as usize] += scale * w;
+                }
+            }
+            sh.pv = pv_common;
         }
         // snapshot the global vectors, retiring the old generation
         let mut p = vec![0.0f64; self.n];
@@ -1426,6 +1646,7 @@ impl ShardedPush {
             sh.r_sum = sh.r.iter().sum();
             sh.p_sum = sh.p.iter().sum();
             sh.uni = u_common;
+            sh.pv = pv_common;
             sh.cur_stamp = self.cur_stamp;
             if self.cur_stamp > 0 {
                 sh.touched = sh.stamp.iter().filter(|&&t| t == self.cur_stamp).count();
@@ -1433,6 +1654,7 @@ impl ShardedPush {
             shards.push(sh);
         }
         self.shards = shards;
+        self.configure_pers();
     }
 
     /// Assemble the current global rank estimate (copy). Contiguous
@@ -1516,6 +1738,7 @@ impl ShardedPush {
                         let l1: f64 = sh.r.iter().map(|v| v.abs()).sum();
                         let nf = sh.n as f64;
                         let mut d = l1 + sh.uni.abs() * (sh.hi - sh.lo) as f64 / nf;
+                        d += sh.pv.abs() * sh.vshare() / sh.vtotal;
                         for accj in &sh.acc {
                             d += accj.iter().map(|w| w.abs()).sum::<f64>();
                         }
@@ -1525,6 +1748,9 @@ impl ShardedPush {
                         for (j, u) in sh.out_uni.iter().enumerate() {
                             let rows = sh.part.bounds()[j + 1] - sh.part.bounds()[j];
                             d += u.abs() * rows as f64 / nf;
+                        }
+                        for (j, q) in sh.out_pv.iter().enumerate() {
+                            d += q.abs() * sh.vshares[j] / sh.vtotal;
                         }
                         d
                     })
@@ -1548,8 +1774,9 @@ impl ShardedPush {
     }
 
     /// The conserved mass `Σp + R/(1-α)` (signed residuals, pending
-    /// outboxes included). Equals 1 to float accumulation error after
-    /// every push, exchange, and flush — the invariant that makes
+    /// outboxes included). Equals [`target_mass`](Self::target_mass) —
+    /// `Σv`, i.e. 1 on the uniform path — to float accumulation error
+    /// after every push, exchange, and flush: the invariant that makes
     /// residual shipping safe. O(shards): rank and residual sums are
     /// carried incrementally (debug builds cross-check the dense
     /// sweep inside the per-shard signed-residual tally).
@@ -1628,10 +1855,11 @@ impl ShardedPush {
                 // nothing moved: force the pending uniforms out, and if
                 // that leaves nothing either, the tally drift was all
                 // that kept us looping
-                let pending = self.shards.iter().any(|sh| sh.uni != 0.0);
+                let pending = self.shards.iter().any(|sh| sh.uni != 0.0 || sh.pv != 0.0);
                 if pending {
                     for sh in self.shards.iter_mut() {
                         sh.flush_uni();
+                        sh.flush_v();
                     }
                 } else {
                     break self.residual_recompute() < tol;
@@ -1662,10 +1890,19 @@ impl ShardedPush {
     /// churn-proportional.
     pub fn gather_into(mut self, state: &mut PushState) {
         assert_eq!(state.n(), self.n, "gather into a different-sized state");
+        assert!(
+            match (state.personalization(), &self.pers) {
+                (None, None) => true,
+                (Some(a), Some(b)) => Arc::ptr_eq(a, b) || **a == **b,
+                _ => false,
+            },
+            "gather into a state with a different personalization vector"
+        );
         self.repatriate();
         self.exchange();
         let nf = self.n as f64;
         let u_common = self.shards[0].uni;
+        let pv_common = self.shards[0].pv;
         let mut p = vec![0.0f64; self.n];
         let mut r = vec![0.0f64; self.n];
         // retired shard generations (rebalance) count toward the credit
@@ -1676,9 +1913,18 @@ impl ShardedPush {
                 p[sh.lo + k] = sh.p[k];
                 r[sh.lo + k] = sh.r[k] + add;
             }
+            // fold this shard's pv difference into its local support —
+            // pv_common rides back as the state's pending-v scalar
+            let d_pv = sh.pv - pv_common;
+            if d_pv != 0.0 {
+                let scale = d_pv / sh.vtotal;
+                for &(k, w) in &sh.vlocal {
+                    r[sh.lo + k as usize] += scale * w;
+                }
+            }
             pushes += sh.pushes;
         }
-        state.adopt_parts(p, r, u_common);
+        state.adopt_parts(p, r, u_common, pv_common);
         state.add_pushes(pushes);
     }
 }
@@ -1687,7 +1933,7 @@ impl ShardedPush {
 mod tests {
     use super::*;
     use crate::graph::{generators, EdgeList};
-    use crate::stream::{power_method_f64, UpdateBatch};
+    use crate::stream::{power_method_f64, power_method_pers, UpdateBatch};
     use crate::util::Rng;
 
     fn l1(a: &[f64], b: &[f64]) -> f64 {
@@ -1870,6 +2116,95 @@ mod tests {
             let d = l1(&resident.ranks(), state.ranks());
             assert!(d < 1e-9, "round {round}: resident vs roundtrip drift {d}");
         }
+    }
+
+    #[test]
+    fn sharded_ppr_matches_personalized_power_method() {
+        let g = web(2_000, 51);
+        for dangling_to_v in [true, false] {
+            let pers = Arc::new(
+                Personalization::from_entries(vec![(17, 0.75), (900, 0.25)], dangling_to_v)
+                    .unwrap(),
+            );
+            for shards in [1usize, 3, 5] {
+                let mut sp = ShardedPush::new_personalized(&g, 0.85, shards, Arc::clone(&pers));
+                let st = sp.solve(&g, 1e-11, u64::MAX);
+                assert!(st.converged, "shards {shards}: residual {}", st.residual);
+                assert!(
+                    (sp.mass() - sp.target_mass()).abs() < 1e-9,
+                    "dangling_to_v={dangling_to_v} shards {shards}: mass {}",
+                    sp.mass()
+                );
+                let (xref, _) = power_method_pers(&g, 0.85, &pers, 1e-12, 10_000);
+                let d = l1(&sp.ranks(), &xref);
+                assert!(
+                    d < 1e-9,
+                    "dangling_to_v={dangling_to_v} shards {shards}: drift {d}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn resident_ppr_apply_batch_tracks_churn() {
+        // pv end-to-end: churn with arrivals injected into the LIVE
+        // personalized shards (dangling_to_v exercises the pv
+        // broadcast through apply_batch, exchange, and rebalance)
+        let mut g = web(1_000, 52);
+        let pers = Arc::new(
+            Personalization::from_entries(vec![(5, 0.6), (321, 0.4)], true).unwrap(),
+        );
+        let mut sp = ShardedPush::new_personalized(&g, 0.85, 3, Arc::clone(&pers));
+        sp.solve(&g, 1e-11, u64::MAX);
+        let mut rng = Rng::new(53);
+        for round in 0..3 {
+            let n = g.n();
+            let mut batch = UpdateBatch { new_nodes: 2, ..Default::default() };
+            for _ in 0..40 {
+                batch
+                    .insert
+                    .push((rng.range(0, n + 2) as u32, rng.range(0, n) as u32));
+            }
+            let mut edges = Vec::new();
+            g.for_each_edge(|s, d| edges.push((s, d)));
+            for _ in 0..20 {
+                batch.remove.push(edges[rng.range(0, edges.len())]);
+            }
+            let delta = g.apply(&batch).unwrap();
+            sp.begin_epoch();
+            sp.apply_batch(&g, &delta);
+            let m = sp.mass();
+            assert!(
+                (m - sp.target_mass()).abs() < 1e-9,
+                "round {round}: mass after inject {m}"
+            );
+            sp.rebalance(&g, 1.05);
+            let st = sp.solve(&g, 1e-11, u64::MAX);
+            assert!(st.converged, "round {round}");
+            let (xref, _) = power_method_pers(&g, 0.85, &pers, 1e-13, 100_000);
+            let d = l1(&sp.ranks(), &xref);
+            assert!(d < 1e-8, "round {round}: resident PPR drift {d}");
+        }
+    }
+
+    #[test]
+    fn ppr_scatter_gather_roundtrip_preserves_solution() {
+        let g = web(1_200, 54);
+        let pers = Arc::new(Personalization::single_source(7));
+        let mut state = PushState::new_personalized(g.n(), 0.85, Arc::clone(&pers));
+        state.begin_epoch();
+        state.solve(&g, 1e-11, u64::MAX);
+        let before = state.ranks().to_vec();
+        let sp = ShardedPush::from_state(&state, &g, 4);
+        assert!(
+            (sp.mass() - sp.target_mass()).abs() < 1e-9,
+            "scatter broke mass: {}",
+            sp.mass()
+        );
+        sp.gather_into(&mut state);
+        assert!(l1(state.ranks(), &before) < 1e-15);
+        let st = state.solve(&g, 1e-11, u64::MAX);
+        assert!(st.converged);
     }
 
     #[test]
@@ -2061,7 +2396,7 @@ mod tests {
         let node = sp.shards[1].adopted[0];
         // address residual at the stolen row's HOME shard: it must not
         // accumulate there (the slot is lent) but reach the thief
-        let frag = ResidualFragment { entries: vec![(node, 0.125)], uni: 0.0 };
+        let frag = ResidualFragment { entries: vec![(node, 0.125)], uni: 0.0, pv: 0.0 };
         let m0 = sp.mass();
         let k_home = node as usize - sp.shards[0].lo;
         sp.shards[0].apply_fragment(&frag);
@@ -2073,7 +2408,7 @@ mod tests {
         assert!(slot >= bs);
         assert!(sp.shards[1].r[slot] >= 0.125 - 1e-12, "forward never arrived");
         // remove the injected mass again so the fixed point is untouched
-        let undo = ResidualFragment { entries: vec![(node, -0.125)], uni: 0.0 };
+        let undo = ResidualFragment { entries: vec![(node, -0.125)], uni: 0.0, pv: 0.0 };
         sp.shards[1].apply_fragment(&undo);
         let st = sp.solve(&g, 1e-11, u64::MAX);
         assert!(st.converged);

@@ -7,8 +7,9 @@
 //! incrementally over the push solvers and — the part that makes it a
 //! serving primitive rather than a heuristic — *certifies* it: using
 //! the push invariant `x* = p + (I−αS)^{-1}ρ` (ρ = materialized
-//! residual + pending uniform shares), every node's true rank is
-//! enclosed in an interval around its **center** `c_i = p_i + ρ_i`:
+//! residual + pending uniform/personalization shares), every node's
+//! true rank is enclosed in an interval around its **center**
+//! `c_i = p_i + ρ_i`:
 //!
 //! ```text
 //!     x*_i ∈ [ c_i − α·R⁻/(1−α) − U⁻/(1−α),  c_i + α·R⁺/(1−α) + U⁺/(1−α) ]
@@ -35,14 +36,20 @@
 //! per-shard uniform share is row-constant, so no promotion can sneak
 //! past). A check drains hits, re-reads pool centers, and runs a
 //! tournament merge across shards — O(pool + hits + shards). Rows that
-//! never crossed the floor are bounded wholesale by `floor + uniform
-//! share`, so their upper bounds need no per-row work. Wholesale state
-//! moves (bounds migration, gather, node arrivals) bump a generation
-//! stamp and force one full rescan.
+//! never crossed the floor are bounded wholesale by `floor + max
+//! pending share`, so their upper bounds need no per-row work. Under a
+//! personalization vector ([`super::Personalization`]) the pending-`v`
+//! share is *not* row-constant: pool members fold their exact per-row
+//! weight `rv·v_i/Σv` into the center, and the wholesale bound adds the
+//! worst case `rv⁺·vmax/Σv` — still sound, merely conservative while
+//! pending `v`-mass is large (it flushes on the first drain). Wholesale
+//! state moves (bounds migration, gather, node arrivals) bump a
+//! generation stamp and force one full rescan.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use super::delta::DeltaGraph;
+use super::pers::Personalization;
 use super::push::PushState;
 use super::shard::{PushShard, ShardedPush};
 use crate::obs::{EventKind, MONITOR_TRACK};
@@ -116,13 +123,14 @@ impl TopKCertificate {
 /// builds them in place.
 #[derive(Debug, Clone)]
 pub(crate) struct ShardHeadFrame {
-    /// (global node id, center `p + r + uni/n`) for every pool member.
+    /// (global node id, center `p + r + uni/n + pv·v_i/Σv`) for every
+    /// pool member.
     pub entries: Vec<(u32, f64)>,
     /// Center upper bound for every row *not* in `entries`
     /// (`-inf` when the pool covers the whole shard).
     pub rest_bound: f64,
     /// Located-residual split (materialized r plus the shard's uniform
-    /// share), α/(1−α)-weighted in the slack.
+    /// and personalization shares), α/(1−α)-weighted in the slack.
     pub r_plus: f64,
     pub r_minus: f64,
     /// Unlocated residual split (outboxes, pending uniform broadcasts),
@@ -320,50 +328,73 @@ fn fold_signed(plus: &mut f64, minus: &mut f64, m: f64) {
 }
 
 /// Located-residual split for one shard (materialized r plus the
-/// shard's replicated uniform share) — shared by [`shard_frame`] and
-/// [`interval_bounds_sharded`], so the tracker's slack and its dense
-/// test mirror can never de-synchronize.
+/// shard's replicated uniform and personalization shares) — shared by
+/// [`shard_frame`] and [`interval_bounds_sharded`], so the tracker's
+/// slack and its dense test mirror can never de-synchronize.
 fn shard_located_split(sh: &PushShard) -> (f64, f64) {
     let (mut plus, mut minus) = split_tally(sh.r_l1, sh.r_sum);
     fold_signed(&mut plus, &mut minus, sh.uni * (sh.hi - sh.lo) as f64 / sh.n as f64);
+    fold_signed(&mut plus, &mut minus, sh.pv * sh.vshare() / sh.vtotal);
     (plus, minus)
 }
 
 /// [`shard_located_split`]'s twin for the global state (the pending
-/// uniform `rd` covers every row, so it folds in whole).
+/// uniform `rd` covers every row and the pending-`v` scalar `rv`
+/// covers the whole support, so both fold in whole).
 fn state_located_split(st: &PushState) -> (f64, f64) {
     let (mut plus, mut minus) = split_tally(st.r_l1, st.r_sum);
     fold_signed(&mut plus, &mut minus, st.rd);
+    fold_signed(&mut plus, &mut minus, st.rv);
     (plus, minus)
 }
 
+/// Every shard's replicated pending scalars plus the personalization
+/// vector — what [`shard_frame`] needs to score *adopted* (stolen)
+/// rows under their home shard's exact shares. The threaded worker
+/// path passes `None` and approximates with the local scalars (fine:
+/// the monitor's stop is always re-checked exactly on settled state).
+pub(crate) struct HomeShares<'a> {
+    /// Each shard's pending-uniform scalar.
+    pub unis: &'a [f64],
+    /// Each shard's pending-`v` scalar (all zeros on the uniform path).
+    pub pvs: &'a [f64],
+    /// The personalization vector (`None` = global uniform run).
+    pub pers: Option<&'a Personalization>,
+}
+
 /// Build a shard's frame: refresh its pool, then convert the p+r
-/// domain to centers with the per-row uniform share and split the
-/// residual tallies into the located / unlocated halves.
+/// domain to centers with the per-row pending shares (uniform plus,
+/// under a personalization vector, the exact `pv·v_i/Σv` weight) and
+/// split the residual tallies into the located / unlocated halves.
 ///
 /// Ownership-awareness (work stealing): **lent** home rows are
 /// excluded — their state lives at (and is reported by) the thief, and
 /// a zero-score ghost here could otherwise duplicate a node across
-/// frames. **Adopted** rows report under their *home* shard's uniform
-/// share (the home's flush forwards it here): exact when `home_unis`
-/// carries every shard's scalar (the [`TopKTracker::check_sharded`]
-/// path), approximated by the local scalar on the tentative threaded
-/// worker path (`None`) — which is fine, because the monitor's stop is
-/// always re-checked exactly on the settled state.
+/// frames. **Adopted** rows report under their *home* shard's pending
+/// shares (the home's flush forwards them here): exact when `home`
+/// carries every shard's scalars (the [`TopKTracker::check_sharded`]
+/// path), approximated by the local uniform scalar on the tentative
+/// threaded worker path (`None`) — which is fine, because the
+/// monitor's stop is always re-checked exactly on the settled state.
 pub(crate) fn shard_frame(
     head: &mut HeadList,
     sh: &mut PushShard,
-    home_unis: Option<&[f64]>,
+    home: Option<&HomeShares<'_>>,
 ) -> ShardHeadFrame {
     let nf = sh.n as f64;
     let us = sh.uni / nf;
+    let vt = sh.vtotal;
     let bs = sh.home_size();
-    // upper bound on any local row's uniform share: untracked adopted
-    // rows sit under rest_bound, whose share is their home's scalar
-    let mut us_max = us;
-    if let Some(unis) = home_unis {
+    // upper bound on any local row's pending share: the uniform part is
+    // row-constant, the `v` part is bounded by the largest home weight;
+    // untracked adopted rows sit under rest_bound, whose share is their
+    // home's scalars (bounded by the global vmax)
+    let mut share_max = us + sh.pv.max(0.0) * sh.vmax_local() / vt;
+    if let Some(hs) = home {
+        let vmax = hs.pers.map_or(0.0, |p| p.vmax());
         for &node in &sh.adopted {
-            us_max = us_max.max(unis[sh.part.owner_of(node as usize)] / nf);
+            let h = sh.part.owner_of(node as usize);
+            share_max = share_max.max(hs.unis[h] / nf + hs.pvs[h].max(0.0) * vmax / vt);
         }
     }
     let (scored, rest_pr) = head.refresh(&sh.p, &sh.r, &mut sh.head_hits, &mut sh.head_floor);
@@ -373,11 +404,15 @@ pub(crate) fn shard_frame(
         .map(|(t, s)| {
             let k = t as usize;
             if k < bs {
-                ((sh.lo + k) as u32, s + us)
+                ((sh.lo + k) as u32, s + us + sh.pv * sh.vweight_local(k) / vt)
             } else {
                 let node = sh.adopted[k - bs];
-                let share = match home_unis {
-                    Some(unis) => unis[sh.part.owner_of(node as usize)] / nf,
+                let share = match home {
+                    Some(hs) => {
+                        let h = sh.part.owner_of(node as usize);
+                        let w = hs.pers.map_or(0.0, |p| p.weight_of(node));
+                        hs.unis[h] / nf + hs.pvs[h] * w / vt
+                    }
                     None => us,
                 };
                 (node, s + share)
@@ -385,12 +420,15 @@ pub(crate) fn shard_frame(
         })
         .collect();
     let rest_bound =
-        if rest_pr == f64::NEG_INFINITY { f64::NEG_INFINITY } else { rest_pr + us_max };
+        if rest_pr == f64::NEG_INFINITY { f64::NEG_INFINITY } else { rest_pr + share_max };
     let (r_plus, r_minus) = shard_located_split(sh);
     let (mut unk_plus, mut unk_minus) = split_tally(sh.acc_mass, sh.acc_sum);
     for (j, &u) in sh.out_uni.iter().enumerate() {
         let rows = sh.part.bounds()[j + 1] - sh.part.bounds()[j];
         fold_signed(&mut unk_plus, &mut unk_minus, u * rows as f64 / nf);
+    }
+    for (j, &q) in sh.out_pv.iter().enumerate() {
+        fold_signed(&mut unk_plus, &mut unk_minus, q * sh.vshares[j] / vt);
     }
     ShardHeadFrame { entries, rest_bound, r_plus, r_minus, unk_plus, unk_minus }
 }
@@ -398,10 +436,20 @@ pub(crate) fn shard_frame(
 /// [`shard_frame`]'s twin for the single-queue global state.
 pub(crate) fn state_frame(head: &mut HeadList, st: &mut PushState) -> ShardHeadFrame {
     let us = st.rd / st.n() as f64;
+    let rv = st.rv;
+    let pers = st.pers.clone();
+    let (vt, vmax) = pers.as_deref().map_or((1.0, 0.0), |p| (p.total(), p.vmax()));
     let (scored, rest_pr) = head.refresh(&st.p, &st.r, &mut st.head_hits, &mut st.head_floor);
-    let entries = scored.into_iter().map(|(t, s)| (t, s + us)).collect();
+    let entries = scored
+        .into_iter()
+        .map(|(t, s)| {
+            let w = pers.as_deref().map_or(0.0, |p| p.weight_of(t));
+            (t, s + us + rv * w / vt)
+        })
+        .collect();
+    let share_max = us + rv.max(0.0) * vmax / vt;
     let rest_bound =
-        if rest_pr == f64::NEG_INFINITY { f64::NEG_INFINITY } else { rest_pr + us };
+        if rest_pr == f64::NEG_INFINITY { f64::NEG_INFINITY } else { rest_pr + share_max };
     let (r_plus, r_minus) = state_located_split(st);
     ShardHeadFrame { entries, rest_bound, r_plus, r_minus, unk_plus: 0.0, unk_minus: 0.0 }
 }
@@ -440,14 +488,17 @@ impl TopKTracker {
             self.seen = Some(key);
         }
         let alpha = sp.alpha();
-        // every shard's uniform scalar, so adopted (stolen) rows report
-        // under their home share exactly
+        // every shard's pending scalars, so adopted (stolen) rows
+        // report under their home shares exactly
         let unis: Vec<f64> = sp.shards.iter().map(|sh| sh.uni).collect();
+        let pvs: Vec<f64> = sp.shards.iter().map(|sh| sh.pv).collect();
+        let pers = sp.personalization().cloned();
+        let home = HomeShares { unis: &unis, pvs: &pvs, pers: pers.as_deref() };
         let frames: Vec<ShardHeadFrame> = self
             .heads
             .iter_mut()
             .zip(sp.shards.iter_mut())
-            .map(|(h, sh)| shard_frame(h, sh, Some(&unis)))
+            .map(|(h, sh)| shard_frame(h, sh, Some(&home)))
             .collect();
         let cert = certify_frames(&frames, self.goal.k, alpha);
         if let Some(tr) = sp.trace_handle() {
@@ -610,24 +661,29 @@ pub fn interval_bounds_sharded(sp: &mut ShardedPush) -> Vec<(f64, f64)> {
     }
     let (sp_up, sp_dn) = (alpha * w * rp, alpha * w * rm);
     let unis: Vec<f64> = sp.shards.iter().map(|sh| sh.uni).collect();
+    let pvs: Vec<f64> = sp.shards.iter().map(|sh| sh.pv).collect();
+    let pers = sp.personalization().cloned();
+    let wof = |t: u32| pers.as_deref().map_or(0.0, |p| p.weight_of(t));
     let mut out = vec![(0.0, 0.0); sp.n()];
     for sh in &sp.shards {
         let nf = sh.n as f64;
         let us = sh.uni / nf;
+        let vt = sh.vtotal;
         let bs = sh.home_size();
         for k in 0..bs {
             if sh.lent_owner(k).is_some() {
                 continue; // the owner's overflow slot is authoritative
             }
-            let c = sh.p[k] + sh.r[k] + us;
+            let c = sh.p[k] + sh.r[k] + us + sh.pv * sh.vweight_local(k) / vt;
             out[sh.lo + k] = (c - sp_dn, c + sp_up);
         }
-        // stolen rows: state lives here, uniform share still accrues at
-        // the home shard (its flush forwards it) — center with the
-        // home's scalar
+        // stolen rows: state lives here, the pending shares still
+        // accrue at the home shard (its flushes forward them) — center
+        // with the home's scalars
         for (slot, &node) in sh.adopted.iter().enumerate() {
             let node = node as usize;
-            let share = unis[sh.part.owner_of(node)] / nf;
+            let h = sh.part.owner_of(node);
+            let share = unis[h] / nf + pvs[h] * wof(node as u32) / vt;
             let c = sh.p[bs + slot] + sh.r[bs + slot] + share;
             out[node] = (c - sp_dn, c + sp_up);
         }
@@ -643,9 +699,13 @@ pub fn interval_bounds_state(st: &mut PushState) -> Vec<(f64, f64)> {
     let (rp, rm) = state_located_split(st);
     let (up, dn) = (alpha * w * rp, alpha * w * rm);
     let us = st.rd / st.n() as f64;
+    let rv = st.rv;
+    let pers = st.pers.clone();
+    let vt = pers.as_deref().map_or(1.0, |p| p.total());
     (0..st.n())
         .map(|i| {
-            let c = st.p[i] + st.r[i] + us;
+            let w_i = pers.as_deref().map_or(0.0, |p| p.weight_of(i as u32));
+            let c = st.p[i] + st.r[i] + us + rv * w_i / vt;
             (c - dn, c + up)
         })
         .collect()
@@ -930,6 +990,62 @@ mod tests {
                     "epoch {epoch}: certified at {at} pushes but set is wrong"
                 );
             }
+        }
+    }
+
+    #[test]
+    fn ppr_intervals_and_certificates_use_personalization_shares() {
+        // single-source-set PPR: mid-solve enclosures must contain the
+        // personalized reference and a fired certificate must name the
+        // true personalized top-k — exercising the exact per-row
+        // `pv·v_i/Σv` share in pool centers and the `vmax` bound on
+        // untracked rows (both are zero on every other test's path)
+        use crate::stream::{power_method_pers, Personalization};
+        use std::sync::Arc;
+        let g = web(1_000, 111);
+        let pers = Arc::new(Personalization::sources(&[3, 17, 42]).unwrap());
+        let (xref, _) = power_method_pers(&g, 0.85, &pers, 1e-13, 100_000);
+        for shards in [1usize, 3] {
+            let mut sp = ShardedPush::new_personalized(&g, 0.85, shards, Arc::clone(&pers));
+            let mut tr = TopKTracker::new(TopKGoal { k: 8, order: false });
+            loop {
+                let bounds = interval_bounds_sharded(&mut sp);
+                for (i, &(lo, hi)) in bounds.iter().enumerate() {
+                    assert!(
+                        lo - 1e-11 <= xref[i] && xref[i] <= hi + 1e-11,
+                        "shards {shards}: ppr x*[{i}] = {} outside [{lo}, {hi}]",
+                        xref[i]
+                    );
+                }
+                let cert = tr.check_sharded(&mut sp);
+                if cert.set_certified {
+                    assert!(
+                        set_eq(&cert.head, &exact_topk(&xref, 8)),
+                        "shards {shards}: certified PPR set wrong mid-solve"
+                    );
+                }
+                if sp.solve(&g, 1e-12, 400).converged {
+                    break;
+                }
+            }
+            let cert = tr.check_sharded(&mut sp);
+            assert!(cert.set_certified, "shards {shards}: converged PPR must certify k=8");
+            assert!(set_eq(&cert.head, &exact_topk(&xref, 8)));
+        }
+        // the single-queue state path agrees
+        let mut st = PushState::new_personalized(g.n(), 0.85, Arc::clone(&pers));
+        st.begin_epoch();
+        let mut tr = TopKTracker::new(TopKGoal { k: 8, order: false });
+        let stats = solve_certified_state(&mut st, &g, &mut tr, 1e-12, u64::MAX, false);
+        assert!(stats.converged);
+        assert!(stats.cert.set_certified, "state path: converged PPR must certify k=8");
+        assert!(set_eq(&stats.cert.head, &exact_topk(&xref, 8)));
+        for (i, &(lo, hi)) in interval_bounds_state(&mut st).iter().enumerate() {
+            assert!(
+                lo - 1e-11 <= xref[i] && xref[i] <= hi + 1e-11,
+                "state path: ppr x*[{i}] = {} outside [{lo}, {hi}]",
+                xref[i]
+            );
         }
     }
 

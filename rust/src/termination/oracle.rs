@@ -7,7 +7,7 @@
 //! exactly that: given the assembled iterate it computes the TRUE
 //! global residual ‖Gx − x‖₁ and the distance to a converged reference.
 
-use crate::pagerank::{l1_diff, normalize_l1, PagerankProblem};
+use crate::pagerank::{l1_diff_f64, normalize_l1, PagerankProblem};
 
 /// Global truth for a PageRank instance.
 pub struct GlobalOracle<'a> {
@@ -34,17 +34,24 @@ impl<'a> GlobalOracle<'a> {
     }
 
     /// True global residual ‖Gx − x‖₁ of an assembled iterate.
-    pub fn global_residual(&mut self, x: &[f32]) -> f32 {
+    ///
+    /// The vectors stay f32 (the paper's storage), but the tally is
+    /// carried and *returned* in f64: at n ≳ 10⁶ an f32 sum's rounding
+    /// error is the same order as the 1e-6..5e-5 thresholds this oracle
+    /// certifies, so narrowing the result would destroy the very
+    /// digits being measured.
+    pub fn global_residual(&mut self, x: &[f32]) -> f64 {
         self.problem.apply_google(x, &mut self.scratch);
-        l1_diff(&self.scratch, x)
+        l1_diff_f64(&self.scratch, x)
     }
 
     /// L1 error against the converged reference (both L1-normalized,
     /// factoring out the Lubachevsky–Mitra multiplicative constant).
-    pub fn error_vs_reference(&self, x: &[f32]) -> f32 {
+    /// f64 tally, same rationale as [`global_residual`](Self::global_residual).
+    pub fn error_vs_reference(&self, x: &[f32]) -> f64 {
         let mut xn = x.to_vec();
         normalize_l1(&mut xn);
-        l1_diff(&xn, &self.reference)
+        l1_diff_f64(&xn, &self.reference)
     }
 
     /// Kendall-τ of the ranking induced by `x` vs the reference (§5.2's
@@ -98,6 +105,47 @@ mod tests {
             res.push(o.global_residual(&r.x));
         }
         assert!(res[0] > res[1] && res[1] > res[2], "{res:?}");
+    }
+
+    #[test]
+    fn residual_is_pinned_to_an_f64_reference_at_million_scale() {
+        // a directed ring's fixed point is exactly uniform, so the
+        // oracle's reference build is O(1) power iterations even at
+        // n = 10⁶ — the scale where f32 tallies actually break
+        use crate::graph::EdgeList;
+        let n = 1_000_000usize;
+        let el = EdgeList::from_edges(
+            n,
+            (0..n).map(|i| (i as u32, ((i + 1) % n) as u32)).collect(),
+        )
+        .unwrap();
+        let p = PagerankProblem::new(Csr::from_edgelist(&el).unwrap(), 0.85);
+        let mut o = GlobalOracle::new(&p, 1e-6);
+
+        // an alternating perturbation of the fixed point: every entry
+        // of |Gx − x| has the same magnitude, which makes sequential
+        // f32 summation drift deterministically instead of averaging
+        // out
+        let u = 1.0f32 / n as f32;
+        let x: Vec<f32> =
+            (0..n).map(|i| if i % 2 == 0 { u * 1.001 } else { u * 0.999 }).collect();
+        let mut gx = vec![0.0f32; n];
+        p.apply_google(&x, &mut gx);
+        let want = crate::pagerank::l1_diff_f64(&gx, &x);
+        assert!(want > 0.0);
+
+        // the oracle's tally must equal the f64 reference exactly...
+        assert_eq!(o.global_residual(&x), want, "oracle residual must carry f64 exactly");
+
+        // ...and the narrowed return the oracle used to produce cannot
+        // represent it — the digits the old signature threw away are
+        // exactly the ones a 1e-6-order threshold certifies against
+        let narrowed = (want as f32) as f64;
+        assert_ne!(narrowed, want, "f32 narrowing must lose digits at this scale");
+        assert!(
+            (narrowed - want).abs() / want > f64::EPSILON,
+            "narrowing error vanished: {narrowed:e} vs {want:e}"
+        );
     }
 
     #[test]

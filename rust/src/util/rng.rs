@@ -59,9 +59,17 @@ impl Rng {
     }
 
     /// Uniform f32 in [0, 1).
+    ///
+    /// Generated from 24 mantissa bits directly — *not* by narrowing
+    /// [`f64`](Self::f64): an f64 draw in `[1 − 2⁻²⁵, 1)` rounds up to
+    /// exactly `1.0f32` under nearest-even, violating the half-open
+    /// contract (and indexing one-past-end when scaled by a length).
+    /// The largest value here is `(2²⁴−1)/2²⁴ < 1`, which is exact in
+    /// f32, so the contract holds for every bit pattern.
     #[inline]
     pub fn f32(&mut self) -> f32 {
-        self.f64() as f32
+        // 24 top bits -> [0,1)
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
     }
 
     /// Uniform integer in [0, bound) via Lemire's method (unbiased).
@@ -176,6 +184,35 @@ mod tests {
         let mut r = Rng::new(3);
         for _ in 0..10_000 {
             let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn f32_boundary_mapping_is_exhaustively_half_open() {
+        // the regression this guards against: narrowing an f64 draw in
+        // [1 − 2⁻²⁵, 1) rounds up to exactly 1.0f32 under nearest-even
+        let worst_f64 = 1.0 - 0.25 / (1u64 << 23) as f64; // 1 − 2⁻²⁵
+        assert_eq!(worst_f64 as f32, 1.0f32, "narrowing must stay a faithful repro of the bug");
+
+        // exhaustive over the top mantissa patterns (where rounding
+        // could reach 1.0) and the bottom ones (the zero boundary)
+        let scale = 1.0f32 / (1u64 << 24) as f32;
+        for m in (0u64..4096).chain(((1u64 << 24) - 4096)..(1u64 << 24)) {
+            let x = m as f32 * scale;
+            assert!((0.0..1.0).contains(&x), "mantissa {m:#x} -> {x}");
+        }
+        let max = ((1u64 << 24) - 1) as f32 * scale;
+        assert_eq!(max, 1.0 - scale, "largest draw is (2²⁴−1)/2²⁴ exactly");
+
+        // and the method implements exactly that mapping on the top
+        // 24 bits of the raw stream
+        let mut r = Rng::new(42);
+        let mut probe = r.clone();
+        for _ in 0..10_000 {
+            let raw = probe.next_u64();
+            let x = r.f32();
+            assert_eq!(x, (raw >> 40) as f32 * scale);
             assert!((0.0..1.0).contains(&x));
         }
     }

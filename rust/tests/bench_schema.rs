@@ -1,6 +1,7 @@
 //! Schema tests for the committed machine-readable bench trajectory
-//! files (`benches/BENCH_*.json`, written by the `push_parallel` and
-//! `topk_stream` benches when `ASYNCPR_BENCH_JSON_DIR` is set).
+//! files (`benches/BENCH_*.json`, written by the `push_parallel`,
+//! `topk_stream`, and `ppr_serve` benches when
+//! `ASYNCPR_BENCH_JSON_DIR` is set).
 //!
 //! The committed files may be the pending placeholders (all-null
 //! metric slots, a `note` explaining how to regenerate) or a real
@@ -89,5 +90,20 @@ fn topk_stream_trajectory_schema() {
     }
     num_or_null(&doc, &["full", "pushes"]);
     num_or_null(&doc, &["full", "wall_ms"]);
+    num_or_null(&doc, &["push_saving"]);
+}
+
+#[test]
+fn ppr_serve_trajectory_schema() {
+    let doc = load("BENCH_ppr_serve.json");
+    common_header(&doc, "ppr_serve");
+    num_or_null(&doc, &["rounds"]);
+    num_or_null(&doc, &["queries"]);
+    for key in ["pushes", "hit_rate", "p50_us", "p99_us", "wall_ms"] {
+        num_or_null(&doc, &["warm", key]);
+    }
+    for key in ["pushes", "p50_us", "p99_us", "wall_ms"] {
+        num_or_null(&doc, &["cold", key]);
+    }
     num_or_null(&doc, &["push_saving"]);
 }

@@ -1,0 +1,235 @@
+//! Invariant suite for the personalized-teleport generalization and
+//! the serving tier (seeded random campaigns, same style as
+//! topk_proptests.rs — every failure names its trial/round).
+//!
+//! Invariants covered:
+//!   * an *explicit uniform* personalization vector reproduces the
+//!     global path bit-for-bit in the limit: ranks agree to 1e-12 L1
+//!     on the sequential, sharded, and threaded backends, for both
+//!     dangling policies (uniform `v` makes them identical);
+//!   * the serving tier's incremental cache invalidation is sound:
+//!     answers served from a cached-then-churned state match a cold
+//!     personalized solve on the same snapshot to 1e-9, across 50
+//!     random churn batches;
+//!   * a churned warm state never reports convergence with a residual
+//!     above the tier tolerance (the certificate's precondition).
+//!
+//! Every test name starts with `ppr_`: CI's debug pass skips them and
+//! the release pass (with `-C debug-assertions`) runs the whole file.
+
+use std::sync::Arc;
+
+use asyncpr::asynciter::{run_threaded_push, PushThreadOptions};
+use asyncpr::graph::generators;
+use asyncpr::stream::{
+    DeltaGraph, Personalization, PushState, ServeOptions, ServeTier, ShardedPush, UpdateBatch,
+};
+use asyncpr::util::Rng;
+
+fn web(n: usize, seed: u64) -> DeltaGraph {
+    let el = generators::power_law_web(&generators::WebParams::scaled(n), seed);
+    DeltaGraph::from_edgelist(&el)
+}
+
+/// Random edge churn *without node arrivals*: a fixed uniform `v` over
+/// the initial nodes only stays equal to the global `e/n` teleport
+/// while `n` is constant, so the equivalence tests churn edges only.
+fn edge_batch(rng: &mut Rng, g: &DeltaGraph) -> UpdateBatch {
+    let n = g.n();
+    let mut b = UpdateBatch::default();
+    for _ in 0..rng.range(1, 25) {
+        b.insert.push((rng.range(0, n) as u32, rng.range(0, n) as u32));
+    }
+    let mut edges = Vec::new();
+    g.for_each_edge(|s, d| edges.push((s, d)));
+    if !edges.is_empty() {
+        for _ in 0..rng.range(0, 12) {
+            b.remove.push(edges[rng.range(0, edges.len())]);
+        }
+    }
+    b
+}
+
+/// Full churn (arrivals allowed) for the serving-tier soundness test —
+/// the sources live in the initial id range, so they stay valid.
+fn full_batch(rng: &mut Rng, g: &DeltaGraph) -> UpdateBatch {
+    let n0 = g.n();
+    let new_nodes = rng.range(0, 3);
+    let n1 = n0 + new_nodes;
+    let mut b = UpdateBatch { new_nodes, ..Default::default() };
+    for _ in 0..rng.range(1, 20) {
+        b.insert.push((rng.range(0, n1) as u32, rng.range(0, n1) as u32));
+    }
+    let mut edges = Vec::new();
+    g.for_each_edge(|s, d| edges.push((s, d)));
+    if !edges.is_empty() {
+        for _ in 0..rng.range(0, 10) {
+            b.remove.push(edges[rng.range(0, edges.len())]);
+        }
+    }
+    b
+}
+
+fn l1(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).sum()
+}
+
+/// The solves run to 1e-14, so each backend's rank error is bounded by
+/// `tol/(1-α) ≈ 6.7e-14`; 1e-12 leaves an order of magnitude of slack.
+const SOLVE_TOL: f64 = 1e-14;
+const MATCH_TOL: f64 = 1e-12;
+
+#[test]
+fn ppr_uniform_v_matches_global_path_on_state_backend() {
+    for (trial, &dangling_to_v) in [false, true].iter().enumerate() {
+        let mut g = web(350 + 40 * trial, 9_000 + trial as u64);
+        let mut rng = Rng::new(9_100 + trial as u64);
+        let mut global = PushState::new(g.n(), 0.85);
+        let pers = Arc::new(Personalization::uniform(g.n(), dangling_to_v));
+        let mut pprs = PushState::new_personalized(g.n(), 0.85, Arc::clone(&pers));
+        for round in 0..5 {
+            if round > 0 {
+                let batch = edge_batch(&mut rng, &g);
+                let delta = g.apply(&batch).unwrap();
+                global.begin_epoch();
+                global.apply_batch(&g, &delta);
+                pprs.begin_epoch();
+                pprs.apply_batch(&g, &delta);
+            } else {
+                global.begin_epoch();
+                pprs.begin_epoch();
+            }
+            assert!(global.solve(&g, SOLVE_TOL, u64::MAX).converged);
+            assert!(pprs.solve(&g, SOLVE_TOL, u64::MAX).converged);
+            let d = l1(global.ranks(), pprs.ranks());
+            assert!(
+                d <= MATCH_TOL,
+                "trial {trial} (dangling_to_v={dangling_to_v}) round {round}: \
+                 uniform-v PPR differs from global by {d:.2e}"
+            );
+        }
+    }
+}
+
+#[test]
+fn ppr_uniform_v_matches_global_path_on_sharded_backend() {
+    for (trial, shards) in [1usize, 2, 3, 5].into_iter().enumerate() {
+        let dangling_to_v = trial % 2 == 0;
+        let mut g = web(300 + 50 * trial, 9_300 + trial as u64);
+        let mut rng = Rng::new(9_400 + trial as u64);
+        let mut global = ShardedPush::new(&g, 0.85, shards);
+        let pers = Arc::new(Personalization::uniform(g.n(), dangling_to_v));
+        let mut pprs = ShardedPush::new_personalized(&g, 0.85, shards, Arc::clone(&pers));
+        for round in 0..5 {
+            if round > 0 {
+                let batch = edge_batch(&mut rng, &g);
+                let delta = g.apply(&batch).unwrap();
+                global.begin_epoch();
+                global.apply_batch(&g, &delta);
+                pprs.begin_epoch();
+                pprs.apply_batch(&g, &delta);
+            } else {
+                global.begin_epoch();
+                pprs.begin_epoch();
+            }
+            assert!(global.solve(&g, SOLVE_TOL, u64::MAX).converged);
+            assert!(pprs.solve(&g, SOLVE_TOL, u64::MAX).converged);
+            let mt = pprs.target_mass();
+            assert!(
+                (pprs.mass() - mt).abs() < 1e-10,
+                "trial {trial} round {round}: PPR mass {:.12} != target {mt:.12}",
+                pprs.mass()
+            );
+            let d = l1(&global.ranks(), &pprs.ranks());
+            assert!(
+                d <= MATCH_TOL,
+                "trial {trial} ({shards} shards, dangling_to_v={dangling_to_v}) \
+                 round {round}: uniform-v PPR differs from global by {d:.2e}"
+            );
+        }
+    }
+}
+
+#[test]
+fn ppr_uniform_v_matches_global_path_on_threaded_backend() {
+    for (trial, threads) in [2usize, 3, 4].into_iter().enumerate() {
+        let dangling_to_v = trial % 2 == 1;
+        let g = web(320 + 40 * trial, 9_600 + trial as u64);
+        let mut global = PushState::new(g.n(), 0.85);
+        global.begin_epoch();
+        assert!(global.solve(&g, SOLVE_TOL, u64::MAX).converged);
+
+        let pers = Arc::new(Personalization::uniform(g.n(), dangling_to_v));
+        let mut sp = ShardedPush::new_personalized(&g, 0.85, threads, pers);
+        sp.begin_epoch();
+        let topts = PushThreadOptions { tol: SOLVE_TOL, ..Default::default() };
+        let tm = run_threaded_push(&g, &mut sp, &topts);
+        if !tm.converged {
+            // the monitor may cut early (timeout/quiet race); the
+            // deterministic polish is part of the backend's contract
+            assert!(sp.solve(&g, SOLVE_TOL, u64::MAX).converged, "trial {trial}");
+        }
+        let d = l1(global.ranks(), &sp.ranks());
+        assert!(
+            d <= MATCH_TOL,
+            "trial {trial} ({threads} threads, dangling_to_v={dangling_to_v}): \
+             uniform-v PPR differs from global by {d:.2e}"
+        );
+    }
+}
+
+#[test]
+fn ppr_cached_then_churned_answers_match_cold_solves() {
+    // the tier answers from warm states that absorbed 50 random deltas
+    // incrementally; every answer must match a cold personalized solve
+    // on the *same* snapshot. Tier and cold solves both run to 1e-11,
+    // so each score's error is ≤ tol/(1-α) ≈ 6.7e-11 and the scores may
+    // differ by ≤ 1.4e-10 — 1e-9 is the acceptance bar with slack.
+    let tol = 1e-11;
+    let mut g = web(400, 10_000);
+    let mut rng = Rng::new(10_100);
+    let queries: Vec<Vec<u32>> = (0..4)
+        .map(|_| rng.sample_distinct(g.n(), 3).into_iter().map(|u| u as u32).collect())
+        .collect();
+    let mut tier = ServeTier::new(ServeOptions { tol, topk: 12, ..Default::default() });
+    // seed the cache so every later answer is a cached-then-churned one
+    for q in &queries {
+        tier.query(&g, q).unwrap();
+    }
+    for round in 0..50 {
+        let batch = full_batch(&mut rng, &g);
+        let delta = g.apply(&batch).unwrap();
+        tier.apply_batch(&g, &delta);
+        let q = &queries[rng.range(0, queries.len())];
+        let ans = tier.query(&g, q).unwrap();
+        assert!(ans.from_cache, "round {round}: warm state was dropped");
+        assert!(
+            ans.residual < tol,
+            "round {round}: answer returned unconverged at {:.2e}",
+            ans.residual
+        );
+
+        let pers = Arc::new(Personalization::sources(q).unwrap());
+        let mut cold = PushState::new_personalized(g.n(), 0.85, pers);
+        cold.begin_epoch();
+        assert!(cold.solve(&g, tol, u64::MAX).converged, "round {round}");
+        let xref = cold.ranks();
+        for (i, (&node, &score)) in ans.head.iter().zip(&ans.scores).enumerate() {
+            let want = xref[node as usize];
+            assert!(
+                (score - want).abs() <= 1e-9,
+                "round {round}: head[{i}] = node {node} scored {score:.14} \
+                 but the cold solve says {want:.14}"
+            );
+        }
+    }
+    let st = tier.stats();
+    assert!(st.hit_rate() > 0.8, "cache should have served the rounds: {st:?}");
+    assert!(
+        st.warm_pushes < st.cold_pushes.max(1) * 50,
+        "warm upkeep ({}) should not dwarf the cold builds ({})",
+        st.warm_pushes,
+        st.cold_pushes
+    );
+}
