@@ -1,0 +1,182 @@
+//! Bench: asynchronous push over a throttled heterogeneous wire vs a
+//! barriered superstep baseline.
+//!
+//! The async side is a real measured run: `run_threaded_push` with the
+//! exchange riding the loopback [`Transport`] throttled by the paper's
+//! Beowulf bandwidth/latency curves, one laggard peer's outbound links
+//! carrying an extra injected delay (the heterogeneity). The wire
+//! delays are real wall time — the loopback paces frame availability
+//! with the clock, so the measurement includes every second the
+//! asynchronous workers managed (or failed) to hide behind compute.
+//!
+//! The baseline is the deterministic superstep loop
+//! ([`ShardedPush::solve`]: drain every shard, deliver every outbox,
+//! barrier, repeat) with its compute measured and its wire charged
+//! analytically from the same profile: each superstep ends at a
+//! barrier, so every round pays the slowest link once — the laggard's
+//! injected delay plus the shared-wire transfer of that round's
+//! fragment bytes. The charge is generous to the baseline (one
+//! latency hit per round, perfect overlap inside the round); the
+//! paper's premise is that the async drain wins anyway because no
+//! worker ever waits out the laggard's round trip.
+//!
+//! A correctness postlude holds both sides to the f64 power reference;
+//! the perf comparison is reported (and written to the trajectory
+//! file), not gated — wall clock on a shared CI box is informational.
+//!
+//! [`Transport`]: asyncpr::net::Transport
+
+use std::time::Instant;
+
+use asyncpr::asynciter::{run_threaded_push, PushThreadOptions, StopCause, TermMode};
+use asyncpr::net::{FaultPlan, NetConfig};
+use asyncpr::simnet::ClusterProfile;
+use asyncpr::stream::{power_method_f64, DeltaGraph, ShardedPush};
+use asyncpr::util::Json;
+
+fn jobj(pairs: &[(&str, Json)]) -> Json {
+    Json::Obj(pairs.iter().map(|(k, v)| (k.to_string(), v.clone())).collect())
+}
+
+/// Machine-readable bench output: set `ASYNCPR_BENCH_JSON_DIR=benches`
+/// to refresh the committed `benches/BENCH_net_push.json` trajectory
+/// file (see benches/README.md). No-op otherwise.
+fn write_bench_json(doc: &Json) -> anyhow::Result<()> {
+    if let Ok(dir) = std::env::var("ASYNCPR_BENCH_JSON_DIR") {
+        if !dir.is_empty() {
+            let path = format!("{dir}/BENCH_net_push.json");
+            std::fs::write(&path, doc.to_string_compact())?;
+            eprintln!("wrote {path}");
+        }
+    }
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick")
+        || std::env::var("BENCH_FAST").ok().as_deref() == Some("1");
+    let graph = if quick { "scaled:3000" } else { "scaled:8000" };
+    let shards = 4usize;
+    let tol = 1e-9;
+    let lag_ms = 25.0; // the laggard peer's extra one-way link delay
+    println!(
+        "== bench net_push (graph = {graph}, {shards} shards, beowulf wire, \
+         laggard +{lag_ms} ms) ==\n"
+    );
+
+    let el = asyncpr::coordinator::load_edgelist(graph, 42)?;
+    let g = DeltaGraph::from_edgelist(&el);
+    println!("n = {}, m = {}\n", g.n(), g.m());
+
+    // profile covers workers + the monitor endpoint
+    let profile = ClusterProfile::paper_beowulf(shards + 1);
+
+    // ---- async over the throttled heterogeneous loopback ------------
+    let mut sp_async = ShardedPush::new(&g, 0.85, shards);
+    let aopts = PushThreadOptions {
+        tol,
+        term: TermMode::Protocol,
+        timeout: std::time::Duration::from_secs(120),
+        net: Some(NetConfig {
+            profile: profile.clone(),
+            faults: FaultPlan::delay_from(shards - 1, lag_ms, 0.0),
+            seed: 42,
+        }),
+        ..Default::default()
+    };
+    let t0 = Instant::now();
+    let tm = run_threaded_push(&g, &mut sp_async, &aopts);
+    let async_wall = t0.elapsed().as_secs_f64() * 1e3;
+    let async_pushes: u64 = tm.shard_pushes.iter().sum();
+    println!(
+        "async:   stop {} after {async_wall:.1} ms, {async_pushes} pushes, \
+         {} fragments, residual {:.1e} (converged: {}), {} CONVERGE / {} DIVERGE",
+        tm.stop_cause.name(),
+        tm.fragments_sent.iter().sum::<u64>(),
+        tm.residual,
+        tm.converged,
+        tm.term_converge,
+        tm.term_diverge
+    );
+    if tm.stop_cause == StopCause::Protocol && !tm.converged {
+        anyhow::bail!("protocol stop was unsound: residual {:.3e} >= tol {tol:.0e}", tm.residual);
+    }
+    if !tm.converged {
+        anyhow::bail!("async run over the wire failed to converge ({})", tm.stop_cause.name());
+    }
+
+    // ---- barriered superstep baseline -------------------------------
+    // measured compute, analytically charged wire: every superstep
+    // barrier waits out the laggard's delay plus the shared wire
+    // moving that round's fragment bytes
+    let mut sp_sync = ShardedPush::new(&g, 0.85, shards);
+    let t0 = Instant::now();
+    let st = sp_sync.solve(&g, tol, u64::MAX);
+    let sync_compute = t0.elapsed().as_secs_f64() * 1e3;
+    anyhow::ensure!(st.converged, "superstep baseline hit the push budget");
+    let per_round_elems = (st.pushes / st.rounds.max(1)) as usize;
+    let per_round_wire =
+        lag_ms * 1e-3 + profile.wire_time(profile.fragment_bytes(per_round_elems));
+    let sync_wire = st.rounds as f64 * per_round_wire * 1e3;
+    let sync_wall = sync_compute + sync_wire;
+    println!(
+        "barrier: {} supersteps, {} pushes, {} fragments — {sync_compute:.1} ms compute \
+         + {sync_wire:.1} ms charged wire = {sync_wall:.1} ms",
+        st.rounds, st.pushes, st.fragments
+    );
+
+    let speedup = if async_wall > 0.0 { sync_wall / async_wall } else { 0.0 };
+    println!(
+        "\nasync over the throttled wire vs barriered supersteps: {speedup:.2}x \
+         ({async_wall:.1} ms vs {sync_wall:.1} ms)"
+    );
+
+    // correctness before speed: both sides land on the reference
+    let (xref, _) = power_method_f64(&g, 0.85, 1e-10, 10_000);
+    for (name, sp) in [("async", &sp_async), ("barrier", &sp_sync)] {
+        let l1: f64 = sp.ranks().iter().zip(&xref).map(|(a, b)| (a - b).abs()).sum();
+        let mass = sp.mass();
+        println!("{name}: L1 vs power {l1:.1e}, mass {mass:.12}");
+        if l1 > 1e-7 {
+            anyhow::bail!("{name} drifted from the power reference: {l1:.1e}");
+        }
+        if (mass - 1.0).abs() > 1e-9 {
+            anyhow::bail!("{name} mass drifted to {mass}");
+        }
+    }
+
+    write_bench_json(&jobj(&[
+        ("schema", Json::Num(1.0)),
+        ("bench", Json::Str("net_push".to_string())),
+        ("graph", Json::Str(graph.to_string())),
+        ("quick", Json::Bool(quick)),
+        ("shards", Json::Num(shards as f64)),
+        ("lag_ms", Json::Num(lag_ms)),
+        (
+            "async",
+            jobj(&[
+                ("stop", Json::Str(tm.stop_cause.name().to_string())),
+                ("wall_ms", Json::Num(async_wall)),
+                ("pushes", Json::Num(async_pushes as f64)),
+                ("fragments", Json::Num(tm.fragments_sent.iter().sum::<u64>() as f64)),
+                ("residual", Json::Num(tm.residual)),
+                ("converged", Json::Bool(tm.converged)),
+                ("converge_msgs", Json::Num(tm.term_converge as f64)),
+                ("diverge_msgs", Json::Num(tm.term_diverge as f64)),
+            ]),
+        ),
+        (
+            "barrier",
+            jobj(&[
+                ("rounds", Json::Num(st.rounds as f64)),
+                ("pushes", Json::Num(st.pushes as f64)),
+                ("fragments", Json::Num(st.fragments as f64)),
+                ("compute_ms", Json::Num(sync_compute)),
+                ("charged_wire_ms", Json::Num(sync_wire)),
+                ("wall_ms", Json::Num(sync_wall)),
+            ]),
+        ),
+        ("speedup", Json::Num(speedup)),
+    ]))?;
+    Ok(())
+}

@@ -28,20 +28,32 @@
 //! ([`PushThreadOptions::steal`]): steal requests, and grants that
 //! transfer row ownership with the same never-lost in-flight
 //! accounting as the fragments.
+//!
+//! With [`PushThreadOptions::net`] set, the same worker loop routes its
+//! entire exchange — fragments, steal traffic, head frames, §4.2
+//! control — over a [`crate::net`] transport as serialized wire frames
+//! instead of mpsc channels, with the in-flight release re-routed
+//! through the monitor as explicit Ack frames (the serialized form of
+//! the DIVERGE-before-acknowledge discipline — see the `PushLink` /
+//! `TermSide` internals below).
 
 use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, AtomicU8, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
 use std::sync::{Arc, Barrier, Mutex};
 use std::time::Instant;
 
+use crate::net::{
+    LoopbackEndpoint, LoopbackNet, NetConfig, SendFail, Transport, WireHeadFrame, WireMsg, WireRow,
+};
 use crate::obs::{Event, EventKind, EventRing, EventTotals, Sample, TraceCollector, MONITOR_TRACK};
 use crate::pagerank::PagerankProblem;
 use crate::stream::{
     certify_frames, shard_frame, DeltaGraph, HeadList, ResidualFragment, ShardHeadFrame,
-    ShardedPush, StealGrant, TopKCertificate, TopKGoal, TopKTracker,
+    ShardedPush, StealGrant, StolenRow, TopKCertificate, TopKGoal, TopKTracker,
 };
 use crate::termination::{
-    term_channel, MonitorPort, MonitorTermination, TermMsg, TermPort, WorkerTermination,
+    term_channel, MonitorPort, MonitorTermination, TermMsg, TermPort, WireMonitor,
+    WorkerTermination,
 };
 
 /// Options for a threaded run.
@@ -422,6 +434,16 @@ pub struct PushThreadOptions {
     /// to the collector attached to the state
     /// ([`ShardedPush::attach_trace`]) when unset.
     pub trace: Option<Arc<TraceCollector>>,
+    /// Process-boundary mode: when set, the exchange rides a throttled
+    /// [`crate::net::LoopbackNet`] (bandwidth/latency curves from the
+    /// config's [`crate::simnet::ClusterProfile`], plus its
+    /// deterministic fault schedule) as serialized wire frames instead
+    /// of mpsc channels. Termination control crosses the same fabric,
+    /// and the in-flight release travels through the monitor as Ack
+    /// frames so the DIVERGE-before-acknowledge ordering survives the
+    /// loss of the single shared control queue. Ignored on the
+    /// single-shard fast path (one shard has no wire).
+    pub net: Option<NetConfig>,
 }
 
 impl Default for PushThreadOptions {
@@ -441,6 +463,7 @@ impl Default for PushThreadOptions {
             steal_batch: 64,
             topk: None,
             trace: None,
+            net: None,
         }
     }
 }
@@ -559,22 +582,228 @@ fn reset_head_tracking(
     }
 }
 
-/// Receiver-side half of the protocol's safety discipline: residual
-/// mass was just applied, so a previously-announced CONVERGE must be
-/// retracted NOW — before the sender's per-origin in-flight slot is
-/// released (callers decrement the counters right after this returns).
-/// No-op without a port (quiet mode) or when nothing was announced.
-fn retract_on_mass(
-    port: &mut Option<TermPort>,
-    tw: &Option<(Arc<TraceCollector>, Arc<EventRing>)>,
-) {
-    if let Some(p) = port.as_mut() {
-        if p.on_mass_received().is_some() {
-            if let Some((tr, ring)) = tw {
-                let ev = Event { t_us: tr.now_us(), kind: EventKind::TermDiverge, a: 1, v: 0.0 };
-                ring.record(ev);
+/// A failed data send, with the message handed back for deferral.
+/// `Full`/`Down` are retryable (mpsc backpressure, loopback cap, or an
+/// injected disconnect window); `Gone` means the receiving side is gone
+/// for good (mpsc disconnect) — restore silently, no retry counting.
+enum Bounce {
+    Full(PushMsg),
+    Down(PushMsg),
+    Gone(PushMsg),
+}
+
+fn row_to_wire(r: StolenRow) -> WireRow {
+    WireRow { node: r.node, p: r.p, r: r.r, touched: r.touched }
+}
+
+fn row_from_wire(w: WireRow) -> StolenRow {
+    StolenRow { node: w.node, p: w.p, r: w.r, touched: w.touched }
+}
+
+fn push_to_wire(msg: PushMsg) -> WireMsg {
+    match msg {
+        PushMsg::Frag { src, frag } => WireMsg::Frag { src: src as u32, frag },
+        PushMsg::StealRequest { thief } => WireMsg::StealRequest { thief: thief as u32 },
+        PushMsg::Grant { src, grant } => WireMsg::Grant {
+            src: src as u32,
+            rows: grant.rows.into_iter().map(row_to_wire).collect(),
+        },
+    }
+}
+
+fn push_from_wire(msg: WireMsg) -> Option<PushMsg> {
+    match msg {
+        WireMsg::Frag { src, frag } => Some(PushMsg::Frag { src: src as usize, frag }),
+        WireMsg::StealRequest { thief } => {
+            Some(PushMsg::StealRequest { thief: thief as usize })
+        }
+        WireMsg::Grant { src, rows } => Some(PushMsg::Grant {
+            src: src as usize,
+            grant: StealGrant { rows: rows.into_iter().map(row_from_wire).collect() },
+        }),
+        _ => None,
+    }
+}
+
+fn frame_to_wire(f: &ShardHeadFrame) -> WireHeadFrame {
+    WireHeadFrame {
+        entries: f.entries.clone(),
+        rest_bound: f.rest_bound,
+        r_plus: f.r_plus,
+        r_minus: f.r_minus,
+        unk_plus: f.unk_plus,
+        unk_minus: f.unk_minus,
+    }
+}
+
+fn frame_from_wire(w: WireHeadFrame) -> ShardHeadFrame {
+    ShardHeadFrame {
+        entries: w.entries,
+        rest_bound: w.rest_bound,
+        r_plus: w.r_plus,
+        r_minus: w.r_minus,
+        unk_plus: w.unk_plus,
+        unk_minus: w.unk_minus,
+    }
+}
+
+/// One worker's view of the exchange fabric: the classic mpsc channels,
+/// or a [`crate::net`] transport endpoint carrying the same message set
+/// as serialized frames. The worker loop is written against this enum
+/// so the two modes cannot drift apart.
+enum PushLink {
+    Mpsc { txs: Vec<SyncSender<PushMsg>>, rx: Receiver<PushMsg> },
+    Net(LoopbackEndpoint),
+}
+
+impl PushLink {
+    /// Non-blocking send of a data message toward worker `dst`.
+    fn try_send(&mut self, dst: usize, msg: PushMsg) -> Result<(), Bounce> {
+        match self {
+            PushLink::Mpsc { txs, .. } => txs[dst].try_send(msg).map_err(|e| match e {
+                TrySendError::Full(m) => Bounce::Full(m),
+                TrySendError::Disconnected(m) => Bounce::Gone(m),
+            }),
+            PushLink::Net(ep) => ep.try_send(dst, push_to_wire(msg)).map_err(|e| match e {
+                SendFail::Full(m) => {
+                    Bounce::Full(push_from_wire(m).expect("data frame bounced back intact"))
+                }
+                SendFail::Down(m) => {
+                    Bounce::Down(push_from_wire(m).expect("data frame bounced back intact"))
+                }
+            }),
+        }
+    }
+
+    /// Next queued data message for this worker, if any. Non-data wire
+    /// frames are not addressed to workers; any that show up anyway are
+    /// skipped rather than trusted.
+    fn try_recv(&mut self) -> Option<PushMsg> {
+        match self {
+            PushLink::Mpsc { rx, .. } => rx.try_recv().ok(),
+            PushLink::Net(ep) => loop {
+                match ep.try_recv() {
+                    Some(w) => {
+                        if let Some(m) = push_from_wire(w) {
+                            return Some(m);
+                        }
+                    }
+                    None => return None,
+                }
+            },
+        }
+    }
+
+    /// Ship a control/snapshot frame to endpoint `dst` (net mode only;
+    /// a no-op over mpsc, where control rides its own channel). The
+    /// loopback enqueues control unbounded and drops only droppable
+    /// head frames, so the result needs no handling.
+    fn send_control(&mut self, dst: usize, msg: WireMsg) {
+        if let PushLink::Net(ep) = self {
+            let _ = ep.try_send(dst, msg);
+        }
+    }
+
+    /// Make everything in flight deliverable (end-of-run gather must
+    /// not wait out injected delays). No-op over mpsc.
+    fn flush(&mut self) {
+        if let PushLink::Net(ep) = self {
+            ep.flush();
+        }
+    }
+}
+
+/// One worker's side of the §4.2 termination control: off (quiet
+/// mode), a [`TermPort`] on the shared unbounded channel (mpsc mode),
+/// or a bare [`WorkerTermination`] whose verdicts the caller serializes
+/// onto its own wire link (net mode — the link's per-producer FIFO
+/// replaces the shared queue's ordering).
+enum TermSide {
+    Off,
+    Port(TermPort),
+    Wire { term: WorkerTermination, converge: u64, diverge: u64 },
+}
+
+impl TermSide {
+    /// Feed one round's verdict. Port mode ships the message itself;
+    /// wire mode returns it for the caller to frame and send.
+    fn on_round(&mut self, locally_converged: bool) -> Option<TermMsg> {
+        match self {
+            TermSide::Off => None,
+            TermSide::Port(p) => p.on_round(locally_converged),
+            TermSide::Wire { term, converge, diverge } => {
+                let msg = term.on_iteration(locally_converged)?;
+                match msg {
+                    TermMsg::Converge => *converge += 1,
+                    TermMsg::Diverge => *diverge += 1,
+                    TermMsg::Stop => unreachable!("workers never send STOP"),
+                }
+                Some(msg)
             }
         }
+    }
+
+    fn converge_sent(&self) -> u64 {
+        match self {
+            TermSide::Off => 0,
+            TermSide::Port(p) => p.converge_sent(),
+            TermSide::Wire { converge, .. } => *converge,
+        }
+    }
+
+    fn diverge_sent(&self) -> u64 {
+        match self {
+            TermSide::Off => 0,
+            TermSide::Port(p) => p.diverge_sent(),
+            TermSide::Wire { diverge, .. } => *diverge,
+        }
+    }
+}
+
+/// Receiver-side half of the protocol's safety discipline, for both
+/// transports. Residual mass from `src` was just applied by worker
+/// `id`, so a previously-announced CONVERGE must be retracted NOW,
+/// strictly before the sender's per-origin in-flight slot is released:
+///
+/// * mpsc mode — the DIVERGE is enqueued on the shared control channel
+///   and the counters are decremented right here, after it; the
+///   channel's FIFO makes the monitor process the retraction before
+///   any CONVERGE the release enables.
+/// * net mode — there is no shared queue, so the release itself is
+///   re-routed through the monitor: the DIVERGE frame (if any) and
+///   then an Ack frame go out on THIS worker's link, in that order,
+///   and the monitor decrements the counters only when it processes
+///   the Ack. Per-producer FIFO on the link guarantees it sees the
+///   retraction first — the serialized form of the same ordering.
+#[allow(clippy::too_many_arguments)]
+fn ack_mass(
+    term: &mut TermSide,
+    link: &mut PushLink,
+    net_mode: bool,
+    monitor_ep: usize,
+    id: usize,
+    src: usize,
+    origin_inflight: &[AtomicI64],
+    in_flight: &AtomicI64,
+    tw: &Option<(Arc<TraceCollector>, Arc<EventRing>)>,
+) {
+    if let Some(msg) = term.on_round(false) {
+        if let Some((tr, ring)) = tw {
+            let ev = Event { t_us: tr.now_us(), kind: EventKind::TermDiverge, a: 1, v: 0.0 };
+            ring.record(ev);
+        }
+        if net_mode {
+            link.send_control(
+                monitor_ep,
+                WireMsg::Term { src: id as u32, msg, inflight: Vec::new() },
+            );
+        }
+    }
+    if net_mode {
+        link.send_control(monitor_ep, WireMsg::Ack { peer: src as u32 });
+    } else {
+        origin_inflight[src].fetch_sub(1, Ordering::AcqRel);
+        in_flight.fetch_sub(1, Ordering::AcqRel);
     }
 }
 
@@ -760,12 +989,29 @@ pub fn run_threaded_push(
         txs.push(tx);
         rxs.push(Some(rx));
     }
+    // net mode: the s worker endpoints plus one monitor endpoint ride a
+    // throttled loopback fabric instead; the mpsc pairs above stay
+    // unused (cheap) so the two paths share one construction site
+    let net_mode = opts.net.is_some();
+    let monitor_ep = s;
+    let net_fab = opts
+        .net
+        .as_ref()
+        .map(|cfg| LoopbackNet::new(s + 1, cfg, opts.channel_depth.max(1) * s));
+    let mut mon_link = net_fab.as_ref().map(|n| n.endpoint(monitor_ep));
+    let mut links: Vec<Option<PushLink>> = (0..s)
+        .map(|id| {
+            Some(match &net_fab {
+                Some(n) => PushLink::Net(n.endpoint(id)),
+                None => PushLink::Mpsc { txs: txs.clone(), rx: rxs[id].take().unwrap() },
+            })
+        })
+        .collect();
 
     let results: Vec<PushWorkerStats> = std::thread::scope(|scope| {
         let mut handles = Vec::with_capacity(s);
         for (id, shard) in state.shards.iter_mut().enumerate() {
-            let rx = rxs[id].take().unwrap();
-            let txs = txs.clone();
+            let mut link = links[id].take().unwrap();
             let stop = Arc::clone(&stop);
             let stop_cause = Arc::clone(&stop_cause);
             let in_flight = Arc::clone(&in_flight);
@@ -800,24 +1046,49 @@ pub fn run_threaded_push(
                 // shard, later ones are O(hits))
                 let mut head_list = goal.map(|gl| HeadList::new(gl.pool_cap()));
                 let mut frame_due = true;
-                // §4.2 port: created only in protocol mode, fed every
-                // round and on every mass receipt
-                let mut port = protocol.then(|| TermPort::new(id, pc_max, ctl_tx.clone()));
+                // steal generation stamped on the last wire frame we
+                // published (net mode; MAX forces the first publish)
+                let mut last_pub_gen = u64::MAX;
+                // §4.2 side: off in quiet mode, a channel port in mpsc
+                // mode, a bare state machine whose verdicts ride this
+                // worker's own wire link in net mode — fed every round
+                // and on every mass receipt either way
+                let mut term_side = if !protocol {
+                    TermSide::Off
+                } else if net_mode {
+                    TermSide::Wire {
+                        term: WorkerTermination::new(pc_max),
+                        converge: 0,
+                        diverge: 0,
+                    }
+                } else {
+                    TermSide::Port(TermPort::new(id, pc_max, ctl_tx.clone()))
+                };
                 loop {
                     // import everything queued by the peers
                     let mut received = false;
-                    while let Ok(msg) = rx.try_recv() {
+                    while let Some(msg) = link.try_recv() {
                         match msg {
                             PushMsg::Frag { src, frag } => {
                                 shard.apply_fragment(&frag);
                                 // retract BEFORE releasing the sender's
-                                // in-flight slot: the channel preserves
-                                // our enqueue order, so the monitor
-                                // sees this DIVERGE before any CONVERGE
-                                // the sender bases on the release
-                                retract_on_mass(&mut port, &tw);
-                                origin_inflight[src].fetch_sub(1, Ordering::AcqRel);
-                                in_flight.fetch_sub(1, Ordering::AcqRel);
+                                // in-flight slot: the transport
+                                // preserves our enqueue order, so the
+                                // monitor sees this DIVERGE before any
+                                // CONVERGE the sender bases on the
+                                // release (which in net mode travels as
+                                // an Ack frame behind it)
+                                ack_mass(
+                                    &mut term_side,
+                                    &mut link,
+                                    net_mode,
+                                    monitor_ep,
+                                    id,
+                                    src,
+                                    &origin_inflight,
+                                    &in_flight,
+                                    &tw,
+                                );
                                 received = true;
                             }
                             PushMsg::StealRequest { thief } => thieves.push(thief),
@@ -835,9 +1106,17 @@ pub fn run_threaded_push(
                                 stolen_in += shard.adopt_rows(grant) as u64;
                                 // same DIVERGE-before-release discipline
                                 // as fragments: adopted rows carry mass
-                                retract_on_mass(&mut port, &tw);
-                                origin_inflight[src].fetch_sub(1, Ordering::AcqRel);
-                                in_flight.fetch_sub(1, Ordering::AcqRel);
+                                ack_mass(
+                                    &mut term_side,
+                                    &mut link,
+                                    net_mode,
+                                    monitor_ep,
+                                    id,
+                                    src,
+                                    &origin_inflight,
+                                    &in_flight,
+                                    &tw,
+                                );
                                 received = true;
                             }
                         }
@@ -875,8 +1154,9 @@ pub fn run_threaded_push(
                             });
                         }
                     }
-                    // ship the outboxes; a full channel defers, never drops
-                    for (j, tx) in txs.iter().enumerate() {
+                    // ship the outboxes; a full (or injected-down) link
+                    // defers, never drops
+                    for j in 0..s {
                         if j == id {
                             shard.absorb_self_uniform();
                             continue;
@@ -885,7 +1165,7 @@ pub fn run_threaded_push(
                             let frag_len = frag.entries.len() as f64;
                             in_flight.fetch_add(1, Ordering::AcqRel);
                             origin_inflight[id].fetch_add(1, Ordering::AcqRel);
-                            match tx.try_send(PushMsg::Frag { src: id, frag }) {
+                            match link.try_send(j, PushMsg::Frag { src: id, frag }) {
                                 Ok(()) => {
                                     sent += 1;
                                     if let Some((tr, ring)) = &tw {
@@ -897,7 +1177,8 @@ pub fn run_threaded_push(
                                         });
                                     }
                                 }
-                                Err(TrySendError::Full(PushMsg::Frag { frag, .. })) => {
+                                Err(Bounce::Full(PushMsg::Frag { frag, .. }))
+                                | Err(Bounce::Down(PushMsg::Frag { frag, .. })) => {
                                     origin_inflight[id].fetch_sub(1, Ordering::AcqRel);
                                     in_flight.fetch_sub(1, Ordering::AcqRel);
                                     shard.restore_fragment(j, frag);
@@ -911,7 +1192,7 @@ pub fn run_threaded_push(
                                         });
                                     }
                                 }
-                                Err(TrySendError::Disconnected(PushMsg::Frag { frag, .. })) => {
+                                Err(Bounce::Gone(PushMsg::Frag { frag, .. })) => {
                                     origin_inflight[id].fetch_sub(1, Ordering::AcqRel);
                                     in_flight.fetch_sub(1, Ordering::AcqRel);
                                     shard.restore_fragment(j, frag);
@@ -953,7 +1234,7 @@ pub fn run_threaded_push(
                             in_flight.fetch_add(1, Ordering::AcqRel);
                             origin_inflight[id].fetch_add(1, Ordering::AcqRel);
                             steal_gen.fetch_add(1, Ordering::AcqRel);
-                            match txs[thief].try_send(PushMsg::Grant { src: id, grant }) {
+                            match link.try_send(thief, PushMsg::Grant { src: id, grant }) {
                                 Ok(()) => {
                                     grants_out += 1;
                                     if let Some((tr, ring)) = &tw {
@@ -965,10 +1246,9 @@ pub fn run_threaded_push(
                                         });
                                     }
                                 }
-                                Err(TrySendError::Full(PushMsg::Grant { grant, .. }))
-                                | Err(TrySendError::Disconnected(PushMsg::Grant {
-                                    grant, ..
-                                })) => {
+                                Err(Bounce::Full(PushMsg::Grant { grant, .. }))
+                                | Err(Bounce::Down(PushMsg::Grant { grant, .. }))
+                                | Err(Bounce::Gone(PushMsg::Grant { grant, .. })) => {
                                     origin_inflight[id].fetch_sub(1, Ordering::AcqRel);
                                     in_flight.fetch_sub(1, Ordering::AcqRel);
                                     shard.restore_grant(grant);
@@ -991,15 +1271,41 @@ pub fn run_threaded_push(
                         }
                     }
                     if let Some(hl) = head_list.as_mut() {
-                        if frame_due || pushed > 0 || received {
-                            *head_frames[id].lock().unwrap() =
-                                Some(shard_frame(hl, shard, None));
+                        // net mode re-stamps even an unchanged frame
+                        // when a migration elsewhere bumped the steal
+                        // generation (this shard's rows were not part
+                        // of it, so the content is still exact — only
+                        // the stamp aged out), and heartbeats every 64
+                        // rounds because a congested link may have
+                        // dropped the last snapshot
+                        let gen_now = steal_gen.load(Ordering::Acquire);
+                        let restamp =
+                            net_mode && (gen_now != last_pub_gen || rounds % 64 == 0);
+                        if frame_due || pushed > 0 || received || restamp {
+                            let frame = shard_frame(hl, shard, None);
+                            if net_mode {
+                                // the frame travels as a wire snapshot,
+                                // stamped with the steal generation at
+                                // capture time so the monitor can
+                                // discard anything a migration raced
+                                link.send_control(
+                                    monitor_ep,
+                                    WireMsg::HeadFrame {
+                                        src: id as u32,
+                                        gen: gen_now,
+                                        frame: frame_to_wire(&frame),
+                                    },
+                                );
+                                last_pub_gen = gen_now;
+                            } else {
+                                *head_frames[id].lock().unwrap() = Some(frame);
+                            }
                             frame_due = false;
                         }
                     }
                     let estimate = shard.residual_estimate();
                     published[id].store(estimate.to_bits(), Ordering::Release);
-                    if let Some(p) = port.as_mut() {
+                    {
                         // §4.2 local convergence check: conservative
                         // estimate (materialized + outbox mass) under
                         // this worker's tol share, the inbox drained at
@@ -1007,28 +1313,47 @@ pub fn run_threaded_push(
                         // still unapplied — shipped mass stays covered
                         // by the receiver's state machine, not ours
                         let own = origin_inflight[id].load(Ordering::Acquire);
-                        match p.on_round(estimate < tol / s as f64 && own == 0) {
-                            Some(TermMsg::Converge) => {
-                                if let Some((tr, ring)) = &tw {
-                                    ring.record(Event {
-                                        t_us: tr.now_us(),
-                                        kind: EventKind::TermConverge,
-                                        a: pc_max as u64,
-                                        v: estimate,
-                                    });
+                        if let Some(msg) = term_side.on_round(estimate < tol / s as f64 && own == 0)
+                        {
+                            match msg {
+                                TermMsg::Converge => {
+                                    if let Some((tr, ring)) = &tw {
+                                        ring.record(Event {
+                                            t_us: tr.now_us(),
+                                            kind: EventKind::TermConverge,
+                                            a: pc_max as u64,
+                                            v: estimate,
+                                        });
+                                    }
                                 }
-                            }
-                            Some(TermMsg::Diverge) => {
-                                if let Some((tr, ring)) = &tw {
-                                    ring.record(Event {
-                                        t_us: tr.now_us(),
-                                        kind: EventKind::TermDiverge,
-                                        a: 0,
-                                        v: estimate,
-                                    });
+                                TermMsg::Diverge => {
+                                    if let Some((tr, ring)) = &tw {
+                                        ring.record(Event {
+                                            t_us: tr.now_us(),
+                                            kind: EventKind::TermDiverge,
+                                            a: 0,
+                                            v: estimate,
+                                        });
+                                    }
                                 }
+                                TermMsg::Stop => unreachable!("workers never send STOP"),
                             }
-                            _ => {}
+                            if net_mode {
+                                // frame carries this worker's own
+                                // in-flight count — the SAME value the
+                                // predicate above used, so an honest
+                                // CONVERGE always ships an empty list
+                                // and can never be downgraded
+                                let inflight = if own > 0 {
+                                    vec![(id as u32, own as u64)]
+                                } else {
+                                    Vec::new()
+                                };
+                                link.send_control(
+                                    monitor_ep,
+                                    WireMsg::Term { src: id as u32, msg, inflight },
+                                );
+                            }
                         }
                     }
                     if let Some(qb) = &queued_board {
@@ -1088,8 +1413,8 @@ pub fn run_threaded_push(
                                         v: 0.0,
                                     });
                                 }
-                                if txs[victim]
-                                    .try_send(PushMsg::StealRequest { thief: id })
+                                if link
+                                    .try_send(victim, PushMsg::StealRequest { thief: id })
                                     .is_ok()
                                 {
                                     outstanding = Some((victim, rounds + 64));
@@ -1103,18 +1428,26 @@ pub fn run_threaded_push(
                 // final drain, and nobody sends after it — so the drain
                 // below observes every fragment and grant ever sent
                 drained.wait();
-                while let Ok(msg) = rx.try_recv() {
+                // net mode: make every injected delay/disconnect window
+                // deliverable NOW — the final drain must observe all
+                // shipped mass, not wait out a 200ms fault schedule
+                link.flush();
+                while let Some(msg) = link.try_recv() {
                     match msg {
                         PushMsg::Frag { src, frag } => {
                             shard.apply_fragment(&frag);
-                            origin_inflight[src].fetch_sub(1, Ordering::AcqRel);
-                            in_flight.fetch_sub(1, Ordering::AcqRel);
+                            if !net_mode {
+                                origin_inflight[src].fetch_sub(1, Ordering::AcqRel);
+                                in_flight.fetch_sub(1, Ordering::AcqRel);
+                            }
                         }
                         PushMsg::StealRequest { .. } => {}
                         PushMsg::Grant { src, grant } => {
                             stolen_in += shard.adopt_rows(grant) as u64;
-                            origin_inflight[src].fetch_sub(1, Ordering::AcqRel);
-                            in_flight.fetch_sub(1, Ordering::AcqRel);
+                            if !net_mode {
+                                origin_inflight[src].fetch_sub(1, Ordering::AcqRel);
+                                in_flight.fetch_sub(1, Ordering::AcqRel);
+                            }
                         }
                     }
                 }
@@ -1126,8 +1459,8 @@ pub fn run_threaded_push(
                     stolen_in,
                     grants_out,
                     idle,
-                    term_converge: port.as_ref().map_or(0, |p| p.converge_sent()),
-                    term_diverge: port.as_ref().map_or(0, |p| p.diverge_sent()),
+                    term_converge: term_side.converge_sent(),
+                    term_diverge: term_side.diverge_sent(),
                 }
             }));
         }
@@ -1141,7 +1474,15 @@ pub fn run_threaded_push(
         // since the frames are asynchronous snapshots; the caller
         // re-checks exactly on the settled state.
         let mut quiet = 0u32;
-        let mut mport = protocol.then(|| MonitorPort::new(s, ctl_rx));
+        let mut mport = (protocol && !net_mode).then(|| MonitorPort::new(s, ctl_rx));
+        // net mode: the control traffic arrives on the monitor's own
+        // wire endpoint instead — §4.2 frames feed a WireMonitor
+        // (hardened central log), Ack frames release the in-flight
+        // accounting the workers re-routed through us, and head frames
+        // land here as generation-stamped snapshots
+        let mut wire_mon = (protocol && net_mode).then(|| WireMonitor::new(s));
+        let mut wire_stop = false;
+        let mut net_frames: Vec<Option<(u64, ShardHeadFrame)>> = (0..s).map(|_| None).collect();
         // monitor-side observability: its own event track, plus the
         // periodic residual-decay sweep over the published boards
         let mon = trace.as_ref().map(|tr| (Arc::clone(tr), tr.ring(MONITOR_TRACK)));
@@ -1150,6 +1491,39 @@ pub fn run_threaded_push(
         let mut last_sample = 0u64;
         while !stop.load(Ordering::Acquire) && Instant::now() < deadline {
             std::thread::sleep(std::time::Duration::from_micros(300));
+            // drain the wire first: this single-threaded loop is what
+            // turns per-producer FIFO into protocol soundness — a
+            // worker's DIVERGE is always processed here before the Ack
+            // it queued behind it, so no release can outrun its
+            // retraction
+            if let Some(ml) = mon_link.as_mut() {
+                while let Some(msg) = ml.try_recv() {
+                    match msg {
+                        WireMsg::Ack { peer } => {
+                            let p = peer as usize;
+                            if p < s {
+                                origin_inflight[p].fetch_sub(1, Ordering::AcqRel);
+                                in_flight.fetch_sub(1, Ordering::AcqRel);
+                            }
+                        }
+                        WireMsg::Term { src, msg, inflight } => {
+                            if let Some(wm) = wire_mon.as_mut() {
+                                let nz = inflight.iter().any(|&(_, c)| c > 0);
+                                if wm.on_message(src as usize, msg, nz) {
+                                    wire_stop = true;
+                                }
+                            }
+                        }
+                        WireMsg::HeadFrame { src, gen, frame } => {
+                            let i = src as usize;
+                            if i < s {
+                                net_frames[i] = Some((gen, frame_from_wire(frame)));
+                            }
+                        }
+                        _ => {}
+                    }
+                }
+            }
             if let Some((tr, _)) = &mon {
                 let now = tr.now_us();
                 if now.saturating_sub(last_sample) >= sample_every {
@@ -1177,10 +1551,30 @@ pub fn run_threaded_push(
             if let Some(gl) = goal {
                 if in_flight.load(Ordering::Acquire) == 0 {
                     let gen0 = steal_gen.load(Ordering::Acquire);
-                    let frames: Vec<ShardHeadFrame> = head_frames
-                        .iter()
-                        .filter_map(|m| m.lock().unwrap().clone())
-                        .collect();
+                    let frames: Vec<ShardHeadFrame> = if net_mode {
+                        // wire snapshots: every shard must have sent a
+                        // frame stamped with the CURRENT steal
+                        // generation — a stale stamp means a migration
+                        // raced the capture, so the set is discarded
+                        // (the in-flight gate stays exact here: it is
+                        // maintained by this loop's own Ack processing)
+                        if net_frames
+                            .iter()
+                            .all(|f| matches!(f, Some((g, _)) if *g == gen0))
+                        {
+                            net_frames
+                                .iter()
+                                .filter_map(|f| f.as_ref().map(|(_, fr)| fr.clone()))
+                                .collect()
+                        } else {
+                            Vec::new()
+                        }
+                    } else {
+                        head_frames
+                            .iter()
+                            .filter_map(|m| m.lock().unwrap().clone())
+                            .collect()
+                    };
                     // a migration that raced the (non-atomic) collection
                     // could put one row in a stale victim snapshot AND
                     // the thief's fresh frame — discard such samples
@@ -1206,6 +1600,23 @@ pub fn run_threaded_push(
                         }
                     }
                 }
+            }
+            if let Some(wm) = &wire_mon {
+                // net-mode §4.2: the frames were already fed into the
+                // WireMonitor by the drain above; act on its verdict
+                if wire_stop {
+                    record_stop_cause(&stop_cause, StopCause::Protocol);
+                    if let Some((tr, ring)) = &mon {
+                        ring.record(Event {
+                            t_us: tr.now_us(),
+                            kind: EventKind::TermStop,
+                            a: wm.messages_seen(),
+                            v: 0.0,
+                        });
+                    }
+                    stop.store(true, Ordering::Release);
+                }
+                continue;
             }
             if let Some(mp) = mport.as_mut() {
                 if mp.poll() {
@@ -1238,7 +1649,13 @@ pub fn run_threaded_push(
                 published_shards += 1;
                 total += v;
             }
-            if published_shards > 0 && total < tol && in_flight.load(Ordering::Acquire) == 0 {
+            // the in-flight gate only exists in-process: a real network
+            // has no global in-flight register, so the net-tier quiet
+            // heuristic runs without it — exactly the unsoundness the
+            // premature-quiet regression test demonstrates and the
+            // §4.2 protocol closes
+            let infl_ok = net_mode || in_flight.load(Ordering::Acquire) == 0;
+            if published_shards > 0 && total < tol && infl_ok {
                 quiet += 1;
                 if let Some((tr, ring)) = &mon {
                     ring.record(Event {

@@ -12,8 +12,9 @@ use crate::asynciter::{
 use crate::config::RunConfig;
 use crate::graph::generators::{churn_batch, ChurnParams};
 use crate::metrics::{StreamEpochRow, Table1Row, TopKEpochStats};
+use crate::net::{run_socket_push, FaultPlan, NetConfig, SocketRunOptions};
 use crate::pagerank::PagerankProblem;
-use crate::simnet::Topology;
+use crate::simnet::{ClusterProfile, Topology};
 use crate::stream::{
     power_method_f64, power_method_pers, solve_certified_sharded, solve_certified_state,
     DeltaGraph, Personalization, PushState, ServeOptions, ServeTier, ShardedPush,
@@ -188,6 +189,30 @@ pub fn ablation_topology(
         .collect()
 }
 
+/// Which process-boundary transport the stream's threaded drains ride
+/// (`--net`): `None` keeps the mpsc channels.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NetBackend {
+    /// Serialize every exchange through the wire codec and an
+    /// in-process [`crate::net::LoopbackNet`] throttled by a
+    /// [`ClusterProfile`] — same worker loop, real frames, injectable
+    /// faults, one OS process.
+    Loopback,
+    /// One OS process per shard over real sockets
+    /// ([`run_socket_push`]). Restricted: no steal / top-k / resident /
+    /// PPR / trace, protocol termination only.
+    Socket,
+}
+
+/// Bandwidth/latency curves for the loopback fabric (`--net-profile`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NetProfileKind {
+    /// Near-zero latency, fat links — the fast default for tests.
+    Test,
+    /// The paper's heterogeneous Beowulf-cluster curves.
+    Beowulf,
+}
+
 /// Options for the evolving-graph epoch experiment.
 #[derive(Debug, Clone)]
 pub struct StreamOptions {
@@ -287,6 +312,17 @@ pub struct StreamOptions {
     /// recording sites are all behind `Option` checks, so the disabled
     /// path costs nothing.
     pub trace: Option<Arc<crate::obs::TraceCollector>>,
+    /// Route the threaded drains over a process-boundary transport
+    /// (`--net loopback|socket`); needs `threads >= 2`.
+    pub net: Option<NetBackend>,
+    /// Loopback throttling curves (`--net-profile`, default test).
+    pub net_profile: NetProfileKind,
+    /// Loopback fault injection (`--inject-link L:MS[:JITTER]`): every
+    /// frame out of endpoint `L` takes an extra `MS` milliseconds plus
+    /// uniform jitter in `[0, JITTER)` ms — the wire analogue of
+    /// `--inject-stall`, and the scenario the quiet-window heuristic
+    /// mis-calls while the §4.2 protocol waits out the in-flight mass.
+    pub inject_link: Option<(usize, f64, f64)>,
 }
 
 impl Default for StreamOptions {
@@ -315,6 +351,9 @@ impl Default for StreamOptions {
             pc_max: 3,
             inject_stall: None,
             trace: None,
+            net: None,
+            net_profile: NetProfileKind::Test,
+            inject_link: None,
         }
     }
 }
@@ -376,6 +415,22 @@ fn epoch_baseline(
 /// (tolerance, budget, and the steal knobs — the rebalance entry hook
 /// is driven separately by the resident loop).
 fn thread_opts(opts: &StreamOptions, max_pushes: u64) -> PushThreadOptions {
+    // loopback is the only backend the worker loop drives in-process;
+    // socket mode routes around run_threaded_push entirely
+    let net = (opts.net == Some(NetBackend::Loopback)).then(|| {
+        let endpoints = opts.threads + 1; // workers + monitor
+        NetConfig {
+            profile: match opts.net_profile {
+                NetProfileKind::Beowulf => ClusterProfile::paper_beowulf(endpoints),
+                NetProfileKind::Test => ClusterProfile::test_profile(endpoints),
+            },
+            faults: opts
+                .inject_link
+                .map(|(l, ms, j)| FaultPlan::delay_from(l, ms, j))
+                .unwrap_or_default(),
+            seed: opts.seed,
+        }
+    });
     PushThreadOptions {
         tol: opts.tol,
         max_pushes,
@@ -385,6 +440,7 @@ fn thread_opts(opts: &StreamOptions, max_pushes: u64) -> PushThreadOptions {
         pc_max: opts.pc_max,
         inject_stall: opts.inject_stall,
         trace: opts.trace.clone(),
+        net,
         ..Default::default()
     }
 }
@@ -530,6 +586,48 @@ pub fn stream_epochs(graph_spec: &str, opts: &StreamOptions) -> Result<StreamRep
         "--steal needs --threads N with N >= 2 (a single shard has no peer to rob)"
     );
     anyhow::ensure!(opts.steal_batch >= 1, "--steal-batch must be >= 1");
+    anyhow::ensure!(
+        opts.net.is_none() || opts.threads >= 2,
+        "--net needs --threads N with N >= 2 (one shard has no peer to talk to)"
+    );
+    if opts.net == Some(NetBackend::Socket) {
+        // a process boundary removes the shared registers the richer
+        // modes lean on; the socket tier speaks frames or nothing
+        anyhow::ensure!(
+            !opts.steal && opts.topk.is_none() && !opts.resident && opts.ppr.is_none(),
+            "--net socket supports the plain roundtrip drain only \
+             (no --steal / --topk / --resident / --ppr)"
+        );
+        anyhow::ensure!(
+            opts.term == TermMode::Protocol,
+            "--net socket requires --term protocol (the quiet-window heuristic \
+             reads a shared in-flight register that does not cross processes)"
+        );
+        anyhow::ensure!(
+            opts.inject_stall.is_none() && opts.inject_link.is_none(),
+            "fault injection is loopback-only (--net loopback)"
+        );
+        anyhow::ensure!(
+            opts.trace.is_none(),
+            "--trace does not cross the process boundary (--net loopback instead)"
+        );
+    }
+    if let Some((l, ms, j)) = opts.inject_link {
+        anyhow::ensure!(
+            opts.net == Some(NetBackend::Loopback),
+            "--inject-link needs --net loopback (the fault injector lives in the \
+             loopback fabric)"
+        );
+        anyhow::ensure!(
+            l < opts.threads,
+            "--inject-link endpoint {l} out of range (workers are 0..{})",
+            opts.threads
+        );
+        anyhow::ensure!(
+            ms >= 0.0 && j >= 0.0,
+            "--inject-link delay/jitter must be non-negative"
+        );
+    }
     anyhow::ensure!(opts.pc_max >= 1, "--pc-max must be >= 1 (persistence needs a streak)");
     if let Some(st) = opts.inject_stall {
         anyhow::ensure!(
@@ -765,15 +863,42 @@ pub fn stream_epochs(graph_spec: &str, opts: &StreamOptions) -> Result<StreamRep
                 if let Some(tr) = &opts.trace {
                     sharded.attach_trace(Arc::clone(tr));
                 }
-                let topts = PushThreadOptions {
-                    topk: if opts.topk_stop { topk_goal } else { None },
-                    ..thread_opts(opts, opts.max_pushes)
-                };
-                let tm = run_threaded_push(&g, &mut sharded, &topts);
-                parallel_pushes = tm.shard_pushes.iter().sum();
-                epoch_stolen = tm.stolen_rows.iter().sum();
-                epoch_grants = tm.steal_grants.iter().sum();
-                term.fold(Some(tm.stop_cause), tm.term_converge, tm.term_diverge);
+                if opts.net == Some(NetBackend::Socket) {
+                    // real process boundary: write the snapshot so every
+                    // child materializes the identical graph, seed the
+                    // children with the warm shard states, drain to a
+                    // protocol STOP, land the results back here
+                    let path = std::env::temp_dir()
+                        .join(format!("asyncpr_net_{}_{epoch}.bin", std::process::id()));
+                    crate::graph::io::save_edgelist_bin(&g.to_edgelist(), &path)?;
+                    let p0 = sharded.total_pushes();
+                    let sopts = SocketRunOptions {
+                        shards: opts.threads,
+                        alpha: opts.alpha,
+                        tol: opts.tol,
+                        seed: opts.seed,
+                        max_pushes: opts.max_pushes,
+                        pc_max: opts.pc_max,
+                        ..SocketRunOptions::default()
+                    };
+                    let res = run_socket_push(&mut sharded, &path.to_string_lossy(), &sopts);
+                    let _ = std::fs::remove_file(&path);
+                    let sm = res?;
+                    parallel_pushes = sharded.total_pushes() - p0;
+                    let cause =
+                        if sm.converged { StopCause::Protocol } else { StopCause::Budget };
+                    term.fold(Some(cause), sm.term_converge, sm.term_diverge);
+                } else {
+                    let topts = PushThreadOptions {
+                        topk: if opts.topk_stop { topk_goal } else { None },
+                        ..thread_opts(opts, opts.max_pushes)
+                    };
+                    let tm = run_threaded_push(&g, &mut sharded, &topts);
+                    parallel_pushes = tm.shard_pushes.iter().sum();
+                    epoch_stolen = tm.stolen_rows.iter().sum();
+                    epoch_grants = tm.steal_grants.iter().sum();
+                    term.fold(Some(tm.stop_cause), tm.term_converge, tm.term_diverge);
+                }
                 sharded.gather_into(&mut inc);
             }
             // the sequential phase only gets whatever the parallel phase

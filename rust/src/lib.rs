@@ -31,6 +31,7 @@
 //! | [`simnet`] | virtual-time discrete-event cluster/network simulator |
 //! | [`asynciter`] | generic asynchronous fixed-point engine (eq. 5) |
 //! | [`termination`] | Figure-1 centralized protocol + global oracle + tree detector |
+//! | [`net`] | process-boundary transport: wire codec, throttled loopback + socket tiers, fault injection |
 //! | [`coordinator`] | partitioning, run orchestration, adaptive comms, reports |
 //! | [`runtime`] | PJRT engine executing the AOT artifacts (stubbed without `--features xla`) |
 //! | [`metrics`] | Table-1/Table-2 collectors, stream epoch reports, traces, emitters |
@@ -42,6 +43,7 @@ pub mod config;
 pub mod coordinator;
 pub mod graph;
 pub mod metrics;
+pub mod net;
 pub mod obs;
 pub mod pagerank;
 pub mod runtime;

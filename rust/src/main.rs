@@ -15,12 +15,16 @@
 //!              [--topk K] [--topk-order] [--topk-stop]
 //!              [--ppr SRC[,SRC...]]
 //!              [--term protocol|quiet] [--pc-max N] [--inject-stall W:MS[:R]]
+//!              [--net loopback|socket] [--net-profile test|beowulf]
+//!              [--inject-link L:MS[:JITTER]]
 //!              [--arrivals K] [--links L] [--inserts I]
 //!              [--removes R] [--out reports/X]
 //!              [--trace FILE] [--trace-sample-us N]
 //! repro serve [--graph G] [--epochs E] [--seed S] [--tol T] [--alpha A]
 //!             [--queries Q] [--distinct D] [--sources S]
 //!             [--cache-cap C] [--topk K] [--out reports/X]
+//! repro net [--graph G] [--shards P] [--seed S] [--tol T] [--alpha A]
+//!           [--pc-max N] [--max-pushes B] [--timeout-secs T]
 //! repro artifacts-check
 //! repro help
 //! ```
@@ -77,6 +81,17 @@ fn dispatch(args: &[String]) -> anyhow::Result<()> {
             let flags = parse_flags(&args[1..])?;
             cmd_serve(&flags)
         }
+        "net" => {
+            let flags = parse_flags(&args[1..])?;
+            cmd_net(&flags)
+        }
+        // hidden: the child half of `repro net` / `stream --net socket`
+        // (one process per shard, spawned by the driver — not part of
+        // the user-facing surface)
+        "net-worker" => {
+            let flags = parse_flags(&args[1..])?;
+            cmd_net_worker(&flags)
+        }
         "artifacts-check" => cmd_artifacts_check(),
         "help" | "--help" | "-h" => {
             print!("{HELP}");
@@ -102,12 +117,16 @@ USAGE:
                [--ppr SRC[,SRC...]]
                [--term protocol|quiet] [--pc-max N]
                [--inject-stall W:MS[:R]]
+               [--net loopback|socket] [--net-profile test|beowulf]
+               [--inject-link L:MS[:JITTER]]
                [--arrivals K] [--links L] [--inserts I]
                [--removes R] [--out STEM]
                [--trace FILE] [--trace-sample-us N]
   repro serve [--graph SPEC] [--epochs E] [--seed N] [--tol T] [--alpha A]
               [--queries Q] [--distinct D] [--sources S]
               [--cache-cap C] [--topk K] [--out STEM]
+  repro net [--graph SPEC] [--shards P] [--seed N] [--tol T] [--alpha A]
+            [--pc-max N] [--max-pushes B] [--timeout-secs T]
   repro artifacts-check
   repro help
 
@@ -157,6 +176,21 @@ early when a stalled worker holds unpublished residual. The report's
 `--inject-stall W:MS[:R]` makes worker W sleep MS milliseconds at
 round R (default 0) of each threaded drain — fault injection for
 racing the two termination modes.
+`--net` routes the threaded exchange over a process-boundary wire
+instead of mpsc channels (needs --threads >= 2): `loopback` serializes
+every fragment/steal/top-k/termination message through the versioned
+binary codec and an in-process fabric throttled by `--net-profile`
+bandwidth/latency curves (`test` fast default, `beowulf` the paper's
+heterogeneous cluster); `socket` runs one OS process per shard over
+real TCP sockets (plain roundtrip drain only: no steal/topk/resident/
+ppr/trace, --term protocol required). `--inject-link L:MS[:JITTER]`
+(loopback only) delays every frame out of endpoint L by MS ms plus
+uniform jitter in [0,JITTER) ms — the wire fault that makes the quiet
+heuristic stop early while the protocol waits out in-flight mass.
+`net` is the standalone socket-tier driver: spawn `--shards P` worker
+processes, solve cold over real sockets to a protocol STOP, gather and
+verify (exact residual < tol, mass balance, L1 vs a fresh power run —
+any violated bar is a hard error).
 `--trace FILE` writes a Chrome trace-event JSON (open in Perfetto or
 chrome://tracing). For `stream` it carries one instant-event track per
 shard (push batches, fragment sends/defers, steal requests/grants,
@@ -181,7 +215,7 @@ fn parse_flags(args: &[String]) -> anyhow::Result<HashMap<String, String>> {
         if matches!(
             key,
             "check" | "adaptive" | "artifact" | "push" | "balanced" | "global-threshold"
-                | "quick" | "resident" | "steal" | "topk-order" | "topk-stop"
+                | "quick" | "resident" | "seeded" | "steal" | "topk-order" | "topk-stop"
         ) {
             map.insert(key.to_string(), "true".to_string());
             i += 1;
@@ -209,6 +243,22 @@ fn parse_stall(v: &str) -> anyhow::Result<StallInjection> {
         ms: parts[1].parse()?,
         after_rounds: parts.get(2).map(|r| r.parse()).transpose()?.unwrap_or(0),
     })
+}
+
+/// Parse `--inject-link L:MS[:JITTER]` — sending endpoint, fixed extra
+/// delay in milliseconds, and uniform jitter in `[0, JITTER)` ms
+/// (default 0).
+fn parse_inject_link(v: &str) -> anyhow::Result<(usize, f64, f64)> {
+    let parts: Vec<&str> = v.split(':').collect();
+    anyhow::ensure!(
+        parts.len() == 2 || parts.len() == 3,
+        "--inject-link wants L:MS or L:MS:JITTER, got {v:?}"
+    );
+    Ok((
+        parts[0].parse()?,
+        parts[1].parse()?,
+        parts.get(2).map(|j| j.parse()).transpose()?.unwrap_or(0.0),
+    ))
 }
 
 /// Parse `SRC[,SRC..]` — the comma-separated node-id list behind
@@ -480,6 +530,24 @@ fn cmd_stream(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     if let Some(v) = flags.get("inject-stall") {
         opts.inject_stall = Some(parse_stall(v)?);
     }
+    if let Some(v) = flags.get("net") {
+        opts.net = Some(match v.as_str() {
+            "loopback" => experiments::NetBackend::Loopback,
+            "socket" => experiments::NetBackend::Socket,
+            other => anyhow::bail!("--net must be loopback|socket, got {other:?}"),
+        });
+    }
+    if let Some(v) = flags.get("net-profile") {
+        anyhow::ensure!(opts.net.is_some(), "--net-profile needs --net loopback|socket");
+        opts.net_profile = match v.as_str() {
+            "test" => experiments::NetProfileKind::Test,
+            "beowulf" => experiments::NetProfileKind::Beowulf,
+            other => anyhow::bail!("--net-profile must be test|beowulf, got {other:?}"),
+        };
+    }
+    if let Some(v) = flags.get("inject-link") {
+        opts.inject_link = Some(parse_inject_link(v)?);
+    }
     // churn overrides ride as options; the driver resolves them against
     // graph-scaled defaults once the graph is loaded (loading it here
     // just to size the defaults would build it twice)
@@ -509,13 +577,18 @@ fn cmd_stream(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         .map(|_| Arc::new(TraceCollector::new(obs::DEFAULT_RING_CAP, trace_sample_us)));
 
     eprintln!(
-        "streaming {graph}: {} update epochs, tol {:.0e}, alpha {}, threads {}{}{}{} ...",
+        "streaming {graph}: {} update epochs, tol {:.0e}, alpha {}, threads {}{}{}{}{} ...",
         opts.epochs,
         opts.tol,
         opts.alpha,
         opts.threads,
         if opts.resident { " (epoch-resident shards)" } else { "" },
         if opts.steal { " (work stealing)" } else { "" },
+        match opts.net {
+            Some(experiments::NetBackend::Loopback) => " (loopback wire)",
+            Some(experiments::NetBackend::Socket) => " (socket processes)",
+            None => "",
+        },
         opts.ppr
             .as_ref()
             .map(|s| format!(" (PPR over {} sources)", s.len()))
@@ -648,6 +721,77 @@ fn cmd_stream(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         anyhow::bail!("stream acceptance check failed (see report above)");
     }
     Ok(())
+}
+
+fn cmd_net(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let graph = flags
+        .get("graph")
+        .cloned()
+        .unwrap_or_else(|| "scaled:20000".to_string());
+    let mut opts = asyncpr::net::SocketRunOptions::default();
+    if let Some(v) = flags.get("shards") {
+        opts.shards = v.parse()?;
+    }
+    if let Some(v) = flags.get("alpha") {
+        opts.alpha = v.parse()?;
+    }
+    if let Some(v) = flags.get("tol") {
+        opts.tol = v.parse()?;
+    }
+    if let Some(v) = flags.get("seed") {
+        opts.seed = v.parse()?;
+    }
+    if let Some(v) = flags.get("max-pushes") {
+        opts.max_pushes = v.parse()?;
+    }
+    if let Some(v) = flags.get("pc-max") {
+        opts.pc_max = v.parse()?;
+    }
+    if let Some(v) = flags.get("timeout-secs") {
+        opts.timeout = std::time::Duration::from_secs(v.parse()?);
+    }
+    eprintln!(
+        "net {graph}: {} worker processes over real sockets, tol {:.0e}, alpha {} ...",
+        opts.shards, opts.tol, opts.alpha
+    );
+    let rep = asyncpr::net::run_net_driver(&graph, &opts)?;
+    // run_net_driver already enforced every bar below; a STOP that
+    // left residual >= tol would have been an error, so reaching here
+    // means the §4.2 protocol ended the run
+    println!("socket tier: {} processes over n = {}", rep.shards, rep.n);
+    println!("  pushes        {}", rep.pushes);
+    println!("  residual      {:.3e} (tol {:.0e})", rep.residual, opts.tol);
+    println!("  mass error    {:.3e} (bar 1e-9)", rep.mass_err);
+    println!("  L1 vs power   {:.3e}", rep.l1_vs_power);
+    println!(
+        "  term traffic  {} messages ({} CONVERGE downgraded)",
+        rep.term_messages, rep.downgraded
+    );
+    println!("  stop_cause    Protocol");
+    println!("  wall clock    {:.0} ms", rep.wall_ms);
+    Ok(())
+}
+
+fn cmd_net_worker(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    fn req<'a>(flags: &'a HashMap<String, String>, key: &str) -> anyhow::Result<&'a String> {
+        flags
+            .get(key)
+            .ok_or_else(|| anyhow::anyhow!("net-worker needs --{key} (driver-spawned only)"))
+    }
+    let args = asyncpr::net::NetWorkerArgs {
+        graph: req(flags, "graph")?.clone(),
+        seed: req(flags, "seed")?.parse()?,
+        shard: req(flags, "shard")?.parse()?,
+        shards: req(flags, "shards")?.parse()?,
+        alpha: req(flags, "alpha")?.parse()?,
+        tol: req(flags, "tol")?.parse()?,
+        budget: req(flags, "budget")?.parse()?,
+        pc_max: req(flags, "pc-max")?.parse()?,
+        addr: req(flags, "addr")?.clone(),
+        timeout_ms: req(flags, "timeout-ms")?.parse()?,
+        seeded: flags.contains_key("seeded"),
+    };
+    asyncpr::net::run_net_worker(&args)
 }
 
 fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {

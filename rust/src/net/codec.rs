@@ -1,0 +1,731 @@
+//! Versioned, zero-dependency binary wire codec for the inter-shard
+//! message set.
+//!
+//! Everything the threaded push backend moves between shards — residual
+//! fragments, steal requests/grants, top-k head frames, and the §4.2
+//! termination control messages with their per-origin in-flight counts
+//! — has a frame here, so the same worker loop can run over an in-
+//! process channel or a byte stream without changing the protocol.
+//!
+//! # Frame layout
+//!
+//! ```text
+//! offset  size  field
+//! 0       2     magic 0xA5 0x50
+//! 2       1     version (currently 1)
+//! 3       1     message kind
+//! 4       2     destination endpoint, u16 LE (routers forward on this
+//!               without decoding the payload)
+//! 6       4     payload length, u32 LE
+//! 10      len   payload (kind-specific, little-endian scalars)
+//! 10+len  4     FNV-1a-32 checksum over bytes [0, 10+len), u32 LE
+//! ```
+//!
+//! The decoder is total: any byte string either yields a message or a
+//! [`WireError`] — truncation, bad magic/version/kind, checksum
+//! mismatch, and NaN-carrying mass fields are all rejected without
+//! panicking (a corrupted fragment must not poison a shard's residual
+//! accounting with NaN, which would otherwise propagate through every
+//! later mass tally). `±inf` is legal only where the protocol
+//! legitimately produces it (a head frame's `rest_bound` is `-inf`
+//! when the pool covers the whole shard).
+
+use crate::stream::ResidualFragment;
+use crate::termination::TermMsg;
+
+/// Wire protocol version this build speaks.
+pub const WIRE_VERSION: u8 = 1;
+/// Two magic bytes opening every frame.
+pub const WIRE_MAGIC: [u8; 2] = [0xA5, 0x50];
+/// Fixed header length (magic + version + kind + dst + payload len).
+pub const HEADER_LEN: usize = 10;
+/// Trailing checksum length.
+pub const TRAILER_LEN: usize = 4;
+
+/// One row of a steal grant on the wire — the mirror of the crate-
+/// private `StolenRow` (full per-row solver state plus the
+/// touched-row accounting bit that migrates with the row).
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireRow {
+    /// Global node id.
+    pub node: u32,
+    /// Settled probability mass.
+    pub p: f64,
+    /// Queued residual mass.
+    pub r: f64,
+    /// Whether the row already counted toward this epoch's touched set.
+    pub touched: bool,
+}
+
+/// A top-k head frame on the wire — the mirror of the crate-private
+/// `ShardHeadFrame` snapshot the monitor certifies against.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireHeadFrame {
+    /// (global node id, score center) for every pool member.
+    pub entries: Vec<(u32, f64)>,
+    /// Center upper bound for rows outside `entries` (`-inf` when the
+    /// pool covers the whole shard).
+    pub rest_bound: f64,
+    /// Located-residual split, positive side.
+    pub r_plus: f64,
+    /// Located-residual split, negative side.
+    pub r_minus: f64,
+    /// Unlocated-residual split, positive side.
+    pub unk_plus: f64,
+    /// Unlocated-residual split, negative side.
+    pub unk_minus: f64,
+}
+
+/// The full inter-shard message set.
+#[derive(Debug, Clone)]
+pub enum WireMsg {
+    /// A residual fragment from shard `src` (additive state in flight;
+    /// an undeliverable frame is restored, never dropped).
+    Frag {
+        /// Originating shard.
+        src: u32,
+        /// The fragment payload.
+        frag: ResidualFragment,
+    },
+    /// An idle shard asking a loaded peer for rows.
+    StealRequest {
+        /// The requesting shard.
+        thief: u32,
+    },
+    /// A batch of rows granted to a thief by victim `src`.
+    Grant {
+        /// The victim shard.
+        src: u32,
+        /// The migrating rows.
+        rows: Vec<WireRow>,
+    },
+    /// A tentative top-k head snapshot from shard `src`, stamped with
+    /// the steal generation it was built under. Once frames cross a
+    /// delayed wire, the shared mutex trick the in-process monitor uses
+    /// (clear-on-migration) no longer works; the generation stamp is
+    /// what lets the monitor reject a frame built before a row
+    /// migration that is only delivered after it.
+    HeadFrame {
+        /// Originating shard.
+        src: u32,
+        /// Steal generation at snapshot time.
+        gen: u64,
+        /// The snapshot.
+        frame: WireHeadFrame,
+    },
+    /// A §4.2 termination control message from worker `src`, carrying
+    /// the per-origin in-flight counts that must survive serialization
+    /// (a CONVERGE is only credible while every listed count is zero;
+    /// the monitor downgrades anything else).
+    Term {
+        /// Originating worker.
+        src: u32,
+        /// CONVERGE / DIVERGE / STOP.
+        msg: TermMsg,
+        /// `(origin, outstanding sends)` pairs; omitted entries are 0.
+        inflight: Vec<(u32, u64)>,
+    },
+    /// Socket handshake: a child announcing which shard it serves.
+    Hello {
+        /// The shard index this process owns.
+        shard: u32,
+    },
+    /// Socket acknowledgement: the receiver applied one fragment that
+    /// `peer` originated (releases one unit of `peer`'s in-flight
+    /// accounting; always enqueued *after* any DIVERGE the apply
+    /// provoked, on the same stream).
+    Ack {
+        /// The fragment's originator.
+        peer: u32,
+    },
+    /// Socket shutdown: worker `src` has emptied its outboxes after
+    /// STOP.
+    Flushed {
+        /// Originating worker.
+        src: u32,
+    },
+    /// Socket shutdown: the driver requesting a full state dump.
+    DumpReq,
+    /// Socket state transfer: the dense per-shard solver state, used to
+    /// seed a warm child and to gather results at shutdown.
+    State {
+        /// The shard this state belongs to.
+        src: u32,
+        /// First global row of the shard's home range — both sides
+        /// partition the graph independently, so this is the tripwire
+        /// that catches a bounds mismatch before mass lands in the
+        /// wrong rows.
+        lo: u32,
+        /// Settled mass per local row.
+        p: Vec<f64>,
+        /// Queued residual per local row.
+        r: Vec<f64>,
+        /// Pending uniform broadcast mass.
+        uni: f64,
+        /// Pending personalization mass.
+        pv: f64,
+        /// Pushes performed by this shard.
+        pushes: u64,
+    },
+}
+
+/// Why a frame failed to decode.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WireError {
+    /// The buffer ends before the frame does (on a stream: wait for
+    /// more bytes).
+    Truncated,
+    /// The first two bytes are not [`WIRE_MAGIC`].
+    BadMagic,
+    /// Version byte from a build we do not speak.
+    BadVersion(u8),
+    /// Unknown message kind byte.
+    BadKind(u8),
+    /// Checksum mismatch (corrupt frame).
+    BadChecksum,
+    /// A mass-carrying f64 field decoded to NaN.
+    NanMass,
+    /// Structurally invalid payload for the declared kind.
+    Malformed(&'static str),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Truncated => write!(f, "truncated frame"),
+            WireError::BadMagic => write!(f, "bad frame magic"),
+            WireError::BadVersion(v) => write!(f, "unsupported wire version {v}"),
+            WireError::BadKind(k) => write!(f, "unknown message kind {k}"),
+            WireError::BadChecksum => write!(f, "frame checksum mismatch"),
+            WireError::NanMass => write!(f, "NaN in a mass field"),
+            WireError::Malformed(what) => write!(f, "malformed payload: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+pub(crate) const KIND_FRAG: u8 = 0;
+const KIND_STEAL_REQUEST: u8 = 1;
+const KIND_GRANT: u8 = 2;
+const KIND_HEAD_FRAME: u8 = 3;
+const KIND_TERM: u8 = 4;
+const KIND_HELLO: u8 = 5;
+const KIND_ACK: u8 = 6;
+const KIND_FLUSHED: u8 = 7;
+const KIND_DUMP_REQ: u8 = 8;
+const KIND_STATE: u8 = 9;
+
+#[inline]
+fn fnv1a32(bytes: &[u8]) -> u32 {
+    let mut h: u32 = 0x811C_9DC5;
+    for &b in bytes {
+        h ^= b as u32;
+        h = h.wrapping_mul(0x0100_0193);
+    }
+    h
+}
+
+#[inline]
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+#[inline]
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+#[inline]
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_bits().to_le_bytes());
+}
+
+/// Cursor over a payload slice; every read is bounds-checked so a
+/// truncated or lying length field surfaces as an error, not a panic.
+struct Cur<'a> {
+    buf: &'a [u8],
+    at: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn new(buf: &'a [u8]) -> Cur<'a> {
+        Cur { buf, at: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        let end = self.at.checked_add(n).ok_or(WireError::Malformed("length overflow"))?;
+        if end > self.buf.len() {
+            return Err(WireError::Malformed("payload shorter than declared contents"));
+        }
+        let s = &self.buf[self.at..end];
+        self.at = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, WireError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, WireError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// An f64 that must be finite-or-infinite, never NaN.
+    fn mass(&mut self) -> Result<f64, WireError> {
+        let v = f64::from_bits(u64::from_le_bytes(self.take(8)?.try_into().unwrap()));
+        if v.is_nan() {
+            return Err(WireError::NanMass);
+        }
+        Ok(v)
+    }
+
+    /// Element count for a repeated section of `elem_bytes` each —
+    /// rejected up front when the remaining payload cannot hold it, so
+    /// a hostile count cannot trigger a huge allocation.
+    fn count(&mut self, elem_bytes: usize) -> Result<usize, WireError> {
+        let n = self.u32()? as usize;
+        let need = n.checked_mul(elem_bytes).ok_or(WireError::Malformed("count overflow"))?;
+        if self.at.checked_add(need).map_or(true, |end| end > self.buf.len()) {
+            return Err(WireError::Malformed("count exceeds payload"));
+        }
+        Ok(n)
+    }
+
+    fn done(&self) -> Result<(), WireError> {
+        if self.at != self.buf.len() {
+            return Err(WireError::Malformed("trailing bytes in payload"));
+        }
+        Ok(())
+    }
+}
+
+fn term_byte(msg: TermMsg) -> u8 {
+    match msg {
+        TermMsg::Converge => 0,
+        TermMsg::Diverge => 1,
+        TermMsg::Stop => 2,
+    }
+}
+
+fn term_from(b: u8) -> Result<TermMsg, WireError> {
+    match b {
+        0 => Ok(TermMsg::Converge),
+        1 => Ok(TermMsg::Diverge),
+        2 => Ok(TermMsg::Stop),
+        _ => Err(WireError::Malformed("unknown termination verb")),
+    }
+}
+
+fn payload(msg: &WireMsg) -> (u8, Vec<u8>) {
+    let mut out = Vec::new();
+    let kind = match msg {
+        WireMsg::Frag { src, frag } => {
+            put_u32(&mut out, *src);
+            put_f64(&mut out, frag.uni);
+            put_f64(&mut out, frag.pv);
+            put_u32(&mut out, frag.entries.len() as u32);
+            for &(node, mass) in &frag.entries {
+                put_u32(&mut out, node);
+                put_f64(&mut out, mass);
+            }
+            KIND_FRAG
+        }
+        WireMsg::StealRequest { thief } => {
+            put_u32(&mut out, *thief);
+            KIND_STEAL_REQUEST
+        }
+        WireMsg::Grant { src, rows } => {
+            put_u32(&mut out, *src);
+            put_u32(&mut out, rows.len() as u32);
+            for row in rows {
+                put_u32(&mut out, row.node);
+                put_f64(&mut out, row.p);
+                put_f64(&mut out, row.r);
+                out.push(row.touched as u8);
+            }
+            KIND_GRANT
+        }
+        WireMsg::HeadFrame { src, gen, frame } => {
+            put_u32(&mut out, *src);
+            put_u64(&mut out, *gen);
+            put_f64(&mut out, frame.rest_bound);
+            put_f64(&mut out, frame.r_plus);
+            put_f64(&mut out, frame.r_minus);
+            put_f64(&mut out, frame.unk_plus);
+            put_f64(&mut out, frame.unk_minus);
+            put_u32(&mut out, frame.entries.len() as u32);
+            for &(node, center) in &frame.entries {
+                put_u32(&mut out, node);
+                put_f64(&mut out, center);
+            }
+            KIND_HEAD_FRAME
+        }
+        WireMsg::Term { src, msg, inflight } => {
+            put_u32(&mut out, *src);
+            out.push(term_byte(*msg));
+            put_u32(&mut out, inflight.len() as u32);
+            for &(origin, count) in inflight {
+                put_u32(&mut out, origin);
+                put_u64(&mut out, count);
+            }
+            KIND_TERM
+        }
+        WireMsg::Hello { shard } => {
+            put_u32(&mut out, *shard);
+            KIND_HELLO
+        }
+        WireMsg::Ack { peer } => {
+            put_u32(&mut out, *peer);
+            KIND_ACK
+        }
+        WireMsg::Flushed { src } => {
+            put_u32(&mut out, *src);
+            KIND_FLUSHED
+        }
+        WireMsg::DumpReq => KIND_DUMP_REQ,
+        WireMsg::State { src, lo, p, r, uni, pv, pushes } => {
+            put_u32(&mut out, *src);
+            put_u32(&mut out, *lo);
+            put_f64(&mut out, *uni);
+            put_f64(&mut out, *pv);
+            put_u64(&mut out, *pushes);
+            put_u32(&mut out, p.len() as u32);
+            for &v in p {
+                put_f64(&mut out, v);
+            }
+            put_u32(&mut out, r.len() as u32);
+            for &v in r {
+                put_f64(&mut out, v);
+            }
+            KIND_STATE
+        }
+    };
+    (kind, out)
+}
+
+/// Encode one message into a self-delimiting frame addressed to
+/// endpoint `dst`.
+pub fn encode(msg: &WireMsg, dst: u16) -> Vec<u8> {
+    let (kind, body) = payload(msg);
+    let mut out = Vec::with_capacity(HEADER_LEN + body.len() + TRAILER_LEN);
+    out.extend_from_slice(&WIRE_MAGIC);
+    out.push(WIRE_VERSION);
+    out.push(kind);
+    out.extend_from_slice(&dst.to_le_bytes());
+    put_u32(&mut out, body.len() as u32);
+    out.extend_from_slice(&body);
+    let sum = fnv1a32(&out);
+    put_u32(&mut out, sum);
+    out
+}
+
+/// Header peek for routers: validates magic/version and returns
+/// `(kind, dst, total frame length)` without touching the payload, so
+/// a relay can forward the raw bytes. [`WireError::Truncated`] means
+/// "read more first".
+pub fn peek(buf: &[u8]) -> Result<(u8, u16, usize), WireError> {
+    if buf.len() < HEADER_LEN {
+        return Err(WireError::Truncated);
+    }
+    if buf[0..2] != WIRE_MAGIC {
+        return Err(WireError::BadMagic);
+    }
+    if buf[2] != WIRE_VERSION {
+        return Err(WireError::BadVersion(buf[2]));
+    }
+    let kind = buf[3];
+    if kind > KIND_STATE {
+        return Err(WireError::BadKind(kind));
+    }
+    let dst = u16::from_le_bytes([buf[4], buf[5]]);
+    let len = u32::from_le_bytes([buf[6], buf[7], buf[8], buf[9]]) as usize;
+    let total = HEADER_LEN
+        .checked_add(len)
+        .and_then(|t| t.checked_add(TRAILER_LEN))
+        .ok_or(WireError::Malformed("length overflow"))?;
+    Ok((kind, dst, total))
+}
+
+/// Decode the frame at the head of `buf`. Returns the message, its
+/// destination endpoint, and the number of bytes consumed (stream
+/// framing: advance by that much and call again).
+pub fn decode(buf: &[u8]) -> Result<(WireMsg, u16, usize), WireError> {
+    let (kind, dst, total) = peek(buf)?;
+    if buf.len() < total {
+        return Err(WireError::Truncated);
+    }
+    let body_end = total - TRAILER_LEN;
+    let want = u32::from_le_bytes(buf[body_end..total].try_into().unwrap());
+    if fnv1a32(&buf[..body_end]) != want {
+        return Err(WireError::BadChecksum);
+    }
+    let mut c = Cur::new(&buf[HEADER_LEN..body_end]);
+    let msg = match kind {
+        KIND_FRAG => {
+            let src = c.u32()?;
+            let uni = c.mass()?;
+            let pv = c.mass()?;
+            let n = c.count(12)?;
+            let mut entries = Vec::with_capacity(n);
+            for _ in 0..n {
+                let node = c.u32()?;
+                entries.push((node, c.mass()?));
+            }
+            WireMsg::Frag { src, frag: ResidualFragment { entries, uni, pv } }
+        }
+        KIND_STEAL_REQUEST => WireMsg::StealRequest { thief: c.u32()? },
+        KIND_GRANT => {
+            let src = c.u32()?;
+            let n = c.count(21)?;
+            let mut rows = Vec::with_capacity(n);
+            for _ in 0..n {
+                let node = c.u32()?;
+                let p = c.mass()?;
+                let r = c.mass()?;
+                let touched = match c.u8()? {
+                    0 => false,
+                    1 => true,
+                    _ => return Err(WireError::Malformed("touched flag out of range")),
+                };
+                rows.push(WireRow { node, p, r, touched });
+            }
+            WireMsg::Grant { src, rows }
+        }
+        KIND_HEAD_FRAME => {
+            let src = c.u32()?;
+            let gen = c.u64()?;
+            let rest_bound = c.mass()?;
+            let r_plus = c.mass()?;
+            let r_minus = c.mass()?;
+            let unk_plus = c.mass()?;
+            let unk_minus = c.mass()?;
+            let n = c.count(12)?;
+            let mut entries = Vec::with_capacity(n);
+            for _ in 0..n {
+                let node = c.u32()?;
+                entries.push((node, c.mass()?));
+            }
+            WireMsg::HeadFrame {
+                src,
+                gen,
+                frame: WireHeadFrame { entries, rest_bound, r_plus, r_minus, unk_plus, unk_minus },
+            }
+        }
+        KIND_TERM => {
+            let src = c.u32()?;
+            let msg = term_from(c.u8()?)?;
+            let n = c.count(12)?;
+            let mut inflight = Vec::with_capacity(n);
+            for _ in 0..n {
+                let origin = c.u32()?;
+                inflight.push((origin, c.u64()?));
+            }
+            WireMsg::Term { src, msg, inflight }
+        }
+        KIND_HELLO => WireMsg::Hello { shard: c.u32()? },
+        KIND_ACK => WireMsg::Ack { peer: c.u32()? },
+        KIND_FLUSHED => WireMsg::Flushed { src: c.u32()? },
+        KIND_DUMP_REQ => WireMsg::DumpReq,
+        KIND_STATE => {
+            let src = c.u32()?;
+            let lo = c.u32()?;
+            let uni = c.mass()?;
+            let pv = c.mass()?;
+            let pushes = c.u64()?;
+            let np = c.count(8)?;
+            let mut p = Vec::with_capacity(np);
+            for _ in 0..np {
+                p.push(c.mass()?);
+            }
+            let nr = c.count(8)?;
+            let mut r = Vec::with_capacity(nr);
+            for _ in 0..nr {
+                r.push(c.mass()?);
+            }
+            WireMsg::State { src, lo, p, r, uni, pv, pushes }
+        }
+        _ => unreachable!("peek validated the kind"),
+    };
+    c.done()?;
+    Ok((msg, dst, total))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn round_trip(msg: &WireMsg, dst: u16) -> WireMsg {
+        let bytes = encode(msg, dst);
+        let (got, got_dst, used) = decode(&bytes).expect("round trip");
+        assert_eq!(got_dst, dst);
+        assert_eq!(used, bytes.len());
+        got
+    }
+
+    #[test]
+    fn frag_round_trip_bit_exact() {
+        let frag = ResidualFragment {
+            entries: vec![(0, 1.5e-300), (u32::MAX, f64::MIN_POSITIVE / 2.0), (7, -0.0)],
+            uni: 3.25e-12,
+            pv: 0.0,
+        };
+        let got = round_trip(&WireMsg::Frag { src: 3, frag: frag.clone() }, 1);
+        match got {
+            WireMsg::Frag { src, frag: f } => {
+                assert_eq!(src, 3);
+                assert_eq!(f.uni.to_bits(), frag.uni.to_bits());
+                assert_eq!(f.pv.to_bits(), frag.pv.to_bits());
+                assert_eq!(f.entries.len(), frag.entries.len());
+                for (a, b) in f.entries.iter().zip(&frag.entries) {
+                    assert_eq!(a.0, b.0);
+                    assert_eq!(a.1.to_bits(), b.1.to_bits());
+                }
+            }
+            other => panic!("wrong kind: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn empty_frag_round_trip() {
+        let got = round_trip(
+            &WireMsg::Frag {
+                src: 0,
+                frag: ResidualFragment { entries: vec![], uni: 0.0, pv: 0.0 },
+            },
+            0,
+        );
+        assert!(matches!(got, WireMsg::Frag { frag, .. } if frag.entries.is_empty()));
+    }
+
+    #[test]
+    fn term_round_trip_all_verbs() {
+        for msg in [TermMsg::Converge, TermMsg::Diverge, TermMsg::Stop] {
+            let got = round_trip(
+                &WireMsg::Term { src: 5, msg, inflight: vec![(0, 3), (5, u64::MAX)] },
+                9,
+            );
+            match got {
+                WireMsg::Term { src, msg: m, inflight } => {
+                    assert_eq!(src, 5);
+                    assert_eq!(m, msg);
+                    assert_eq!(inflight, vec![(0, 3), (5, u64::MAX)]);
+                }
+                other => panic!("wrong kind: {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn head_frame_neg_inf_rest_bound_is_legal() {
+        let frame = WireHeadFrame {
+            entries: vec![(2, 0.125)],
+            rest_bound: f64::NEG_INFINITY,
+            r_plus: 1e-9,
+            r_minus: 0.0,
+            unk_plus: 0.0,
+            unk_minus: 0.0,
+        };
+        let got =
+            round_trip(&WireMsg::HeadFrame { src: 1, gen: u64::MAX, frame: frame.clone() }, 4);
+        assert!(
+            matches!(got, WireMsg::HeadFrame { gen: u64::MAX, frame: f, .. } if f == frame)
+        );
+    }
+
+    #[test]
+    fn truncated_frames_error_at_every_cut() {
+        let bytes = encode(
+            &WireMsg::Grant {
+                src: 2,
+                rows: vec![WireRow { node: 9, p: 0.5, r: 0.25, touched: true }],
+            },
+            3,
+        );
+        for cut in 0..bytes.len() {
+            assert!(matches!(decode(&bytes[..cut]), Err(WireError::Truncated)), "cut at {cut}");
+        }
+    }
+
+    #[test]
+    fn bad_magic_version_kind_checksum() {
+        let good = encode(&WireMsg::Hello { shard: 1 }, 0);
+        let mut b = good.clone();
+        b[0] = 0x00;
+        assert!(matches!(decode(&b), Err(WireError::BadMagic)));
+        let mut b = good.clone();
+        b[2] = 99;
+        assert!(matches!(decode(&b), Err(WireError::BadVersion(99))));
+        let mut b = good.clone();
+        b[3] = 200;
+        assert!(matches!(decode(&b), Err(WireError::BadKind(200))));
+        let mut b = good.clone();
+        let last = b.len() - 1;
+        b[last] ^= 0xFF;
+        assert!(matches!(decode(&b), Err(WireError::BadChecksum)));
+    }
+
+    #[test]
+    fn nan_mass_rejected() {
+        // corrupt the uni field in place and re-stamp the checksum so
+        // only the NaN check can fire
+        let mut b = encode(
+            &WireMsg::Frag {
+                src: 0,
+                frag: ResidualFragment { entries: vec![], uni: 1.0, pv: 0.0 },
+            },
+            0,
+        );
+        let nan = f64::NAN.to_bits().to_le_bytes();
+        b[HEADER_LEN + 4..HEADER_LEN + 12].copy_from_slice(&nan);
+        let body_end = b.len() - TRAILER_LEN;
+        let sum = super::fnv1a32(&b[..body_end]).to_le_bytes();
+        b[body_end..].copy_from_slice(&sum);
+        assert!(matches!(decode(&b), Err(WireError::NanMass)));
+    }
+
+    #[test]
+    fn lying_count_rejected_without_allocation() {
+        // claim u32::MAX fragment entries in a tiny payload
+        let mut b = encode(
+            &WireMsg::Frag {
+                src: 0,
+                frag: ResidualFragment { entries: vec![], uni: 0.0, pv: 0.0 },
+            },
+            0,
+        );
+        b[HEADER_LEN + 20..HEADER_LEN + 24].copy_from_slice(&u32::MAX.to_le_bytes());
+        let body_end = b.len() - TRAILER_LEN;
+        let sum = super::fnv1a32(&b[..body_end]).to_le_bytes();
+        b[body_end..].copy_from_slice(&sum);
+        assert!(matches!(decode(&b), Err(WireError::Malformed(_))));
+    }
+
+    #[test]
+    fn stream_framing_consumes_exact_lengths() {
+        let a = encode(&WireMsg::Ack { peer: 7 }, 2);
+        let b = encode(&WireMsg::DumpReq, 1);
+        let mut stream = a.clone();
+        stream.extend_from_slice(&b);
+        let (m1, _, used1) = decode(&stream).unwrap();
+        assert!(matches!(m1, WireMsg::Ack { peer: 7 }));
+        assert_eq!(used1, a.len());
+        let (m2, dst2, used2) = decode(&stream[used1..]).unwrap();
+        assert!(matches!(m2, WireMsg::DumpReq));
+        assert_eq!(dst2, 1);
+        assert_eq!(used2, b.len());
+    }
+
+    #[test]
+    fn peek_matches_decode() {
+        let bytes = encode(&WireMsg::StealRequest { thief: 4 }, 6);
+        let (kind, dst, total) = peek(&bytes).unwrap();
+        assert_eq!(kind, KIND_STEAL_REQUEST);
+        assert_eq!(dst, 6);
+        assert_eq!(total, bytes.len());
+    }
+}

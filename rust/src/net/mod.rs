@@ -1,0 +1,34 @@
+//! Process-boundary transport for the asynchronous push exchange.
+//!
+//! Everything the threaded backend moves between shards — residual
+//! fragments, steal traffic, top-k head frames, §4.2 termination
+//! control — crosses this module as versioned binary frames
+//! ([`codec`]), carried by a [`Transport`]:
+//!
+//! * [`LoopbackNet`] — in-process, throttled by a
+//!   [`crate::simnet::ClusterProfile`]'s bandwidth/latency curves with
+//!   a deterministic fault injector ([`FaultPlan`]): per-link
+//!   delay/jitter, peer stalls, disconnect/reconnect. Surfaced as
+//!   `repro stream --net loopback`.
+//! * the socket tier ([`proc`]) — one OS process per shard, spawned
+//!   and star-routed by a parent driver (`repro net`, and
+//!   `repro stream --net socket`).
+//!
+//! Per-producer FIFO is the one property both transports guarantee,
+//! because the termination protocol's STOP soundness depends on it —
+//! see the [`transport`] module docs and ARCHITECTURE.md's
+//! "process boundary" section.
+
+pub mod codec;
+pub mod proc;
+pub mod transport;
+
+pub use codec::{WireError, WireHeadFrame, WireMsg, WireRow};
+pub use proc::{
+    run_net_driver, run_net_worker, run_socket_push, NetWorkerArgs, SocketPushMetrics,
+    SocketRunOptions, SocketRunReport,
+};
+pub use transport::{
+    FaultPlan, LinkDown, LinkFault, LoopbackEndpoint, LoopbackNet, NetConfig, PeerStall, SendFail,
+    Transport,
+};

@@ -1,0 +1,872 @@
+//! Socket tier: the asynchronous push protocol across real OS process
+//! boundaries.
+//!
+//! One process per shard, spawned by the `repro net` driver (and, for
+//! warm-started epochs, by `repro stream --net socket`). The driver is
+//! the star hub: every child connects back over loopback TCP, and the
+//! driver forwards shard-to-shard frames *without decoding the
+//! payload* ([`super::codec::peek`] reads the destination out of the
+//! header) while fully decoding anything addressed to the monitor
+//! endpoint.
+//!
+//! # Why the star topology is load-bearing
+//!
+//! The §4.2 protocol's soundness rests on per-producer FIFO: a
+//! worker's DIVERGE retraction must reach the monitor's central log
+//! before the acknowledgement that releases the sender's in-flight
+//! accounting. A TCP stream preserves order, and the driver's
+//! single-threaded decode loop processes each child's frames in stream
+//! order — so a child that writes `Term(DIVERGE)` then `Ack` on its
+//! one socket is guaranteed the monitor logs the retraction before the
+//! originating peer can observe the release. With direct peer-to-peer
+//! sockets that guarantee would need a distributed ordering protocol;
+//! routing everything through the hub gets it for free.
+//!
+//! # Shutdown sequence
+//!
+//! STOP is only the beginning of the end: the driver broadcasts it,
+//! each child flushes its outboxes one last time and reports
+//! `Flushed`, the driver waits until every forwarded fragment has been
+//! acknowledged (`pending == 0`), then requests a dense
+//! [`WireMsg::State`] dump from every child. Residual that landed
+//! after a child's flush stays in its `r` vector and comes home inside
+//! the dump, so the gathered mass balance is exact.
+//!
+//! Socket mode runs the plain protocol only: no stealing, no top-k
+//! serving, §4.2 termination (the quiet-window heuristic needs the
+//! shared in-flight register that a process boundary removes).
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use super::codec::{self, WireMsg};
+use crate::stream::{power_method_f64, DeltaGraph, PushShard, PushState, ShardedPush};
+use crate::termination::{TermMsg, WireMonitor, WorkerTermination};
+use crate::Result;
+
+/// Compact the lazily-consumed buffers once the dead prefix passes
+/// this.
+const COMPACT_AT: usize = 64 * 1024;
+
+/// A nonblocking framed TCP connection: unbounded outbox (neither side
+/// may ever block on a write, or hub and child could deadlock feeding
+/// each other), lazily compacted inbox, frame reassembly via
+/// [`codec::peek`].
+struct FrameConn {
+    stream: TcpStream,
+    rbuf: Vec<u8>,
+    rpos: usize,
+    wbuf: Vec<u8>,
+    wpos: usize,
+    eof: bool,
+}
+
+impl FrameConn {
+    fn new(stream: TcpStream) -> Result<FrameConn> {
+        stream.set_nodelay(true)?;
+        stream.set_nonblocking(true)?;
+        Ok(FrameConn { stream, rbuf: Vec::new(), rpos: 0, wbuf: Vec::new(), wpos: 0, eof: false })
+    }
+
+    fn send(&mut self, msg: &WireMsg, dst: u16) -> Result<()> {
+        let bytes = codec::encode(msg, dst);
+        self.send_raw(&bytes)
+    }
+
+    /// Queue one already-encoded frame (the hub's forwarding path) and
+    /// push as much as the kernel will take.
+    fn send_raw(&mut self, bytes: &[u8]) -> Result<()> {
+        self.wbuf.extend_from_slice(bytes);
+        self.pump_writes()
+    }
+
+    fn pump_writes(&mut self) -> Result<()> {
+        while self.wpos < self.wbuf.len() {
+            match self.stream.write(&self.wbuf[self.wpos..]) {
+                Ok(0) => anyhow::bail!("peer closed the socket mid-write"),
+                Ok(k) => self.wpos += k,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e.into()),
+            }
+        }
+        if self.wpos == self.wbuf.len() || self.wpos > COMPACT_AT {
+            self.wbuf.drain(..self.wpos);
+            self.wpos = 0;
+        }
+        Ok(())
+    }
+
+    fn fill(&mut self) -> Result<()> {
+        let mut chunk = [0u8; 16 * 1024];
+        loop {
+            match self.stream.read(&mut chunk) {
+                Ok(0) => {
+                    self.eof = true;
+                    break;
+                }
+                Ok(k) => self.rbuf.extend_from_slice(&chunk[..k]),
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) if e.kind() == std::io::ErrorKind::ConnectionReset => {
+                    self.eof = true;
+                    break;
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+        Ok(())
+    }
+
+    /// Next complete frame already in the inbox, as
+    /// `(kind, dst, raw frame bytes)` — raw so the hub can forward
+    /// without re-encoding.
+    fn next_frame(&mut self) -> Result<Option<(u8, u16, Vec<u8>)>> {
+        let avail = &self.rbuf[self.rpos..];
+        let (kind, dst, total) = match codec::peek(avail) {
+            Ok(t) => t,
+            Err(codec::WireError::Truncated) => return Ok(None),
+            Err(e) => anyhow::bail!("corrupt frame on socket: {e}"),
+        };
+        if avail.len() < total {
+            return Ok(None);
+        }
+        let bytes = avail[..total].to_vec();
+        self.rpos += total;
+        if self.rpos == self.rbuf.len() {
+            self.rbuf.clear();
+            self.rpos = 0;
+        } else if self.rpos > COMPACT_AT {
+            self.rbuf.drain(..self.rpos);
+            self.rpos = 0;
+        }
+        Ok(Some((kind, dst, bytes)))
+    }
+
+    /// One read-side service: pull from the kernel, return every
+    /// complete frame (order preserved — this is the FIFO the
+    /// termination protocol leans on).
+    fn drain_frames(&mut self) -> Result<Vec<(u8, u16, Vec<u8>)>> {
+        self.fill()?;
+        let mut out = Vec::new();
+        while let Some(f) = self.next_frame()? {
+            out.push(f);
+        }
+        Ok(out)
+    }
+
+    /// Block (politely) until the outbox is fully on the wire — the
+    /// child's final State dump must not be cut off by process exit.
+    fn finish(&mut self, deadline: Instant) -> Result<()> {
+        while !self.wbuf.is_empty() {
+            self.pump_writes()?;
+            if self.wbuf.is_empty() {
+                break;
+            }
+            anyhow::ensure!(Instant::now() < deadline, "timed out flushing the socket");
+            std::thread::sleep(Duration::from_micros(200));
+        }
+        Ok(())
+    }
+}
+
+/// Knobs for a socket-tier run (the `repro net` subcommand).
+#[derive(Debug, Clone)]
+pub struct SocketRunOptions {
+    /// Worker process count (each owns one shard); `[2, 64]`.
+    pub shards: usize,
+    /// Damping factor.
+    pub alpha: f64,
+    /// Global residual target.
+    pub tol: f64,
+    /// Graph/stream seed, forwarded verbatim to every child so all
+    /// processes materialize the identical graph.
+    pub seed: u64,
+    /// Total push budget across all children (split evenly).
+    pub max_pushes: u64,
+    /// Worker-side §4.2 persistence counter.
+    pub pc_max: u32,
+    /// Hard wall-clock cap; children are killed when it fires.
+    pub timeout: Duration,
+}
+
+impl Default for SocketRunOptions {
+    fn default() -> Self {
+        SocketRunOptions {
+            shards: 2,
+            alpha: 0.85,
+            tol: 1e-10,
+            seed: 42,
+            max_pushes: u64::MAX,
+            pc_max: 3,
+            timeout: Duration::from_secs(120),
+        }
+    }
+}
+
+/// What a verified socket-tier run produced.
+#[derive(Debug, Clone)]
+pub struct SocketRunReport {
+    /// Worker process count.
+    pub shards: usize,
+    /// Graph size.
+    pub n: usize,
+    /// Total pushes across all children.
+    pub pushes: u64,
+    /// Exact gathered residual (recomputed, not estimated).
+    pub residual: f64,
+    /// `|Σp + R/(1-α) - 1|` of the gathered state.
+    pub mass_err: f64,
+    /// L1 distance of the gathered ranks to a fresh power reference.
+    pub l1_vs_power: f64,
+    /// §4.2 control messages the driver's monitor processed.
+    pub term_messages: u64,
+    /// CONVERGE frames downgraded for nonzero in-flight counts.
+    pub downgraded: u64,
+    /// Wall-clock of the whole run, child spawn included.
+    pub wall_ms: f64,
+}
+
+/// Cheap convergence telemetry for one warm socket drain
+/// (`repro stream --net socket`).
+#[derive(Debug, Clone)]
+pub struct SocketPushMetrics {
+    /// Exact residual of the gathered state.
+    pub residual: f64,
+    /// `residual < tol` — a protocol STOP should imply it.
+    pub converged: bool,
+    /// §4.2 control messages the driver's monitor processed.
+    pub term_messages: u64,
+    /// CONVERGE frames the monitor logged (post-downgrade).
+    pub term_converge: u64,
+    /// DIVERGE frames the monitor logged (downgrades included).
+    pub term_diverge: u64,
+    /// CONVERGE frames downgraded for nonzero in-flight counts.
+    pub downgraded: u64,
+    /// Wall-clock of the drain, child spawn included.
+    pub wall_ms: f64,
+}
+
+/// Everything the hub needs to spawn and drive one generation of
+/// children.
+struct DriveSpec<'a> {
+    graph_arg: &'a str,
+    seed: u64,
+    shards: usize,
+    alpha: f64,
+    tol: f64,
+    budget: u64,
+    pc_max: u32,
+    deadline: Instant,
+    timeout_ms: u64,
+    /// Pre-built `State` seed frames, one per shard (warm start).
+    seeds: Option<Vec<WireMsg>>,
+}
+
+/// One child's dense state as it came off the wire.
+struct GatheredState {
+    lo: u32,
+    p: Vec<f64>,
+    r: Vec<f64>,
+    uni: f64,
+    pv: f64,
+    pushes: u64,
+}
+
+struct DriveOutcome {
+    states: Vec<GatheredState>,
+    term_messages: u64,
+    term_converge: u64,
+    term_diverge: u64,
+    downgraded: u64,
+}
+
+/// Kills any still-running child on every exit path, error or not.
+struct ChildGuard {
+    children: Vec<Child>,
+}
+
+impl Drop for ChildGuard {
+    fn drop(&mut self) {
+        for c in &mut self.children {
+            let _ = c.kill();
+            let _ = c.wait();
+        }
+    }
+}
+
+/// Fail fast when a child died with a nonzero status (a clean exit is
+/// fine: children exit 0 after dumping state).
+fn check_children(guard: &mut ChildGuard) -> Result<()> {
+    for (i, c) in guard.children.iter_mut().enumerate() {
+        if let Some(status) = c.try_wait()? {
+            anyhow::ensure!(status.success(), "net worker {i} exited early with {status}");
+        }
+    }
+    Ok(())
+}
+
+fn spawn_children(spec: &DriveSpec<'_>, port: u16) -> Result<ChildGuard> {
+    let exe = std::env::current_exe()?;
+    let mut children = Vec::with_capacity(spec.shards);
+    for i in 0..spec.shards {
+        let mut cmd = Command::new(&exe);
+        cmd.arg("net-worker")
+            .arg("--graph")
+            .arg(spec.graph_arg)
+            .arg("--seed")
+            .arg(spec.seed.to_string())
+            .arg("--shard")
+            .arg(i.to_string())
+            .arg("--shards")
+            .arg(spec.shards.to_string())
+            .arg("--alpha")
+            .arg(format!("{:.17e}", spec.alpha))
+            .arg("--tol")
+            .arg(format!("{:.17e}", spec.tol))
+            .arg("--budget")
+            .arg(spec.budget.to_string())
+            .arg("--pc-max")
+            .arg(spec.pc_max.to_string())
+            .arg("--addr")
+            .arg(format!("127.0.0.1:{port}"))
+            .arg("--timeout-ms")
+            .arg(spec.timeout_ms.to_string())
+            .stdin(Stdio::null())
+            .stdout(Stdio::null())
+            .stderr(Stdio::inherit());
+        if spec.seeds.is_some() {
+            cmd.arg("--seeded");
+        }
+        children.push(cmd.spawn()?);
+    }
+    Ok(ChildGuard { children })
+}
+
+/// Accept and identify all `shards` children: each opens with a
+/// `Hello` naming the shard it owns; placement is by that name, not
+/// accept order.
+fn handshake(
+    listener: &TcpListener,
+    guard: &mut ChildGuard,
+    n: usize,
+    deadline: Instant,
+) -> Result<Vec<FrameConn>> {
+    let mut placed: Vec<Option<FrameConn>> = (0..n).map(|_| None).collect();
+    let mut lobby: Vec<FrameConn> = Vec::new();
+    while placed.iter().any(|c| c.is_none()) {
+        anyhow::ensure!(
+            Instant::now() < deadline,
+            "timed out waiting for {} of {n} workers to connect",
+            placed.iter().filter(|c| c.is_none()).count()
+        );
+        check_children(guard)?;
+        loop {
+            match listener.accept() {
+                Ok((s, _)) => lobby.push(FrameConn::new(s)?),
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e.into()),
+            }
+        }
+        let mut i = 0;
+        while i < lobby.len() {
+            lobby[i].fill()?;
+            match lobby[i].next_frame()? {
+                Some((_, _, bytes)) => {
+                    let (msg, _, _) = codec::decode(&bytes)
+                        .map_err(|e| anyhow::anyhow!("handshake frame: {e}"))?;
+                    match msg {
+                        WireMsg::Hello { shard } => {
+                            let sh = shard as usize;
+                            anyhow::ensure!(sh < n, "Hello for out-of-range shard {sh}");
+                            anyhow::ensure!(placed[sh].is_none(), "duplicate Hello for shard {sh}");
+                            // any bytes already behind the Hello stay
+                            // queued in the moved connection
+                            placed[sh] = Some(lobby.swap_remove(i));
+                        }
+                        other => anyhow::bail!("handshake: expected Hello, got {other:?}"),
+                    }
+                }
+                None => i += 1,
+            }
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    Ok(placed.into_iter().map(|c| c.expect("all placed")).collect())
+}
+
+/// Spawn one generation of children and drive the star until every
+/// shard's state is home: route data frames by header, feed the
+/// monitor-bound control stream through a [`WireMonitor`], run the
+/// STOP → flush → ack-drain → dump shutdown sequence.
+fn drive(spec: &DriveSpec<'_>) -> Result<DriveOutcome> {
+    let n = spec.shards;
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let port = listener.local_addr()?.port();
+    listener.set_nonblocking(true)?;
+    let mut guard = spawn_children(spec, port)?;
+    let mut conns = handshake(&listener, &mut guard, n, spec.deadline)?;
+    if let Some(seeds) = &spec.seeds {
+        anyhow::ensure!(seeds.len() == n, "seed frame count != shard count");
+        for (i, msg) in seeds.iter().enumerate() {
+            conns[i].send(msg, i as u16)?;
+        }
+    }
+
+    let mut wm = WireMonitor::new(n);
+    // per-kind tallies of what the monitor actually logged (a downgraded
+    // CONVERGE counts as the DIVERGE it became)
+    let (mut converge, mut diverge) = (0u64, 0u64);
+    // fragments forwarded to a child but not yet acknowledged — the
+    // gate between "all flushed" and "safe to dump"
+    let mut pending: i64 = 0;
+    let mut stop_sent = false;
+    let mut dump_sent = false;
+    let mut flushed = vec![false; n];
+    let mut states: Vec<Option<GatheredState>> = (0..n).map(|_| None).collect();
+    loop {
+        anyhow::ensure!(
+            Instant::now() < spec.deadline,
+            "socket run timed out ({} of {n} states gathered, stop_sent={stop_sent})",
+            states.iter().filter(|s| s.is_some()).count()
+        );
+        check_children(&mut guard)?;
+        let mut activity = false;
+        for i in 0..n {
+            conns[i].pump_writes()?;
+            let frames = conns[i].drain_frames()?;
+            activity |= !frames.is_empty();
+            for (kind, dst, bytes) in frames {
+                let d = dst as usize;
+                if d < n {
+                    // shard-to-shard: forward the raw bytes, count
+                    // fragments toward the outstanding-ack gate
+                    if kind == codec::KIND_FRAG {
+                        pending += 1;
+                    }
+                    conns[d].send_raw(&bytes)?;
+                    continue;
+                }
+                let (msg, _, _) = codec::decode(&bytes)
+                    .map_err(|e| anyhow::anyhow!("monitor frame from worker {i}: {e}"))?;
+                match msg {
+                    WireMsg::Term { src, msg, inflight } => {
+                        let nz = inflight.iter().any(|&(_, c)| c > 0);
+                        match msg {
+                            TermMsg::Converge if nz => diverge += 1,
+                            TermMsg::Converge => converge += 1,
+                            TermMsg::Diverge => diverge += 1,
+                            TermMsg::Stop => {}
+                        }
+                        if wm.on_message(src as usize, msg, nz) && !stop_sent {
+                            stop_sent = true;
+                            for j in 0..n {
+                                conns[j].send(
+                                    &WireMsg::Term {
+                                        src: n as u32,
+                                        msg: TermMsg::Stop,
+                                        inflight: Vec::new(),
+                                    },
+                                    j as u16,
+                                )?;
+                            }
+                        }
+                    }
+                    WireMsg::Ack { peer } => {
+                        // the receiver's same-stream DIVERGE (if any)
+                        // was decoded just above this frame, so the
+                        // release below can never outrun the
+                        // retraction
+                        let p = peer as usize;
+                        anyhow::ensure!(p < n, "Ack for out-of-range peer {p}");
+                        pending -= 1;
+                        conns[p].send(&WireMsg::Ack { peer }, p as u16)?;
+                    }
+                    WireMsg::Flushed { src } => {
+                        let sidx = src as usize;
+                        anyhow::ensure!(sidx < n, "Flushed from out-of-range shard {sidx}");
+                        flushed[sidx] = true;
+                    }
+                    WireMsg::State { src, lo, p, r, uni, pv, pushes } => {
+                        let sidx = src as usize;
+                        anyhow::ensure!(sidx < n, "State from out-of-range shard {sidx}");
+                        states[sidx] = Some(GatheredState { lo, p, r, uni, pv, pushes });
+                    }
+                    other => anyhow::bail!("unexpected monitor-bound frame: {other:?}"),
+                }
+            }
+        }
+        if stop_sent && !dump_sent && pending == 0 && flushed.iter().all(|&f| f) {
+            dump_sent = true;
+            for j in 0..n {
+                conns[j].send(&WireMsg::DumpReq, j as u16)?;
+            }
+        }
+        if states.iter().all(|s| s.is_some()) {
+            break;
+        }
+        for (i, c) in conns.iter().enumerate() {
+            anyhow::ensure!(
+                !c.eof || states[i].is_some(),
+                "net worker {i} closed its socket before dumping state"
+            );
+        }
+        if !activity {
+            std::thread::sleep(Duration::from_micros(300));
+        }
+    }
+    // children exit on their own after flushing the dump; reap them so
+    // a nonzero status (assertion in the child tail) still fails the
+    // run
+    drop(conns);
+    for (i, c) in guard.children.iter_mut().enumerate() {
+        loop {
+            if let Some(status) = c.try_wait()? {
+                anyhow::ensure!(status.success(), "net worker {i} exited with {status}");
+                break;
+            }
+            if Instant::now() >= spec.deadline {
+                break; // guard will kill the straggler
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+    Ok(DriveOutcome {
+        states: states.into_iter().map(|s| s.expect("loop exits all-Some")).collect(),
+        term_messages: wm.messages_seen(),
+        term_converge: converge,
+        term_diverge: diverge,
+        downgraded: wm.downgraded(),
+    })
+}
+
+/// Land the gathered dense states in the driver-side shards — the
+/// per-shard `lo` is the tripwire that catches the two sides having
+/// partitioned the graph differently.
+fn import_states(sp: &mut ShardedPush, states: Vec<GatheredState>) -> Result<()> {
+    anyhow::ensure!(states.len() == sp.shard_count(), "gathered state count != shard count");
+    for (i, st) in states.into_iter().enumerate() {
+        let sh = &mut sp.shards[i];
+        let (lo, hi) = sh.rows();
+        anyhow::ensure!(
+            st.lo as usize == lo && st.p.len() == hi - lo && st.r.len() == hi - lo,
+            "child {i} partition bounds diverged (child lo {} len {}, driver [{lo}, {hi}))",
+            st.lo,
+            st.p.len()
+        );
+        sh.import_dense(st.p, st.r, st.uni, st.pv, st.pushes);
+    }
+    Ok(())
+}
+
+/// `repro net`: cold multi-process solve plus full verification —
+/// exact residual under `tol`, mass balance to 1e-9, L1 agreement with
+/// a fresh power reference. Any violated bar is an error (this is the
+/// CI smoke's teeth).
+pub fn run_net_driver(graph_spec: &str, opts: &SocketRunOptions) -> Result<SocketRunReport> {
+    anyhow::ensure!(
+        (2..=64).contains(&opts.shards),
+        "socket shards {} out of [2, 64] (one process per shard)",
+        opts.shards
+    );
+    anyhow::ensure!((0.0..1.0).contains(&opts.alpha), "alpha {} out of [0,1)", opts.alpha);
+    anyhow::ensure!(opts.tol > 0.0, "tol must be positive, got {}", opts.tol);
+    let t0 = Instant::now();
+    let el = crate::coordinator::load_edgelist(graph_spec, opts.seed)?;
+    let g = DeltaGraph::from_edgelist(&el);
+    let mut sp = ShardedPush::new(&g, opts.alpha, opts.shards);
+    let spec = DriveSpec {
+        graph_arg: graph_spec,
+        seed: opts.seed,
+        shards: opts.shards,
+        alpha: opts.alpha,
+        tol: opts.tol,
+        budget: opts.max_pushes / opts.shards as u64,
+        pc_max: opts.pc_max.max(1),
+        deadline: t0 + opts.timeout,
+        timeout_ms: opts.timeout.as_millis() as u64,
+        seeds: None,
+    };
+    let out = drive(&spec)?;
+    import_states(&mut sp, out.states)?;
+    let pushes = sp.total_pushes();
+    let residual = sp.residual_recompute();
+    let mass_err = (sp.mass() - 1.0).abs();
+    anyhow::ensure!(
+        residual < opts.tol,
+        "protocol STOP with gathered residual {residual:.3e} >= tol {:.3e}",
+        opts.tol
+    );
+    anyhow::ensure!(mass_err < 1e-9, "gathered mass off balance by {mass_err:.3e}");
+    let (xref, _) = power_method_f64(&g, opts.alpha, opts.tol, 100_000);
+    let mut state = PushState::new(g.n(), opts.alpha);
+    sp.gather_into(&mut state);
+    let l1: f64 = state.ranks().iter().zip(&xref).map(|(a, b)| (a - b).abs()).sum();
+    let bar = (2.0 * opts.tol / (1.0 - opts.alpha)).max(1e-8);
+    anyhow::ensure!(l1 <= bar, "gathered ranks {l1:.3e} from the power reference (bar {bar:.3e})");
+    Ok(SocketRunReport {
+        shards: opts.shards,
+        n: g.n(),
+        pushes,
+        residual,
+        mass_err,
+        l1_vs_power: l1,
+        term_messages: out.term_messages,
+        downgraded: out.downgraded,
+        wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+    })
+}
+
+/// Warm multi-process drain for `repro stream --net socket`: seed each
+/// child with its shard's dense state, run the star to a protocol
+/// STOP, land the results back in `state`. `graph_arg` must
+/// deterministically materialize the *current* snapshot in the
+/// children (the stream driver writes a temp `.bin` per epoch).
+pub fn run_socket_push(
+    state: &mut ShardedPush,
+    graph_arg: &str,
+    opts: &SocketRunOptions,
+) -> Result<SocketPushMetrics> {
+    let n = state.shard_count();
+    anyhow::ensure!(opts.shards == n, "socket shards {} != live shard count {n}", opts.shards);
+    anyhow::ensure!(
+        (state.alpha() - opts.alpha).abs() < 1e-12,
+        "socket alpha {} != live state alpha {}",
+        opts.alpha,
+        state.alpha()
+    );
+    anyhow::ensure!(n >= 2, "socket mode needs >= 2 shards (one process per shard)");
+    let t0 = Instant::now();
+    let seeds: Vec<WireMsg> = state
+        .shards
+        .iter()
+        .enumerate()
+        .map(|(i, sh)| {
+            let (lo, _) = sh.rows();
+            let (p, r, uni, pv, pushes) = sh.export_dense();
+            WireMsg::State { src: i as u32, lo: lo as u32, p, r, uni, pv, pushes }
+        })
+        .collect();
+    let spec = DriveSpec {
+        graph_arg,
+        seed: opts.seed,
+        shards: n,
+        alpha: opts.alpha,
+        tol: opts.tol,
+        budget: opts.max_pushes / n as u64,
+        pc_max: opts.pc_max.max(1),
+        deadline: t0 + opts.timeout,
+        timeout_ms: opts.timeout.as_millis() as u64,
+        seeds: Some(seeds),
+    };
+    let out = drive(&spec)?;
+    import_states(state, out.states)?;
+    let residual = state.residual_recompute();
+    Ok(SocketPushMetrics {
+        residual,
+        converged: residual < opts.tol,
+        term_messages: out.term_messages,
+        term_converge: out.term_converge,
+        term_diverge: out.term_diverge,
+        downgraded: out.downgraded,
+        wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+    })
+}
+
+/// Parsed `net-worker` arguments (the hidden child subcommand spawned
+/// by the driver; not part of the user-facing CLI surface).
+#[derive(Debug, Clone)]
+pub struct NetWorkerArgs {
+    /// Graph spec or file; must materialize the same graph as the
+    /// driver's.
+    pub graph: String,
+    /// Graph seed (determinism tripwire together with `graph`).
+    pub seed: u64,
+    /// Which shard this process owns.
+    pub shard: usize,
+    /// Total shard count.
+    pub shards: usize,
+    /// Damping factor.
+    pub alpha: f64,
+    /// Global residual target (the local target is derived).
+    pub tol: f64,
+    /// This child's push budget.
+    pub budget: u64,
+    /// §4.2 persistence counter.
+    pub pc_max: u32,
+    /// Driver address, `host:port`.
+    pub addr: String,
+    /// Wall-clock cap in milliseconds.
+    pub timeout_ms: u64,
+    /// Wait for a seed `State` frame before solving (warm start).
+    pub seeded: bool,
+}
+
+fn connect_with_retry(addr: &str, deadline: Instant) -> Result<FrameConn> {
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => return FrameConn::new(s),
+            Err(e) => {
+                anyhow::ensure!(
+                    Instant::now() < deadline,
+                    "could not reach the driver at {addr}: {e}"
+                );
+                std::thread::sleep(Duration::from_millis(10));
+            }
+        }
+    }
+}
+
+/// Flush every peer-bound outbox: self-directed uniform mass folds
+/// back in place, everything else leaves as one fragment per peer
+/// (counted against `unacked` until the monitor-routed Ack returns).
+fn ship(
+    shard: &mut PushShard,
+    conn: &mut FrameConn,
+    me: u32,
+    n: usize,
+    unacked: &mut i64,
+) -> Result<()> {
+    for j in 0..n {
+        if j == me as usize {
+            shard.absorb_self_uniform();
+            continue;
+        }
+        if let Some(frag) = shard.take_fragment(j) {
+            *unacked += 1;
+            conn.send(&WireMsg::Frag { src: me, frag }, j as u16)?;
+        }
+    }
+    Ok(())
+}
+
+/// Child process body: own one shard of an independently-built
+/// [`ShardedPush`], drain/ship/apply against the driver's star, speak
+/// the §4.2 protocol over the wire, dump dense state on request.
+///
+/// The DIVERGE-before-acknowledge discipline lives in the fragment
+/// arm: the retraction (if the apply caused one) is written to this
+/// child's single TCP stream *before* the `Ack`, and the driver's
+/// in-order decode does the rest.
+pub fn run_net_worker(a: &NetWorkerArgs) -> Result<()> {
+    let n = a.shards;
+    anyhow::ensure!(n >= 2 && a.shard < n, "worker shard {}/{n} out of range", a.shard);
+    let me = a.shard as u32;
+    let mon = n as u16;
+    let deadline = Instant::now() + Duration::from_millis(a.timeout_ms.max(1));
+    let el = crate::coordinator::load_edgelist(&a.graph, a.seed)?;
+    let g = DeltaGraph::from_edgelist(&el);
+    let mut sp = ShardedPush::new(&g, a.alpha, n);
+    let round_pushes = sp.round_pushes.max(1);
+    let mut shard = sp.shards.remove(a.shard);
+    drop(sp);
+
+    let mut conn = connect_with_retry(&a.addr, deadline)?;
+    conn.send(&WireMsg::Hello { shard: me }, mon)?;
+    if a.seeded {
+        'seed: loop {
+            anyhow::ensure!(
+                Instant::now() < deadline,
+                "worker {me}: timed out waiting for the seed state"
+            );
+            conn.pump_writes()?;
+            conn.fill()?;
+            // single-step, not drain: frames already queued behind the
+            // seed must stay in the inbox for the main loop
+            if let Some((_, _, bytes)) = conn.next_frame()? {
+                let (msg, _, _) =
+                    codec::decode(&bytes).map_err(|e| anyhow::anyhow!("worker {me}: {e}"))?;
+                match msg {
+                    WireMsg::State { lo, p, r, uni, pv, pushes, .. } => {
+                        let (slo, shi) = shard.rows();
+                        anyhow::ensure!(
+                            lo as usize == slo && p.len() == shi - slo && r.len() == shi - slo,
+                            "worker {me}: seed state sized to different bounds \
+                             (seed lo {lo} len {}, local [{slo}, {shi}))",
+                            p.len()
+                        );
+                        shard.import_dense(p, r, uni, pv, pushes);
+                        break 'seed;
+                    }
+                    other => anyhow::bail!("worker {me}: expected the seed state, got {other:?}"),
+                }
+            }
+            anyhow::ensure!(!conn.eof, "worker {me}: driver closed the socket during seeding");
+            std::thread::sleep(Duration::from_micros(200));
+        }
+    }
+
+    let local_target = 0.5 * a.tol / n as f64;
+    let mut term = WorkerTermination::new(a.pc_max.max(1));
+    let mut unacked: i64 = 0;
+    let mut stopping = false;
+    let mut flushed_sent = false;
+    let p0 = shard.pushes();
+    loop {
+        anyhow::ensure!(Instant::now() < deadline, "worker {me}: run deadline exceeded");
+        conn.pump_writes()?;
+        let frames = conn.drain_frames()?;
+        let received = !frames.is_empty();
+        let mut dump = false;
+        for (_, _, bytes) in frames {
+            let (msg, _, _) =
+                codec::decode(&bytes).map_err(|e| anyhow::anyhow!("worker {me}: {e}"))?;
+            match msg {
+                WireMsg::Frag { src, frag } => {
+                    shard.apply_fragment(&frag);
+                    // retract BEFORE acknowledging, on the same stream
+                    if let Some(m) = term.on_iteration(false) {
+                        conn.send(&WireMsg::Term { src: me, msg: m, inflight: Vec::new() }, mon)?;
+                    }
+                    conn.send(&WireMsg::Ack { peer: src }, mon)?;
+                }
+                WireMsg::Ack { .. } => unacked -= 1,
+                WireMsg::Term { msg: TermMsg::Stop, .. } => stopping = true,
+                WireMsg::Term { .. } => {}
+                WireMsg::DumpReq => dump = true,
+                other => anyhow::bail!("worker {me}: unexpected frame {other:?}"),
+            }
+        }
+        if dump {
+            break;
+        }
+        if stopping {
+            // one last flush (normally empty: every drain below ships
+            // in the same iteration); then keep applying and acking
+            // peers' flushes until the driver asks for the dump
+            ship(&mut shard, &mut conn, me, n, &mut unacked)?;
+            if !flushed_sent {
+                conn.send(&WireMsg::Flushed { src: me }, mon)?;
+                flushed_sent = true;
+            }
+            if !received {
+                std::thread::sleep(Duration::from_micros(200));
+            }
+            continue;
+        }
+        let spent = shard.pushes() - p0;
+        let pushed =
+            shard.drain(&g, local_target, round_pushes.min(a.budget.saturating_sub(spent)));
+        ship(&mut shard, &mut conn, me, n, &mut unacked)?;
+        let estimate = shard.residual_estimate();
+        if let Some(m) = term.on_iteration(estimate < a.tol / n as f64 && unacked == 0) {
+            // the same `unacked` the predicate read: an honest
+            // CONVERGE always ships an empty in-flight vector, so the
+            // monitor's downgrade can only hit contradictory frames
+            let inflight = if unacked > 0 { vec![(me, unacked as u64)] } else { Vec::new() };
+            conn.send(&WireMsg::Term { src: me, msg: m, inflight }, mon)?;
+        }
+        if pushed == 0 && !received {
+            std::thread::sleep(Duration::from_micros(200));
+        }
+    }
+
+    let (lo, _) = shard.rows();
+    let (p, r, uni, pv, pushes) = shard.export_dense();
+    conn.send(&WireMsg::State { src: me, lo: lo as u32, p, r, uni, pv, pushes }, mon)?;
+    conn.finish(deadline)?;
+    Ok(())
+}

@@ -1,0 +1,496 @@
+//! Message transports: the trait the threaded push backend drives, and
+//! the in-process loopback implementation throttled by a
+//! [`ClusterProfile`] with a deterministic fault injector.
+//!
+//! # Per-producer FIFO is load-bearing
+//!
+//! The §4.2 termination argument needs exactly one ordering guarantee
+//! from the network: messages from one producer to one consumer arrive
+//! in send order (a DIVERGE enqueued before an acknowledgement is
+//! processed before any CONVERGE the acknowledgement enables). The
+//! loopback enforces it structurally — each `(src, dst)` link keeps a
+//! single queue whose delivery horizon only moves forward, so delay,
+//! jitter, and stalls reorder traffic *across* links but never within
+//! one. Everything else (arbitrary cross-link delay, loss-free
+//! deferral) matches the asynchronous model of the paper's §3.
+//!
+//! # Fault injector semantics
+//!
+//! * **Link delay/jitter** ([`LinkFault`]) — every frame on a matching
+//!   link pays a fixed extra delay plus a uniform draw in
+//!   `[0, jitter)`; draws come from a per-link [`Rng`] seeded from the
+//!   run seed, so a rerun injects the identical schedule.
+//! * **Peer stall** ([`PeerStall`]) — deliveries *into* the stalled
+//!   peer that would land inside the window are pushed to its end (the
+//!   peer's NIC went quiet; nothing is lost).
+//! * **Disconnect** ([`LinkDown`]) — *data* sends on the link inside
+//!   the window fail with [`SendFail::Down`]; the sender defers exactly
+//!   as it would for a full channel and retries after reconnect. Frames
+//!   already in flight still deliver (they left before the cut).
+//!   Control frames (termination verbs, acknowledgements) pass through
+//!   disconnects: the control wire is reliable-but-slow, mirroring the
+//!   unbounded in-process channel whose sends never fail — a dropped
+//!   DIVERGE or Ack would silently corrupt the in-flight accounting
+//!   the STOP guarantee rests on.
+//!
+//! Faults shift *when* a frame arrives, never *whether* — combined
+//! with the sender-side restore discipline, no unit of residual mass
+//! is ever dropped, which is what keeps Σp + R/(1−α) = Σv exact under
+//! any injected schedule.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use super::codec::{self, WireMsg};
+use crate::simnet::ClusterProfile;
+use crate::util::Rng;
+
+/// Why a non-blocking send did not go through. The message comes back
+/// to the caller, who restores its mass into the local shard — the
+/// same deferral discipline the bounded mpsc channels use.
+#[derive(Debug)]
+pub enum SendFail {
+    /// The link's data queue is at capacity; retry after draining.
+    Full(WireMsg),
+    /// The link is inside an injected disconnect window.
+    Down(WireMsg),
+}
+
+/// A non-blocking, per-producer-FIFO message fabric between a fixed
+/// set of endpoints. Implemented by the throttled in-process loopback
+/// ([`LoopbackEndpoint`]) and by the socket tier's TCP endpoint
+/// (`net::proc`).
+pub trait Transport {
+    /// Try to send toward endpoint `dst`; on failure the message is
+    /// handed back for deferral.
+    fn try_send(&mut self, dst: usize, msg: WireMsg) -> Result<(), SendFail>;
+    /// Next deliverable message addressed to this endpoint, if any.
+    fn try_recv(&mut self) -> Option<WireMsg>;
+    /// Drop all throttling: everything queued anywhere becomes
+    /// deliverable immediately (the end-of-run gather must not wait
+    /// out injected delays).
+    fn flush(&mut self);
+}
+
+/// Extra delay on matching links. `None` matches every endpoint.
+#[derive(Debug, Clone, Copy)]
+pub struct LinkFault {
+    /// Sending endpoint filter.
+    pub src: Option<usize>,
+    /// Receiving endpoint filter.
+    pub dst: Option<usize>,
+    /// Fixed extra seconds per frame.
+    pub delay: f64,
+    /// Uniform extra seconds in `[0, jitter)` per frame.
+    pub jitter: f64,
+}
+
+/// A window during which one peer stops taking delivery.
+#[derive(Debug, Clone, Copy)]
+pub struct PeerStall {
+    /// The stalled endpoint.
+    pub peer: usize,
+    /// Window start, seconds after the net is created.
+    pub start: f64,
+    /// Window length, seconds.
+    pub duration: f64,
+}
+
+/// A window during which one directed link refuses sends.
+#[derive(Debug, Clone, Copy)]
+pub struct LinkDown {
+    /// Sending endpoint.
+    pub src: usize,
+    /// Receiving endpoint.
+    pub dst: usize,
+    /// Window start, seconds after the net is created.
+    pub start: f64,
+    /// Window length, seconds.
+    pub duration: f64,
+}
+
+/// The deterministic fault schedule for one run.
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    /// Per-link delay/jitter.
+    pub link_faults: Vec<LinkFault>,
+    /// Peer stall windows.
+    pub stalls: Vec<PeerStall>,
+    /// Disconnect/reconnect windows.
+    pub disconnects: Vec<LinkDown>,
+}
+
+impl FaultPlan {
+    /// A plan that delays every link out of `peer` by `delay_ms` with
+    /// uniform jitter in `[0, jitter_ms)` — the `--inject-link`
+    /// L:MS:JITTER CLI shape.
+    pub fn delay_from(peer: usize, delay_ms: f64, jitter_ms: f64) -> FaultPlan {
+        FaultPlan {
+            link_faults: vec![LinkFault {
+                src: Some(peer),
+                dst: None,
+                delay: delay_ms * 1e-3,
+                jitter: jitter_ms * 1e-3,
+            }],
+            ..FaultPlan::default()
+        }
+    }
+
+    fn penalty(&self, src: usize, dst: usize) -> (f64, f64) {
+        let mut delay = 0.0;
+        let mut jitter = 0.0;
+        for f in &self.link_faults {
+            if f.src.map_or(true, |s| s == src) && f.dst.map_or(true, |d| d == dst) {
+                delay += f.delay;
+                jitter += f.jitter;
+            }
+        }
+        (delay, jitter)
+    }
+
+    fn down(&self, src: usize, dst: usize, elapsed: f64) -> bool {
+        self.disconnects.iter().any(|d| {
+            d.src == src && d.dst == dst && elapsed >= d.start && elapsed < d.start + d.duration
+        })
+    }
+
+    /// Push a delivery time (seconds since net start) into `dst` past
+    /// any stall window it lands in.
+    fn stall_adjust(&self, dst: usize, mut at: f64) -> f64 {
+        for s in &self.stalls {
+            if s.peer == dst && at >= s.start && at < s.start + s.duration {
+                at = s.start + s.duration;
+            }
+        }
+        at
+    }
+}
+
+/// Everything `run_threaded_push` needs to route its exchange over a
+/// transport instead of mpsc channels.
+#[derive(Debug, Clone)]
+pub struct NetConfig {
+    /// Bandwidth/latency curves throttling the loopback.
+    pub profile: ClusterProfile,
+    /// Deterministic fault schedule.
+    pub faults: FaultPlan,
+    /// Seed for the per-link jitter streams.
+    pub seed: u64,
+}
+
+impl NetConfig {
+    /// A fast-wire, fault-free config for tests.
+    pub fn test(endpoints: usize) -> NetConfig {
+        NetConfig {
+            profile: ClusterProfile::test_profile(endpoints),
+            faults: FaultPlan::default(),
+            seed: 42,
+        }
+    }
+}
+
+struct LinkQueue {
+    /// `(deliver_at, counts toward data cap, encoded frame)`.
+    q: VecDeque<(Instant, bool, Vec<u8>)>,
+    /// Delivery horizon: the last enqueued frame's deliver_at. New
+    /// frames never deliver before it — this is the per-producer FIFO.
+    horizon: Option<Instant>,
+    /// Jitter stream for this link.
+    rng: Rng,
+    /// Frames currently queued that count toward the data cap.
+    data_queued: usize,
+}
+
+struct NetState {
+    links: Vec<LinkQueue>,
+    flushed: bool,
+}
+
+struct Shared {
+    eps: usize,
+    data_cap: usize,
+    profile: ClusterProfile,
+    faults: FaultPlan,
+    start: Instant,
+    state: Mutex<NetState>,
+}
+
+/// The throttled in-process fabric. One instance backs all endpoints
+/// of a run; hand each worker (and the monitor) its
+/// [`endpoint`](LoopbackNet::endpoint).
+pub struct LoopbackNet {
+    shared: Arc<Shared>,
+}
+
+/// Data frames occupy bounded queue slots (they carry mass and are
+/// deferred when full); control frames ride unbounded, mirroring the
+/// unbounded in-process termination channel — see
+/// `termination::channel` for why boundedness would break the STOP
+/// guarantee.
+fn counts_toward_cap(msg: &WireMsg) -> bool {
+    matches!(
+        msg,
+        WireMsg::Frag { .. }
+            | WireMsg::Grant { .. }
+            | WireMsg::StealRequest { .. }
+            | WireMsg::HeadFrame { .. }
+    )
+}
+
+impl LoopbackNet {
+    /// A fabric of `endpoints` endpoints (workers plus monitor) with
+    /// room for `data_cap` queued data frames per link.
+    pub fn new(endpoints: usize, cfg: &NetConfig, data_cap: usize) -> LoopbackNet {
+        let links = (0..endpoints * endpoints)
+            .map(|i| {
+                let (src, dst) = (i / endpoints, i % endpoints);
+                let tag = (((src as u64) << 20) | dst as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+                LinkQueue {
+                    q: VecDeque::new(),
+                    horizon: None,
+                    rng: Rng::new(cfg.seed ^ tag),
+                    data_queued: 0,
+                }
+            })
+            .collect();
+        LoopbackNet {
+            shared: Arc::new(Shared {
+                eps: endpoints,
+                data_cap: data_cap.max(1),
+                profile: cfg.profile.clone(),
+                faults: cfg.faults.clone(),
+                start: Instant::now(),
+                state: Mutex::new(NetState { links, flushed: false }),
+            }),
+        }
+    }
+
+    /// The sending/receiving handle for endpoint `id`.
+    pub fn endpoint(&self, id: usize) -> LoopbackEndpoint {
+        assert!(id < self.shared.eps, "endpoint {id} out of range");
+        LoopbackEndpoint { shared: Arc::clone(&self.shared), id }
+    }
+}
+
+/// One endpoint's handle on a [`LoopbackNet`].
+pub struct LoopbackEndpoint {
+    shared: Arc<Shared>,
+    id: usize,
+}
+
+impl Transport for LoopbackEndpoint {
+    fn try_send(&mut self, dst: usize, msg: WireMsg) -> Result<(), SendFail> {
+        let sh = &self.shared;
+        assert!(dst < sh.eps, "destination {dst} out of range");
+        let now = Instant::now();
+        let elapsed = now.duration_since(sh.start).as_secs_f64();
+        let data = counts_toward_cap(&msg);
+        if data && sh.faults.down(self.id, dst, elapsed) {
+            return Err(SendFail::Down(msg));
+        }
+        let mut st = sh.state.lock().unwrap();
+        let link = &mut st.links[self.id * sh.eps + dst];
+        if data && link.data_queued >= sh.data_cap {
+            // head frames are tentative snapshots — a fresher one is
+            // always coming, so a full link just drops this one
+            if matches!(msg, WireMsg::HeadFrame { .. }) {
+                return Ok(());
+            }
+            return Err(SendFail::Full(msg));
+        }
+        let bytes = codec::encode(&msg, dst as u16);
+        let (delay, jitter) = sh.faults.penalty(self.id, dst);
+        let mut secs = sh.profile.wire_time(bytes.len() as f64) + delay;
+        if jitter > 0.0 {
+            secs += jitter * link.rng.f64();
+        }
+        let base = match link.horizon {
+            Some(h) if h > now => h,
+            _ => now,
+        };
+        let mut at = base + Duration::from_secs_f64(secs.max(0.0));
+        let at_el = at.duration_since(sh.start).as_secs_f64();
+        let adj = sh.faults.stall_adjust(dst, at_el);
+        if adj > at_el {
+            at = sh.start + Duration::from_secs_f64(adj);
+        }
+        link.horizon = Some(at);
+        if data {
+            link.data_queued += 1;
+        }
+        link.q.push_back((at, data, bytes));
+        Ok(())
+    }
+
+    fn try_recv(&mut self) -> Option<WireMsg> {
+        let sh = &self.shared;
+        let now = Instant::now();
+        let mut st = sh.state.lock().unwrap();
+        let flushed = st.flushed;
+        // earliest deliverable frame across all inbound links; ties
+        // break on source index so replays are stable
+        let mut best: Option<(Instant, usize)> = None;
+        for src in 0..sh.eps {
+            let link = &st.links[src * sh.eps + self.id];
+            if let Some(&(at, _, _)) = link.q.front() {
+                if (flushed || at <= now) && best.map_or(true, |(b, _)| at < b) {
+                    best = Some((at, src));
+                }
+            }
+        }
+        let (_, src) = best?;
+        let link = &mut st.links[src * sh.eps + self.id];
+        let (_, data, bytes) = link.q.pop_front().unwrap();
+        if data {
+            link.data_queued -= 1;
+        }
+        drop(st);
+        let (msg, dst, _) = codec::decode(&bytes).expect("loopback frame must decode");
+        debug_assert_eq!(dst as usize, self.id);
+        Some(msg)
+    }
+
+    fn flush(&mut self) {
+        self.shared.state.lock().unwrap().flushed = true;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stream::ResidualFragment;
+    use crate::termination::TermMsg;
+
+    fn frag_msg(src: u32, tag: u32) -> WireMsg {
+        WireMsg::Frag {
+            src,
+            frag: ResidualFragment { entries: vec![(tag, 1e-6)], uni: 0.0, pv: 0.0 },
+        }
+    }
+
+    fn tag_of(msg: &WireMsg) -> u32 {
+        match msg {
+            WireMsg::Frag { frag, .. } => frag.entries[0].0,
+            other => panic!("expected frag, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn per_link_fifo_survives_heavy_jitter() {
+        let mut cfg = NetConfig::test(2);
+        cfg.faults.link_faults.push(LinkFault {
+            src: Some(0),
+            dst: Some(1),
+            delay: 0.0,
+            jitter: 0.050,
+        });
+        let net = LoopbackNet::new(2, &cfg, 256);
+        let mut tx = net.endpoint(0);
+        let mut rx = net.endpoint(1);
+        for i in 0..100u32 {
+            tx.try_send(1, frag_msg(0, i)).unwrap();
+        }
+        rx.flush();
+        for want in 0..100u32 {
+            let got = rx.try_recv().expect("flushed frame must deliver");
+            assert_eq!(tag_of(&got), want, "per-producer FIFO violated");
+        }
+        assert!(rx.try_recv().is_none());
+    }
+
+    #[test]
+    fn injected_delay_holds_frames_until_flush() {
+        let mut cfg = NetConfig::test(2);
+        cfg.faults = FaultPlan::delay_from(0, 10_000.0, 0.0);
+        let net = LoopbackNet::new(2, &cfg, 16);
+        let mut tx = net.endpoint(0);
+        let mut rx = net.endpoint(1);
+        tx.try_send(1, frag_msg(0, 7)).unwrap();
+        assert!(rx.try_recv().is_none(), "10s injected delay must hold the frame");
+        rx.flush();
+        assert_eq!(tag_of(&rx.try_recv().unwrap()), 7);
+    }
+
+    #[test]
+    fn full_link_defers_data_but_not_control() {
+        let cfg = NetConfig::test(2);
+        let net = LoopbackNet::new(2, &cfg, 2);
+        let mut tx = net.endpoint(0);
+        tx.try_send(1, frag_msg(0, 0)).unwrap();
+        tx.try_send(1, frag_msg(0, 1)).unwrap();
+        match tx.try_send(1, frag_msg(0, 2)) {
+            Err(SendFail::Full(WireMsg::Frag { frag, .. })) => {
+                assert_eq!(frag.entries[0].0, 2, "the deferred frag comes back intact");
+            }
+            other => panic!("expected Full, got {other:?}"),
+        }
+        // control rides unbounded past a full data queue
+        tx.try_send(1, WireMsg::Term { src: 0, msg: TermMsg::Diverge, inflight: vec![] })
+            .unwrap();
+        // tentative head frames are droppable, not deferrable
+        let hf = WireMsg::HeadFrame {
+            src: 0,
+            gen: 0,
+            frame: super::super::codec::WireHeadFrame {
+                entries: vec![],
+                rest_bound: f64::NEG_INFINITY,
+                r_plus: 0.0,
+                r_minus: 0.0,
+                unk_plus: 0.0,
+                unk_minus: 0.0,
+            },
+        };
+        assert!(tx.try_send(1, hf).is_ok());
+    }
+
+    #[test]
+    fn disconnect_window_bounces_sends_then_recovers() {
+        let mut cfg = NetConfig::test(2);
+        cfg.faults.disconnects.push(LinkDown { src: 0, dst: 1, start: 0.0, duration: 0.05 });
+        let net = LoopbackNet::new(2, &cfg, 16);
+        let mut tx = net.endpoint(0);
+        let mut rx = net.endpoint(1);
+        match tx.try_send(1, frag_msg(0, 3)) {
+            Err(SendFail::Down(msg)) => assert_eq!(tag_of(&msg), 3),
+            other => panic!("expected Down, got {other:?}"),
+        }
+        std::thread::sleep(Duration::from_millis(60));
+        tx.try_send(1, frag_msg(0, 3)).expect("reconnected");
+        rx.flush();
+        assert_eq!(tag_of(&rx.try_recv().unwrap()), 3);
+    }
+
+    #[test]
+    fn stall_window_pushes_delivery_past_its_end() {
+        let mut cfg = NetConfig::test(2);
+        cfg.faults.stalls.push(PeerStall { peer: 1, start: 0.0, duration: 0.08 });
+        let net = LoopbackNet::new(2, &cfg, 16);
+        let mut tx = net.endpoint(0);
+        let mut rx = net.endpoint(1);
+        tx.try_send(1, frag_msg(0, 9)).unwrap();
+        assert!(rx.try_recv().is_none(), "delivery inside the stall window");
+        std::thread::sleep(Duration::from_millis(100));
+        assert_eq!(tag_of(&rx.try_recv().unwrap()), 9, "stall over, frame lands");
+    }
+
+    #[test]
+    fn deterministic_jitter_schedule_for_seed() {
+        let mut cfg = NetConfig::test(2);
+        cfg.faults.link_faults.push(LinkFault {
+            src: None,
+            dst: None,
+            delay: 0.0,
+            jitter: 0.5,
+        });
+        // same seed => identical per-link draw sequence; we can't
+        // observe Instants directly, so compare the rng streams the
+        // links were seeded with
+        let tag = 0u64.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut a = Rng::new(cfg.seed ^ tag);
+        let mut b = Rng::new(cfg.seed ^ tag);
+        for _ in 0..32 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+}

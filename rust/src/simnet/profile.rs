@@ -155,6 +155,15 @@ impl ClusterProfile {
         self.bytes_per_elem * elems as f64
     }
 
+    /// Seconds one `bytes`-byte frame occupies the wire: per-message
+    /// latency plus serialization at `bandwidth`. This is the curve
+    /// the live loopback transport (`crate::net`) throttles deliveries
+    /// with — the same numbers the DES engine uses, applied to real
+    /// wall-clock instants instead of virtual time.
+    pub fn wire_time(&self, bytes: f64) -> f64 {
+        self.latency + bytes / self.bandwidth
+    }
+
     /// Make UE `ue` `factor`× slower (heterogeneity experiments).
     pub fn with_slow_node(mut self, ue: usize, factor: f64) -> ClusterProfile {
         self.nodes[ue].slowdown = factor;

@@ -327,6 +327,54 @@ impl PushShard {
             .map(|&s| self.home_size() + s as usize)
     }
 
+    /// Snapshot the dense solver state for a process-boundary `State`
+    /// frame: `(p, r, uni, pv, pushes)` over the home rows. Socket-tier
+    /// only — callers must have flushed the outboxes first and must not
+    /// be stealing (lent/adopted rows have no wire representation), so
+    /// the home slices are the whole state.
+    pub(crate) fn export_dense(&self) -> (Vec<f64>, Vec<f64>, f64, f64, u64) {
+        debug_assert!(
+            self.lent_count == 0 && self.adopted.is_empty(),
+            "dense state export during an active steal"
+        );
+        debug_assert!(
+            self.acc_mass == 0.0 && self.out_uni.iter().all(|&u| u == 0.0),
+            "dense state export with unflushed outboxes"
+        );
+        let bs = self.home_size();
+        (self.p[..bs].to_vec(), self.r[..bs].to_vec(), self.uni, self.pv, self.pushes)
+    }
+
+    /// Overwrite the dense solver state from a `State` frame — the
+    /// inverse of [`export_dense`](Self::export_dense). Re-derives the
+    /// incremental sums and reseeds the bucket queue (the shared
+    /// rebuild step after a wholesale state swap).
+    pub(crate) fn import_dense(
+        &mut self,
+        p: Vec<f64>,
+        r: Vec<f64>,
+        uni: f64,
+        pv: f64,
+        pushes: u64,
+    ) {
+        assert_eq!(p.len(), self.home_size(), "State frame sized to different bounds");
+        assert_eq!(r.len(), self.home_size(), "State frame sized to different bounds");
+        debug_assert!(
+            self.lent_count == 0 && self.adopted.is_empty(),
+            "dense state import during an active steal"
+        );
+        self.p_sum = p.iter().sum();
+        let (queue, l1) = BucketQueue::seeded_from(&r);
+        self.queue = queue;
+        self.r_l1 = l1;
+        self.r_sum = r.iter().sum();
+        self.p = p;
+        self.r = r;
+        self.uni = uni;
+        self.pv = pv;
+        self.pushes = pushes;
+    }
+
     /// Queued-residual magnitude on HOME slots only — the part a steal
     /// can actually export ([`steal_out`](Self::steal_out) never
     /// re-grants adopted rows). The threaded steal-pressure board

@@ -150,9 +150,73 @@ impl MonitorPort {
     }
 }
 
+/// Monitor side of the protocol for messages that arrived over a
+/// *serialized* transport ([`crate::net`]) instead of the in-process
+/// control channel. Same central log and the same pinned `pc_max = 1`
+/// as [`MonitorPort`], but fed one decoded message at a time by
+/// whoever drains the wire, and hardened for the crossing: a CONVERGE
+/// whose frame reports nonzero per-origin in-flight counts is
+/// internally contradictory (the §4.2 announce predicate requires all
+/// of them zero), so it is downgraded to DIVERGE rather than trusted.
+#[derive(Debug)]
+pub struct WireMonitor {
+    monitor: MonitorTermination,
+    messages_seen: u64,
+    downgraded: u64,
+}
+
+impl WireMonitor {
+    pub fn new(p: usize) -> WireMonitor {
+        WireMonitor { monitor: MonitorTermination::new(p, 1), messages_seen: 0, downgraded: 0 }
+    }
+
+    /// Feed one decoded protocol message from UE `ue`;
+    /// `inflight_nonzero` is whether the frame carried any nonzero
+    /// per-origin in-flight count. Returns true the first time the
+    /// central log justifies STOP.
+    pub fn on_message(&mut self, ue: usize, msg: TermMsg, inflight_nonzero: bool) -> bool {
+        self.messages_seen += 1;
+        let msg = if msg == TermMsg::Converge && inflight_nonzero {
+            self.downgraded += 1;
+            TermMsg::Diverge
+        } else {
+            msg
+        };
+        self.monitor.on_message(ue, msg)
+    }
+
+    /// Protocol messages processed so far.
+    pub fn messages_seen(&self) -> u64 {
+        self.messages_seen
+    }
+
+    /// CONVERGE frames downgraded for carrying nonzero in-flight counts.
+    pub fn downgraded(&self) -> u64 {
+        self.downgraded
+    }
+
+    /// The underlying state machine (inspection/tests).
+    pub fn state(&self) -> &MonitorTermination {
+        &self.monitor
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn wire_monitor_downgrades_inflight_converge() {
+        let mut mon = WireMonitor::new(2);
+        assert!(!mon.on_message(0, TermMsg::Converge, false));
+        // UE 1 claims convergence while still reporting in-flight mass:
+        // treated as DIVERGE, so no STOP
+        assert!(!mon.on_message(1, TermMsg::Converge, true));
+        assert_eq!(mon.downgraded(), 1);
+        // the honest re-announce stops the run
+        assert!(mon.on_message(1, TermMsg::Converge, false));
+        assert_eq!(mon.messages_seen(), 3);
+    }
 
     #[test]
     fn port_round_trip_stops_only_after_all_announce() {

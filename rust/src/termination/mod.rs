@@ -24,6 +24,6 @@ mod protocol;
 pub mod tree;
 mod oracle;
 
-pub use channel::{term_channel, MonitorPort, TermPort, TermWire};
+pub use channel::{term_channel, MonitorPort, TermPort, TermWire, WireMonitor};
 pub use oracle::GlobalOracle;
 pub use protocol::{MonitorTermination, TermMsg, WorkerTermination};

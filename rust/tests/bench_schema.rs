@@ -1,6 +1,6 @@
 //! Schema tests for the committed machine-readable bench trajectory
 //! files (`benches/BENCH_*.json`, written by the `push_parallel`,
-//! `topk_stream`, and `ppr_serve` benches when
+//! `topk_stream`, `ppr_serve`, and `net_push` benches when
 //! `ASYNCPR_BENCH_JSON_DIR` is set).
 //!
 //! The committed files may be the pending placeholders (all-null
@@ -91,6 +91,25 @@ fn topk_stream_trajectory_schema() {
     num_or_null(&doc, &["full", "pushes"]);
     num_or_null(&doc, &["full", "wall_ms"]);
     num_or_null(&doc, &["push_saving"]);
+}
+
+#[test]
+fn net_push_trajectory_schema() {
+    let doc = load("BENCH_net_push.json");
+    common_header(&doc, "net_push");
+    num_or_null(&doc, &["shards"]);
+    num_or_null(&doc, &["lag_ms"]);
+    let stop = lookup(&doc, &["async", "stop"]);
+    assert!(matches!(stop, Json::Str(_) | Json::Null), "stop must be string or null");
+    let conv = lookup(&doc, &["async", "converged"]);
+    assert!(matches!(conv, Json::Bool(_) | Json::Null), "converged must be bool or null");
+    for key in ["wall_ms", "pushes", "fragments", "residual", "converge_msgs", "diverge_msgs"] {
+        num_or_null(&doc, &["async", key]);
+    }
+    for key in ["rounds", "pushes", "fragments", "compute_ms", "charged_wire_ms", "wall_ms"] {
+        num_or_null(&doc, &["barrier", key]);
+    }
+    num_or_null(&doc, &["speedup"]);
 }
 
 #[test]
