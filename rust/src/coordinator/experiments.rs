@@ -17,7 +17,7 @@ use crate::pagerank::PagerankProblem;
 use crate::simnet::{ClusterProfile, Topology};
 use crate::stream::{
     power_method_f64, power_method_pers, solve_certified_sharded, solve_certified_state,
-    DeltaGraph, Personalization, PushState, ServeOptions, ServeTier, ShardedPush,
+    DeltaGraph, OutboxPolicy, Personalization, PushState, ServeOptions, ServeTier, ShardedPush,
     TopKCertificate, TopKGoal, TopKTracker,
 };
 use crate::termination::GlobalOracle;
@@ -323,6 +323,15 @@ pub struct StreamOptions {
     /// `--inject-stall`, and the scenario the quiet-window heuristic
     /// mis-calls while the §4.2 protocol waits out the in-flight mass.
     pub inject_link: Option<(usize, f64, f64)>,
+    /// Per-peer outbox representation for the sharded solvers
+    /// (`--outbox auto|dense|sparse`). `Auto` (the default) keeps the
+    /// O(span) dense accumulators while `shards <=`
+    /// [`SPARSE_OUTBOX_SHARDS`] and switches every shard to sparse
+    /// maps above it, capping outbox memory at O(touched) instead of
+    /// O(n) per shard.
+    ///
+    /// [`SPARSE_OUTBOX_SHARDS`]: crate::stream::SPARSE_OUTBOX_SHARDS
+    pub outbox: OutboxPolicy,
 }
 
 impl Default for StreamOptions {
@@ -354,6 +363,7 @@ impl Default for StreamOptions {
             net: None,
             net_profile: NetProfileKind::Test,
             inject_link: None,
+            outbox: OutboxPolicy::default(),
         }
     }
 }
@@ -688,6 +698,7 @@ pub fn stream_epochs(graph_spec: &str, opts: &StreamOptions) -> Result<StreamRep
             }
             None => ShardedPush::new(&g, opts.alpha, opts.threads),
         };
+        sharded.set_outbox_policy(opts.outbox);
         if let Some(tr) = &opts.trace {
             sharded.attach_trace(Arc::clone(tr));
         }
@@ -860,6 +871,7 @@ pub fn stream_epochs(graph_spec: &str, opts: &StreamOptions) -> Result<StreamRep
                 // tracking-only mode it would dump the rest of the
                 // epoch's convergence onto the sequential polish.
                 let mut sharded = ShardedPush::from_state(&inc, &g, opts.threads);
+                sharded.set_outbox_policy(opts.outbox);
                 if let Some(tr) = &opts.trace {
                     sharded.attach_trace(Arc::clone(tr));
                 }

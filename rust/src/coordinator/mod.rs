@@ -25,9 +25,10 @@ use crate::stream::PushBlockOp;
 use crate::Result;
 
 /// Materialize the edge list named by a graph spec ("stanford",
-/// "scaled:<n>", "erdos:<n>:<m>", or a path to a .txt/.bin edge list).
-/// The raw-edge form is what `repro generate` saves and what the
-/// `stream` subsystem's [`crate::stream::DeltaGraph`] consumes.
+/// "scaled:<n>", "erdos:<n>:<m>", "rmat:<scale>[:<edge-factor>]", or a
+/// path to a .txt/.bin edge list). The raw-edge form is what
+/// `repro generate` saves and what the `stream` subsystem's
+/// [`crate::stream::DeltaGraph`] consumes.
 pub fn load_edgelist(spec: &str, seed: u64) -> Result<EdgeList> {
     Ok(if spec == "stanford" {
         generators::stanford_web_like(seed)
@@ -39,6 +40,17 @@ pub fn load_edgelist(spec: &str, seed: u64) -> Result<EdgeList> {
             .split_once(':')
             .ok_or_else(|| anyhow::anyhow!("erdos:<n>:<m>"))?;
         generators::erdos_renyi(n.parse()?, m.parse()?, seed)
+    } else if let Some(rest) = spec.strip_prefix("rmat:") {
+        let (scale, ef) = match rest.split_once(':') {
+            Some((s, e)) => (s.parse()?, e.parse()?),
+            None => (rest.parse()?, 8usize),
+        };
+        anyhow::ensure!(
+            (1..=30u32).contains(&scale),
+            "rmat:<scale>[:<edge-factor>] wants scale in 1..=30, got {scale}"
+        );
+        let m = (1usize << scale) * ef;
+        generators::rmat(scale, m, generators::RMAT_WEB_PROBS, seed)
     } else if spec.ends_with(".bin") {
         io::load_edgelist_bin(spec)?
     } else {
@@ -47,7 +59,13 @@ pub fn load_edgelist(spec: &str, seed: u64) -> Result<EdgeList> {
 }
 
 /// Materialize the (transposed, normalized) CSR for a graph spec.
+/// `.bin` specs take the streaming two-pass build
+/// ([`io::stream_csr_from_bin`]) — peak RSS stays O(n + nnz) with no
+/// intermediate edge list; everything else materializes edges first.
 pub fn load_graph(spec: &str, seed: u64) -> Result<Csr> {
+    if spec.ends_with(".bin") {
+        return Ok(io::stream_csr_from_bin(spec, &io::StreamCsrOptions::default())?);
+    }
     Csr::from_edgelist(&load_edgelist(spec, seed)?)
 }
 

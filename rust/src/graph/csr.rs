@@ -5,17 +5,133 @@
 //! weight 1/deg(j)) for every page j linking to i. That is exactly the
 //! `P^T` of the paper's `S = P^T + w d^T`, so one [`Csr::spmv`] is the
 //! sparse part of eq. (4)/(6).
+//!
+//! # Memory tier
+//!
+//! The row pointer is stored at the narrowest width that can address
+//! the nonzeros: `u32` offsets while `nnz <= u32::MAX` (every graph the
+//! paper's single-box scale targets), widening to `usize` beyond. The
+//! width is an internal representation choice — every accessor,
+//! `spmv`, and the `merge_csr` splice path go through the same API, and
+//! [`PartialEq`] compares row pointers by value, not width. Builders
+//! pick the width automatically; [`Csr::set_compact_rowptr`] forces one
+//! (the equivalence proptests pin narrow == wide bit-for-bit).
 
 use super::{EdgeList, NodeId};
 use crate::Result;
+
+/// Row-pointer offsets into `cols`/`vals`, stored at adaptive width.
+#[derive(Debug, Clone)]
+enum RowPtr {
+    /// u32 offsets — valid while `nnz <= u32::MAX`; half the rowptr
+    /// bytes of the wide layout on 64-bit targets.
+    Narrow(Vec<u32>),
+    /// Full-width offsets — the fallback for `nnz > u32::MAX`.
+    Wide(Vec<usize>),
+}
+
+impl RowPtr {
+    /// Adopt a freshly built offset vector at the narrowest valid
+    /// width. `v` is monotone by construction (the builders produce
+    /// prefix sums), so the last entry is the maximum.
+    fn from_usize(v: Vec<usize>) -> RowPtr {
+        match v.last() {
+            Some(&nnz) if nnz <= u32::MAX as usize => {
+                RowPtr::Narrow(v.into_iter().map(|o| o as u32).collect())
+            }
+            _ => RowPtr::Wide(v),
+        }
+    }
+
+    #[inline]
+    fn at(&self, i: usize) -> usize {
+        match self {
+            RowPtr::Narrow(v) => v[i] as usize,
+            RowPtr::Wide(v) => v[i],
+        }
+    }
+
+    fn len(&self) -> usize {
+        match self {
+            RowPtr::Narrow(v) => v.len(),
+            RowPtr::Wide(v) => v.len(),
+        }
+    }
+
+    fn heap_bytes(&self) -> usize {
+        match self {
+            RowPtr::Narrow(v) => v.len() * std::mem::size_of::<u32>(),
+            RowPtr::Wide(v) => v.len() * std::mem::size_of::<usize>(),
+        }
+    }
+}
+
+/// Width-blind equality: a narrow and a wide rowptr holding the same
+/// offsets are the same row structure.
+impl PartialEq for RowPtr {
+    fn eq(&self, other: &Self) -> bool {
+        match (self, other) {
+            (RowPtr::Narrow(a), RowPtr::Narrow(b)) => a == b,
+            (RowPtr::Wide(a), RowPtr::Wide(b)) => a == b,
+            (RowPtr::Narrow(a), RowPtr::Wide(b)) | (RowPtr::Wide(b), RowPtr::Narrow(a)) => {
+                a.len() == b.len() && a.iter().zip(b).all(|(&x, &y)| x as usize == y)
+            }
+        }
+    }
+}
+
+/// Offset element the width-generic row loops read through.
+trait RowOffset: Copy {
+    fn ix(self) -> usize;
+}
+
+impl RowOffset for u32 {
+    #[inline]
+    fn ix(self) -> usize {
+        self as usize
+    }
+}
+
+impl RowOffset for usize {
+    #[inline]
+    fn ix(self) -> usize {
+        self
+    }
+}
+
+/// The width-monomorphized spmv hot loop (one match per call, not per
+/// row — the branch would otherwise sit inside the gather loop).
+fn spmv_rows<T: RowOffset>(
+    rowptr: &[T],
+    cols: &[NodeId],
+    vals: &[f32],
+    x: &[f32],
+    row_lo: usize,
+    row_hi: usize,
+    y: &mut [f32],
+) {
+    // NOTE §Perf: a 4-accumulator unrolled variant was tried and
+    // REVERTED — web rows average ~8 nonzeros, so the unroll's
+    // prologue/epilogue cost exceeded the gather-latency win
+    // (1.91 ms vs 1.57 ms per p=4 block step).
+    for (yi, i) in y.iter_mut().zip(row_lo..row_hi) {
+        let lo = rowptr[i].ix();
+        let hi = rowptr[i + 1].ix();
+        let mut acc = 0.0f32;
+        for (c, v) in cols[lo..hi].iter().zip(&vals[lo..hi]) {
+            acc += v * x[*c as usize];
+        }
+        *yi = acc;
+    }
+}
 
 /// Transposed, normalized link matrix in CSR form plus dangling info.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Csr {
     n: usize,
-    /// Row pointer, len n+1. Row i (in-links of page i) spans
-    /// `cols[rowptr[i]..rowptr[i+1]]`.
-    rowptr: Vec<usize>,
+    /// Row pointer, len n+1, width-adaptive. Row i (in-links of page i)
+    /// spans `cols[rowptr.at(i)..rowptr.at(i+1)]`.
+    rowptr: RowPtr,
     /// Source page of each entry.
     cols: Vec<NodeId>,
     /// Weight of each entry: 1/outdeg(source).
@@ -30,10 +146,27 @@ impl Csr {
     /// Build the normalized transposed matrix from an edge list.
     /// Duplicate edges are collapsed (adjacency is 0/1); self-loops are
     /// kept, matching the usual PageRank treatment of the raw crawl.
+    ///
+    /// Borrowing forces one copy of the edges (the sort needs an owned
+    /// buffer); [`from_edgelist_owned`](Self::from_edgelist_owned)
+    /// consumes the list and sorts it in place instead — the variant
+    /// the memory-bound paths use.
     pub fn from_edgelist(el: &EdgeList) -> Result<Self> {
+        Self::from_pairs(el.n(), el.edges().to_vec())
+    }
+
+    /// [`from_edgelist`](Self::from_edgelist) without the edge copy:
+    /// consumes the list and sorts its buffer in place, so peak memory
+    /// during the build is the edge buffer itself plus the CSR arrays —
+    /// never 2× the edges.
+    pub fn from_edgelist_owned(el: EdgeList) -> Result<Self> {
         let n = el.n();
-        // dedup: sort by (dst, src) so transposed rows come out sorted
-        let mut pairs: Vec<(NodeId, NodeId)> = el.edges().to_vec();
+        Self::from_pairs(n, el.into_edges())
+    }
+
+    fn from_pairs(n: usize, mut pairs: Vec<(NodeId, NodeId)>) -> Result<Self> {
+        // dedup: sort by (dst, src) so transposed rows come out sorted;
+        // in-place on the caller's buffer — no transient clone
         pairs.sort_unstable_by_key(|&(s, d)| (d, s));
         pairs.dedup();
 
@@ -59,12 +192,13 @@ impl Csr {
             cols.push(s);
             vals.push(1.0 / outdeg[s as usize] as f32);
         }
-        Ok(Csr { n, rowptr, cols, vals, dangling, outdeg })
+        Ok(Csr { n, rowptr: RowPtr::from_usize(rowptr), cols, vals, dangling, outdeg })
     }
 
     /// Assemble a CSR from already-built parts — the splice path of
     /// `DeltaGraph::merge_csr`, which rebuilds only dirty rows and
-    /// copies the rest verbatim. Debug builds re-validate the full
+    /// copies the rest verbatim. The rowptr narrows automatically when
+    /// the nonzeros fit u32 offsets. Debug builds re-validate the full
     /// structural invariants; release builds trust the splicer (the
     /// property suite pins splice == rebuild bit-for-bit).
     pub(crate) fn from_raw_parts(
@@ -75,7 +209,7 @@ impl Csr {
         dangling: Vec<NodeId>,
         outdeg: Vec<u32>,
     ) -> Csr {
-        let csr = Csr { n, rowptr, cols, vals, dangling, outdeg };
+        let csr = Csr { n, rowptr: RowPtr::from_usize(rowptr), cols, vals, dangling, outdeg };
         if cfg!(debug_assertions) {
             csr.validate().expect("spliced CSR violates structural invariants");
         }
@@ -91,6 +225,52 @@ impl Csr {
         self.cols.len()
     }
 
+    /// Is the row pointer at the compact u32 width?
+    pub fn rowptr_is_compact(&self) -> bool {
+        matches!(self.rowptr, RowPtr::Narrow(_))
+    }
+
+    /// Force the row-pointer width: `true` narrows to u32 offsets
+    /// (panics if `nnz > u32::MAX`), `false` widens to usize. The
+    /// logical structure is untouched — equality, `spmv`, splices, and
+    /// partitioning read identically through either width; this exists
+    /// so the equivalence tests (and `--compact-csr`-style overrides)
+    /// can pin a specific layout.
+    pub fn set_compact_rowptr(&mut self, compact: bool) {
+        match (&self.rowptr, compact) {
+            (RowPtr::Wide(v), true) => {
+                assert!(
+                    self.cols.len() <= u32::MAX as usize,
+                    "nnz {} does not fit u32 row offsets",
+                    self.cols.len()
+                );
+                self.rowptr = RowPtr::Narrow(v.iter().map(|&o| o as u32).collect());
+            }
+            (RowPtr::Narrow(v), false) => {
+                self.rowptr = RowPtr::Wide(v.iter().map(|&o| o as usize).collect());
+            }
+            _ => {}
+        }
+    }
+
+    /// Heap bytes of the materialized structure (rowptr at its actual
+    /// width + cols + vals + dangling + outdeg).
+    pub fn heap_bytes(&self) -> usize {
+        self.rowptr.heap_bytes()
+            + self.cols.len() * std::mem::size_of::<NodeId>()
+            + self.vals.len() * std::mem::size_of::<f32>()
+            + self.dangling.len() * std::mem::size_of::<NodeId>()
+            + self.outdeg.len() * std::mem::size_of::<u32>()
+    }
+
+    /// What [`heap_bytes`](Self::heap_bytes) would read with the wide
+    /// (usize) rowptr layout — the dense-layout estimate the giant
+    /// bench compares the compact build against.
+    pub fn heap_bytes_wide(&self) -> usize {
+        self.heap_bytes() - self.rowptr.heap_bytes()
+            + self.rowptr.len() * std::mem::size_of::<usize>()
+    }
+
     pub fn dangling(&self) -> &[NodeId] {
         &self.dangling
     }
@@ -102,14 +282,14 @@ impl Csr {
     /// In-degree of page i (row length in this orientation).
     #[inline]
     pub fn row_len(&self, i: usize) -> usize {
-        self.rowptr[i + 1] - self.rowptr[i]
+        self.rowptr.at(i + 1) - self.rowptr.at(i)
     }
 
     /// (sources, weights) of row i.
     #[inline]
     pub fn row(&self, i: usize) -> (&[NodeId], &[f32]) {
-        let lo = self.rowptr[i];
-        let hi = self.rowptr[i + 1];
+        let lo = self.rowptr.at(i);
+        let hi = self.rowptr.at(i + 1);
         (&self.cols[lo..hi], &self.vals[lo..hi])
     }
 
@@ -120,18 +300,9 @@ impl Csr {
     pub fn spmv_range(&self, x: &[f32], row_lo: usize, row_hi: usize, y: &mut [f32]) {
         debug_assert_eq!(x.len(), self.n);
         debug_assert_eq!(y.len(), row_hi - row_lo);
-        // NOTE §Perf: a 4-accumulator unrolled variant was tried and
-        // REVERTED — web rows average ~8 nonzeros, so the unroll's
-        // prologue/epilogue cost exceeded the gather-latency win
-        // (1.91 ms vs 1.57 ms per p=4 block step).
-        for (yi, i) in y.iter_mut().zip(row_lo..row_hi) {
-            let lo = self.rowptr[i];
-            let hi = self.rowptr[i + 1];
-            let mut acc = 0.0f32;
-            for (c, v) in self.cols[lo..hi].iter().zip(&self.vals[lo..hi]) {
-                acc += v * x[*c as usize];
-            }
-            *yi = acc;
+        match &self.rowptr {
+            RowPtr::Narrow(rp) => spmv_rows(rp, &self.cols, &self.vals, x, row_lo, row_hi, y),
+            RowPtr::Wide(rp) => spmv_rows(rp, &self.cols, &self.vals, x, row_lo, row_hi, y),
         }
     }
 
@@ -159,13 +330,21 @@ impl Csr {
     }
 
     /// Validate structural invariants (sorted rows, weight consistency,
-    /// stochastic columns). Used by tests and `repro generate --check`.
+    /// stochastic columns) at either rowptr width. Used by tests and
+    /// `repro generate --check`.
     pub fn validate(&self) -> Result<()> {
-        if self.rowptr.len() != self.n + 1 || *self.rowptr.last().unwrap() != self.nnz() {
+        if self.rowptr.len() != self.n + 1 || self.rowptr.at(self.n) != self.nnz() {
             anyhow::bail!("rowptr malformed");
         }
+        if let RowPtr::Narrow(_) = self.rowptr {
+            // Narrow requires every offset to fit; monotone offsets make
+            // the last one the witness, and it equals nnz (checked above)
+            if self.nnz() > u32::MAX as usize {
+                anyhow::bail!("narrow rowptr cannot address nnz {}", self.nnz());
+            }
+        }
         for i in 0..self.n {
-            if self.rowptr[i] > self.rowptr[i + 1] {
+            if self.rowptr.at(i) > self.rowptr.at(i + 1) {
                 anyhow::bail!("rowptr not monotone at {i}");
             }
             let (cols, vals) = self.row(i);
@@ -271,5 +450,51 @@ mod tests {
         assert_eq!(g.nnz(), 0);
         assert_eq!(g.dangling().len(), 3);
         g.validate().unwrap();
+    }
+
+    #[test]
+    fn builds_compact_by_default_and_widths_compare_equal() {
+        let g = toy();
+        assert!(g.rowptr_is_compact(), "small graphs must take the u32 tier");
+        let mut wide = g.clone();
+        wide.set_compact_rowptr(false);
+        assert!(!wide.rowptr_is_compact());
+        wide.validate().unwrap();
+        // width is representation, not identity
+        assert_eq!(g, wide);
+        // and the footprint ordering is what the tier exists for
+        assert!(wide.heap_bytes() > g.heap_bytes());
+        assert_eq!(g.heap_bytes_wide(), wide.heap_bytes());
+        assert_eq!(wide.heap_bytes_wide(), wide.heap_bytes());
+        // round-trip back to compact restores the exact layout
+        let mut back = wide.clone();
+        back.set_compact_rowptr(true);
+        assert!(back.rowptr_is_compact());
+        assert_eq!(back.heap_bytes(), g.heap_bytes());
+    }
+
+    #[test]
+    fn wide_rowptr_reads_identically() {
+        let el = EdgeList::from_edges(4, vec![(0, 1), (0, 2), (1, 2), (2, 0)]).unwrap();
+        let g = Csr::from_edgelist(&el).unwrap();
+        let mut wide = g.clone();
+        wide.set_compact_rowptr(false);
+        for i in 0..g.n() {
+            assert_eq!(g.row(i), wide.row(i));
+            assert_eq!(g.row_len(i), wide.row_len(i));
+        }
+        let x = [0.4f32, 0.3, 0.2, 0.1];
+        let (mut y0, mut y1) = ([0.0f32; 4], [0.0f32; 4]);
+        g.spmv(&x, &mut y0);
+        wide.spmv(&x, &mut y1);
+        assert_eq!(y0, y1);
+    }
+
+    #[test]
+    fn owned_build_matches_borrowed() {
+        let el = EdgeList::from_edges(5, vec![(0, 1), (2, 3), (2, 3), (4, 0), (1, 4)]).unwrap();
+        let a = Csr::from_edgelist(&el).unwrap();
+        let b = Csr::from_edgelist_owned(el).unwrap();
+        assert_eq!(a, b);
     }
 }

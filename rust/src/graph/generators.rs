@@ -247,15 +247,53 @@ pub fn bow_tie(n: usize, avg_deg: usize, seed: u64) -> EdgeList {
 /// (0.57, 0.19, 0.19, 0.05) produces the skew + community structure
 /// real crawls show; used by the generator-sensitivity ablation.
 pub fn rmat(scale: u32, m: usize, probs: (f64, f64, f64, f64), seed: u64) -> EdgeList {
+    let n = 1usize << scale;
+    let mut el = EdgeList::with_capacity(n, m);
+    for (s, d) in rmat_edges(scale, m, probs, seed) {
+        el.push(s, d);
+    }
+    el
+}
+
+/// The standard web-like R-MAT quadrant probabilities
+/// (Chakrabarti et al.) — what the giant-graph bench and the `rmat:`
+/// graph spec use.
+pub const RMAT_WEB_PROBS: (f64, f64, f64, f64) = (0.57, 0.19, 0.19, 0.05);
+
+/// Streaming form of [`rmat`]: yields the exact same edge sequence
+/// (same seed, same generator draws), one record at a time, so a giant
+/// instance can pipe straight to disk through
+/// [`io::save_edgelist_bin_iter`](crate::graph::io::save_edgelist_bin_iter)
+/// without ever materializing the `Vec<(src, dst)>` — the O(m) edge
+/// buffer is exactly what the giant-graph memory tier must avoid.
+pub fn rmat_edges(scale: u32, m: usize, probs: (f64, f64, f64, f64), seed: u64) -> RmatEdges {
     let (a, b, c, d) = probs;
     assert!((a + b + c + d - 1.0).abs() < 1e-9, "quadrant probs must sum to 1");
-    let n = 1usize << scale;
-    let mut rng = Rng::new(seed);
-    let mut el = EdgeList::with_capacity(n, m);
-    for _ in 0..m {
-        let (mut r0, mut r1, mut c0, mut c1) = (0usize, n, 0usize, n);
+    RmatEdges { n: 1usize << scale, probs, rng: Rng::new(seed), remaining: m }
+}
+
+/// Iterator behind [`rmat_edges`]. Each `next` runs one quadrant
+/// descent — `scale` uniform draws per edge.
+#[derive(Debug, Clone)]
+pub struct RmatEdges {
+    n: usize,
+    probs: (f64, f64, f64, f64),
+    rng: Rng,
+    remaining: usize,
+}
+
+impl Iterator for RmatEdges {
+    type Item = (NodeId, NodeId);
+
+    fn next(&mut self) -> Option<(NodeId, NodeId)> {
+        if self.remaining == 0 {
+            return None;
+        }
+        self.remaining -= 1;
+        let (a, b, c, _) = self.probs;
+        let (mut r0, mut r1, mut c0, mut c1) = (0usize, self.n, 0usize, self.n);
         while r1 - r0 > 1 {
-            let u = rng.f64();
+            let u = self.rng.f64();
             let (top, left) = if u < a {
                 (true, true)
             } else if u < a + b {
@@ -278,10 +316,15 @@ pub fn rmat(scale: u32, m: usize, probs: (f64, f64, f64, f64), seed: u64) -> Edg
                 c0 = cm;
             }
         }
-        el.push(r0 as NodeId, c0 as NodeId);
+        Some((r0 as NodeId, c0 as NodeId))
     }
-    el
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        (self.remaining, Some(self.remaining))
+    }
 }
+
+impl ExactSizeIterator for RmatEdges {}
 
 /// Parameters for the crawl-like update stream ([`churn_batch`]).
 ///
@@ -497,6 +540,15 @@ mod tests {
     #[should_panic(expected = "sum to 1")]
     fn rmat_rejects_bad_probs() {
         rmat(4, 10, (0.5, 0.2, 0.2, 0.2), 1);
+    }
+
+    #[test]
+    fn rmat_edges_streams_the_same_sequence() {
+        let el = rmat(10, 5_000, RMAT_WEB_PROBS, 42);
+        let it = rmat_edges(10, 5_000, RMAT_WEB_PROBS, 42);
+        assert_eq!(it.len(), 5_000);
+        let streamed: Vec<_> = it.collect();
+        assert_eq!(el.edges(), &streamed[..]);
     }
 
     #[test]

@@ -1,13 +1,22 @@
 //! Graph IO: text edge lists (SNAP style, what the Stanford-Web data
 //! ships as), and a compact binary format for fast reload of generated
 //! graphs.
+//!
+//! Two readers share the binary format. [`load_edgelist_bin`]
+//! materializes the whole `Vec<(src, dst)>` — fine at test scales.
+//! [`stream_csr_from_bin`] is the giant-graph memory tier: two chunked
+//! streaming passes (count, then place) build the transposed CSR
+//! directly, so peak RSS during construction is the CSR arrays plus
+//! O(n) bookkeeping — never an 8-byte-per-edge list on top. Its failure
+//! modes are the typed [`BinGraphError`], so ingestion pipelines can
+//! match on *what* broke instead of grepping message strings.
 
-use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::io::{BufRead, BufReader, BufWriter, Read, Seek, SeekFrom, Write};
 use std::path::Path;
 
 use anyhow::Context;
 
-use super::{EdgeList, NodeId};
+use super::{Csr, EdgeList, NodeId};
 use crate::Result;
 
 /// Load a SNAP-style text edge list: one `src dst` (or `src\tdst`) pair
@@ -52,41 +61,139 @@ pub fn save_edgelist_text(el: &EdgeList, path: impl AsRef<Path>) -> Result<()> {
 
 const BIN_MAGIC: &[u8; 8] = b"APRGRAPH";
 
-/// Compact binary: magic, u64 n, u64 m, then m (u32,u32) LE pairs.
-pub fn save_edgelist_bin(el: &EdgeList, path: impl AsRef<Path>) -> Result<()> {
-    let f = std::fs::File::create(path.as_ref())?;
-    let mut w = BufWriter::new(f);
-    w.write_all(BIN_MAGIC)?;
-    w.write_all(&(el.n() as u64).to_le_bytes())?;
-    w.write_all(&(el.len() as u64).to_le_bytes())?;
-    for &(s, d) in el.edges() {
-        w.write_all(&s.to_le_bytes())?;
-        w.write_all(&d.to_le_bytes())?;
-    }
-    Ok(())
-}
-
 /// Header size of the binary format: magic + u64 n + u64 m.
 const BIN_HEADER: u64 = 8 + 8 + 8;
 
-/// Load the binary format written by [`save_edgelist_bin`].
+/// Typed failure modes of the binary-graph readers.
 ///
-/// The `n`/`m` header is validated against the actual file size BEFORE
-/// any `m`-sized allocation, so a corrupt or truncated file fails with
-/// a readable error instead of attempting a massive `Vec::with_capacity`
-/// (a 16-byte header flip could otherwise request exabytes).
-pub fn load_edgelist_bin(path: impl AsRef<Path>) -> Result<EdgeList> {
-    let f = std::fs::File::open(path.as_ref())
-        .with_context(|| format!("opening {}", path.as_ref().display()))?;
-    let file_len = f
-        .metadata()
-        .with_context(|| format!("stat {}", path.as_ref().display()))?
-        .len();
-    let mut r = BufReader::new(f);
+/// [`stream_csr_from_bin`] returns these directly; [`load_edgelist_bin`]
+/// wraps them through `anyhow` (the vendored shim carries the `Display`
+/// text, so the historical message substrings — "node-id space",
+/// "size overflows", "truncated or corrupt" — survive for callers that
+/// still grep).
+#[derive(Debug)]
+pub enum BinGraphError {
+    /// Underlying I/O failure (open/stat/read).
+    Io(std::io::Error),
+    /// The file does not start with the `APRGRAPH` magic.
+    BadMagic,
+    /// Header `n` exceeds the u32 node-id space.
+    OversizedN { n: u64 },
+    /// Header `m` is so large the implied byte size overflows u64.
+    SizeOverflow { m: u64 },
+    /// Header `(n, m)` disagrees with the actual file length
+    /// (truncated file, trailing garbage, or a lying header).
+    SizeMismatch { n: u64, m: u64, want_len: u64, file_len: u64 },
+    /// Edge record `record` (0-based) references a node id `>= n`.
+    NodeOutOfRange { src: u32, dst: u32, n: u64, record: u64 },
+    /// The header promises more edges than the forced compact u32
+    /// rowptr tier can address (`m > u32::MAX`).
+    CompactOverflow { m: u64 },
+    /// A single node's streamed in-degree overflowed the u32 counter
+    /// (only reachable with `>= 2^32` duplicate records to one node).
+    DegreeOverflow { node: u32 },
+}
+
+impl std::fmt::Display for BinGraphError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            BinGraphError::Io(e) => write!(f, "graph io: {e}"),
+            BinGraphError::BadMagic => write!(f, "not an asyncpr graph file"),
+            BinGraphError::OversizedN { n } => write!(
+                f,
+                "graph header claims n={n}, beyond the u32 node-id space (corrupt file?)"
+            ),
+            BinGraphError::SizeOverflow { m } => {
+                write!(f, "graph header claims m={m} edges; size overflows")
+            }
+            BinGraphError::SizeMismatch { n, m, want_len, file_len } => write!(
+                f,
+                "graph file is {file_len} bytes but header (n={n}, m={m}) requires {want_len}: \
+                 truncated or corrupt"
+            ),
+            BinGraphError::NodeOutOfRange { src, dst, n, record } => write!(
+                f,
+                "edge record {record} is ({src}, {dst}), outside the declared n={n}"
+            ),
+            BinGraphError::CompactOverflow { m } => write!(
+                f,
+                "graph header claims m={m} edges; the compact u32 row-pointer tier addresses \
+                 at most {} — use the wide layout",
+                u32::MAX
+            ),
+            BinGraphError::DegreeOverflow { node } => {
+                write!(f, "node {node}: streamed in-degree overflows the u32 counter")
+            }
+        }
+    }
+}
+
+impl std::error::Error for BinGraphError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            BinGraphError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for BinGraphError {
+    fn from(e: std::io::Error) -> Self {
+        BinGraphError::Io(e)
+    }
+}
+
+/// Compact binary: magic, u64 n, u64 m, then m (u32,u32) LE pairs.
+pub fn save_edgelist_bin(el: &EdgeList, path: impl AsRef<Path>) -> Result<()> {
+    save_edgelist_bin_iter(path, el.n(), el.len() as u64, el.edges().iter().copied())
+}
+
+/// Write the binary format from an edge iterator without materializing
+/// an edge list — the giant-graph generator path (an R-MAT stream pipes
+/// straight to disk). The header carries `n` and the promised record
+/// count `m` up front; the iterator must yield exactly `m` in-bounds
+/// records (checked, so a lying iterator cannot produce a file the
+/// readers would reject as corrupt).
+pub fn save_edgelist_bin_iter(
+    path: impl AsRef<Path>,
+    n: usize,
+    m: u64,
+    edges: impl Iterator<Item = (NodeId, NodeId)>,
+) -> Result<()> {
+    let f = std::fs::File::create(path.as_ref())?;
+    let mut w = BufWriter::new(f);
+    w.write_all(BIN_MAGIC)?;
+    w.write_all(&(n as u64).to_le_bytes())?;
+    w.write_all(&m.to_le_bytes())?;
+    let mut written = 0u64;
+    for (s, d) in edges {
+        anyhow::ensure!(
+            (s as usize) < n && (d as usize) < n,
+            "edge ({s}, {d}) out of bounds for n={n}"
+        );
+        let mut rec = [0u8; 8];
+        rec[0..4].copy_from_slice(&s.to_le_bytes());
+        rec[4..8].copy_from_slice(&d.to_le_bytes());
+        w.write_all(&rec)?;
+        written += 1;
+    }
+    anyhow::ensure!(
+        written == m,
+        "edge iterator yielded {written} records, header promised {m}"
+    );
+    w.flush()?;
+    Ok(())
+}
+
+/// Read and sanity-check the 24-byte header: magic, `n` in the u32
+/// node-id space, and an `m` whose byte size is representable. The
+/// file-size agreement is checked separately ([`check_bin_size`]) so
+/// callers can interpose checks that must precede it.
+fn read_bin_header(r: &mut impl Read) -> std::result::Result<(u64, u64), BinGraphError> {
     let mut magic = [0u8; 8];
     r.read_exact(&mut magic)?;
     if &magic != BIN_MAGIC {
-        anyhow::bail!("not an asyncpr graph file");
+        return Err(BinGraphError::BadMagic);
     }
     let mut u64buf = [0u8; 8];
     r.read_exact(&mut u64buf)?;
@@ -95,18 +202,38 @@ pub fn load_edgelist_bin(path: impl AsRef<Path>) -> Result<EdgeList> {
     let m = u64::from_le_bytes(u64buf);
     // node ids are u32, so any readable file has n <= 2^32
     if n > u64::from(u32::MAX) + 1 {
-        anyhow::bail!("graph header claims n={n}, beyond the u32 node-id space (corrupt file?)");
+        return Err(BinGraphError::OversizedN { n });
     }
-    let want_len = m
-        .checked_mul(8)
+    m.checked_mul(8)
         .and_then(|b| b.checked_add(BIN_HEADER))
-        .ok_or_else(|| anyhow::anyhow!("graph header claims m={m} edges; size overflows"))?;
+        .ok_or(BinGraphError::SizeOverflow { m })?;
+    Ok((n, m))
+}
+
+/// Validate the header against the actual file length BEFORE any
+/// `m`-sized allocation, so a corrupt or truncated file fails with a
+/// readable error instead of attempting a massive reservation (a
+/// 16-byte header flip could otherwise request exabytes).
+fn check_bin_size(n: u64, m: u64, file_len: u64) -> std::result::Result<(), BinGraphError> {
+    // the multiplication was overflow-checked by read_bin_header
+    let want_len = m * 8 + BIN_HEADER;
     if want_len != file_len {
-        anyhow::bail!(
-            "graph file is {file_len} bytes but header (n={n}, m={m}) requires {want_len}: \
-             truncated or corrupt"
-        );
+        return Err(BinGraphError::SizeMismatch { n, m, want_len, file_len });
     }
+    Ok(())
+}
+
+/// Load the binary format written by [`save_edgelist_bin`].
+pub fn load_edgelist_bin(path: impl AsRef<Path>) -> Result<EdgeList> {
+    let f = std::fs::File::open(path.as_ref())
+        .with_context(|| format!("opening {}", path.as_ref().display()))?;
+    let file_len = f
+        .metadata()
+        .with_context(|| format!("stat {}", path.as_ref().display()))?
+        .len();
+    let mut r = BufReader::new(f);
+    let (n, m) = read_bin_header(&mut r)?;
+    check_bin_size(n, m, file_len)?;
     let n = n as usize;
     let m = m as usize;
     let mut edges = Vec::with_capacity(m);
@@ -118,6 +245,172 @@ pub fn load_edgelist_bin(path: impl AsRef<Path>) -> Result<EdgeList> {
         edges.push((s, d));
     }
     EdgeList::from_edges(n, edges)
+}
+
+/// Options for [`stream_csr_from_bin`].
+#[derive(Debug, Clone)]
+pub struct StreamCsrOptions {
+    /// Force a row-pointer width: `Some(true)` requires the compact u32
+    /// tier (typed [`BinGraphError::CompactOverflow`] if the header's
+    /// `m` cannot fit), `Some(false)` forces the wide usize layout,
+    /// `None` (the default) narrows automatically by nnz.
+    pub compact: Option<bool>,
+    /// Read-chunk size in bytes (default 1 MiB). Any value `>= 1`
+    /// works: an edge record straddling a read boundary is carried
+    /// into the next chunk.
+    pub chunk_bytes: usize,
+}
+
+impl Default for StreamCsrOptions {
+    fn default() -> Self {
+        StreamCsrOptions { compact: None, chunk_bytes: 1 << 20 }
+    }
+}
+
+/// Stream the record payload of an open binary edge file in
+/// `chunk`-byte reads, invoking `rec(record_index, src, dst)` per edge.
+/// The 8-byte records are NOT assumed aligned to read boundaries — the
+/// partial tail of each chunk (up to 7 bytes) is carried to the front
+/// of the next one.
+fn for_each_record(
+    f: &mut std::fs::File,
+    m: u64,
+    chunk: usize,
+    mut rec: impl FnMut(u64, u32, u32) -> std::result::Result<(), BinGraphError>,
+) -> std::result::Result<(), BinGraphError> {
+    f.seek(SeekFrom::Start(BIN_HEADER))?;
+    let chunk = chunk.max(1);
+    // room for one carried partial record ahead of each chunk
+    let mut buf = vec![0u8; chunk + 8];
+    let mut have = 0usize;
+    let mut seen = 0u64;
+    while seen < m {
+        let got = f.read(&mut buf[have..have + chunk])?;
+        if got == 0 {
+            // the size check passed, so this means the file shrank
+            // between stat and read
+            return Err(BinGraphError::Io(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "edge payload ended early",
+            )));
+        }
+        have += got;
+        let full = (have / 8).min((m - seen) as usize);
+        for i in 0..full {
+            let b = &buf[i * 8..i * 8 + 8];
+            let s = u32::from_le_bytes(b[0..4].try_into().unwrap());
+            let d = u32::from_le_bytes(b[4..8].try_into().unwrap());
+            rec(seen, s, d)?;
+            seen += 1;
+        }
+        buf.copy_within(full * 8..have, 0);
+        have -= full * 8;
+    }
+    Ok(())
+}
+
+/// Build the transposed, normalized CSR straight from a binary edge
+/// file with two streaming passes, never materializing the edge list.
+///
+/// Pass 1 counts per-destination in-degrees (duplicates included) and
+/// validates every node id; pass 2 re-reads the file and scatters each
+/// source into its transposed row; rows are then sorted and
+/// deduplicated in place and the weights derived from the deduped
+/// out-degrees. Peak memory is the CSR arrays plus O(n) counters — the
+/// `Csr::from_edgelist(&load_edgelist_bin(..)?)` route pays an extra
+/// 8 bytes/edge for the intermediate list, which at web scale is the
+/// dominant allocation. The result is bit-identical to that route.
+pub fn stream_csr_from_bin(
+    path: impl AsRef<Path>,
+    opts: &StreamCsrOptions,
+) -> std::result::Result<Csr, BinGraphError> {
+    let mut f = std::fs::File::open(path.as_ref())?;
+    let file_len = f.metadata()?.len();
+    let (n64, m64) = read_bin_header(&mut f)?;
+    if opts.compact == Some(true) && m64 > u64::from(u32::MAX) {
+        // checked against the header BEFORE the size check, so a forced
+        // compact build rejects an over-wide graph up front (a real
+        // 2^32-edge file passes the size check and would otherwise only
+        // fail deep into construction)
+        return Err(BinGraphError::CompactOverflow { m: m64 });
+    }
+    check_bin_size(n64, m64, file_len)?;
+    let n = n64 as usize;
+    let m = m64 as usize;
+
+    // pass 1: in-degrees (with duplicates) + id validation
+    let mut indeg = vec![0u32; n];
+    for_each_record(&mut f, m64, opts.chunk_bytes, |record, s, d| {
+        if u64::from(s) >= n64 || u64::from(d) >= n64 {
+            return Err(BinGraphError::NodeOutOfRange { src: s, dst: d, n: n64, record });
+        }
+        indeg[d as usize] = indeg[d as usize]
+            .checked_add(1)
+            .ok_or(BinGraphError::DegreeOverflow { node: d })?;
+        Ok(())
+    })?;
+
+    let mut rowptr = vec![0usize; n + 1];
+    for i in 0..n {
+        rowptr[i + 1] = rowptr[i] + indeg[i] as usize;
+    }
+    drop(indeg);
+
+    // pass 2: scatter sources into their transposed rows
+    let mut cols = vec![0u32; m];
+    let mut cursor: Vec<usize> = rowptr[..n].to_vec();
+    for_each_record(&mut f, m64, opts.chunk_bytes, |record, s, d| {
+        // ids were validated in pass 1; re-check in case the file
+        // changed between the passes (a stale cursor would otherwise
+        // scribble across row boundaries)
+        if u64::from(s) >= n64 || u64::from(d) >= n64 {
+            return Err(BinGraphError::NodeOutOfRange { src: s, dst: d, n: n64, record });
+        }
+        let c = &mut cursor[d as usize];
+        cols[*c] = s;
+        *c += 1;
+        Ok(())
+    })?;
+    drop(cursor);
+
+    // sort + dedup each row in place behind a global write cursor
+    // (w <= row start always, so the compaction never clobbers an
+    // unread entry)
+    let mut w = 0usize;
+    let mut lo = 0usize;
+    let mut new_rowptr = vec![0usize; n + 1];
+    for i in 0..n {
+        let hi = rowptr[i + 1];
+        cols[lo..hi].sort_unstable();
+        let mut prev: Option<u32> = None;
+        for idx in lo..hi {
+            let c = cols[idx];
+            if prev != Some(c) {
+                cols[w] = c;
+                w += 1;
+                prev = Some(c);
+            }
+        }
+        new_rowptr[i + 1] = w;
+        lo = hi;
+    }
+    drop(rowptr);
+    cols.truncate(w);
+    cols.shrink_to_fit();
+
+    // out-degrees on the deduped edge set, then dangling and weights
+    let mut outdeg = vec![0u32; n];
+    for &c in &cols {
+        outdeg[c as usize] += 1;
+    }
+    let dangling: Vec<NodeId> =
+        (0..n as NodeId).filter(|&i| outdeg[i as usize] == 0).collect();
+    let vals: Vec<f32> = cols.iter().map(|&c| 1.0 / outdeg[c as usize] as f32).collect();
+    let mut csr = Csr::from_raw_parts(n, new_rowptr, cols, vals, dangling, outdeg);
+    if let Some(compact) = opts.compact {
+        csr.set_compact_rowptr(compact);
+    }
+    Ok(csr)
 }
 
 #[cfg(test)]
@@ -178,6 +471,34 @@ mod tests {
     }
 
     #[test]
+    fn bin_iter_writer_matches_slice_writer() {
+        let d = tmpdir();
+        let el = generators::erdos_renyi(200, 700, 8);
+        let p1 = d.join("slice.bin");
+        let p2 = d.join("iter.bin");
+        save_edgelist_bin(&el, &p1).unwrap();
+        save_edgelist_bin_iter(&p2, el.n(), el.len() as u64, el.edges().iter().copied())
+            .unwrap();
+        assert_eq!(std::fs::read(&p1).unwrap(), std::fs::read(&p2).unwrap());
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn bin_iter_writer_rejects_count_and_bounds_lies() {
+        let d = tmpdir();
+        let p = d.join("lie.bin");
+        let err = save_edgelist_bin_iter(&p, 4, 3, [(0u32, 1u32)].into_iter())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("promised"), "{err}");
+        let err = save_edgelist_bin_iter(&p, 4, 1, [(0u32, 9u32)].into_iter())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("out of bounds"), "{err}");
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
     fn bin_rejects_truncated_header_vs_size() {
         // regression: a header claiming a huge edge count must fail on
         // the size check, not attempt the allocation
@@ -190,6 +511,9 @@ mod tests {
         std::fs::write(&p, &bytes).unwrap();
         let err = format!("{:#}", load_edgelist_bin(&p).unwrap_err());
         assert!(err.contains("overflows") || err.contains("truncated"), "{err}");
+        // the streaming path reports the same condition, typed
+        let err = stream_csr_from_bin(&p, &StreamCsrOptions::default()).unwrap_err();
+        assert!(matches!(err, BinGraphError::SizeOverflow { .. }), "{err}");
         std::fs::remove_dir_all(&d).ok();
     }
 
@@ -204,12 +528,16 @@ mod tests {
         std::fs::write(&p, &good[..good.len() - 5]).unwrap();
         let err = format!("{:#}", load_edgelist_bin(&p).unwrap_err());
         assert!(err.contains("truncated or corrupt"), "{err}");
+        let terr = stream_csr_from_bin(&p, &StreamCsrOptions::default()).unwrap_err();
+        assert!(matches!(terr, BinGraphError::SizeMismatch { .. }), "{terr}");
         // trailing garbage
         let mut padded = good.clone();
         padded.extend_from_slice(b"junk");
         std::fs::write(&p, &padded).unwrap();
         let err = format!("{:#}", load_edgelist_bin(&p).unwrap_err());
         assert!(err.contains("truncated or corrupt"), "{err}");
+        let terr = stream_csr_from_bin(&p, &StreamCsrOptions::default()).unwrap_err();
+        assert!(matches!(terr, BinGraphError::SizeMismatch { .. }), "{terr}");
         // pristine file still loads
         std::fs::write(&p, &good).unwrap();
         assert_eq!(load_edgelist_bin(&p).unwrap(), el);
@@ -227,6 +555,8 @@ mod tests {
         std::fs::write(&p, &bytes).unwrap();
         let err = format!("{:#}", load_edgelist_bin(&p).unwrap_err());
         assert!(err.contains("node-id space"), "{err}");
+        let terr = stream_csr_from_bin(&p, &StreamCsrOptions::default()).unwrap_err();
+        assert!(matches!(terr, BinGraphError::OversizedN { .. }), "{terr}");
         std::fs::remove_dir_all(&d).ok();
     }
 
@@ -237,6 +567,108 @@ mod tests {
         std::fs::write(&p, b"NOTAGRPH
 ").unwrap();
         assert!(load_edgelist_bin(&p).is_err());
+        let terr = stream_csr_from_bin(&p, &StreamCsrOptions::default()).unwrap_err();
+        assert!(matches!(terr, BinGraphError::BadMagic), "{terr}");
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn stream_csr_matches_edgelist_build() {
+        let d = tmpdir();
+        // parallel edges + dangling nodes + a self-loop, to hit dedup
+        // and every weight path
+        let mut el = generators::erdos_renyi(300, 1200, 5);
+        el.push(7, 7);
+        el.push(0, 299);
+        el.push(0, 299);
+        let p = d.join("g.bin");
+        save_edgelist_bin(&el, &p).unwrap();
+        let want = Csr::from_edgelist(&el).unwrap();
+        let got = stream_csr_from_bin(&p, &StreamCsrOptions::default()).unwrap();
+        assert_eq!(got, want);
+        assert!(got.rowptr_is_compact());
+        got.validate().unwrap();
+        // forced widths read the same structure
+        let wide =
+            stream_csr_from_bin(&p, &StreamCsrOptions { compact: Some(false), chunk_bytes: 1 << 20 })
+                .unwrap();
+        assert!(!wide.rowptr_is_compact());
+        assert_eq!(wide, want);
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn stream_csr_chunk_boundary_straddle() {
+        // chunk sizes that are NOT multiples of the 8-byte record force
+        // a record to straddle every read boundary; 1-byte chunks are
+        // the degenerate worst case
+        let d = tmpdir();
+        let el = generators::erdos_renyi(64, 500, 11);
+        let p = d.join("g.bin");
+        save_edgelist_bin(&el, &p).unwrap();
+        let want = Csr::from_edgelist(&el).unwrap();
+        for chunk_bytes in [1usize, 5, 7, 13, 8 * 10 + 3] {
+            let got = stream_csr_from_bin(&p, &StreamCsrOptions { compact: None, chunk_bytes })
+                .unwrap();
+            assert_eq!(got, want, "chunk_bytes={chunk_bytes}");
+        }
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn stream_csr_rejects_out_of_range_node_ids() {
+        let d = tmpdir();
+        let p = d.join("oob.bin");
+        // hand-built file: n=3, m=2, second record's dst out of range
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(BIN_MAGIC);
+        bytes.extend_from_slice(&3u64.to_le_bytes());
+        bytes.extend_from_slice(&2u64.to_le_bytes());
+        for (s, d) in [(0u32, 1u32), (1, 7)] {
+            bytes.extend_from_slice(&s.to_le_bytes());
+            bytes.extend_from_slice(&d.to_le_bytes());
+        }
+        std::fs::write(&p, &bytes).unwrap();
+        let err = stream_csr_from_bin(&p, &StreamCsrOptions::default()).unwrap_err();
+        match err {
+            BinGraphError::NodeOutOfRange { src, dst, n, record } => {
+                assert_eq!((src, dst, n, record), (1, 7, 3, 1));
+            }
+            other => panic!("want NodeOutOfRange, got {other}"),
+        }
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn stream_csr_forced_compact_rejects_overwide_header() {
+        // a header promising 2^32 edges cannot take the u32 rowptr
+        // tier; the typed error fires BEFORE the size check, so a tiny
+        // test file suffices
+        let d = tmpdir();
+        let p = d.join("wide.bin");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(BIN_MAGIC);
+        bytes.extend_from_slice(&4u64.to_le_bytes());
+        bytes.extend_from_slice(&(u64::from(u32::MAX) + 1).to_le_bytes());
+        std::fs::write(&p, &bytes).unwrap();
+        let forced = StreamCsrOptions { compact: Some(true), chunk_bytes: 1 << 20 };
+        let err = stream_csr_from_bin(&p, &forced).unwrap_err();
+        assert!(matches!(err, BinGraphError::CompactOverflow { m } if m == u64::from(u32::MAX) + 1), "{err}");
+        // without the forced width the same file fails the size check
+        let err = stream_csr_from_bin(&p, &StreamCsrOptions::default()).unwrap_err();
+        assert!(matches!(err, BinGraphError::SizeMismatch { .. }), "{err}");
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn stream_csr_empty_graph() {
+        let d = tmpdir();
+        let p = d.join("empty.bin");
+        save_edgelist_bin(&EdgeList::new(5), &p).unwrap();
+        let csr = stream_csr_from_bin(&p, &StreamCsrOptions::default()).unwrap();
+        assert_eq!(csr.n(), 5);
+        assert_eq!(csr.nnz(), 0);
+        assert_eq!(csr.dangling().len(), 5);
         std::fs::remove_dir_all(&d).ok();
     }
 }

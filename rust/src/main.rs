@@ -17,6 +17,7 @@
 //!              [--term protocol|quiet] [--pc-max N] [--inject-stall W:MS[:R]]
 //!              [--net loopback|socket] [--net-profile test|beowulf]
 //!              [--inject-link L:MS[:JITTER]]
+//!              [--outbox auto|dense|sparse]
 //!              [--arrivals K] [--links L] [--inserts I]
 //!              [--removes R] [--out reports/X]
 //!              [--trace FILE] [--trace-sample-us N]
@@ -42,6 +43,7 @@ use asyncpr::metrics::{
 };
 use asyncpr::obs::{self, EventTotals, TraceCollector};
 use asyncpr::simnet::Topology;
+use asyncpr::stream::OutboxPolicy;
 use asyncpr::util::Json;
 
 fn main() {
@@ -119,6 +121,7 @@ USAGE:
                [--inject-stall W:MS[:R]]
                [--net loopback|socket] [--net-profile test|beowulf]
                [--inject-link L:MS[:JITTER]]
+               [--outbox auto|dense|sparse]
                [--arrivals K] [--links L] [--inserts I]
                [--removes R] [--out STEM]
                [--trace FILE] [--trace-sample-us N]
@@ -187,6 +190,11 @@ ppr/trace, --term protocol required). `--inject-link L:MS[:JITTER]`
 (loopback only) delays every frame out of endpoint L by MS ms plus
 uniform jitter in [0,JITTER) ms — the wire fault that makes the quiet
 heuristic stop early while the protocol waits out in-flight mass.
+`--outbox` picks the sharded solvers' per-peer outbox representation:
+`dense` keeps O(span) accumulator arrays per peer, `sparse` swaps them
+for ordered maps sized by touched targets, `auto` (default) goes
+sparse above 8 shards so outbox memory stays O(touched) as the shard
+count grows.
 `net` is the standalone socket-tier driver: spawn `--shards P` worker
 processes, solve cold over real sockets to a protocol STOP, gather and
 verify (exact residual < tol, mass balance, L1 vs a fresh power run —
@@ -547,6 +555,14 @@ fn cmd_stream(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     }
     if let Some(v) = flags.get("inject-link") {
         opts.inject_link = Some(parse_inject_link(v)?);
+    }
+    if let Some(v) = flags.get("outbox") {
+        opts.outbox = match v.as_str() {
+            "auto" => OutboxPolicy::Auto,
+            "dense" => OutboxPolicy::Dense,
+            "sparse" => OutboxPolicy::Sparse,
+            other => anyhow::bail!("--outbox must be auto|dense|sparse, got {other:?}"),
+        };
     }
     // churn overrides ride as options; the driver resolves them against
     // graph-scaled defaults once the graph is loaded (loading it here

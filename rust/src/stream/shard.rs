@@ -10,9 +10,12 @@
 //! loop over its own rows with its own [`BucketQueue`].
 //!
 //! A push at `u` that hits an out-of-shard target does not touch the
-//! peer's state; the mass lands in a per-peer **outbox** — a dense
-//! accumulator over the peer's rows, so repeated hits coalesce instead
-//! of growing a message list. Outboxes are exchanged as
+//! peer's state; the mass lands in a per-peer **outbox** — an
+//! accumulator keyed by the peer's rows, so repeated hits coalesce
+//! instead of growing a message list. The representation adapts to the
+//! shard count ([`OutboxPolicy`]): dense f64 arrays while the
+//! O(shards·n) worst case is affordable, ordered sparse maps above
+//! [`SPARSE_OUTBOX_SHARDS`] shards. Outboxes are exchanged as
 //! [`ResidualFragment`]s: batches of `(node, mass)` pairs plus a
 //! uniform term for dangling emissions. Residual mass is *additive and
 //! conservative* — fragments can be deferred, reordered, or merged
@@ -124,6 +127,97 @@ pub(crate) struct StealGrant {
 /// Sentinel in the lent-row table: the row is still owned here.
 const OWNED: u16 = u16::MAX;
 
+/// Shard count above which [`OutboxPolicy::Auto`] picks the sparse
+/// outbox representation. At this count and below, the dense
+/// accumulators' O(shards·n) worst case stays within a small multiple
+/// of the solver state itself; above it the quadratic-in-shards
+/// footprint starts to dominate and the O(touched) maps win.
+pub const SPARSE_OUTBOX_SHARDS: usize = 8;
+
+/// Outbox representation policy for [`ShardedPush`] — how each shard
+/// accumulates mass bound for a peer between exchanges.
+///
+/// Either representation reaches the same fixed point: an outbox is
+/// additive residual mass in flight, and the choice only moves where
+/// repeated hits coalesce (a dense slot vs a map entry). Each policy is
+/// individually deterministic — the sparse maps drain in ascending node
+/// order, so reruns are bit-identical — and the equivalence proptests
+/// pin dense-vs-sparse solves to the same answer within the solve
+/// tolerance.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum OutboxPolicy {
+    /// Dense accumulators up to [`SPARSE_OUTBOX_SHARDS`] shards, sparse
+    /// maps above.
+    #[default]
+    Auto,
+    /// Always the dense per-peer accumulators (O(shards·n) worst case).
+    Dense,
+    /// Always the sparse maps (O(touched entries), pay a map op per
+    /// outbox hit).
+    Sparse,
+}
+
+impl OutboxPolicy {
+    /// Resolve the representation for a concrete shard count.
+    fn sparse_for(self, shards: usize) -> bool {
+        match self {
+            OutboxPolicy::Auto => shards > SPARSE_OUTBOX_SHARDS,
+            OutboxPolicy::Dense => false,
+            OutboxPolicy::Sparse => true,
+        }
+    }
+}
+
+/// One per-peer outbox, in the representation the engine's
+/// [`OutboxPolicy`] selected. Both variants keep the incremental
+/// `acc_mass`/`acc_sum` tallies exact and both are drained whole by
+/// `take_fragment`.
+#[derive(Debug, Clone)]
+enum Outbox {
+    /// Lazily-allocated f64 accumulator over the peer's home rows plus
+    /// a forward list for entries *outside* that range (rows the peer
+    /// adopted from us mid-steal).
+    Dense {
+        /// Accumulator indexed by the peer's local rows; empty until
+        /// first use (warm epochs rarely touch every peer, and eager
+        /// allocation would cost O(shards·n) up front).
+        acc: Vec<f64>,
+        /// Positions possibly nonzero in `acc`. May hold duplicates
+        /// (exact cancellation to 0.0 drops the membership marker);
+        /// readers must tolerate zeros and repeats.
+        dirty: Vec<u32>,
+        /// `(global node, mass)` forwards for rows outside the peer's
+        /// home range. Entries may repeat (the receiver's `add_r`
+        /// coalesces); they count into the tallies per entry.
+        fwd: Vec<(u32, f64)>,
+    },
+    /// Ordered map, global node id → accumulated mass. Home entries and
+    /// steal forwards share the map; repeats coalesce at insert, and an
+    /// entry cancelling to exactly 0.0 is removed (its tally
+    /// contribution is zero, so dropping it is exact).
+    Sparse(std::collections::BTreeMap<u32, f64>),
+}
+
+impl Outbox {
+    fn new(sparse: bool) -> Outbox {
+        if sparse {
+            Outbox::Sparse(std::collections::BTreeMap::new())
+        } else {
+            Outbox::Dense { acc: Vec::new(), dirty: Vec::new(), fwd: Vec::new() }
+        }
+    }
+
+    /// Nothing pending to take. For the dense variant an empty `dirty`
+    /// implies an all-zero `acc` (every nonzero write pushes a marker),
+    /// so this never needs the O(rows) sweep.
+    fn is_clear(&self) -> bool {
+        match self {
+            Outbox::Dense { dirty, fwd, .. } => dirty.is_empty() && fwd.is_empty(),
+            Outbox::Sparse(map) => map.is_empty(),
+        }
+    }
+}
+
 /// Outcome of one [`ShardedPush::solve`] call.
 #[derive(Debug, Clone, Copy)]
 pub struct ShardSolveStats {
@@ -191,22 +285,14 @@ pub struct PushShard {
     /// and its landing on a row goes through `add_r` too.)
     pub(crate) head_floor: f64,
     pub(crate) head_hits: Vec<u32>,
-    /// Per-peer dense outbox accumulators (`acc[j]` is indexed by peer
-    /// `j`'s local rows), allocated lazily on first use — worst case
-    /// O(shards·n) f64 across a shard set, so keep shard counts near
-    /// the core count. `acc[id]` stays empty: in-shard pushes apply
+    /// Per-peer outboxes (`outbox[j]` accumulates mass bound for peer
+    /// `j`), in the representation the engine's [`OutboxPolicy`]
+    /// selected. `outbox[id]` stays clear: in-shard pushes apply
     /// directly.
-    acc: Vec<Vec<f64>>,
-    /// Positions possibly nonzero in each `acc[j]`. May hold duplicates
-    /// (exact cancellation to 0.0 drops the membership marker); readers
-    /// must tolerate zeros and repeats.
-    dirty: Vec<Vec<u32>>,
-    /// Sparse outbox overflow per peer: `(global node, mass)` entries
-    /// for rows *outside* the peer's home range — i.e. forwards to a
-    /// thief that adopted one of our rows. Entries may repeat (the
-    /// receiver's `add_r` coalesces); they count into `acc_mass` /
-    /// `acc_sum` like the dense accumulators.
-    xacc: Vec<Vec<(u32, f64)>>,
+    outbox: Vec<Outbox>,
+    /// Which representation fresh outboxes take — kept per shard so
+    /// bounds growth can re-materialize a peer's slot in kind.
+    sparse_outbox: bool,
     /// Σ|acc| across all outboxes (incremental).
     pub(crate) acc_mass: f64,
     /// Per-peer pending uniform broadcast (dangling emissions waiting
@@ -246,7 +332,7 @@ pub struct PushShard {
 }
 
 impl PushShard {
-    fn new(id: usize, part: &Partitioner, n: usize, alpha: f64) -> PushShard {
+    fn new(id: usize, part: &Partitioner, n: usize, alpha: f64, sparse: bool) -> PushShard {
         let s = part.p();
         let (lo, hi) = part.blocks()[id];
         let bs = hi - lo;
@@ -269,12 +355,8 @@ impl PushShard {
             queue: BucketQueue::new(bs),
             head_floor: f64::INFINITY,
             head_hits: Vec::new(),
-            // outbox accumulators materialize on first use (warm epochs
-            // rarely touch every peer, and eager allocation would cost
-            // O(shards * n) memory up front)
-            acc: vec![Vec::new(); s],
-            dirty: vec![Vec::new(); s],
-            xacc: vec![Vec::new(); s],
+            outbox: (0..s).map(|_| Outbox::new(sparse)).collect(),
+            sparse_outbox: sparse,
             acc_mass: 0.0,
             out_uni: vec![0.0; s],
             out_pv: vec![0.0; s],
@@ -434,44 +516,52 @@ impl PushShard {
         self.touch(k);
     }
 
-    /// Accumulate outgoing mass for peer `j` at global node `t`,
-    /// picking the dense accumulator when `t` is homed at `j` and the
-    /// sparse overflow otherwise (a forward to a thief that adopted
-    /// one of our rows, or a restore of such an entry).
+    /// Accumulate outgoing mass for peer `j` at global node `t`. The
+    /// dense representation picks the accumulator when `t` is homed at
+    /// `j` and the forward list otherwise (a forward to a thief that
+    /// adopted one of our rows, or a restore of such an entry); the
+    /// sparse representation coalesces both through one ordered map.
+    /// Either way `acc_mass` gains `|new|-|old|` of the coalesced slot
+    /// and `acc_sum` gains `w`, so the incremental tallies stay exact.
     #[inline]
     fn out_mass(&mut self, j: usize, t: usize, w: f64) {
         debug_assert_ne!(j, self.id);
+        if w == 0.0 {
+            return;
+        }
         let bounds = self.part.bounds();
-        if t >= bounds[j] && t < bounds[j + 1] {
-            self.add_out(j, t, w);
-        } else {
-            if w == 0.0 {
-                return;
+        let (dmass, dsum) = match &mut self.outbox[j] {
+            Outbox::Dense { acc, dirty, fwd } => {
+                if t >= bounds[j] && t < bounds[j + 1] {
+                    if acc.is_empty() {
+                        acc.resize(bounds[j + 1] - bounds[j], 0.0);
+                    }
+                    let k = t - bounds[j];
+                    let old = acc[k];
+                    if old == 0.0 {
+                        dirty.push(k as u32);
+                    }
+                    let new = old + w;
+                    acc[k] = new;
+                    (new.abs() - old.abs(), w)
+                } else {
+                    fwd.push((t as u32, w));
+                    (w.abs(), w)
+                }
             }
-            self.xacc[j].push((t as u32, w));
-            self.acc_mass += w.abs();
-            self.acc_sum += w;
-        }
-    }
-
-    /// Accumulate out-of-shard mass for peer `j` at global node `t`
-    /// (dense path — `t` must be in `j`'s home range).
-    #[inline]
-    fn add_out(&mut self, j: usize, t: usize, w: f64) {
-        debug_assert_ne!(j, self.id);
-        if self.acc[j].is_empty() {
-            let rows = self.part.bounds()[j + 1] - self.part.bounds()[j];
-            self.acc[j] = vec![0.0; rows];
-        }
-        let k = t - self.part.bounds()[j];
-        let old = self.acc[j][k];
-        if old == 0.0 && w != 0.0 {
-            self.dirty[j].push(k as u32);
-        }
-        let new = old + w;
-        self.acc_mass += new.abs() - old.abs();
-        self.acc_sum += w;
-        self.acc[j][k] = new;
+            Outbox::Sparse(map) => {
+                let old = map.get(&(t as u32)).copied().unwrap_or(0.0);
+                let new = old + w;
+                if new == 0.0 {
+                    map.remove(&(t as u32));
+                } else {
+                    map.insert(t as u32, new);
+                }
+                (new.abs() - old.abs(), w)
+            }
+        };
+        self.acc_mass += dmass;
+        self.acc_sum += dsum;
     }
 
     /// Spread the local pending uniform into the materialized residual.
@@ -588,7 +678,7 @@ impl PushShard {
                     self.add_r(ks, w);
                 } else {
                     let j = self.part.owner_of(t);
-                    self.add_out(j, t, w);
+                    self.out_mass(j, t, w);
                 }
             }
         }
@@ -654,27 +744,46 @@ impl PushShard {
         debug_assert_ne!(j, self.id, "self mass is absorbed, not shipped");
         let uni = std::mem::replace(&mut self.out_uni[j], 0.0);
         let pv = std::mem::replace(&mut self.out_pv[j], 0.0);
-        if self.dirty[j].is_empty() && self.xacc[j].is_empty() && uni == 0.0 && pv == 0.0 {
+        if self.outbox[j].is_clear() && uni == 0.0 && pv == 0.0 {
             return None;
         }
         let base = self.part.bounds()[j];
-        let mut entries = Vec::with_capacity(self.dirty[j].len() + self.xacc[j].len());
-        for idx in 0..self.dirty[j].len() {
-            let k = self.dirty[j][idx] as usize;
-            let w = self.acc[j][k];
-            if w != 0.0 {
-                entries.push(((base + k) as u32, w));
-                self.acc_mass -= w.abs();
-                self.acc_sum -= w;
-                self.acc[j][k] = 0.0;
+        let mut entries;
+        let (mut taken_mass, mut taken_sum) = (0.0f64, 0.0f64);
+        match &mut self.outbox[j] {
+            Outbox::Dense { acc, dirty, fwd } => {
+                entries = Vec::with_capacity(dirty.len() + fwd.len());
+                for idx in 0..dirty.len() {
+                    let k = dirty[idx] as usize;
+                    let w = acc[k];
+                    if w != 0.0 {
+                        entries.push(((base + k) as u32, w));
+                        taken_mass += w.abs();
+                        taken_sum += w;
+                        acc[k] = 0.0;
+                    }
+                }
+                dirty.clear();
+                for (t, w) in fwd.drain(..) {
+                    entries.push((t, w));
+                    taken_mass += w.abs();
+                    taken_sum += w;
+                }
+            }
+            Outbox::Sparse(map) => {
+                // BTreeMap iterates in ascending node order, so sparse
+                // drains are as deterministic as the dense dirty walk
+                let map = std::mem::take(map);
+                entries = Vec::with_capacity(map.len());
+                for (t, w) in map {
+                    entries.push((t, w));
+                    taken_mass += w.abs();
+                    taken_sum += w;
+                }
             }
         }
-        self.dirty[j].clear();
-        for (t, w) in self.xacc[j].drain(..) {
-            entries.push((t, w));
-            self.acc_mass -= w.abs();
-            self.acc_sum -= w;
-        }
+        self.acc_mass -= taken_mass;
+        self.acc_sum -= taken_sum;
         Some(ResidualFragment { entries, uni, pv })
     }
 
@@ -957,14 +1066,21 @@ impl PushShard {
         let mut s: f64 = self.r.iter().sum();
         s += self.uni * (self.hi - self.lo) as f64 / nf;
         s += self.pv * self.vshare() / self.vtotal;
-        for accj in &self.acc {
-            for &w in accj {
-                s += w;
-            }
-        }
-        for xj in &self.xacc {
-            for &(_, w) in xj {
-                s += w;
+        for ob in &self.outbox {
+            match ob {
+                Outbox::Dense { acc, fwd, .. } => {
+                    for &w in acc {
+                        s += w;
+                    }
+                    for &(_, w) in fwd {
+                        s += w;
+                    }
+                }
+                Outbox::Sparse(map) => {
+                    for &w in map.values() {
+                        s += w;
+                    }
+                }
             }
         }
         for (j, u) in self.out_uni.iter().enumerate() {
@@ -978,21 +1094,30 @@ impl PushShard {
     }
 
     /// Re-tally the outbox accumulators exactly (drift fallback for
-    /// `acc_mass` / `acc_sum`). Sparse overflow entries count per
-    /// entry, matching the incremental bookkeeping (duplicates are not
-    /// coalesced until delivery).
+    /// `acc_mass` / `acc_sum`). Dense forward entries count per entry,
+    /// matching the incremental bookkeeping (duplicates are not
+    /// coalesced until delivery); sparse maps already coalesce, so
+    /// their values count once each.
     fn recompute_acc_sums(&mut self) {
         let (mut mass, mut sum) = (0.0f64, 0.0f64);
-        for accj in &self.acc {
-            for &w in accj {
-                mass += w.abs();
-                sum += w;
-            }
-        }
-        for xj in &self.xacc {
-            for &(_, w) in xj {
-                mass += w.abs();
-                sum += w;
+        for ob in &self.outbox {
+            match ob {
+                Outbox::Dense { acc, fwd, .. } => {
+                    for &w in acc {
+                        mass += w.abs();
+                        sum += w;
+                    }
+                    for &(_, w) in fwd {
+                        mass += w.abs();
+                        sum += w;
+                    }
+                }
+                Outbox::Sparse(map) => {
+                    for &w in map.values() {
+                        mass += w.abs();
+                        sum += w;
+                    }
+                }
             }
         }
         self.acc_mass = mass;
@@ -1033,6 +1158,10 @@ pub struct ShardedPush {
     /// Pushes each shard may spend between exchanges (per round).
     pub round_pushes: u64,
     pub(crate) shards: Vec<PushShard>,
+    /// Per-peer outbox representation policy (see [`OutboxPolicy`]);
+    /// resolved against the live shard count whenever shards are
+    /// (re)built.
+    outbox_policy: OutboxPolicy,
     /// The shard count the caller asked for — [`rebalance`] re-targets
     /// this even when the initial partition clamped it to the row count.
     ///
@@ -1087,8 +1216,10 @@ impl ShardedPush {
                 p.max_node()
             );
         }
+        let outbox_policy = OutboxPolicy::Auto;
+        let sparse = outbox_policy.sparse_for(part.p());
         let shards: Vec<PushShard> =
-            (0..part.p()).map(|id| PushShard::new(id, &part, n, alpha)).collect();
+            (0..part.p()).map(|id| PushShard::new(id, &part, n, alpha, sparse)).collect();
         let mut sp = ShardedPush {
             alpha,
             n,
@@ -1097,6 +1228,7 @@ impl ShardedPush {
             part,
             round_pushes: 4096,
             shards,
+            outbox_policy,
             requested_shards: requested,
             carried_pushes: 0,
             stolen_rows: 0,
@@ -1210,6 +1342,34 @@ impl ShardedPush {
 
     pub fn shard_count(&self) -> usize {
         self.shards.len()
+    }
+
+    /// The per-peer outbox representation policy in effect.
+    pub fn outbox_policy(&self) -> OutboxPolicy {
+        self.outbox_policy
+    }
+
+    /// Swap the per-peer outbox representation (see [`OutboxPolicy`]).
+    /// Requires settled outboxes — call right after construction,
+    /// between epochs, or after an [`exchange`](Self::exchange); the
+    /// swap is a pure representation change, so nothing in flight can
+    /// be dropped and the conserved mass is untouched. Panics if any
+    /// outbox still holds undelivered mass.
+    pub fn set_outbox_policy(&mut self, policy: OutboxPolicy) {
+        assert!(
+            self.shards
+                .iter()
+                .all(|sh| sh.acc_mass == 0.0 && sh.outbox.iter().all(Outbox::is_clear)),
+            "outbox policy change with undelivered outbox mass (exchange first)"
+        );
+        self.outbox_policy = policy;
+        let sparse = policy.sparse_for(self.shards.len());
+        for sh in self.shards.iter_mut() {
+            sh.sparse_outbox = sparse;
+            for ob in sh.outbox.iter_mut() {
+                *ob = Outbox::new(sparse);
+            }
+        }
     }
 
     /// The balanced-nnz partition in use (home bounds — see
@@ -1578,9 +1738,9 @@ impl ShardedPush {
             // outboxes addressed to the grown shard were delivered by
             // the exchange; drop the stale allocation so it
             // re-materializes at the new size
-            debug_assert!(sh.id == last || sh.dirty[last].is_empty());
+            debug_assert!(sh.id == last || sh.outbox[last].is_clear());
             if sh.id != last {
-                sh.acc[last] = Vec::new();
+                sh.outbox[last] = Outbox::new(sh.sparse_outbox);
             }
         }
         let sh = &mut self.shards[last];
@@ -1644,7 +1804,7 @@ impl ShardedPush {
         let u_common = self.shards[0].uni;
         let pv_common = self.shards[0].pv;
         for sh in self.shards.iter_mut() {
-            debug_assert!(sh.acc_mass == 0.0 && sh.dirty.iter().all(Vec::is_empty));
+            debug_assert!(sh.acc_mass == 0.0 && sh.outbox.iter().all(Outbox::is_clear));
             let d = (sh.uni - u_common) / nf;
             if d != 0.0 {
                 // raw writes, not add_r: this is a representation change
@@ -1682,9 +1842,10 @@ impl ShardedPush {
         self.part = part.clone();
         self.owners = OwnerMap::contiguous(part.clone());
         let s = part.p();
+        let sparse = self.outbox_policy.sparse_for(s);
         let mut shards: Vec<PushShard> = Vec::with_capacity(s);
         for id in 0..s {
-            let mut sh = PushShard::new(id, &part, self.n, self.alpha);
+            let mut sh = PushShard::new(id, &part, self.n, self.alpha, sparse);
             sh.p.copy_from_slice(&p[sh.lo..sh.hi]);
             sh.r.copy_from_slice(&r[sh.lo..sh.hi]);
             sh.stamp.copy_from_slice(&stamp[sh.lo..sh.hi]);
@@ -1787,11 +1948,16 @@ impl ShardedPush {
                         let nf = sh.n as f64;
                         let mut d = l1 + sh.uni.abs() * (sh.hi - sh.lo) as f64 / nf;
                         d += sh.pv.abs() * sh.vshare() / sh.vtotal;
-                        for accj in &sh.acc {
-                            d += accj.iter().map(|w| w.abs()).sum::<f64>();
-                        }
-                        for xj in &sh.xacc {
-                            d += xj.iter().map(|(_, w)| w.abs()).sum::<f64>();
+                        for ob in &sh.outbox {
+                            match ob {
+                                Outbox::Dense { acc, fwd, .. } => {
+                                    d += acc.iter().map(|w| w.abs()).sum::<f64>();
+                                    d += fwd.iter().map(|(_, w)| w.abs()).sum::<f64>();
+                                }
+                                Outbox::Sparse(map) => {
+                                    d += map.values().map(|w| w.abs()).sum::<f64>();
+                                }
+                            }
                         }
                         for (j, u) in sh.out_uni.iter().enumerate() {
                             let rows = sh.part.bounds()[j + 1] - sh.part.bounds()[j];

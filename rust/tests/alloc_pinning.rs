@@ -1,0 +1,113 @@
+//! Allocation pinning for the memory-tier build paths.
+//!
+//! A counting [`GlobalAlloc`] wrapper around the system allocator
+//! tracks live bytes and the high-water mark, so the test can assert
+//! *peak allocation* properties the RSS-based bench can only sample:
+//!
+//!   * `Csr::from_edgelist_owned` sorts the caller's edge buffer in
+//!     place — its peak must undercut the borrowing `from_edgelist`
+//!     (which pays a full copy of the edges for the dedup sort) by at
+//!     least half the copy, pinning the 2×-edge-spike fix;
+//!   * `stream_csr_from_bin` never materializes the edge list — its
+//!     peak stays under 2× the on-disk edge bytes (the CSR arrays are
+//!     ~1× on an erdos web, plus O(n) counters and the read chunk).
+//!
+//! Everything lives in ONE `#[test]`: the harness runs test fns on
+//! concurrent threads, and a second fn would pollute the global
+//! counters mid-measurement.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use asyncpr::graph::generators;
+use asyncpr::graph::io::{save_edgelist_bin, stream_csr_from_bin, StreamCsrOptions};
+use asyncpr::graph::Csr;
+
+static LIVE: AtomicUsize = AtomicUsize::new(0);
+static PEAK: AtomicUsize = AtomicUsize::new(0);
+
+struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let p = System.alloc(layout);
+        if !p.is_null() {
+            let live = LIVE.fetch_add(layout.size(), Ordering::Relaxed) + layout.size();
+            PEAK.fetch_max(live, Ordering::Relaxed);
+        }
+        p
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout);
+        LIVE.fetch_sub(layout.size(), Ordering::Relaxed);
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        let p = System.realloc(ptr, layout, new_size);
+        if !p.is_null() {
+            if new_size >= layout.size() {
+                let grow = new_size - layout.size();
+                let live = LIVE.fetch_add(grow, Ordering::Relaxed) + grow;
+                PEAK.fetch_max(live, Ordering::Relaxed);
+            } else {
+                LIVE.fetch_sub(layout.size() - new_size, Ordering::Relaxed);
+            }
+        }
+        p
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+/// Peak bytes allocated above the live set at entry while running `f`.
+fn peak_above_baseline<R>(f: impl FnOnce() -> R) -> (usize, R) {
+    let base = LIVE.load(Ordering::Relaxed);
+    PEAK.store(base, Ordering::Relaxed);
+    let r = f();
+    (PEAK.load(Ordering::Relaxed).saturating_sub(base), r)
+}
+
+#[test]
+fn alloc_memory_tier_build_paths_pin_their_peaks() {
+    let n = 40_000usize;
+    let m = 320_000usize;
+    let el = generators::erdos_renyi(n, m, 7);
+    let edge_bytes = el.edges().len() * std::mem::size_of::<(u32, u32)>();
+
+    // ---- owned vs borrowed in-memory build -------------------------
+    let el_owned = el.clone(); // clone OUTSIDE the measured regions
+    let (peak_borrowed, csr_borrowed) = peak_above_baseline(|| Csr::from_edgelist(&el).unwrap());
+    let (peak_owned, csr_owned) =
+        peak_above_baseline(|| Csr::from_edgelist_owned(el_owned).unwrap());
+    assert_eq!(csr_borrowed, csr_owned, "owned build changed the matrix");
+    let saved = peak_borrowed.saturating_sub(peak_owned);
+    assert!(
+        saved >= edge_bytes / 2,
+        "from_edgelist_owned saved only {saved} B of the {edge_bytes} B edge copy \
+         (borrowed peak {peak_borrowed}, owned peak {peak_owned})"
+    );
+
+    // ---- streaming build from disk ---------------------------------
+    let path = std::env::temp_dir().join("asyncpr_alloc_pinning.bin");
+    save_edgelist_bin(&el, &path).unwrap();
+    let opts = StreamCsrOptions { chunk_bytes: 64 << 10, ..Default::default() };
+    let (peak_stream, csr_stream) =
+        peak_above_baseline(|| stream_csr_from_bin(&path, &opts).unwrap());
+    std::fs::remove_file(&path).unwrap();
+    assert_eq!(csr_stream, csr_borrowed, "streamed build changed the matrix");
+    assert!(csr_stream.rowptr_is_compact(), "small nnz must narrow");
+    assert!(
+        peak_stream < 2 * edge_bytes,
+        "streaming build peaked at {peak_stream} B, not under 2x the \
+         {edge_bytes} B edge list"
+    );
+    // and the streamed peak must undercut even the owned in-memory
+    // route once its input list is charged (list + CSR vs CSR + O(n))
+    assert!(
+        peak_stream < peak_owned + edge_bytes,
+        "streaming ({peak_stream} B) did not beat materialize-then-build \
+         ({peak_owned} B + {edge_bytes} B list)"
+    );
+}

@@ -1,7 +1,7 @@
 //! Schema tests for the committed machine-readable bench trajectory
 //! files (`benches/BENCH_*.json`, written by the `push_parallel`,
-//! `topk_stream`, `ppr_serve`, and `net_push` benches when
-//! `ASYNCPR_BENCH_JSON_DIR` is set).
+//! `topk_stream`, `ppr_serve`, `net_push`, and `giant_graph` benches
+//! when `ASYNCPR_BENCH_JSON_DIR` is set).
 //!
 //! The committed files may be the pending placeholders (all-null
 //! metric slots, a `note` explaining how to regenerate) or a real
@@ -110,6 +110,34 @@ fn net_push_trajectory_schema() {
         num_or_null(&doc, &["barrier", key]);
     }
     num_or_null(&doc, &["speedup"]);
+}
+
+#[test]
+fn giant_graph_trajectory_schema() {
+    let doc = load("BENCH_giant_graph.json");
+    common_header(&doc, "giant_graph");
+    for key in ["scale", "edge_factor", "n", "m_requested", "nnz"] {
+        num_or_null(&doc, &[key]);
+    }
+    let compact = lookup(&doc, &["compact_rowptr"]);
+    assert!(
+        matches!(compact, Json::Bool(_) | Json::Null),
+        "compact_rowptr must be bool or null"
+    );
+    for key in [
+        "write_ms",
+        "build_ms",
+        "csr_heap_bytes",
+        "csr_heap_bytes_wide",
+        "edgelist_bytes",
+        "dense_estimate_bytes",
+        "peak_rss_bytes",
+    ] {
+        num_or_null(&doc, &["build", key]);
+    }
+    for key in ["threads", "epochs", "pushes", "wall_ms", "pushes_per_sec"] {
+        num_or_null(&doc, &["churn", key]);
+    }
 }
 
 #[test]

@@ -1,0 +1,288 @@
+//! Equivalence battery for the giant-graph memory tier (seeded random
+//! campaigns, same style as proptests.rs — every failure names its
+//! trial/round).
+//!
+//! Invariants covered:
+//!   * the compact (u32 rowptr) CSR tier is *bit-identical* to the wide
+//!     (usize) layout everywhere the offsets feed arithmetic: `spmv`
+//!     outputs compared bitwise, `merge_csr` splices, and
+//!     `balanced_nnz` partitions, across random webs and churn batches;
+//!   * the streaming two-pass binary loader builds the same CSR as the
+//!     in-memory `from_edgelist` route over random webs, R-MAT streams,
+//!     and adversarial chunk sizes;
+//!   * sparse per-peer outboxes reach the same fixed point as the dense
+//!     accumulators: both policies solve to 1e-9 L1 of each other and
+//!     of the power reference with rank mass pinned to 1e-9, at every
+//!     shard count in 1..8, with work stealing both off and on, and
+//!     across churn epochs with re-balancing (the adopt-partition path
+//!     that rebuilds the outboxes).
+//!
+//! Every test name starts with `giant_`: CI's debug pass skips them
+//! (`--skip giant_`) and the release pass runs the whole file.
+
+use asyncpr::asynciter::{run_threaded_push, PushThreadOptions};
+use asyncpr::coordinator::Partitioner;
+use asyncpr::graph::generators::{
+    self, churn_batch, rmat_edges, ChurnParams, RMAT_WEB_PROBS,
+};
+use asyncpr::graph::io::{save_edgelist_bin_iter, stream_csr_from_bin, StreamCsrOptions};
+use asyncpr::graph::{Csr, EdgeList};
+use asyncpr::stream::{power_method_f64, DeltaGraph, OutboxPolicy, ShardedPush};
+use asyncpr::util::Rng;
+
+fn l1_64(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).sum()
+}
+
+fn web(n: usize, seed: u64) -> DeltaGraph {
+    let el = generators::power_law_web(&generators::WebParams::scaled(n), seed);
+    DeltaGraph::from_edgelist(&el)
+}
+
+/// The same CSR in both rowptr widths (content equality is
+/// width-blind, so the pair is guaranteed to describe one matrix).
+fn both_widths(csr: &Csr) -> (Csr, Csr) {
+    let mut compact = csr.clone();
+    compact.set_compact_rowptr(true);
+    let mut wide = csr.clone();
+    wide.set_compact_rowptr(false);
+    assert!(compact.rowptr_is_compact() && !wide.rowptr_is_compact());
+    assert_eq!(compact, wide, "width flip changed the matrix");
+    (compact, wide)
+}
+
+#[test]
+fn giant_compact_vs_wide_spmv_bit_identical() {
+    let mut rng = Rng::new(2_001);
+    for trial in 0..20u64 {
+        let n = rng.range(30, 600);
+        let el = generators::power_law_web(&generators::WebParams::scaled(n), 2_100 + trial);
+        let csr = Csr::from_edgelist(&el).unwrap();
+        let (compact, wide) = both_widths(&csr);
+        let x: Vec<f32> = (0..csr.n()).map(|_| rng.f64() as f32).collect();
+        let mut yc = vec![0.0f32; csr.n()];
+        let mut yw = vec![0.0f32; csr.n()];
+        compact.spmv(&x, &mut yc);
+        wide.spmv(&x, &mut yw);
+        for (i, (a, b)) in yc.iter().zip(&yw).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "trial {trial}: spmv row {i} differs across widths ({a} vs {b})"
+            );
+        }
+        // range form too — the per-UE operators call this one
+        let lo = rng.range(0, csr.n());
+        let hi = rng.range(lo, csr.n()) + 1;
+        let mut yc = vec![0.0f32; hi - lo];
+        let mut yw = vec![0.0f32; hi - lo];
+        compact.spmv_range(&x, lo, hi, &mut yc);
+        wide.spmv_range(&x, lo, hi, &mut yw);
+        assert!(
+            yc.iter().zip(&yw).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "trial {trial}: spmv_range [{lo}, {hi}) differs across widths"
+        );
+    }
+}
+
+#[test]
+fn giant_compact_vs_wide_merge_csr_and_balanced_nnz() {
+    let mut rng = Rng::new(2_201);
+    for trial in 0..10u64 {
+        let n = rng.range(50, 400);
+        let mut g = web(n, 2_300 + trial);
+        let mut prev = g.to_csr().unwrap();
+        let churn = ChurnParams::scaled_to(g.n(), g.m());
+        for round in 0..8 {
+            let batch = churn_batch(&g, &churn, &mut rng);
+            // merging consumes the baseline, so run the same batch
+            // through two identical overlays — one per prev width
+            let mut g2 = g.clone();
+            g.apply(&batch).unwrap();
+            g2.apply(&batch).unwrap();
+            let (prev_compact, prev_wide) = both_widths(&prev);
+            let (mc, sc) = g.merge_csr(&prev_compact).unwrap();
+            let (mw, sw) = g2.merge_csr(&prev_wide).unwrap();
+            assert_eq!(
+                mc, mw,
+                "trial {trial} round {round}: splice differs across prev widths"
+            );
+            assert_eq!(
+                (sc.dirty_rows, sc.copied_rows),
+                (sw.dirty_rows, sw.copied_rows),
+                "trial {trial} round {round}: splice stats differ"
+            );
+            for p in 1..=8usize {
+                assert_eq!(
+                    Partitioner::balanced_nnz(&mc, p),
+                    Partitioner::balanced_nnz(&mw, p),
+                    "trial {trial} round {round}: balanced_nnz({p}) differs"
+                );
+            }
+            prev = mc;
+        }
+    }
+}
+
+#[test]
+fn giant_streaming_build_matches_in_memory_over_random_webs() {
+    let mut rng = Rng::new(2_401);
+    let dir = std::env::temp_dir();
+    for trial in 0..12u64 {
+        let el = if trial % 3 == 0 {
+            // R-MAT stream (the giant bench's generator), duplicates and
+            // self-loops included
+            let scale = 6 + (trial % 4) as u32;
+            let mut el = EdgeList::new(1usize << scale);
+            for (s, d) in rmat_edges(scale, (1usize << scale) * 6, RMAT_WEB_PROBS, 2_500 + trial) {
+                el.push(s, d);
+            }
+            el
+        } else {
+            let n = rng.range(20, 500);
+            generators::power_law_web(&generators::WebParams::scaled(n), 2_600 + trial)
+        };
+        let want = Csr::from_edgelist(&el).unwrap();
+        let path = dir.join(format!("asyncpr_giant_prop_{trial}.bin"));
+        save_edgelist_bin_iter(&path, el.n(), el.edges().len() as u64, el.edges().iter().copied())
+            .unwrap();
+        // adversarial chunk sizes: record-straddling reads must not move
+        // a single column
+        for chunk_bytes in [7usize, 64, 1 << 20] {
+            let opts = StreamCsrOptions { chunk_bytes, ..Default::default() };
+            let got = stream_csr_from_bin(&path, &opts).unwrap();
+            assert_eq!(got, want, "trial {trial} chunk {chunk_bytes}: streamed CSR differs");
+            assert!(got.rowptr_is_compact(), "trial {trial}: small nnz must narrow");
+        }
+        std::fs::remove_file(&path).unwrap();
+    }
+}
+
+#[test]
+fn giant_sparse_outbox_matches_dense_and_power_all_shard_counts() {
+    for shards in 1..=8usize {
+        let g = web(600, 2_700 + shards as u64);
+        let (xref, _) = power_method_f64(&g, 0.85, 1e-12, 10_000);
+        let mut ranks = Vec::new();
+        for policy in [OutboxPolicy::Dense, OutboxPolicy::Sparse] {
+            let mut sp = ShardedPush::new(&g, 0.85, shards);
+            sp.set_outbox_policy(policy);
+            assert_eq!(sp.outbox_policy(), policy);
+            let st = sp.solve(&g, 1e-11, u64::MAX);
+            assert!(st.converged, "shards {shards} {policy:?}: never converged");
+            let mass = sp.mass();
+            assert!(
+                (mass - 1.0).abs() < 1e-9,
+                "shards {shards} {policy:?}: mass {mass}"
+            );
+            let d = l1_64(&sp.ranks(), &xref);
+            assert!(d < 1e-9, "shards {shards} {policy:?}: L1 vs power {d}");
+            ranks.push(sp.ranks());
+        }
+        let d = l1_64(&ranks[0], &ranks[1]);
+        assert!(d < 1e-9, "shards {shards}: dense vs sparse outbox drift {d}");
+    }
+}
+
+#[test]
+fn giant_sparse_outbox_steal_interleaved_matches_power() {
+    // shards 1..8 with scripted steals between budgeted solve chunks:
+    // ownership moves while sparse outboxes hold undelivered mass, and
+    // nothing is allowed to notice
+    let mut rng = Rng::new(2_801);
+    for shards in 1..=8usize {
+        let g = web(500, 2_900 + shards as u64);
+        let (xref, _) = power_method_f64(&g, 0.85, 1e-12, 10_000);
+        let mut sp = ShardedPush::new(&g, 0.85, shards);
+        sp.set_outbox_policy(OutboxPolicy::Sparse);
+        sp.round_pushes = 512;
+        for round in 0..60 {
+            let st = sp.solve(&g, 1e-11, 1_500);
+            if st.converged {
+                break;
+            }
+            if shards >= 2 {
+                for _ in 0..3 {
+                    let victim = rng.range(0, shards);
+                    let mut thief = rng.range(0, shards);
+                    if thief == victim {
+                        thief = (thief + 1) % shards;
+                    }
+                    sp.steal_rows(victim, thief, 1 + rng.range(0, 24));
+                }
+            }
+            let mass = sp.mass();
+            assert!(
+                (mass - 1.0).abs() < 1e-9,
+                "shards {shards} round {round}: mass {mass} mid-steal"
+            );
+        }
+        let st = sp.solve(&g, 1e-11, u64::MAX);
+        assert!(st.converged, "shards {shards}: never converged");
+        let d = l1_64(&sp.ranks(), &xref);
+        assert!(d < 1e-9, "shards {shards}: sparse-outbox steal drift {d}");
+    }
+}
+
+#[test]
+fn giant_sparse_outbox_threaded_steal_matches_power() {
+    let tol = 1e-10;
+    let g = web(2_000, 3_001);
+    let (xref, _) = power_method_f64(&g, 0.85, 1e-12, 100_000);
+    for steal in [false, true] {
+        let mut sp = ShardedPush::new(&g, 0.85, 4);
+        sp.set_outbox_policy(OutboxPolicy::Sparse);
+        let opts = PushThreadOptions { tol, steal, steal_batch: 32, ..Default::default() };
+        let tm = run_threaded_push(&g, &mut sp, &opts);
+        if !tm.converged {
+            assert!(sp.solve(&g, tol, u64::MAX).converged, "steal {steal}: polish");
+        }
+        let mass = sp.mass();
+        assert!((mass - 1.0).abs() < 1e-9, "steal {steal}: mass {mass}");
+        let d = l1_64(&sp.ranks(), &xref);
+        assert!(d < 1e-8, "steal {steal}: threaded sparse-outbox drift {d}");
+    }
+}
+
+#[test]
+fn giant_sparse_outbox_churn_epochs_with_rebalance() {
+    // churn + rebalance exercises adopt_partition, which rebuilds the
+    // outbox vector under the active policy
+    let mut g = web(800, 3_101);
+    let churn = ChurnParams::scaled_to(g.n(), g.m());
+    let mut rng = Rng::new(3_102);
+    let mut sp = ShardedPush::new(&g, 0.85, 6);
+    sp.set_outbox_policy(OutboxPolicy::Sparse);
+    assert!(sp.solve(&g, 1e-11, u64::MAX).converged);
+    for epoch in 0..6 {
+        let batch = churn_batch(&g, &churn, &mut rng);
+        let delta = g.apply(&batch).unwrap();
+        sp.begin_epoch();
+        sp.apply_batch(&g, &delta);
+        sp.rebalance(&g, 1.3);
+        assert!(sp.solve(&g, 1e-11, u64::MAX).converged, "epoch {epoch}");
+        let mass = sp.mass();
+        assert!((mass - 1.0).abs() < 1e-9, "epoch {epoch}: mass {mass}");
+        let (xref, _) = power_method_f64(&g, 0.85, 1e-12, 10_000);
+        let d = l1_64(&sp.ranks(), &xref);
+        assert!(d < 1e-9, "epoch {epoch}: drift {d}");
+    }
+}
+
+#[test]
+fn giant_auto_policy_goes_sparse_above_the_threshold() {
+    use asyncpr::stream::SPARSE_OUTBOX_SHARDS;
+    let g = web(SPARSE_OUTBOX_SHARDS * 40, 3_201);
+    let (xref, _) = power_method_f64(&g, 0.85, 1e-12, 10_000);
+    // one below, at, and above the Auto cut-over: the representation
+    // flips but the fixed point must not
+    for shards in [SPARSE_OUTBOX_SHARDS - 1, SPARSE_OUTBOX_SHARDS, SPARSE_OUTBOX_SHARDS + 1] {
+        let mut sp = ShardedPush::new(&g, 0.85, shards);
+        assert_eq!(sp.outbox_policy(), OutboxPolicy::Auto);
+        assert!(sp.solve(&g, 1e-11, u64::MAX).converged, "shards {shards}");
+        let mass = sp.mass();
+        assert!((mass - 1.0).abs() < 1e-9, "shards {shards}: mass {mass}");
+        let d = l1_64(&sp.ranks(), &xref);
+        assert!(d < 1e-9, "shards {shards}: auto-policy drift {d}");
+    }
+}
